@@ -1,0 +1,139 @@
+//! END-TO-END driver: the full three-layer system on a real workload.
+//!
+//! Starts the solve service (Rust coordinator, workers owning PJRT engines
+//! with the AOT artifacts compiled from the JAX/Pallas layers), registers
+//! design matrices at the compiled shape buckets, replays a bursty
+//! synthetic request trace through the TCP front-end, and reports
+//! throughput + latency percentiles + accuracy, split by execution route
+//! (PJRT artifact vs native solver).
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serve`
+//! (recorded in EXPERIMENTS.md §E2E)
+
+use std::time::{Duration, Instant};
+
+use snsolve::coordinator::tcp::{Client, TcpServer};
+use snsolve::coordinator::{Service, ServiceConfig, SolverChoice};
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::DenseMatrix;
+use snsolve::problems::workload::WorkloadSpec;
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+
+fn main() {
+    let artifact_dir = std::path::PathBuf::from(
+        std::env::var("SNSOLVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    if !have_artifacts {
+        eprintln!("warning: no artifacts/manifest.json — run `make artifacts` for the PJRT path; continuing native-only");
+    }
+
+    // --- service ---------------------------------------------------------
+    let mut cfg = ServiceConfig { workers: 2, queue_capacity: 512, ..Default::default() };
+    if have_artifacts {
+        cfg.worker.artifact_dir = Some(artifact_dir);
+    }
+    cfg.batcher.max_batch = 16;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let service = Service::start(cfg);
+    let server = TcpServer::serve(service.clone(), "127.0.0.1:0").expect("bind");
+    println!("service up on {} (pjrt={})", server.addr(), have_artifacts);
+
+    // --- problem set at the compiled buckets ------------------------------
+    // Shapes match python/compile/shapes.py so requests route to PJRT.
+    let buckets: Vec<(usize, usize)> = vec![(4096, 64), (8192, 128), (16384, 256)];
+    let mut client = Client::connect(server.addr()).expect("connect");
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(7));
+    let mut matrices = Vec::new();
+    for &(m, n) in &buckets {
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let mut x_true = g.gaussian_vec(n);
+        snsolve::linalg::norms::normalize(&mut x_true);
+        let b = a.matvec(&x_true);
+        let t0 = Instant::now();
+        let id = client.register_dense(&a).expect("register");
+        println!(
+            "registered {}x{} as matrix {} ({:.1} MB, {:.0} ms)",
+            m,
+            n,
+            id,
+            (m * n * 8) as f64 / 1e6,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        matrices.push((id, x_true, b));
+    }
+
+    // --- warmup: trigger artifact compilation off the clock ---------------
+    // (one request per bucket per worker; XLA compiles lazily on first use)
+    print!("warmup (XLA compiles each bucket's executable) ...");
+    let warm_t0 = Instant::now();
+    for _ in 0..2 {
+        for (id, _xt, b) in &matrices {
+            let _ = client.solve(*id, b, SolverChoice::Saa, 1e-2).expect("warm solve");
+        }
+    }
+    println!(" done in {:.1}s", warm_t0.elapsed().as_secs_f64());
+
+    // --- replay a bursty trace -------------------------------------------
+    let trace = WorkloadSpec {
+        shapes: buckets.iter().map(|&(m, n)| (m, n, 1.0)).collect(),
+        rate_per_sec: 60.0,
+        count: 240,
+        burstiness: 3.0,
+        seed: 99,
+    }
+    .generate();
+    println!("\nreplaying {} requests (bursty Poisson, ~60 rps nominal) ...", trace.len());
+
+    let start = Instant::now();
+    let mut latencies_us: Vec<u64> = Vec::with_capacity(trace.len());
+    let mut max_err = 0.0f64;
+    let mut route_pjrt = 0usize;
+    for entry in &trace {
+        // pace according to the trace
+        let target = Duration::from_micros(entry.arrival_us);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let (id, x_true, b) = &matrices[entry.shape_idx];
+        let t0 = Instant::now();
+        // tol 1e-2 keeps bucket-matching requests PJRT-eligible.
+        let sol = client.solve(*id, b, SolverChoice::Saa, 1e-2).expect("solve");
+        let lat = t0.elapsed().as_micros() as u64;
+        latencies_us.push(lat);
+        let err = nrm2_diff(&sol.x, x_true) / nrm2(x_true);
+        max_err = max_err.max(err);
+        // the wire doesn't carry the route; infer from the service metrics later
+        let _ = &mut route_pjrt;
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    // --- report -----------------------------------------------------------
+    latencies_us.sort_unstable();
+    let pct = |q: f64| latencies_us[((q * (latencies_us.len() - 1) as f64) as usize).min(latencies_us.len() - 1)];
+    let mean: f64 = latencies_us.iter().map(|&v| v as f64).sum::<f64>() / latencies_us.len() as f64;
+    println!("\n===== E2E RESULTS =====");
+    println!("requests:        {}", latencies_us.len());
+    println!("wall time:       {wall:.2} s");
+    println!("throughput:      {:.1} solves/s", latencies_us.len() as f64 / wall);
+    println!(
+        "latency:         mean {:.1} ms | p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        mean / 1e3,
+        pct(0.50) as f64 / 1e3,
+        pct(0.95) as f64 / 1e3,
+        pct(0.99) as f64 / 1e3,
+        *latencies_us.last().unwrap() as f64 / 1e3
+    );
+    println!("max rel error:   {max_err:.3e}");
+    println!("\n--- service metrics ---\n{}", client.metrics().expect("metrics"));
+
+    server.stop();
+    service.shutdown();
+
+    // Exit code communicates success to `make e2e` / EXPERIMENTS.md.
+    if max_err > 1e-2 {
+        eprintln!("FAIL: accuracy out of tolerance");
+        std::process::exit(1);
+    }
+    println!("\nE2E OK");
+}

@@ -1,0 +1,64 @@
+//! Conditioning study: how solver error degrades with κ(A) — sweeps the
+//! §5.1 generator's condition number from 10² to 10¹⁴ and reports forward
+//! error and residual suboptimality for SAA-SAS, LSQR and one-shot SAS,
+//! including the regime where Algorithm 1's perturbation fallback matters.
+//!
+//! Run: `cargo run --release --example ill_conditioned`
+
+use snsolve::problems::{generate_dense, DenseProblemSpec};
+use snsolve::solvers::lsqr::{LsqrConfig, LsqrSolver};
+use snsolve::solvers::saa::{SaaConfig, SaaSolver};
+use snsolve::solvers::sas::SketchAndSolve;
+use snsolve::solvers::Solver;
+
+fn main() {
+    let (m, n) = (8000, 80);
+    println!("conditioning sweep on dense {m}x{n} (β = 1e-10):\n");
+    println!(
+        "{:>8} {:<14} {:>12} {:>14} {:>7} {:>9}",
+        "κ", "solver", "rel_err", "resid_subopt", "iters", "fallback"
+    );
+    for exp in [2i32, 4, 6, 8, 10, 12, 14] {
+        let cond = 10f64.powi(exp);
+        let p = generate_dense(&DenseProblemSpec {
+            m,
+            n,
+            cond,
+            resid_norm: 1e-10,
+            seed: 100 + exp as u64,
+        });
+        let solvers: Vec<Box<dyn Solver>> = vec![
+            Box::new(SaaSolver::new(SaaConfig {
+                lsqr: LsqrConfig { atol: 1e-14, btol: 1e-14, conlim: 0.0, ..Default::default() },
+                ..Default::default()
+            })),
+            Box::new(LsqrSolver::new(LsqrConfig {
+                atol: 1e-14,
+                btol: 1e-14,
+                conlim: 0.0,
+                iter_lim: Some(4 * n),
+                ..Default::default()
+            })),
+            Box::new(SketchAndSolve::default()),
+        ];
+        for solver in solvers {
+            let sol = solver.solve(&p.a, &p.b).expect("solve");
+            println!(
+                "{:>8.0e} {:<14} {:>12.3e} {:>14.3e} {:>7} {:>9}",
+                cond,
+                solver.name(),
+                p.relative_error(&sol.x),
+                p.residual_suboptimality(&sol.x).abs(),
+                sol.iterations,
+                sol.fallback_used
+            );
+        }
+        println!();
+    }
+    println!(
+        "Reading the table: forward error grows ~κ·ε for all solvers (the\n\
+         problem's intrinsic sensitivity); SAA-SAS tracks LSQR's accuracy with\n\
+         far fewer iterations, and the one-shot estimate loses accuracy first —\n\
+         the paper's §5.3 comparison, extended across the κ axis."
+    );
+}

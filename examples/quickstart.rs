@@ -1,0 +1,63 @@
+//! Quickstart: generate an ill-conditioned least-squares problem (§5.1)
+//! and solve it three ways — SAA-SAS (the paper's algorithm), the LSQR
+//! baseline, and the one-shot sketch-and-solve estimate.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use snsolve::problems::{generate_dense, DenseProblemSpec};
+use snsolve::solvers::lsqr::{LsqrConfig, LsqrSolver};
+use snsolve::solvers::saa::SaaSolver;
+use snsolve::solvers::sas::SketchAndSolve;
+use snsolve::solvers::Solver;
+
+fn main() {
+    // The paper's error-comparison instance (§5.1).
+    let spec = DenseProblemSpec {
+        m: 20_000,
+        n: 100,
+        cond: 1e10,        // κ = 10¹⁰  (paper §5.1)
+        resid_norm: 1e-10, // β = 10⁻¹⁰
+        seed: 42,
+    };
+    println!(
+        "generating dense {}x{} problem with κ = {:.0e}, β = {:.0e} ...",
+        spec.m, spec.n, spec.cond, spec.resid_norm
+    );
+    let p = generate_dense(&spec);
+
+    let solvers: Vec<Box<dyn Solver>> = vec![
+        Box::new(SaaSolver::default()),
+        Box::new(LsqrSolver::new(LsqrConfig {
+            atol: 1e-14,
+            btol: 1e-14,
+            conlim: 0.0,
+            iter_lim: Some(400),
+            ..Default::default()
+        })),
+        Box::new(SketchAndSolve::default()),
+    ];
+
+    println!(
+        "\n{:<18} {:>10} {:>8} {:>12} {:>12} {:>10}",
+        "solver", "time", "iters", "rel_err", "resid", "converged"
+    );
+    for solver in solvers {
+        let t0 = std::time::Instant::now();
+        let sol = solver.solve(&p.a, &p.b).expect("solve");
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<18} {:>9.3}s {:>8} {:>12.3e} {:>12.3e} {:>10}",
+            solver.name(),
+            dt,
+            sol.iterations,
+            p.relative_error(&sol.x),
+            p.residual_norm(&sol.x),
+            sol.converged
+        );
+    }
+    println!(
+        "\nSAA-SAS reaches LSQR-level error in a fraction of the iterations\n\
+         because R from the sketched QR is a near-perfect right preconditioner\n\
+         and z0 = Q'(Sb) already lands O(eps) from the solution (paper §4)."
+    );
+}

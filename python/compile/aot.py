@@ -1,0 +1,151 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Writes ``<entry>_<m>x<n>.hlo.txt`` per (entry, bucket) plus
+``manifest.json`` describing every artifact's I/O signature — the Rust
+runtime's ground truth for literal packing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import BUCKETS, ENTRIES, ShapeBucket
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to HLO text via stablehlo→XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry(entry: str, b: ShapeBucket):
+    """Lower one entry point at one bucket; returns (lowered, ins, outs).
+
+    ``ins``/``outs`` are manifest I/O descriptors: [{name, dtype, shape}].
+    """
+    a = _spec((b.m, b.n))
+    vec = _spec((b.m,))
+    h = _spec((b.m,), jnp.int32)
+    sg = _spec((b.m,))
+
+    if entry == "saa_solve":
+        lowered = model.saa_solve.lower(a, vec, h, sg,
+                                        sketch_rows=b.s, iters=b.iters)
+        ins = [("a", "f32", [b.m, b.n]), ("b", "f32", [b.m]),
+               ("buckets", "s32", [b.m]), ("signs", "f32", [b.m])]
+        outs = [("x", "f32", [b.n]), ("history", "f32", [b.iters])]
+    elif entry == "lsqr_baseline":
+        lowered = model.lsqr_baseline.lower(a, vec, iters=b.baseline_iters)
+        ins = [("a", "f32", [b.m, b.n]), ("b", "f32", [b.m])]
+        outs = [("x", "f32", [b.n]), ("history", "f32", [b.baseline_iters])]
+    elif entry == "sketch_only":
+        lowered = model.sketch_only.lower(a, h, sg, sketch_rows=b.s)
+        ins = [("a", "f32", [b.m, b.n]),
+               ("buckets", "s32", [b.m]), ("signs", "f32", [b.m])]
+        outs = [("b_sk", "f32", [b.s, b.n])]
+    elif entry == "sketch_and_solve_only":
+        lowered = model.sketch_and_solve_only.lower(a, vec, h, sg,
+                                                    sketch_rows=b.s)
+        ins = [("a", "f32", [b.m, b.n]), ("b", "f32", [b.m]),
+               ("buckets", "s32", [b.m]), ("signs", "f32", [b.m])]
+        outs = [("x", "f32", [b.n])]
+    else:
+        raise ValueError(f"unknown entry {entry!r}")
+
+    ins = [{"name": nm, "dtype": dt, "shape": shp} for nm, dt, shp in ins]
+    outs = [{"name": nm, "dtype": dt, "shape": shp} for nm, dt, shp in outs]
+    return lowered, ins, outs
+
+
+FORBIDDEN = ("custom-call",)
+
+
+def check_no_custom_calls(name: str, hlo: str) -> None:
+    """The Rust PJRT client has no LAPACK/FFI registry — refuse to ship an
+    artifact that would fail at service startup."""
+    for needle in FORBIDDEN:
+        if needle in hlo:
+            lines = [ln.strip() for ln in hlo.splitlines() if needle in ln]
+            raise RuntimeError(
+                f"{name}: lowered HLO contains {needle!r} "
+                f"(unrunnable on the Rust PJRT CPU client):\n  "
+                + "\n  ".join(lines[:5])
+            )
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    for b in BUCKETS:
+        for entry in ENTRIES:
+            name = f"{entry}_{b.tag}"
+            lowered, ins, outs = lower_entry(entry, b)
+            hlo = to_hlo_text(lowered)
+            check_no_custom_calls(name, hlo)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            artifacts.append({
+                "name": name,
+                "entry": entry,
+                "file": fname,
+                "m": b.m,
+                "n": b.n,
+                "s": b.s,
+                "iters": b.iters if entry == "saa_solve" else (
+                    b.baseline_iters if entry == "lsqr_baseline" else 0),
+                "inputs": ins,
+                "outputs": outs,
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            })
+            print(f"wrote {path} ({len(hlo)/1024:.0f} KiB)")
+    manifest = {"version": 1, "artifacts": artifacts}
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(artifacts)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None,
+                   help="compat: single-file mode writes the smoke artifact")
+    args = p.parse_args()
+    if args.out:
+        # Back-compat path used by the Makefile's stamp file.
+        out_dir = os.path.dirname(args.out) or "."
+        build(out_dir)
+        return
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

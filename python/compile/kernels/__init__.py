@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True off-TPU) + pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .countsketch import countsketch, countsketch_vec  # noqa: F401
+from .fht import fht  # noqa: F401
+from .gaussian_sketch import gaussian_sketch  # noqa: F401

@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernel: Clarkson–Woodruff (CountSketch) application.
+
+The paper's final algorithm sketches with CountSketch, whose application is
+a *scatter*: row ``i`` of ``A`` is added (sign-flipped) into output row
+``h[i]``. Scatters are hostile to TPU hardware — the systolic MXU wants
+dense tiles and VMEM has no cross-lane atomics — so the kernel inverts the
+loop structure instead of porting the scatter:
+
+* the **grid runs over column stripes** of width ``TILE_N`` and row blocks
+  of height ``TILE_M``;
+* each grid step owns the **entire (s × TILE_N) output stripe in VMEM**
+  (s is small: a few·n) and streams one (TILE_M × TILE_N) block of ``A``
+  plus the matching slice of ``h``/``sign`` from HBM;
+* within the block, rows are folded into the resident stripe with a
+  one-hot-select accumulate — race-free by construction because no other
+  grid step ever touches this stripe.
+
+VMEM budget (f32): stripe ``s·TILE_N·4`` + block ``TILE_M·TILE_N·4``;
+with s = 1024, TILE_N = 256, TILE_M = 512 that is 1.0 MB + 0.5 MB — well
+under the ~16 MB/core envelope, leaving room for double buffering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpret path and the
+structure (BlockSpec schedule) is the TPU story. See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_N = 256
+DEFAULT_TILE_M = 512
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``cap`` (tiles must tile exactly)."""
+    cap = min(cap, n)
+    for t in range(cap, 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _countsketch_kernel(h_ref, sgn_ref, a_ref, o_ref, *, sketch_rows: int,
+                        tile_m: int, fold: str):
+    """One grid step: fold a (tile_m × tile_n) block of A into the stripe.
+
+    Grid layout: (row_blocks, col_stripes); axis 0 is the *inner* sequential
+    accumulation axis, so the output stripe (indexed only by axis 1) stays
+    resident while row blocks stream through.
+
+    Two fold strategies (DESIGN.md §Hardware-Adaptation):
+
+    * ``"onehot"`` — the TPU-shaped variant: express the bucket fold as a
+      (s × tile_m) one-hot matmul, feeding the MXU. Costs O(s·tile_m·tile_n)
+      flops per block, but MXU flops are nearly free and the access pattern
+      is purely dense.
+    * ``"scatter"`` — the CPU/interpret-shaped variant: a scatter-add into
+      the resident stripe, O(tile_m·tile_n) work (one pass over the block),
+      which is what makes CountSketch the paper's O(nnz) winner.
+    """
+    rb = pl.program_id(0)
+
+    # First row-block of each stripe zero-initializes the output.
+    @pl.when(rb == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]            # (tile_m, tile_n)
+    h = h_ref[...]            # (tile_m,) int32
+    sgn = sgn_ref[...]        # (tile_m,) float
+    signed = a * sgn[:, None]
+
+    if fold == "onehot":
+        onehot = jnp.equal(
+            jnp.arange(sketch_rows, dtype=h.dtype)[:, None], h[None, :]
+        ).astype(a.dtype)     # (s, tile_m)
+        o_ref[...] += onehot @ signed
+    else:
+        stripe = jnp.zeros((sketch_rows, signed.shape[1]), a.dtype)
+        o_ref[...] += stripe.at[h].add(signed)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sketch_rows", "tile_n", "tile_m", "interpret", "fold"))
+def countsketch(a: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray,
+                sketch_rows: int, *, tile_n: int = DEFAULT_TILE_N,
+                tile_m: int = DEFAULT_TILE_M,
+                interpret: bool = True, fold: str = "scatter") -> jnp.ndarray:
+    """``B = S·A`` for the CountSketch ``S`` defined by (buckets, signs).
+
+    Args:
+      a: ``(m, n)`` input matrix.
+      buckets: ``(m,)`` int32, values in ``[0, sketch_rows)``.
+      signs: ``(m,)`` ±1, same float dtype as ``a``.
+      sketch_rows: ``s``, the sketch dimension.
+      tile_n / tile_m: stripe width / row-block height (clamped to shape).
+      interpret: keep True off-TPU.
+
+    Returns:
+      ``(sketch_rows, n)``.
+    """
+    m, n = a.shape
+    assert buckets.shape == (m,), f"buckets {buckets.shape} vs m={m}"
+    assert signs.shape == (m,), f"signs {signs.shape} vs m={m}"
+    tile_n = _largest_divisor_at_most(n, tile_n)
+    tile_m = _largest_divisor_at_most(m, tile_m)
+    grid = (m // tile_m, n // tile_n)
+
+    assert fold in ("scatter", "onehot"), f"unknown fold {fold!r}"
+    kernel = functools.partial(
+        _countsketch_kernel, sketch_rows=sketch_rows, tile_m=tile_m, fold=fold)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda rb, cs: (rb,)),          # buckets
+            pl.BlockSpec((tile_m,), lambda rb, cs: (rb,)),          # signs
+            pl.BlockSpec((tile_m, tile_n), lambda rb, cs: (rb, cs)),  # A block
+        ],
+        out_specs=pl.BlockSpec(
+            (sketch_rows, tile_n), lambda rb, cs: (0, cs)),          # stripe
+        out_shape=jax.ShapeDtypeStruct((sketch_rows, n), a.dtype),
+        interpret=interpret,
+    )(buckets, signs, a)
+
+
+def countsketch_vec(b: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray,
+                    sketch_rows: int, *, interpret: bool = True) -> jnp.ndarray:
+    """``c = S·b`` for a vector: the (m, 1) special case of the kernel.
+
+    Full-block tiles: a vector sketch is one streaming pass; splitting it
+    into grid steps only adds interpret-mode dispatch overhead.
+    """
+    out = countsketch(b[:, None], buckets, signs, sketch_rows,
+                      tile_n=1, tile_m=b.shape[0], interpret=interpret)
+    return out[:, 0]

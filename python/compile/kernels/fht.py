@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: fast Walsh–Hadamard transform (SRHT core).
+
+The SRHT sketch needs ``H·(D·A)`` where H is the m̃×m̃ Hadamard matrix. A
+GPU implementation would assign a threadblock per column stripe and run the
+log₂(m̃) butterfly stages in shared memory; the TPU mapping keeps the same
+decomposition but the stripe lives in **VMEM**:
+
+* grid over column stripes of width TILE_N;
+* the full (m̃ × TILE_N) stripe is resident per grid step (the butterfly
+  is a permutation-heavy, matmul-free pattern — VPU work, not MXU);
+* all log₂(m̃) stages run in-register/VMEM with no HBM round-trips, which
+  is the entire point: HBM traffic is 2·m̃·TILE_N floats total regardless
+  of depth.
+
+VMEM/step (f32): m̃·TILE_N·4 B → with m̃ = 8192, TILE_N = 256 that is 8 MB;
+the AOT shape registry keeps stripes under that budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_N = 128
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    cap = min(cap, n)
+    for t in range(cap, 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _fht_kernel(x_ref, o_ref, *, rows: int):
+    """Full butterfly over the resident stripe (rows must be a power of 2)."""
+    y = x_ref[...]
+    n = y.shape[1]
+    h = 1
+    while h < rows:
+        y = y.reshape(rows // (2 * h), 2, h, n)
+        a = y[:, 0]
+        b = y[:, 1]
+        y = jnp.concatenate([a + b, a - b], axis=1).reshape(rows, n)
+        h *= 2
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fht(x: jnp.ndarray, *, tile_n: int = DEFAULT_TILE_N,
+        interpret: bool = True) -> jnp.ndarray:
+    """Unnormalized FWHT along axis 0 of ``(m, n)``; ``m`` a power of two."""
+    m, n = x.shape
+    assert m & (m - 1) == 0, f"rows {m} must be a power of two"
+    tile_n = _largest_divisor_at_most(n, tile_n)
+    grid = (n // tile_n,)
+    kernel = functools.partial(_fht_kernel, rows=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, tile_n), lambda cs: (0, cs))],
+        out_specs=pl.BlockSpec((m, tile_n), lambda cs: (0, cs)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

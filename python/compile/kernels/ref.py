@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with nothing but ``jax.numpy`` primitives. ``python/tests/test_kernels.py``
+sweeps shapes and dtypes (hypothesis) asserting kernel == oracle; this is
+the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def countsketch_ref(a: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray,
+                    sketch_rows: int) -> jnp.ndarray:
+    """Clarkson–Woodruff sketch: ``B[h[i], :] += sign[i] * A[i, :]``.
+
+    Args:
+      a: ``(m, n)`` input.
+      buckets: ``(m,)`` int32 target rows in ``[0, sketch_rows)``.
+      signs: ``(m,)`` float ±1.
+      sketch_rows: output rows ``s``.
+
+    Returns:
+      ``(s, n)`` sketched matrix.
+    """
+    signed = a * signs[:, None]
+    # segment-sum by bucket: a one-hot matmul keeps it pure-jnp and exact.
+    onehot = jnp.equal(
+        buckets[:, None], jnp.arange(sketch_rows, dtype=buckets.dtype)[None, :]
+    ).astype(a.dtype)
+    return onehot.T @ signed
+
+
+def gaussian_sketch_ref(s_mat: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Dense sketch application: plain matmul ``S @ A``."""
+    return s_mat @ a
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized fast Walsh–Hadamard transform along axis 0.
+
+    ``x`` has shape ``(m, ...)`` with ``m`` a power of two.
+    """
+    m = x.shape[0]
+    assert m & (m - 1) == 0, f"rows {m} must be a power of two"
+    h = 1
+    y = x
+    while h < m:
+        y = y.reshape(m // (2 * h), 2, h, *x.shape[1:])
+        a, b = y[:, 0], y[:, 1]
+        y = jnp.concatenate([a + b, a - b], axis=1).reshape(m, *x.shape[1:])
+        h *= 2
+    return y
+
+
+def mgs_qr_ref(b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Modified Gram–Schmidt economy QR (two-pass) — pure jnp, no LAPACK.
+
+    Oracle for the custom-call-free QR used in the AOT graphs (the CPU PJRT
+    runtime in the Rust layer has no LAPACK custom-call registry, so
+    ``jnp.linalg.qr`` is off-limits in exported HLO).
+    """
+    s, n = b.shape
+    q = jnp.zeros((s, n), b.dtype)
+    r = jnp.zeros((n, n), b.dtype)
+    for j in range(n):
+        v = b[:, j]
+        for _ in range(2):  # re-orthogonalize: "twice is enough"
+            proj = q.T @ v
+            r = r.at[:, j].add(proj)
+            v = v - q @ proj
+        norm = jnp.linalg.norm(v)
+        r = r.at[j, j].set(norm)
+        q = q.at[:, j].set(v / norm)
+    return q, r

@@ -1,0 +1,344 @@
+"""Layer 2: the SAA-SAS pipeline as JAX computation graphs.
+
+These functions are lowered ONCE by ``aot.py`` to HLO text and executed from
+the Rust coordinator via PJRT — Python never runs on the request path.
+
+Constraint that shapes this file: the Rust PJRT CPU client has **no LAPACK
+custom-call registry**, so ``jnp.linalg.qr`` / ``cholesky`` /
+``lax.linalg.triangular_solve`` (which all lower to
+``lapack_*`` custom-calls on CPU) are off-limits. Every factorization and
+solve here is hand-written from matmul/scan/dynamic-slice — pure HLO ops
+that any PJRT backend executes. ``python/tests/test_model.py`` asserts the
+lowered modules are custom-call-free.
+
+Numerics: the AOT path is f32 (XLA CPU). With MGS(2-pass) QR and
+substitution solves the pipeline is accurate to ~κ(A)·ε_f32; the native f64
+Rust path covers the paper's extreme κ = 10¹⁰ experiments, and the
+integration tests compare the two at f32-appropriate tolerances.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.countsketch import countsketch, countsketch_vec
+
+
+# ----------------------------------------------------------------------
+# Custom-call-free dense building blocks
+# ----------------------------------------------------------------------
+
+def mgs_qr(b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two-pass modified Gram–Schmidt economy QR of ``(s, n)``, s ≥ n.
+
+    Pure scan/matmul — lowers to an HLO while-loop, no custom calls.
+    Two orthogonalization passes keep ‖QᵀQ − I‖ = O(ε) even for
+    ill-conditioned B (Giraud et al. 2005), which SAA-SAS depends on.
+    """
+    s, n = b.shape
+    dtype = b.dtype
+
+    def step(carry, j):
+        q, r = carry
+        v = jax.lax.dynamic_slice(b, (0, j), (s, 1))[:, 0]
+        proj_total = jnp.zeros((n,), dtype)
+        for _ in range(2):  # two-pass re-orthogonalization
+            proj = q.T @ v
+            proj_total = proj_total + proj
+            v = v - q @ proj
+        norm = jnp.sqrt(jnp.sum(v * v))
+        # Guard rank deficiency: if the column vanished, keep a zero column
+        # (R gets a zero diagonal; downstream substitution guards too).
+        safe = jnp.where(norm > 0, norm, jnp.asarray(1.0, dtype))
+        qcol = v / safe
+        q = jax.lax.dynamic_update_slice(q, qcol[:, None], (0, j))
+        rcol = proj_total.at[j].set(norm)
+        r = jax.lax.dynamic_update_slice(r, rcol[:, None], (0, j))
+        return (q, r), None
+
+    q0 = jnp.zeros((s, n), dtype)
+    r0 = jnp.zeros((n, n), dtype)
+    (q, r), _ = jax.lax.scan(step, (q0, r0), jnp.arange(n))
+    return q, r
+
+
+def mgs_qr_blocked(b: jnp.ndarray, panel: int = 32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Panel-blocked two-pass MGS QR — same math as [`mgs_qr`], restructured
+    for AOT latency.
+
+    Perf note (EXPERIMENTS.md §Perf-L2): the column-at-a-time scan costs one
+    sequential HLO while-loop step *per column* (~1.3 ms dispatch each on
+    XLA CPU → 340 ms at n = 256). Blocking processes `panel` columns per
+    scan step: inter-panel orthogonalization is two GEMMs (CGS2), the
+    within-panel factorization is an unrolled MGS over `panel` columns.
+    n/panel = 8 sequential steps instead of 256.
+    """
+    s, n = b.shape
+    dtype = b.dtype
+    if n % panel != 0:
+        panel = 1  # fallback: degenerate to column-at-a-time
+    nblk = n // panel
+
+    def step(carry, p):
+        q, r = carry
+        j0 = p * panel
+        v = jax.lax.dynamic_slice(b, (0, j0), (s, panel))
+        # CGS2 against all previously filled columns (unfilled are zero).
+        proj_total = jnp.zeros((n, panel), dtype)
+        for _ in range(2):
+            proj = q.T @ v
+            proj_total = proj_total + proj
+            v = v - q @ proj
+        r = jax.lax.dynamic_update_slice(
+            r,
+            jax.lax.dynamic_slice(r, (0, j0), (n, panel)) + proj_total,
+            (0, j0),
+        )
+        # Within-panel MGS (unrolled: `panel` small).
+        qp = jnp.zeros((s, panel), dtype)
+        rp = jnp.zeros((panel, panel), dtype)
+        for j in range(panel):
+            col = v[:, j]
+            acc = jnp.zeros((panel,), dtype)
+            for _ in range(2):
+                proj = qp.T @ col
+                acc = acc + proj
+                col = col - qp @ proj
+            norm = jnp.sqrt(jnp.sum(col * col))
+            safe = jnp.where(norm > 0, norm, jnp.asarray(1.0, dtype))
+            qp = qp.at[:, j].set(col / safe)
+            rp = rp.at[:, j].set(acc.at[j].set(norm))
+        q = jax.lax.dynamic_update_slice(q, qp, (0, j0))
+        r = jax.lax.dynamic_update_slice(
+            r,
+            jax.lax.dynamic_slice(r, (j0, j0), (panel, panel)) + rp,
+            (j0, j0),
+        )
+        return (q, r), None
+
+    q0 = jnp.zeros((s, n), dtype)
+    r0 = jnp.zeros((n, n), dtype)
+    (q, r), _ = jax.lax.scan(step, (q0, r0), jnp.arange(nblk))
+    return q, r
+
+
+def solve_upper(r: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Back substitution ``x = R⁻¹ z`` for upper-triangular R — pure scan."""
+    n = r.shape[0]
+    dtype = r.dtype
+
+    def step(x, t):
+        j = n - 1 - t
+        rrow = jax.lax.dynamic_slice(r, (j, 0), (1, n))[0]
+        # x[k] = 0 for k ≤ j (not yet assigned) and R[j,k] = 0 for k < j,
+        # so the full dot picks up exactly the solved suffix.
+        dot = jnp.sum(rrow * x)
+        zj = jax.lax.dynamic_slice(z, (j,), (1,))[0]
+        diag = jax.lax.dynamic_slice(r, (j, j), (1, 1))[0, 0]
+        safe = jnp.where(jnp.abs(diag) > 0, diag, jnp.asarray(1.0, dtype))
+        xj = (zj - dot) / safe
+        x = jax.lax.dynamic_update_slice(x, xj[None], (j,))
+        return x, None
+
+    x0 = jnp.zeros((n,), dtype)
+    x, _ = jax.lax.scan(step, x0, jnp.arange(n))
+    return x
+
+
+def solve_upper_transpose(r: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Forward substitution ``x = R⁻ᵀ z`` (lower-triangular Rᵀ) — pure scan."""
+    n = r.shape[0]
+    dtype = r.dtype
+
+    def step(x, j):
+        # Rᵀ[j, :] = R[:, j]; entries below diag of Rᵀ are R[k, j], k < j.
+        rcol = jax.lax.dynamic_slice(r, (0, j), (n, 1))[:, 0]
+        dot = jnp.sum(rcol * x)  # picks up solved prefix only
+        zj = jax.lax.dynamic_slice(z, (j,), (1,))[0]
+        diag = jax.lax.dynamic_slice(r, (j, j), (1, 1))[0, 0]
+        safe = jnp.where(jnp.abs(diag) > 0, diag, jnp.asarray(1.0, dtype))
+        xj = (zj - dot) / safe
+        x = jax.lax.dynamic_update_slice(x, xj[None], (j,))
+        return x, None
+
+    x0 = jnp.zeros((n,), dtype)
+    x, _ = jax.lax.scan(step, x0, jnp.arange(n))
+    return x
+
+
+def invert_upper(r: jnp.ndarray) -> jnp.ndarray:
+    """Explicit ``R⁻¹`` by back substitution with matrix RHS — ONE n-step
+    scan total, after which applying ``R⁻¹``/``R⁻ᵀ`` is a plain GEMV.
+
+    Perf note (EXPERIMENTS.md §Perf-L2): the first AOT export applied
+    `solve_upper` *inside every LSQR iteration*, costing two n-step
+    sequential HLO while-loops per iteration (~15k loop-step dispatches per
+    solve at n = 256). Materializing R⁻¹ once collapses each iteration to
+    two fused GEMVs. Numerically this trades a substitution for an explicit
+    inverse; κ(R) ≈ κ(A), acceptable on the f32 serving path whose router
+    already bounds requested tolerance (RouterConfig::max_pjrt_tol).
+    """
+    n = r.shape[0]
+    dtype = r.dtype
+    eye = jnp.eye(n, dtype=dtype)
+
+    def step(x, t):
+        j = n - 1 - t
+        rrow = jax.lax.dynamic_slice(r, (j, 0), (1, n))[0]
+        # rows of x below j are solved; row j is still zero; R[j, k<j] = 0.
+        dot = rrow @ x
+        ej = jax.lax.dynamic_slice(eye, (j, 0), (1, n))[0]
+        diag = jax.lax.dynamic_slice(r, (j, j), (1, 1))[0, 0]
+        safe = jnp.where(jnp.abs(diag) > 0, diag, jnp.asarray(1.0, dtype))
+        xrow = (ej - dot) / safe
+        x = jax.lax.dynamic_update_slice(x, xrow[None, :], (j, 0))
+        return x, None
+
+    x0 = jnp.zeros((n, n), dtype)
+    x, _ = jax.lax.scan(step, x0, jnp.arange(n))
+    return x
+
+
+# ----------------------------------------------------------------------
+# LSQR as a fixed-trip scan
+# ----------------------------------------------------------------------
+
+class LsqrState(NamedTuple):
+    x: jnp.ndarray
+    u: jnp.ndarray
+    v: jnp.ndarray
+    w: jnp.ndarray
+    alpha: jnp.ndarray
+    rhobar: jnp.ndarray
+    phibar: jnp.ndarray
+
+
+def lsqr_scan(matvec, rmatvec, b: jnp.ndarray, x0: jnp.ndarray,
+              iters: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Paige–Saunders LSQR, fixed ``iters`` trips (no early exit — HLO keeps
+    a single fused while-loop; the Rust layer applies the convergence test
+    to the returned residual history, mirroring Algorithm 1 line 7).
+
+    Returns ``(x, resnorm_history)`` with history length ``iters``.
+    """
+    dtype = b.dtype
+
+    def norm(x):
+        return jnp.sqrt(jnp.sum(x * x))
+
+    u = b - matvec(x0)
+    beta = norm(u)
+    u = u / jnp.where(beta > 0, beta, 1.0)
+    v = rmatvec(u)
+    alpha = norm(v)
+    v = v / jnp.where(alpha > 0, alpha, 1.0)
+    state = LsqrState(x=x0, u=u, v=v, w=v, alpha=alpha, rhobar=alpha,
+                      phibar=beta)
+
+    def step(st: LsqrState, _):
+        u = matvec(st.v) - st.alpha * st.u
+        beta = norm(u)
+        u = u / jnp.where(beta > 0, beta, 1.0)
+        v = rmatvec(u) - beta * st.v
+        alpha = norm(v)
+        v = v / jnp.where(alpha > 0, alpha, 1.0)
+
+        rho = jnp.sqrt(st.rhobar * st.rhobar + beta * beta)
+        c = st.rhobar / rho
+        s = beta / rho
+        theta = s * alpha
+        rhobar = -c * alpha
+        phi = c * st.phibar
+        phibar = s * st.phibar
+
+        x = st.x + (phi / rho) * st.w
+        w = v - (theta / rho) * st.w
+        new = LsqrState(x=x, u=u, v=v, w=w, alpha=alpha, rhobar=rhobar,
+                        phibar=phibar)
+        return new, phibar.astype(dtype)
+
+    final, history = jax.lax.scan(step, state, None, length=iters)
+    return final.x, history
+
+
+# ----------------------------------------------------------------------
+# Pipeline entry points (AOT-exported)
+# ----------------------------------------------------------------------
+
+def sketch_qr_precond(a: jnp.ndarray, b: jnp.ndarray, buckets: jnp.ndarray,
+                      signs: jnp.ndarray, sketch_rows: int):
+    """Algorithm 1 steps 2–5: returns ``(r, z0, c)``.
+
+    ``B = S·A`` runs through the Layer-1 CountSketch Pallas kernel, so it
+    lowers into the same HLO module. Tiles are set to the full block on the
+    CPU/interpret path — the interpret-mode grid machinery costs ~10 ms per
+    grid step, dwarfing the scatter itself (§Perf-L1); the TPU tiling story
+    lives in the kernel's BlockSpecs and DESIGN.md.
+    """
+    m, n = a.shape
+    b_sk = countsketch(a, buckets, signs, sketch_rows, tile_m=m, tile_n=n)
+    c = countsketch_vec(b, buckets, signs, sketch_rows)
+    q, r = mgs_qr_blocked(b_sk)
+    z0 = q.T @ c
+    return r, z0, c
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_rows", "iters"))
+def saa_solve(a: jnp.ndarray, b: jnp.ndarray, buckets: jnp.ndarray,
+              signs: jnp.ndarray, *, sketch_rows: int, iters: int):
+    """Full SAA-SAS (Algorithm 1 lines 2–8, fallback decided by caller).
+
+    The preconditioned operator ``Y = A·R⁻¹`` is applied as
+    ``Y·v = A·(R⁻¹v)`` with an explicit, once-computed ``R⁻¹`` (see
+    [`invert_upper`]) — every LSQR iteration is two fused GEMVs, no
+    sequential inner loops, and the m×n dense ``Y`` is never formed.
+
+    Returns ``(x, resnorm_history)``.
+    """
+    r, z0, _c = sketch_qr_precond(a, b, buckets, signs, sketch_rows)
+    rinv = invert_upper(r)
+    rinvt = rinv.T  # hoisted: transposes must never live inside the scan
+
+    def matvec(z):
+        return a @ (rinv @ z)
+
+    def rmatvec(u):
+        # (uᵀA)ᵀ instead of Aᵀu: row-major contraction, no m×n transpose
+        # materialized per iteration (§Perf-L2: 20× on the 16384×256 bucket).
+        return rinvt @ (u @ a)
+
+    z, hist = lsqr_scan(matvec, rmatvec, b, z0, iters)
+    x = rinv @ z
+    return x, hist
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def lsqr_baseline(a: jnp.ndarray, b: jnp.ndarray, *, iters: int):
+    """The deterministic baseline as a graph: LSQR directly on A.
+
+    Returns ``(x, resnorm_history)``.
+    """
+    n = a.shape[1]
+    x0 = jnp.zeros((n,), a.dtype)
+    return lsqr_scan(lambda v: a @ v, lambda u: u @ a, b, x0, iters)
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_rows",))
+def sketch_only(a: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray, *,
+                sketch_rows: int):
+    """Standalone CountSketch application (microbenchmark artifact)."""
+    return countsketch(a, buckets, signs, sketch_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_rows",))
+def sketch_and_solve_only(a: jnp.ndarray, b: jnp.ndarray,
+                          buckets: jnp.ndarray, signs: jnp.ndarray, *,
+                          sketch_rows: int):
+    """Classical one-shot sketch-and-solve ``x̂ = R⁻¹Qᵀ(Sb)`` (cheapest
+    estimate; the ablation's accuracy floor)."""
+    r, z0, _c = sketch_qr_precond(a, b, buckets, signs, sketch_rows)
+    return invert_upper(r) @ z0

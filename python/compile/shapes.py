@@ -1,0 +1,45 @@
+"""Shape-bucket registry shared by aot.py, the Rust runtime and the tests.
+
+The solve service compiles one executable per (entry, bucket). Buckets are
+small-to-medium (the serving path); the huge Figure-3 shapes run on the
+native Rust solvers. Keep this list short — every bucket costs XLA compile
+time at `make artifacts` and at service startup.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class ShapeBucket(NamedTuple):
+    """One compiled problem shape."""
+    m: int        # rows
+    n: int        # cols
+    s: int        # sketch rows (CountSketch output)
+    iters: int    # fixed LSQR trips in the fused SAA graph
+    baseline_iters: int  # fixed LSQR trips in the baseline graph
+
+    @property
+    def tag(self) -> str:
+        return f"{self.m}x{self.n}"
+
+
+#: The buckets the service ships with. s = 4n (the SaaConfig default in
+#: Rust), iters sized so the preconditioned solve converges with slack.
+BUCKETS: list[ShapeBucket] = [
+    ShapeBucket(m=64, n=8, s=32, iters=8, baseline_iters=16),       # smoke
+    ShapeBucket(m=4096, n=64, s=256, iters=24, baseline_iters=128),
+    ShapeBucket(m=8192, n=128, s=512, iters=24, baseline_iters=128),
+    ShapeBucket(m=16384, n=256, s=1024, iters=30, baseline_iters=128),
+]
+
+#: Entry points exported per bucket (must match model.py function names).
+ENTRIES = ("saa_solve", "lsqr_baseline", "sketch_only", "sketch_and_solve_only")
+
+
+def bucket_for(m: int, n: int) -> ShapeBucket | None:
+    """Exact-match bucket lookup."""
+    for b in BUCKETS:
+        if b.m == m and b.n == n:
+            return b
+    return None

@@ -1,0 +1,185 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the core
+correctness signal required before anything is AOT-exported.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import countsketch, countsketch_vec, fht, gaussian_sketch
+from compile.kernels.ref import (countsketch_ref, fwht_ref,
+                                 gaussian_sketch_ref, mgs_qr_ref)
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else \
+        dict(rtol=1e-12, atol=1e-12)
+
+
+# ----------------------------------------------------------------------
+# CountSketch
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([32, 64, 128, 512, 1000]),
+    n=st.sampled_from([1, 3, 8, 32, 100]),
+    s=st.sampled_from([8, 16, 64]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_countsketch_matches_ref(m, n, s, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    h = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+    sg = jnp.asarray(rng.choice([-1.0, 1.0], m), dtype)
+    got = countsketch(a, h, sg, s)
+    want = countsketch_ref(a, h, sg, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tile_m=st.sampled_from([16, 64, 256]),
+    tile_n=st.sampled_from([4, 16, 128]),
+)
+def test_countsketch_tile_invariance(tile_m, tile_n):
+    """Result must not depend on the VMEM tiling."""
+    rng = np.random.default_rng(7)
+    m, n, s = 512, 48, 32
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    h = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+    sg = jnp.asarray(rng.choice([-1.0, 1.0], m), jnp.float32)
+    base = countsketch(a, h, sg, s)
+    tiled = countsketch(a, h, sg, s, tile_m=tile_m, tile_n=tile_n)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_countsketch_vec_matches_matrix_path():
+    rng = np.random.default_rng(3)
+    m, s = 1000, 64
+    v = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    h = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+    sg = jnp.asarray(rng.choice([-1.0, 1.0], m), jnp.float32)
+    got = countsketch_vec(v, h, sg, s)
+    want = countsketch_ref(v[:, None], h, sg, s)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_countsketch_preserves_column_sums_up_to_sign():
+    """Structural invariant: Σ_r B[r, j] = Σ_i sign[i]·A[i, j]."""
+    rng = np.random.default_rng(5)
+    m, n, s = 256, 10, 16
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float64)
+    h = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+    sg = jnp.asarray(rng.choice([-1.0, 1.0], m), jnp.float64)
+    b = countsketch(a, h, sg, s)
+    np.testing.assert_allclose(np.asarray(b.sum(0)),
+                               np.asarray((a * sg[:, None]).sum(0)),
+                               rtol=1e-10, atol=1e-10)
+
+
+# ----------------------------------------------------------------------
+# Dense (Gaussian) sketch GEMM
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([8, 32, 128]),
+    m=st.sampled_from([64, 256, 1000]),
+    n=st.sampled_from([1, 16, 100]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_sketch_matches_ref(s, m, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    smat = jnp.asarray(rng.standard_normal((s, m)) / np.sqrt(s), dtype)
+    a = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    got = gaussian_sketch(smat, a)
+    want = gaussian_sketch_ref(smat, a)
+    tol = dict(rtol=5e-4, atol=5e-4) if dtype == np.float32 else \
+        dict(rtol=1e-11, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tm=st.sampled_from([8, 32, 128]),
+    tk=st.sampled_from([16, 64, 256]),
+)
+def test_gaussian_sketch_tile_invariance(tm, tk):
+    rng = np.random.default_rng(11)
+    smat = jnp.asarray(rng.standard_normal((64, 512)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((512, 32)), jnp.float32)
+    base = gaussian_sketch(smat, a)
+    tiled = gaussian_sketch(smat, a, tm=tm, tk=tk)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ----------------------------------------------------------------------
+# FWHT
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logm=st.integers(0, 10),
+    n=st.sampled_from([1, 3, 16, 64]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fht_matches_ref(logm, n, dtype, seed):
+    m = 1 << logm
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    got = fht(x)
+    want = fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_fht_involution_and_parseval():
+    rng = np.random.default_rng(13)
+    m, n = 256, 8
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float64)
+    hx = fht(x)
+    # H(Hx) = m·x
+    np.testing.assert_allclose(np.asarray(fht(hx)), m * np.asarray(x),
+                               rtol=1e-11, atol=1e-11)
+    # Parseval: ‖Hx‖² = m·‖x‖²
+    np.testing.assert_allclose(float((hx**2).sum()), m * float((x**2).sum()),
+                               rtol=1e-12)
+
+
+def test_fht_rejects_non_power_of_two():
+    x = jnp.zeros((6, 2), jnp.float32)
+    with pytest.raises(AssertionError):
+        fht(x)
+
+
+# ----------------------------------------------------------------------
+# MGS QR oracle sanity (used by the AOT graphs)
+# ----------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([16, 48, 128]),
+    n=st.sampled_from([4, 12, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mgs_qr_ref_invariants(s, n, seed):
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((s, n)), jnp.float64)
+    q, r = mgs_qr_ref(b)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(n),
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(b),
+                               rtol=0, atol=1e-12)
+    assert np.allclose(np.tril(np.asarray(r), -1), 0.0)

@@ -1,0 +1,164 @@
+"""Layer-2 correctness: the AOT computation graphs.
+
+Validates the custom-call-free QR/substitution building blocks against
+scipy, the fused SAA-SAS graph against ground-truth planted problems, and
+the LSQR scan against scipy.sparse.linalg.lsqr.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.linalg as sla
+import scipy.sparse.linalg as spla
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def planted(m, n, resid, seed, dtype=np.float64, cond=None):
+    """Small §5.1-style problem with known minimizer."""
+    rng = np.random.default_rng(seed)
+    if cond is None:
+        a = rng.standard_normal((m, n))
+    else:
+        u, _ = np.linalg.qr(rng.standard_normal((m, n)))
+        v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        sig = np.logspace(0, -np.log10(cond), n)
+        a = (u * sig) @ v.T
+    x = rng.standard_normal(n)
+    x /= np.linalg.norm(x)
+    r = rng.standard_normal(m)
+    r -= a @ np.linalg.lstsq(a, r, rcond=None)[0]
+    r *= resid / np.linalg.norm(r)
+    b = a @ x + r
+    return a.astype(dtype), b.astype(dtype), x.astype(dtype)
+
+
+def cw_hash(m, s, seed):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.integers(0, s, m), jnp.int32),
+            jnp.asarray(rng.choice([-1.0, 1.0], m)))
+
+
+# ----------------------------------------------------------------------
+# building blocks
+# ----------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([24, 64]), n=st.sampled_from([4, 12, 24]),
+       seed=st.integers(0, 2**31 - 1))
+def test_mgs_qr_graph_invariants(s, n, seed):
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((s, n)))
+    q, r = model.mgs_qr(b)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(n), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(b), atol=1e-12)
+    assert np.allclose(np.tril(np.asarray(r), -1), 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([1, 5, 20, 64]), seed=st.integers(0, 2**31 - 1))
+def test_triangular_solves_match_scipy(n, seed):
+    rng = np.random.default_rng(seed)
+    r = np.triu(rng.standard_normal((n, n))) + 3.0 * np.eye(n)
+    z = rng.standard_normal(n)
+    got_u = np.asarray(model.solve_upper(jnp.asarray(r), jnp.asarray(z)))
+    np.testing.assert_allclose(got_u, sla.solve_triangular(r, z), rtol=1e-9)
+    got_t = np.asarray(
+        model.solve_upper_transpose(jnp.asarray(r), jnp.asarray(z)))
+    np.testing.assert_allclose(got_t, sla.solve_triangular(r.T, z, lower=True),
+                               rtol=1e-9)
+
+
+def test_solve_upper_guards_zero_diagonal():
+    r = jnp.asarray(np.diag([1.0, 0.0, 2.0]))
+    x = model.solve_upper(r, jnp.ones(3))
+    assert np.all(np.isfinite(np.asarray(x)))
+
+
+# ----------------------------------------------------------------------
+# LSQR scan
+# ----------------------------------------------------------------------
+
+def test_lsqr_scan_matches_scipy_lsqr():
+    a, b, _x = planted(300, 20, 0.1, 42)
+    aj = jnp.asarray(a)
+    x, hist = model.lsqr_scan(lambda v: aj @ v, lambda u: aj.T @ u,
+                              jnp.asarray(b), jnp.zeros(20), iters=40)
+    ref = spla.lsqr(a, b, atol=0, btol=0, iter_lim=40)[0]
+    np.testing.assert_allclose(np.asarray(x), ref, rtol=1e-6, atol=1e-8)
+    # history is the monotone phibar sequence
+    h = np.asarray(hist)
+    assert np.all(np.diff(h) <= 1e-12)
+
+
+def test_lsqr_scan_warm_start():
+    a, b, x_true = planted(200, 10, 1e-8, 43)
+    aj = jnp.asarray(a)
+    x, hist = model.lsqr_scan(lambda v: aj @ v, lambda u: aj.T @ u,
+                              jnp.asarray(b), jnp.asarray(x_true), iters=5)
+    err = np.linalg.norm(np.asarray(x) - x_true)
+    assert err < 1e-8, err
+
+
+# ----------------------------------------------------------------------
+# fused pipelines
+# ----------------------------------------------------------------------
+
+def test_saa_solve_recovers_planted_solution():
+    m, n, s = 2048, 32, 128
+    a, b, x_true = planted(m, n, 1e-6, 44)
+    h, sg = cw_hash(m, s, 45)
+    x, hist = model.saa_solve(jnp.asarray(a), jnp.asarray(b), h, sg,
+                              sketch_rows=s, iters=20)
+    err = np.linalg.norm(np.asarray(x) - x_true) / np.linalg.norm(x_true)
+    assert err < 1e-8, err
+    assert np.asarray(hist).shape == (20,)
+
+
+def test_saa_solve_illconditioned_f64():
+    m, n, s = 4096, 50, 200
+    a, b, x_true = planted(m, n, 1e-10, 46, cond=1e8)
+    h, sg = cw_hash(m, s, 47)
+    x, _ = model.saa_solve(jnp.asarray(a), jnp.asarray(b), h, sg,
+                           sketch_rows=s, iters=40)
+    err = np.linalg.norm(np.asarray(x) - x_true) / np.linalg.norm(x_true)
+    assert err < 1e-4, err
+
+
+def test_saa_beats_baseline_iteration_for_iteration():
+    m, n, s = 2048, 32, 128
+    a, b, x_true = planted(m, n, 1e-4, 48, cond=1e6)
+    h, sg = cw_hash(m, s, 49)
+    iters = 15
+    xs, _ = model.saa_solve(jnp.asarray(a), jnp.asarray(b), h, sg,
+                            sketch_rows=s, iters=iters)
+    xb, _ = model.lsqr_baseline(jnp.asarray(a), jnp.asarray(b), iters=iters)
+    err_s = np.linalg.norm(np.asarray(xs) - x_true)
+    err_b = np.linalg.norm(np.asarray(xb) - x_true)
+    assert err_s < err_b, (err_s, err_b)
+
+
+def test_sketch_and_solve_only_close_but_coarse():
+    m, n, s = 2048, 32, 128
+    a, b, x_true = planted(m, n, 0.01, 50)
+    h, sg = cw_hash(m, s, 51)
+    x = model.sketch_and_solve_only(jnp.asarray(a), jnp.asarray(b), h, sg,
+                                    sketch_rows=s)
+    err = np.linalg.norm(np.asarray(x) - x_true) / np.linalg.norm(x_true)
+    assert err < 0.05, err
+
+
+def test_sketch_only_matches_ref():
+    from compile.kernels.ref import countsketch_ref
+    m, n, s = 512, 16, 64
+    rng = np.random.default_rng(52)
+    a = jnp.asarray(rng.standard_normal((m, n)))
+    h, sg = cw_hash(m, s, 53)
+    got = model.sketch_only(a, h, sg, sketch_rows=s)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(countsketch_ref(a, h, sg, s)),
+                               atol=1e-10)

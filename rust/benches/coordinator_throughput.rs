@@ -1,0 +1,112 @@
+//! Bench: coordinator serving performance — requests/s and latency through
+//! the full queue→batcher→worker path, the factor-cache ablation
+//! (cache ON vs OFF is the batching win), and raw dispatch overhead vs a
+//! direct in-thread solve.
+
+use std::time::Duration;
+
+use snsolve::bench_harness::report::Table;
+use snsolve::coordinator::batcher::BatcherConfig;
+use snsolve::coordinator::{Service, ServiceConfig, SolveRequest, SolverChoice};
+use snsolve::linalg::{DenseMatrix, Matrix};
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+use snsolve::solvers::saa::SaaSolver;
+use snsolve::solvers::Solver;
+
+fn main() {
+    let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (m, n, requests) = if quick { (2048, 64, 60) } else { (8192, 128, 200) };
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(5));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let b = a.matvec(&g.gaussian_vec(n));
+
+    let mut table = Table::new(
+        "coordinator — serving throughput and dispatch overhead",
+        &["config", "requests", "wall_s", "req_per_s", "p50_us", "p99_us", "mean_batch", "cache_miss"],
+    );
+
+    // Direct solve (no service) — the baseline the dispatch overhead is
+    // measured against. Factor reuse OFF: full SAA each time.
+    {
+        let solver = SaaSolver::default();
+        let am = Matrix::Dense(a.clone());
+        let t0 = std::time::Instant::now();
+        let reps = requests / 4;
+        for _ in 0..reps {
+            snsolve::bench_harness::black_box(solver.solve(&am, &b).unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            "direct (no cache)".into(),
+            reps.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.1}", reps as f64 / wall),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+
+    // Service configurations.
+    for (label, cache_cap, max_batch) in [
+        ("service cache=off batch=1", 0usize, 1usize),
+        ("service cache=on  batch=1", 4, 1),
+        ("service cache=on  batch=16", 4, 16),
+    ] {
+        let mut cfg = ServiceConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+            },
+            ..Default::default()
+        };
+        cfg.worker.factor_cache_cap = cache_cap.max(1);
+        // cache "off": cap 1 but evict by reusing a fresh matrix id per
+        // request is awkward; emulate by cap 1 + alternating two matrices.
+        let svc = Service::start(cfg);
+        let id0 = svc.register_matrix(Matrix::Dense(a.clone()));
+        let id1 = svc.register_matrix(Matrix::Dense(a.clone()));
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..requests)
+            .map(|i| {
+                let matrix = if cache_cap == 0 {
+                    // alternate matrices to defeat the (cap-1) cache
+                    if i % 2 == 0 { id0 } else { id1 }
+                } else {
+                    id0
+                };
+                svc.submit(SolveRequest {
+                    matrix,
+                    rhs: b.clone(),
+                    solver: SolverChoice::Saa,
+                    tol: 1e-10,
+                    deadline_us: 0,
+                })
+                .expect("submit")
+            })
+            .collect();
+        for h in handles {
+            h.wait().expect("resp").result.expect("solution");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let met = svc.metrics();
+        let (_c, _mean, p50, p99, _max) = met.e2e_latency.snapshot();
+        table.row(vec![
+            label.into(),
+            requests.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.1}", requests as f64 / wall),
+            p50.to_string(),
+            p99.to_string(),
+            format!("{:.2}", met.mean_batch_size()),
+            snsolve::coordinator::metrics::Metrics::get(&met.factor_cache_misses).to_string(),
+        ]);
+        svc.shutdown();
+    }
+
+    println!("{}", table.render());
+    let _ = table.save("coordinator_throughput");
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate **Figure 3** — runtime of SAA-SAS vs deterministic
+//! LSQR on sparse problems with m ∈ logspace(2¹², 2²⁰), n = 1000.
+//!
+//! `cargo bench --bench figure3_runtime` runs the paper sweep;
+//! `SNSOLVE_BENCH_QUICK=1` (or `make bench-smoke`) runs a reduced sweep.
+//! Output: console table + target/bench-reports/figure3_runtime.{csv,json}.
+
+use snsolve::bench_harness::figures::{run_figure3, Figure3Config};
+
+fn main() {
+    let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let cfg = if quick { Figure3Config::smoke() } else { Figure3Config::paper() };
+    eprintln!(
+        "figure3: {} sizes in [{}, {}], n = {} (quick={quick})",
+        cfg.sizes.len(),
+        cfg.sizes.first().unwrap(),
+        cfg.sizes.last().unwrap(),
+        cfg.n
+    );
+    let t = run_figure3(&cfg);
+    println!("{}", t.render());
+    match t.save("figure3_runtime") {
+        Ok(p) => eprintln!("saved {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate **Figure 4** — relative forward error of SAA-SAS vs
+//! LSQR on the dense m = 20000, n = 100, κ = 10¹⁰, β = 10⁻¹⁰ instance,
+//! plus the **T-sap** paradigm ablation (SAP-SAS vs SAA-SAS vs LSQR) and
+//! the one-shot sketch-and-solve accuracy floor.
+//!
+//! `SNSOLVE_BENCH_QUICK=1` shrinks the instance and trial count.
+//! Output: console table + target/bench-reports/figure4_error.{csv,json}.
+
+use snsolve::bench_harness::figures::{run_figure4, Figure4Config};
+
+fn main() {
+    let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let cfg = if quick { Figure4Config::smoke() } else { Figure4Config::paper() };
+    eprintln!(
+        "figure4: {}x{} κ={:.0e} β={:.0e} trials={} (quick={quick})",
+        cfg.m, cfg.n, cfg.cond, cfg.beta, cfg.trials
+    );
+    let t = run_figure4(&cfg);
+    println!("{}", t.render());
+    // Aggregate per-solver medians for the summary EXPERIMENTS.md quotes.
+    summarize(&t);
+    match t.save("figure4_error") {
+        Ok(p) => eprintln!("saved {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+}
+
+fn summarize(t: &snsolve::bench_harness::report::Table) {
+    let mut by_solver: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    for row in &t.rows {
+        by_solver.entry(row[1].clone()).or_default().push(row[2].parse().unwrap_or(f64::NAN));
+    }
+    println!("median relative error by solver:");
+    for (solver, mut errs) in by_solver {
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!("  {solver:<14} {:.3e}", errs[errs.len() / 2]);
+    }
+}

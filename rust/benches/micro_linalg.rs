@@ -1,0 +1,129 @@
+//! Microbenchmarks of the L3 hot paths with achieved-vs-roofline context:
+//! blocked GEMM (GFLOP/s), Householder QR, FWHT, CountSketch apply
+//! (GB/s — bandwidth-bound), CSR matvec (the LSQR inner loop), and the
+//! Y = A·R⁻¹ right solve. These drive the §Perf iteration log.
+
+use snsolve::bench_harness::report::Table;
+use snsolve::bench_harness::{bench, config_from_env};
+use snsolve::linalg::sparse::CooBuilder;
+use snsolve::linalg::{gemm, hadamard, qr, triangular, DenseMatrix};
+use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
+use snsolve::sketch::{CountSketch, SketchOperator};
+
+fn main() {
+    let cfg = config_from_env();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1));
+    let mut table = Table::new(
+        "micro — L3 hot paths (achieved throughput)",
+        &["kernel", "shape", "median_s", "throughput", "unit"],
+    );
+
+    // GEMM: C = A·B, classic compute-bound kernel.
+    for n in [256usize, 512, 1024] {
+        let a = DenseMatrix::gaussian(n, n, &mut g);
+        let b = DenseMatrix::gaussian(n, n, &mut g);
+        let st = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+        let gflops = 2.0 * (n as f64).powi(3) / st.median / 1e9;
+        table.row(vec![
+            "gemm".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{:.6}", st.median),
+            format!("{gflops:.2}"),
+            "GFLOP/s".into(),
+        ]);
+    }
+
+    // Householder QR at sketch scale (s = 4n).
+    for n in [128usize, 256] {
+        let s = 4 * n;
+        let a = DenseMatrix::gaussian(s, n, &mut g);
+        let st = bench(&cfg, || qr::qr_compact(&a).unwrap());
+        // flops ≈ 2·s·n² − (2/3)n³
+        let fl = 2.0 * s as f64 * (n as f64).powi(2) - 2.0 / 3.0 * (n as f64).powi(3);
+        table.row(vec![
+            "hhqr".into(),
+            format!("{s}x{n}"),
+            format!("{:.6}", st.median),
+            format!("{:.2}", fl / st.median / 1e9),
+            "GFLOP/s".into(),
+        ]);
+    }
+
+    // FWHT: bandwidth/latency bound butterfly.
+    for logm in [16usize, 20] {
+        let m = 1usize << logm;
+        let x = g.gaussian_vec(m);
+        let st = bench(&cfg, || {
+            let mut y = x.clone();
+            hadamard::fwht_inplace(&mut y).unwrap();
+            y
+        });
+        let mops = (m as f64 * logm as f64) / st.median / 1e9;
+        table.row(vec![
+            "fwht".into(),
+            format!("2^{logm}"),
+            format!("{:.6}", st.median),
+            format!("{mops:.2}"),
+            "Gop/s".into(),
+        ]);
+    }
+
+    // CountSketch apply: must run at streaming bandwidth (reads A once).
+    for (m, n) in [(1usize << 16, 256usize), (1 << 18, 128)] {
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let op = CountSketch::new(4 * n, m, 7);
+        let st = bench(&cfg, || op.apply_dense(&a));
+        let gbs = (m * n * 8) as f64 / st.median / 1e9;
+        table.row(vec![
+            "countsketch".into(),
+            format!("{m}x{n}"),
+            format!("{:.6}", st.median),
+            format!("{gbs:.2}"),
+            "GB/s".into(),
+        ]);
+    }
+
+    // CSR matvec: the LSQR inner loop on Figure-3 workloads.
+    {
+        let (m, n, per_row) = (1usize << 18, 1000usize, 5usize);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut bld = CooBuilder::with_capacity(m, n, m * per_row);
+        for i in 0..m {
+            for _ in 0..per_row {
+                bld.push(i, rng.next_bounded(n as u64) as usize, 1.0);
+            }
+        }
+        let a = bld.build();
+        let x = g.gaussian_vec(n);
+        let mut y = vec![0.0; m];
+        let st = bench(&cfg, || a.matvec_into(&x, &mut y));
+        let gbs = (a.nnz() * 12) as f64 / st.median / 1e9;
+        table.row(vec![
+            "csr_matvec".into(),
+            format!("{m}x{n} nnz={}", a.nnz()),
+            format!("{:.6}", st.median),
+            format!("{gbs:.2}"),
+            "GB/s".into(),
+        ]);
+    }
+
+    // Right solve Y = A·R⁻¹ (SAA step 4) at service scale.
+    {
+        let (m, n) = (16384usize, 256usize);
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let f = qr::qr_compact(&DenseMatrix::gaussian(4 * n, n, &mut g)).unwrap();
+        let r = f.r();
+        let st = bench(&cfg, || triangular::right_solve_upper(&a, &r).unwrap());
+        let fl = (m * n * n) as f64; // n²/2 MACs per row ≈ n² flops
+        table.row(vec![
+            "right_solve".into(),
+            format!("{m}x{n}"),
+            format!("{:.6}", st.median),
+            format!("{:.2}", fl / st.median / 1e9),
+            "GFLOP/s".into(),
+        ]);
+    }
+
+    println!("{}", table.render());
+    let _ = table.save("micro_linalg");
+}

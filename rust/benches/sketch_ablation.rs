@@ -1,0 +1,26 @@
+//! Bench: the **T-op** operator ablation (§2.2–2.3 — all six sketching
+//! operators: apply time, subspace-embedding distortion, end-to-end SAA
+//! time/error) and the **T-s** sketch-size sweep (s/n ratio).
+//!
+//! Output: console tables + target/bench-reports/
+//! {sketch_operator_ablation, sketch_size_ablation}.{csv,json}.
+
+use snsolve::bench_harness::figures::{
+    run_sketch_ablation, run_sketch_size_ablation, AblationConfig,
+};
+
+fn main() {
+    let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let cfg = if quick {
+        AblationConfig { m: 4096, n: 128, ..Default::default() }
+    } else {
+        AblationConfig::default()
+    };
+    eprintln!("ablation workload: {}x{} κ={:.0e} (quick={quick})", cfg.m, cfg.n, cfg.cond);
+    let t1 = run_sketch_ablation(&cfg);
+    println!("{}", t1.render());
+    let _ = t1.save("sketch_operator_ablation");
+    let t2 = run_sketch_size_ablation(&cfg);
+    println!("{}", t2.render());
+    let _ = t2.save("sketch_size_ablation");
+}

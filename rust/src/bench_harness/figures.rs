@@ -1,0 +1,378 @@
+//! Figure/table regenerators — one function per paper artifact, shared by
+//! `cargo bench` targets and the `snsolve figure3|figure4|ablate` CLI.
+//!
+//! Numbers are this machine's, not the authors' testbed; EXPERIMENTS.md
+//! compares the *shape* (who wins, by what factor, where the crossover
+//! falls) against the paper's figures.
+
+use crate::bench_harness::{bench, fmt_secs, BenchConfig};
+use crate::bench_harness::report::Table;
+use crate::problems::{
+    generate_dense, generate_sparse, paper_error_spec, DenseProblemSpec, SparseProblemSpec,
+};
+use crate::sketch::SketchKind;
+use crate::solvers::lsqr::{LsqrConfig, LsqrSolver};
+use crate::solvers::saa::{SaaConfig, SaaSolver};
+use crate::solvers::sap::SapSolver;
+use crate::solvers::sas::SketchAndSolve;
+use crate::solvers::Solver;
+
+/// Figure-3 parameters (paper: 10 sizes, m ∈ logspace(2¹², 2²⁰), n = 1000).
+#[derive(Debug, Clone)]
+pub struct Figure3Config {
+    pub sizes: Vec<usize>,
+    pub n: usize,
+    pub density: f64,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl Figure3Config {
+    /// The paper's sweep. Deviation from the paper, documented in
+    /// EXPERIMENTS.md: the baseline LSQR is capped at 600 iterations
+    /// (it is κ-stalled long before that on these instances, and the
+    /// runtime *shape* — linear in m at a fixed trip count — is what the
+    /// figure compares) and each point is the median of 2 timed runs;
+    /// this keeps the full 2¹²..2²⁰ sweep tractable on a single core.
+    pub fn paper() -> Self {
+        Self {
+            sizes: logspace_sizes(1 << 12, 1 << 20, 10),
+            n: 1000,
+            density: 5e-3,
+            seed: 2024,
+            bench: BenchConfig {
+                warmup_iters: 0,
+                min_iters: 2,
+                max_iters: 3,
+                min_time: std::time::Duration::ZERO,
+            },
+        }
+    }
+
+    /// A fast sweep for CI/smoke (minutes → seconds).
+    pub fn smoke() -> Self {
+        Self {
+            sizes: logspace_sizes(1 << 12, 1 << 16, 5),
+            n: 200,
+            density: 1e-2,
+            seed: 2024,
+            bench: BenchConfig::quick(),
+        }
+    }
+}
+
+/// `count` log-equispaced integer sizes in [lo, hi].
+pub fn logspace_sizes(lo: usize, hi: usize, count: usize) -> Vec<usize> {
+    assert!(count >= 2 && hi > lo);
+    let (l0, l1) = ((lo as f64).ln(), (hi as f64).ln());
+    (0..count)
+        .map(|i| {
+            let t = i as f64 / (count - 1) as f64;
+            (l0 + t * (l1 - l0)).exp().round() as usize
+        })
+        .collect()
+}
+
+/// Regenerate Figure 3: runtime of SAA-SAS vs LSQR over matrix sizes.
+pub fn run_figure3(cfg: &Figure3Config) -> Table {
+    let mut table = Table::new(
+        "Figure 3 — runtime: SAA-SAS vs deterministic LSQR (sparse, n fixed)",
+        &["m", "n", "nnz", "lsqr_s", "saa_s", "speedup", "lsqr_iters", "saa_iters", "saa_err", "lsqr_err"],
+    );
+    let lsqr_solver = LsqrSolver::new(LsqrConfig {
+        atol: 1e-10,
+        btol: 1e-10,
+        conlim: 0.0,
+        iter_lim: Some(600), // see Figure3Config::paper docs
+        ..Default::default()
+    });
+    let saa_solver = SaaSolver::new(SaaConfig {
+        lsqr: LsqrConfig { atol: 1e-10, btol: 1e-10, conlim: 0.0, ..Default::default() },
+        ..Default::default()
+    });
+    for &m in &cfg.sizes {
+        let spec = SparseProblemSpec {
+            m,
+            n: cfg.n,
+            density: cfg.density,
+            cond_scale: 1e6,
+            resid_norm: 1e-10,
+            seed: cfg.seed ^ m as u64,
+        };
+        let p = generate_sparse(&spec);
+        let s_lsqr = bench(&cfg.bench, || lsqr_solver.solve(&p.a, &p.b).unwrap());
+        let s_saa = bench(&cfg.bench, || saa_solver.solve(&p.a, &p.b).unwrap());
+        let sol_l = lsqr_solver.solve(&p.a, &p.b).unwrap();
+        let sol_s = saa_solver.solve(&p.a, &p.b).unwrap();
+        table.row(vec![
+            m.to_string(),
+            cfg.n.to_string(),
+            p.a.nnz().to_string(),
+            format!("{:.6}", s_lsqr.median),
+            format!("{:.6}", s_saa.median),
+            format!("{:.2}", s_lsqr.median / s_saa.median),
+            sol_l.iterations.to_string(),
+            sol_s.iterations.to_string(),
+            format!("{:.3e}", p.relative_error(&sol_s.x)),
+            format!("{:.3e}", p.relative_error(&sol_l.x)),
+        ]);
+        log::info!(
+            "figure3 m={m}: lsqr {} saa {} speedup {:.2}",
+            fmt_secs(s_lsqr.median),
+            fmt_secs(s_saa.median),
+            s_lsqr.median / s_saa.median
+        );
+    }
+    table
+}
+
+/// Figure-4 parameters (paper: dense m = 20000, n = 100, κ = 10¹⁰,
+/// β = 10⁻¹⁰, relative forward error across trials).
+#[derive(Debug, Clone)]
+pub struct Figure4Config {
+    pub m: usize,
+    pub n: usize,
+    pub cond: f64,
+    pub beta: f64,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Figure4Config {
+    pub fn paper() -> Self {
+        let s = paper_error_spec(7);
+        Self { m: s.m, n: s.n, cond: s.cond, beta: s.resid_norm, trials: 10, seed: 7 }
+    }
+
+    pub fn smoke() -> Self {
+        Self { m: 4000, n: 50, cond: 1e10, beta: 1e-10, trials: 3, seed: 7 }
+    }
+}
+
+/// Regenerate Figure 4: relative error ‖x−x̂‖/‖x‖ per solver, plus the
+/// T-sap paradigm ablation columns (runtime + convergence).
+pub fn run_figure4(cfg: &Figure4Config) -> Table {
+    let mut table = Table::new(
+        "Figure 4 — relative error on ill-conditioned dense problems (+ T-sap ablation)",
+        &["trial", "solver", "rel_err", "resid_subopt", "iters", "time_s", "converged"],
+    );
+    let solvers: Vec<(&str, Box<dyn Solver>)> = vec![
+        (
+            "lsqr",
+            Box::new(LsqrSolver::new(LsqrConfig {
+                atol: 1e-14,
+                btol: 1e-14,
+                conlim: 0.0,
+                iter_lim: Some(4 * cfg.n),
+                ..Default::default()
+            })),
+        ),
+        (
+            "saa-sas",
+            Box::new(SaaSolver::new(SaaConfig {
+                lsqr: LsqrConfig { atol: 1e-14, btol: 1e-14, conlim: 0.0, ..Default::default() },
+                ..Default::default()
+            })),
+        ),
+        (
+            "sap-sas",
+            Box::new(SapSolver::new(crate::solvers::sap::SapConfig {
+                lsqr: LsqrConfig { atol: 1e-14, btol: 1e-14, conlim: 0.0, ..Default::default() },
+                ..Default::default()
+            })),
+        ),
+        ("sketch-solve", Box::new(SketchAndSolve::default())),
+    ];
+    for trial in 0..cfg.trials {
+        let spec = DenseProblemSpec {
+            m: cfg.m,
+            n: cfg.n,
+            cond: cfg.cond,
+            resid_norm: cfg.beta,
+            seed: cfg.seed + trial as u64,
+        };
+        let p = generate_dense(&spec);
+        for (name, solver) in &solvers {
+            let t0 = std::time::Instant::now();
+            let sol = solver.solve(&p.a, &p.b).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            table.row(vec![
+                trial.to_string(),
+                name.to_string(),
+                format!("{:.3e}", p.relative_error(&sol.x)),
+                format!("{:.3e}", p.residual_suboptimality(&sol.x).abs()),
+                sol.iterations.to_string(),
+                format!("{:.6}", dt),
+                sol.converged.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// T-op ablation config: every sketching operator on one workload.
+#[derive(Debug, Clone)]
+pub struct AblationConfig {
+    pub m: usize,
+    pub n: usize,
+    pub cond: f64,
+    pub seed: u64,
+    pub bench: BenchConfig,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        Self { m: 16384, n: 256, cond: 1e8, seed: 11, bench: BenchConfig::quick() }
+    }
+}
+
+/// Regenerate the §2.2–2.3 operator comparison: sketch-apply time,
+/// embedding distortion, end-to-end SAA time and error per operator.
+pub fn run_sketch_ablation(cfg: &AblationConfig) -> Table {
+    use crate::sketch;
+    let mut table = Table::new(
+        "T-op — sketching operators: dense vs sparse (§2.2–2.3)",
+        &["operator", "class", "apply_s", "distortion", "saa_total_s", "saa_iters", "rel_err", "flops_est"],
+    );
+    let spec = DenseProblemSpec {
+        m: cfg.m,
+        n: cfg.n,
+        cond: cfg.cond,
+        resid_norm: 1e-8,
+        seed: cfg.seed,
+    };
+    let p = generate_dense(&spec);
+    let s_rows = 4 * cfg.n;
+    for kind in SketchKind::ALL {
+        let op = sketch::build(kind, s_rows, cfg.m, cfg.seed ^ 0xAB);
+        // sketch-apply timing
+        let stats = bench(&cfg.bench, || op.apply_matrix(&p.a));
+        // embedding distortion on the problem's own range: ‖(SU)ᵀ(SU) − I‖
+        // with U from the QR of A's columns (n small).
+        let a_dense = p.a.to_dense();
+        let u = crate::linalg::qr::orthonormal_columns(&a_dense).unwrap();
+        let su = op.apply_dense(&u);
+        let gram = su.transpose().matmul(&su).unwrap();
+        let dist = gram.fro_distance(&crate::linalg::DenseMatrix::eye(cfg.n));
+        // end-to-end SAA with this operator
+        let saa = SaaSolver::new(SaaConfig {
+            sketch: kind,
+            lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() },
+            seed: cfg.seed ^ 0xCD,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let sol = saa.solve(&p.a, &p.b).unwrap();
+        let saa_time = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            kind.name().to_string(),
+            if kind.is_sparse() { "sparse" } else { "dense" }.to_string(),
+            format!("{:.6}", stats.median),
+            format!("{:.3}", dist),
+            format!("{:.6}", saa_time),
+            sol.iterations.to_string(),
+            format!("{:.3e}", p.relative_error(&sol.x)),
+            format!("{:.3e}", op.flops_estimate(cfg.n, p.a.nnz())),
+        ]);
+    }
+    table
+}
+
+/// Sketch-size sweep ablation: s/n ∈ {1.5, 2, 3, 4, 6, 8} — the design
+/// choice DESIGN.md calls out (default s = 4n).
+pub fn run_sketch_size_ablation(cfg: &AblationConfig) -> Table {
+    let mut table = Table::new(
+        "T-s — sketch size sweep (s/n ratio vs iterations & error)",
+        &["s_over_n", "s", "saa_iters", "rel_err", "time_s"],
+    );
+    let spec = DenseProblemSpec {
+        m: cfg.m,
+        n: cfg.n,
+        cond: cfg.cond,
+        resid_norm: 1e-8,
+        seed: cfg.seed,
+    };
+    let p = generate_dense(&spec);
+    for factor in [1.5, 2.0, 3.0, 4.0, 6.0, 8.0] {
+        let saa = SaaSolver::new(SaaConfig {
+            sketch_factor: factor,
+            lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() },
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let sol = saa.solve(&p.a, &p.b).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            format!("{factor}"),
+            ((factor * cfg.n as f64).ceil() as usize).to_string(),
+            sol.iterations.to_string(),
+            format!("{:.3e}", p.relative_error(&sol.x)),
+            format!("{:.6}", dt),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logspace_sizes_endpoints_and_monotone() {
+        let s = logspace_sizes(4096, 1 << 20, 10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0], 4096);
+        assert_eq!(s[9], 1 << 20);
+        for w in s.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn figure3_smoke_runs() {
+        let cfg = Figure3Config {
+            sizes: vec![2048, 4096],
+            n: 64,
+            density: 2e-2,
+            seed: 5,
+            bench: BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, min_time: std::time::Duration::ZERO },
+        };
+        let t = run_figure3(&cfg);
+        assert_eq!(t.rows.len(), 2);
+        // SAA error should be tiny on these planted problems.
+        let err: f64 = t.rows[0][8].parse().unwrap();
+        assert!(err < 1e-4, "saa err {err}");
+    }
+
+    #[test]
+    fn figure4_smoke_runs() {
+        let cfg = Figure4Config { m: 800, n: 20, cond: 1e8, beta: 1e-10, trials: 1, seed: 3 };
+        let t = run_figure4(&cfg);
+        assert_eq!(t.rows.len(), 4); // 4 solvers × 1 trial
+        // saa error beats sketch-solve error
+        let err_of = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[1] == name)
+                .unwrap()[2]
+                .parse()
+                .unwrap()
+        };
+        assert!(err_of("saa-sas") <= err_of("sketch-solve") * 1.001);
+    }
+
+    #[test]
+    fn ablation_smoke_runs() {
+        let cfg = AblationConfig {
+            m: 1024,
+            n: 32,
+            cond: 1e4,
+            seed: 9,
+            bench: BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, min_time: std::time::Duration::ZERO },
+        };
+        let t = run_sketch_ablation(&cfg);
+        assert_eq!(t.rows.len(), 6);
+        let t2 = run_sketch_size_ablation(&cfg);
+        assert_eq!(t2.rows.len(), 6);
+    }
+}

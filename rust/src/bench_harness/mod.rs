@@ -1,0 +1,174 @@
+//! Benchmark harness (criterion is unavailable offline): warmup +
+//! min-iterations/min-time measurement with mean/median/std/percentiles,
+//! and CSV/JSON report writers used by every `rust/benches/*.rs` target.
+
+pub mod figures;
+pub mod report;
+
+use std::time::{Duration, Instant};
+
+/// Measurement policy.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Keep iterating until at least this much total time is accumulated.
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 100,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            min_time: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Timing statistics over the recorded samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / n as f64;
+        let pct = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean,
+            median: pct(0.5),
+            std: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            p95: pct(0.95),
+        }
+    }
+}
+
+/// Measure a closure. The closure's return value is black-boxed to stop
+/// the optimizer deleting the work.
+pub fn bench<T>(config: &BenchConfig, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..config.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(config.min_iters);
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        let done_iters = samples.len() >= config.min_iters;
+        let done_time = start.elapsed() >= config.min_time;
+        if (done_iters && done_time) || samples.len() >= config.max_iters {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// `SNSOLVE_BENCH_QUICK=1` switches every bench to the quick policy —
+/// used by `make bench-smoke` and CI.
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 7,
+            max_iters: 50,
+            min_time: Duration::from_millis(1),
+        };
+        let mut count = 0usize;
+        let s = bench(&cfg, || {
+            count += 1;
+            count
+        });
+        assert!(s.iters >= 7);
+        assert!(count >= 8); // warmup + measured
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            min_time: Duration::from_secs(100),
+        };
+        let s = bench(&cfg, || std::thread::sleep(Duration::from_micros(10)));
+        assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.5).contains("s"));
+        assert!(fmt_secs(2.5e-3).contains("ms"));
+        assert!(fmt_secs(2.5e-6).contains("µs"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Bench report writers: aligned console tables, CSV and JSON files under
+//! `target/bench-reports/` (the files EXPERIMENTS.md references).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::json::Json;
+
+/// A rectangular results table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned console table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV serialization.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON serialization (array of objects).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut obj = BTreeMap::new();
+                for (c, v) in self.columns.iter().zip(row.iter()) {
+                    // numbers stay numbers when they parse
+                    let val = v
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(v.clone()));
+                    obj.insert(c.clone(), val);
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("title".to_string(), Json::Str(self.title.clone()));
+        root.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(root)
+    }
+
+    /// Write CSV + JSON under the reports dir; returns the CSV path.
+    pub fn save(&self, stem: &str) -> std::io::Result<PathBuf> {
+        let dir = reports_dir();
+        std::fs::create_dir_all(&dir)?;
+        let csv_path = dir.join(format!("{stem}.csv"));
+        let mut f = std::fs::File::create(&csv_path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let json_path = dir.join(format!("{stem}.json"));
+        let mut g = std::fs::File::create(json_path)?;
+        g.write_all(self.to_json().to_string().as_bytes())?;
+        Ok(csv_path)
+    }
+}
+
+/// `target/bench-reports` (override with SNSOLVE_REPORT_DIR).
+pub fn reports_dir() -> PathBuf {
+    std::env::var("SNSOLVE_REPORT_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new("target").join("bench-reports"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["m", "time_s", "label"]);
+        t.row(vec!["4096".into(), "0.125".into(), "saa".into()]);
+        t.row(vec!["8192".into(), "0.25".into(), "with,comma".into()]);
+        t
+    }
+
+    #[test]
+    fn render_contains_cells() {
+        let r = sample().render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("4096"));
+        assert!(r.contains("saa"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let c = sample().to_csv();
+        assert!(c.starts_with("m,time_s,label\n"));
+        assert!(c.contains("\"with,comma\""));
+    }
+
+    #[test]
+    fn json_types() {
+        let j = sample().to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("m").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(rows[1].get("label").unwrap().as_str(), Some("with,comma"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join(format!("snsreport-{}", std::process::id()));
+        std::env::set_var("SNSOLVE_REPORT_DIR", &dir);
+        let p = sample().save("unit_test_table").unwrap();
+        assert!(p.exists());
+        assert!(dir.join("unit_test_table.json").exists());
+        std::env::remove_var("SNSOLVE_REPORT_DIR");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,178 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean flags and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag: --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{flag}: {value} ({message})")]
+    InvalidValue { flag: String, value: String, message: String },
+}
+
+/// Flag specification: name and whether it takes a value.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parse argv (without the program name) against known flags.
+pub fn parse(
+    argv: &[String],
+    known_flags: &[FlagSpec],
+) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(body) = tok.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let spec = known_flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+            if spec.takes_value {
+                let value = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                    }
+                };
+                args.flags.insert(name, value);
+            } else {
+                args.flags.insert(name, "true".to_string());
+            }
+        } else if args.subcommand.is_none() && args.positionals.is_empty() {
+            args.subcommand = Some(tok.clone());
+        } else {
+            args.positionals.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.parse_flag(name)
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.parse_flag(name)
+    }
+
+    pub fn flag_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.parse_flag(name)
+    }
+
+    fn parse_flag<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::InvalidValue {
+                flag: name.to_string(),
+                value: v.to_string(),
+                message: e.to_string(),
+            }),
+        }
+    }
+}
+
+/// Render usage text from flag specs.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], flags: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {program} <subcommand> [flags]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        out.push_str(&format!("  {name:<14} {help}\n"));
+    }
+    out.push_str("\nflags:\n");
+    for f in flags {
+        let arg = if f.takes_value { "<value>" } else { "" };
+        out.push_str(&format!("  --{:<18} {}\n", format!("{} {arg}", f.name), f.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "m", takes_value: true, help: "rows" },
+            FlagSpec { name: "verbose", takes_value: false, help: "noisy" },
+            FlagSpec { name: "tol", takes_value: true, help: "tolerance" },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = parse(&sv(&["solve", "--m", "100", "--verbose", "file.mtx"]), &specs()).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.flag_usize("m").unwrap(), Some(100));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positionals, vec!["file.mtx"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&sv(&["x", "--tol=1e-8"]), &specs()).unwrap();
+        assert_eq!(a.flag_f64("tol").unwrap(), Some(1e-8));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::UnknownFlag(_))
+        ));
+        assert!(matches!(
+            parse(&sv(&["--m"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+        let a = parse(&sv(&["--m", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.flag_usize("m"), Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("snsolve", &[("solve", "solve a problem")], &specs());
+        assert!(u.contains("solve"));
+        assert!(u.contains("--m"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,270 @@
+//! Minimal TOML-subset configuration loader (no serde offline).
+//!
+//! Supports the subset the service config needs: `[section]` headers,
+//! `key = value` with string/int/float/bool values, `#` comments. Nested
+//! tables beyond one level, arrays and multi-line strings are out of scope.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value ("" section for top-level keys).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {message}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ConfigError {
+                line: lineno + 1,
+                message: "expected key = value".into(),
+            })?;
+            let key = key.trim().to_string();
+            let val = parse_value(val.trim()).map_err(|m| ConfigError {
+                line: lineno + 1,
+                message: m,
+            })?;
+            values.insert((section.clone(), key), val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError {
+            line: 0,
+            message: format!("reading {}: {e}", path.display()),
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(Value::as_i64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(Value::as_bool)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Build a [`crate::coordinator::ServiceConfig`] from `[service]` /
+    /// `[batcher]` / `[worker]` sections, defaulting absent keys.
+    pub fn service_config(&self) -> crate::coordinator::ServiceConfig {
+        use std::time::Duration;
+        let mut cfg = crate::coordinator::ServiceConfig::default();
+        if let Some(w) = self.get_usize("service", "workers") {
+            cfg.workers = w.max(1);
+        }
+        if let Some(c) = self.get_usize("service", "queue_capacity") {
+            cfg.queue_capacity = c.max(1);
+        }
+        if let Some(ms) = self.get_usize("service", "submit_timeout_ms") {
+            cfg.submit_timeout = Duration::from_millis(ms as u64);
+        }
+        if let Some(b) = self.get_usize("batcher", "max_batch") {
+            cfg.batcher.max_batch = b.max(1);
+        }
+        if let Some(us) = self.get_usize("batcher", "max_wait_us") {
+            cfg.batcher.max_wait = Duration::from_micros(us as u64);
+        }
+        if let Some(dir) = self.get_str("worker", "artifact_dir") {
+            cfg.worker.artifact_dir = Some(dir.into());
+        }
+        if let Some(f) = self.get_f64("worker", "sketch_factor") {
+            cfg.worker.sketch_factor = f;
+        }
+        if let Some(s) = self.get_usize("worker", "seed") {
+            cfg.worker.seed = s as u64;
+        }
+        if let Some(cap) = self.get_usize("worker", "factor_cache_cap") {
+            cfg.worker.factor_cache_cap = cap;
+        }
+        if let Some(e) = self.get_bool("router", "enable_pjrt") {
+            cfg.router.enable_pjrt = e;
+        }
+        cfg
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# service config
+[service]
+workers = 4
+queue_capacity = 128
+submit_timeout_ms = 10
+
+[batcher]
+max_batch = 16
+max_wait_us = 500
+
+[worker]
+artifact_dir = "artifacts"   # relative ok
+sketch_factor = 3.5
+seed = 99
+
+[router]
+enable_pjrt = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("service", "workers"), Some(4));
+        assert_eq!(c.get_str("worker", "artifact_dir"), Some("artifacts"));
+        assert_eq!(c.get_f64("worker", "sketch_factor"), Some(3.5));
+        assert_eq!(c.get_bool("router", "enable_pjrt"), Some(false));
+        assert!(c.get("service", "nope").is_none());
+    }
+
+    #[test]
+    fn service_config_built() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let sc = c.service_config();
+        assert_eq!(sc.workers, 4);
+        assert_eq!(sc.batcher.max_batch, 16);
+        assert_eq!(sc.batcher.max_wait, std::time::Duration::from_micros(500));
+        assert_eq!(sc.worker.sketch_factor, 3.5);
+        assert!(!sc.router.enable_pjrt);
+        assert_eq!(
+            sc.worker.artifact_dir.as_deref(),
+            Some(std::path::Path::new("artifacts"))
+        );
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = Config::parse("").unwrap();
+        assert!(c.is_empty());
+        let sc = c.service_config();
+        assert_eq!(sc.workers, crate::coordinator::ServiceConfig::default().workers);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("keyonly").is_err());
+        assert!(Config::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let c = Config::parse("k = \"a#b\" # trailing").unwrap();
+        assert_eq!(c.get_str("", "k"), Some("a#b"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Dynamic batcher: coalesce requests by (matrix, route-class) under a
+//! max-batch / max-wait policy — the dispatch-cost and factor-reuse lever.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::registry::MatrixId;
+use super::SolverChoice;
+
+/// Batching key: requests in one batch share the design matrix and solver
+/// class, so workers can reuse the sketch→QR factorization across them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub matrix: MatrixId,
+    pub solver: SolverChoice,
+}
+
+/// Batcher policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time the *oldest* member of a group may wait before flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub key: BatchKey,
+    pub items: Vec<T>,
+}
+
+struct Group<T> {
+    items: Vec<T>,
+    oldest: Instant,
+}
+
+/// Accumulates pending items into key groups; flushes on size or age.
+pub struct Batcher<T> {
+    config: BatcherConfig,
+    groups: HashMap<BatchKey, Group<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self { config, groups: HashMap::new() }
+    }
+
+    /// Number of buffered (not yet flushed) items.
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.items.len()).sum()
+    }
+
+    /// Add an item; returns a full batch if the group hit `max_batch`.
+    pub fn offer(&mut self, key: BatchKey, item: T, now: Instant) -> Option<Batch<T>> {
+        let group = self
+            .groups
+            .entry(key)
+            .or_insert_with(|| Group { items: Vec::new(), oldest: now });
+        group.items.push(item);
+        if group.items.len() >= self.config.max_batch {
+            let g = self.groups.remove(&key).unwrap();
+            return Some(Batch { key, items: g.items });
+        }
+        None
+    }
+
+    /// Flush all groups whose oldest member has waited ≥ max_wait.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<Batch<T>> {
+        let due: Vec<BatchKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| now.duration_since(g.oldest) >= self.config.max_wait)
+            .map(|(k, _)| *k)
+            .collect();
+        due.into_iter()
+            .map(|k| {
+                let g = self.groups.remove(&k).unwrap();
+                Batch { key: k, items: g.items }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch<T>> {
+        self.groups
+            .drain()
+            .map(|(k, g)| Batch { key: k, items: g.items })
+            .collect()
+    }
+
+    /// Time until the next group becomes due (for the dispatcher's sleep).
+    pub fn next_due_in(&self, now: Instant) -> Option<Duration> {
+        self.groups
+            .values()
+            .map(|g| {
+                let age = now.duration_since(g.oldest);
+                self.config.max_wait.saturating_sub(age)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(id: u64) -> BatchKey {
+        BatchKey { matrix: MatrixId(id), solver: SolverChoice::Saa }
+    }
+
+    #[test]
+    fn size_triggered_flush() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, ..Default::default() });
+        let t = Instant::now();
+        assert!(b.offer(key(1), "a", t).is_none());
+        assert!(b.offer(key(1), "b", t).is_none());
+        let batch = b.offer(key(1), "c", t).expect("full batch");
+        assert_eq!(batch.items, vec!["a", "b", "c"]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn groups_are_keyed() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        let t = Instant::now();
+        assert!(b.offer(key(1), 1, t).is_none());
+        assert!(b.offer(key(2), 2, t).is_none());
+        assert_eq!(b.pending(), 2);
+        // Different solver = different key even with same matrix.
+        let k_lsqr = BatchKey { matrix: MatrixId(1), solver: SolverChoice::Lsqr };
+        assert!(b.offer(k_lsqr, 3, t).is_none());
+        assert_eq!(b.pending(), 3);
+        let full = b.offer(key(1), 4, t).unwrap();
+        assert_eq!(full.items, vec![1, 4]);
+    }
+
+    #[test]
+    fn age_triggered_flush() {
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        b.offer(key(1), "x", t0);
+        assert!(b.flush_due(t0).is_empty());
+        let later = t0 + Duration::from_millis(6);
+        let due = b.flush_due(later);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].items, vec!["x"]);
+    }
+
+    #[test]
+    fn next_due_in_reports_min() {
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(10) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        assert!(b.next_due_in(t0).is_none());
+        b.offer(key(1), 1, t0);
+        let d = b.next_due_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.offer(key(1), 1, t);
+        b.offer(key(2), 2, t);
+        let all = b.flush_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

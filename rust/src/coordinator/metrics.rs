@@ -1,0 +1,230 @@
+//! Service metrics: atomic counters + lock-free log₂-bucketed latency
+//! histograms with percentile estimation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets: bucket i covers [2^i, 2^{i+1}) microseconds;
+/// 48 buckets ≈ 8.9 years — effectively unbounded.
+const BUCKETS: usize = 48;
+
+/// A log₂-bucketed histogram of microsecond latencies.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate (upper bucket bound), q in [0, 1].
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1); // upper bound of the bucket
+            }
+        }
+        self.max_us()
+    }
+
+    /// (count, mean, p50, p99, max) snapshot.
+    pub fn snapshot(&self) -> (u64, f64, u64, u64, u64) {
+        (
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(0.5),
+            self.percentile_us(0.99),
+            self.max_us(),
+        )
+    }
+}
+
+/// All service counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected_overload: AtomicU64,
+    pub deadline_missed: AtomicU64,
+    pub pjrt_dispatches: AtomicU64,
+    pub native_dispatches: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub factor_cache_hits: AtomicU64,
+    pub factor_cache_misses: AtomicU64,
+    pub queue_latency: LatencyHistogram,
+    pub solve_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = Self::get(&self.batches);
+        if b == 0 {
+            return 0.0;
+        }
+        Self::get(&self.batched_requests) as f64 / b as f64
+    }
+
+    /// Human-readable dump.
+    pub fn report(&self) -> String {
+        let (qc, qm, qp50, qp99, qmax) = self.queue_latency.snapshot();
+        let (_sc, sm, sp50, sp99, smax) = self.solve_latency.snapshot();
+        let (_ec, em, ep50, ep99, emax) = self.e2e_latency.snapshot();
+        format!(
+            "submitted={} completed={} failed={} rejected={} deadline_missed={}\n\
+             dispatch: pjrt={} native={} | batches={} mean_batch={:.2} \
+             factor_cache hit={} miss={}\n\
+             queue_us:  n={} mean={:.0} p50={} p99={} max={}\n\
+             solve_us:  mean={:.0} p50={} p99={} max={}\n\
+             e2e_us:    mean={:.0} p50={} p99={} max={}",
+            Self::get(&self.submitted),
+            Self::get(&self.completed),
+            Self::get(&self.failed),
+            Self::get(&self.rejected_overload),
+            Self::get(&self.deadline_missed),
+            Self::get(&self.pjrt_dispatches),
+            Self::get(&self.native_dispatches),
+            Self::get(&self.batches),
+            self.mean_batch_size(),
+            Self::get(&self.factor_cache_hits),
+            Self::get(&self.factor_cache_misses),
+            qc,
+            qm,
+            qp50,
+            qp99,
+            qmax,
+            sm,
+            sp50,
+            sp99,
+            smax,
+            em,
+            ep50,
+            ep99,
+            emax,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_estimates() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 2, 3, 10, 100, 1000, 1000, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 1000);
+        // p50 of mostly-small values is small; p99 covers the 1000s.
+        assert!(h.percentile_us(0.5) <= 128);
+        assert!(h.percentile_us(0.99) >= 1000);
+        assert!(h.percentile_us(0.99) <= 2048);
+    }
+
+    #[test]
+    fn histogram_zero_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        h.record(0); // clamps to bucket 0
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn metrics_counters() {
+        let m = Metrics::new();
+        Metrics::inc(&m.submitted);
+        Metrics::add(&m.batched_requests, 6);
+        Metrics::add(&m.batches, 2);
+        assert_eq!(Metrics::get(&m.submitted), 1);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        let rep = m.report();
+        assert!(rep.contains("submitted=1"));
+    }
+
+    #[test]
+    fn histogram_concurrent() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 1..=1000u64 {
+                        h.record(i);
+                    }
+                })
+            })
+            .collect();
+        for t in hs {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,126 @@
+//! The solve-service coordinator — Layer 3's system contribution.
+//!
+//! A production least-squares service shaped like a vLLM-style router:
+//!
+//! ```text
+//!  clients ──submit──▶ BoundedQueue (backpressure)
+//!                         │
+//!                   DynamicBatcher  (coalesce by matrix/bucket,
+//!                         │          max_batch / max_wait)
+//!                   ┌─────┴──────┐
+//!                Worker 0 …  Worker K-1     (each owns a PJRT Engine +
+//!                   │                        a per-matrix factor cache)
+//!                   └──▶ Response channels, Metrics
+//! ```
+//!
+//! * **Router** — maps problem shapes to execution routes: an exact-match
+//!   AOT artifact bucket (PJRT executable) or the native f64 solvers.
+//! * **Dynamic batcher** — requests against the *same registered matrix*
+//!   share the sketch→QR factorization (the SAA analogue of prefix-cache
+//!   reuse); unrelated requests are grouped to bound dispatch overhead.
+//! * **Matrix registry** — clients register a design matrix once, then
+//!   stream right-hand sides against it.
+//! * **Backpressure** — the bounded queue rejects (or blocks) when workers
+//!   fall behind; deadline-expired requests are failed, not solved.
+//! * **Metrics** — counters and log-bucketed latency histograms.
+//!
+//! Python never appears anywhere on this path: workers execute AOT HLO via
+//! PJRT or the native Rust solvers.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+pub mod router;
+pub mod service;
+pub mod tcp;
+pub mod worker;
+
+pub use registry::{MatrixId, MatrixRegistry};
+pub use router::{Route, Router};
+pub use service::{Service, ServiceConfig};
+
+use crate::solvers::Solution;
+
+/// Request identifier (unique per service instance).
+pub type RequestId = u64;
+
+/// How a request asks to be solved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverChoice {
+    /// SAA-SAS (the paper's algorithm) — default.
+    Saa,
+    /// Deterministic LSQR baseline.
+    Lsqr,
+    /// One-shot sketch-and-solve (cheap, coarse).
+    SketchOnly,
+}
+
+impl SolverChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverChoice::Saa => "saa",
+            SolverChoice::Lsqr => "lsqr",
+            SolverChoice::SketchOnly => "sketch-only",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "saa" | "saa-sas" => Some(SolverChoice::Saa),
+            "lsqr" => Some(SolverChoice::Lsqr),
+            "sketch-only" | "sas" => Some(SolverChoice::SketchOnly),
+            _ => None,
+        }
+    }
+}
+
+/// A solve request: a registered matrix + a right-hand side.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub matrix: MatrixId,
+    pub rhs: Vec<f64>,
+    pub solver: SolverChoice,
+    /// Relative tolerance the caller wants certified.
+    pub tol: f64,
+    /// Wall-clock deadline from submit, microseconds (0 = none).
+    pub deadline_us: u64,
+}
+
+/// Execution route actually taken (reported for observability).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutedOn {
+    /// PJRT artifact by name.
+    Pjrt(String),
+    /// Native Rust solver path.
+    Native,
+}
+
+/// A solve response.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    pub id: RequestId,
+    pub result: Result<Solution, ServiceError>,
+    pub executed_on: ExecutedOn,
+    /// Queue wait + solve time, microseconds.
+    pub queue_us: u64,
+    pub solve_us: u64,
+}
+
+/// Service-level failures.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum ServiceError {
+    #[error("queue full: the service is overloaded")]
+    Overloaded,
+    #[error("deadline exceeded before completion")]
+    DeadlineExceeded,
+    #[error("unknown matrix id {0}")]
+    UnknownMatrix(u64),
+    #[error("solver error: {0}")]
+    Solver(String),
+    #[error("service is shutting down")]
+    ShuttingDown,
+    #[error("bad request: {0}")]
+    BadRequest(String),
+}

@@ -1,0 +1,222 @@
+//! Wire protocol for the TCP front-end: length-prefixed binary frames.
+//!
+//! ```text
+//! frame   := u32le payload_len, u8 opcode, payload
+//! opcodes (requests):
+//!   1 REGISTER_DENSE  := u32 m, u32 n, f64le[m*n] row-major
+//!   2 SOLVE           := u64 matrix_id, u8 solver, f64 tol, u64 deadline_us,
+//!                        u32 m, f64le[m] rhs
+//!   3 METRICS         := (empty)
+//!   4 EVICT           := u64 matrix_id
+//! opcodes (responses):
+//!   128 OK_REGISTER   := u64 matrix_id
+//!   129 OK_SOLVE      := u32 n, f64le[n] x, u32 iterations, f64 resnorm,
+//!                        u8 converged, u64 queue_us, u64 solve_us
+//!   130 OK_METRICS    := utf8 text
+//!   131 OK_EVICT      := u8 existed
+//!   255 ERROR         := utf8 message
+//! ```
+
+use super::SolverChoice;
+
+pub const OP_REGISTER_DENSE: u8 = 1;
+pub const OP_SOLVE: u8 = 2;
+pub const OP_METRICS: u8 = 3;
+pub const OP_EVICT: u8 = 4;
+pub const OP_OK_REGISTER: u8 = 128;
+pub const OP_OK_SOLVE: u8 = 129;
+pub const OP_OK_METRICS: u8 = 130;
+pub const OP_OK_EVICT: u8 = 131;
+pub const OP_ERROR: u8 = 255;
+
+/// Max accepted frame: 1 GiB (a 8192×16384 f64 matrix).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Incremental little-endian reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("protocol decode error: {0}")]
+pub struct DecodeError(pub String);
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError(format!(
+                "truncated frame: need {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64_vec(&mut self, count: usize) -> Result<Vec<f64>, DecodeError> {
+        let bytes = self.take(count * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn rest_utf8(&mut self) -> Result<String, DecodeError> {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        String::from_utf8(s.to_vec()).map_err(|e| DecodeError(e.to_string()))
+    }
+
+    pub fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Frame writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new(opcode: u8) -> Self {
+        let mut w = Writer { buf: Vec::with_capacity(64) };
+        w.buf.push(opcode);
+        w
+    }
+
+    pub fn u8(mut self, v: u8) -> Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(mut self, v: u32) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(mut self, v: u64) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(mut self, v: f64) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64_slice(mut self, vs: &[f64]) -> Self {
+        self.buf.reserve(vs.len() * 8);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn utf8(mut self, s: &str) -> Self {
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    /// Final frame bytes: u32 length prefix + opcode + payload.
+    pub fn frame(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.buf.len() + 4);
+        out.extend_from_slice(&(self.buf.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        out
+    }
+}
+
+/// Solver byte encoding.
+pub fn solver_to_u8(s: SolverChoice) -> u8 {
+    match s {
+        SolverChoice::Saa => 0,
+        SolverChoice::Lsqr => 1,
+        SolverChoice::SketchOnly => 2,
+    }
+}
+
+pub fn solver_from_u8(v: u8) -> Result<SolverChoice, DecodeError> {
+    match v {
+        0 => Ok(SolverChoice::Saa),
+        1 => Ok(SolverChoice::Lsqr),
+        2 => Ok(SolverChoice::SketchOnly),
+        _ => Err(DecodeError(format!("unknown solver byte {v}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let frame = Writer::new(OP_SOLVE)
+            .u64(7)
+            .u8(solver_to_u8(SolverChoice::Lsqr))
+            .f64(1e-8)
+            .u64(0)
+            .u32(3)
+            .f64_slice(&[1.0, -2.0, 3.5])
+            .frame();
+        // strip prefix
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        let mut r = Reader::new(&frame[4..]);
+        assert_eq!(r.u8().unwrap(), OP_SOLVE);
+        assert_eq!(r.u64().unwrap(), 7);
+        assert_eq!(solver_from_u8(r.u8().unwrap()).unwrap(), SolverChoice::Lsqr);
+        assert_eq!(r.f64().unwrap(), 1e-8);
+        assert_eq!(r.u64().unwrap(), 0);
+        let m = r.u32().unwrap() as usize;
+        assert_eq!(r.f64_vec(m).unwrap(), vec![1.0, -2.0, 3.5]);
+        assert!(r.finished());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let frame = Writer::new(OP_SOLVE).u32(5).frame();
+        let mut r = Reader::new(&frame[4..]);
+        r.u8().unwrap();
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn utf8_rest() {
+        let frame = Writer::new(OP_ERROR).utf8("boom").frame();
+        let mut r = Reader::new(&frame[4..]);
+        assert_eq!(r.u8().unwrap(), OP_ERROR);
+        assert_eq!(r.rest_utf8().unwrap(), "boom");
+    }
+
+    #[test]
+    fn solver_codes_roundtrip() {
+        for s in [SolverChoice::Saa, SolverChoice::Lsqr, SolverChoice::SketchOnly] {
+            assert_eq!(solver_from_u8(solver_to_u8(s)).unwrap(), s);
+        }
+        assert!(solver_from_u8(9).is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! Bounded MPMC queue with blocking push/pop, timeouts and close semantics —
+//! the backpressure primitive (no crossbeam/tokio offline; Mutex+Condvar).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue stayed full for the whole timeout (backpressure signal).
+    Full(T),
+    /// Queue was closed.
+    Closed(T),
+}
+
+/// Why a pop returned nothing.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopError {
+    TimedOut,
+    /// Closed *and* drained.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Push, waiting up to `timeout` for space.
+    pub fn push_timeout(&self, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Full(item));
+            }
+            let (g2, res) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if res.timed_out() && g.items.len() >= self.capacity {
+                return if g.closed {
+                    Err(PushError::Closed(item))
+                } else {
+                    Err(PushError::Full(item))
+                };
+            }
+        }
+    }
+
+    /// Pop, waiting up to `timeout` for an item.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopError> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(PopError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PopError::TimedOut);
+            }
+            let (g2, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher fast path).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let k = max.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..k).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close: pushes fail immediately; pops drain then report Closed.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), i);
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Err(PopError::TimedOut));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(
+            q.push_timeout(3, Duration::from_millis(5)),
+            Err(PushError::Full(3))
+        );
+    }
+
+    #[test]
+    fn close_semantics() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2), Err(PushError::Closed(2)));
+        // drain remaining then Closed
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)).unwrap(), 1);
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Err(PopError::Closed));
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push_timeout(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)).unwrap(), 0);
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)).unwrap(), 1);
+    }
+
+    #[test]
+    fn drain_up_to() {
+        let q = BoundedQueue::new(10);
+        for i in 0..7 {
+            q.try_push(i).unwrap();
+        }
+        let batch = q.drain_up_to(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 3);
+        let rest = q.drain_up_to(100);
+        assert_eq!(rest, vec![4, 5, 6]);
+        assert!(q.drain_up_to(5).is_empty());
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..250 {
+                        q.push_timeout(p * 1000 + i, Duration::from_secs(5)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = q.pop_timeout(Duration::from_millis(500)) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        // After producers finish, give consumers time to drain then close.
+        thread::sleep(Duration::from_millis(50));
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 1000);
+    }
+}

@@ -1,0 +1,121 @@
+//! Matrix registry: clients register a design matrix once, then stream
+//! right-hand sides against it. Shared, read-mostly state (RwLock).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::linalg::Matrix;
+
+/// Opaque handle to a registered matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixId(pub u64);
+
+/// Thread-safe matrix store.
+#[derive(Default)]
+pub struct MatrixRegistry {
+    next: AtomicU64,
+    map: RwLock<HashMap<MatrixId, Arc<Matrix>>>,
+}
+
+impl MatrixRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a matrix; returns its handle.
+    pub fn register(&self, m: Matrix) -> MatrixId {
+        let id = MatrixId(self.next.fetch_add(1, Ordering::Relaxed));
+        self.map.write().unwrap().insert(id, Arc::new(m));
+        id
+    }
+
+    pub fn get(&self, id: MatrixId) -> Option<Arc<Matrix>> {
+        self.map.read().unwrap().get(&id).cloned()
+    }
+
+    /// Remove a matrix (outstanding Arc references stay valid).
+    pub fn evict(&self, id: MatrixId) -> bool {
+        self.map.write().unwrap().remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes held (dense: 8·m·n; sparse: 8·nnz + indices).
+    pub fn resident_bytes(&self) -> usize {
+        let g = self.map.read().unwrap();
+        g.values()
+            .map(|m| match m.as_ref() {
+                Matrix::Dense(d) => d.rows() * d.cols() * 8,
+                Matrix::Csr(c) => c.nnz() * 12 + (c.rows() + 1) * 8,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    #[test]
+    fn register_get_evict() {
+        let r = MatrixRegistry::new();
+        assert!(r.is_empty());
+        let id = r.register(Matrix::Dense(DenseMatrix::eye(3)));
+        let id2 = r.register(Matrix::Dense(DenseMatrix::zeros(2, 2)));
+        assert_ne!(id, id2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(id).unwrap().shape(), (3, 3));
+        assert!(r.evict(id));
+        assert!(!r.evict(id));
+        assert!(r.get(id).is_none());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn arc_survives_eviction() {
+        let r = MatrixRegistry::new();
+        let id = r.register(Matrix::Dense(DenseMatrix::eye(4)));
+        let held = r.get(id).unwrap();
+        r.evict(id);
+        assert_eq!(held.shape(), (4, 4));
+    }
+
+    #[test]
+    fn resident_bytes_tracks() {
+        let r = MatrixRegistry::new();
+        assert_eq!(r.resident_bytes(), 0);
+        r.register(Matrix::Dense(DenseMatrix::zeros(10, 10)));
+        assert_eq!(r.resident_bytes(), 800);
+    }
+
+    #[test]
+    fn concurrent_register() {
+        let r = std::sync::Arc::new(MatrixRegistry::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    (0..50)
+                        .map(|_| r.register(Matrix::Dense(DenseMatrix::eye(2))))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<MatrixId> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 400, "ids must be unique");
+        assert_eq!(r.len(), 400);
+    }
+}

@@ -1,0 +1,137 @@
+//! Shape-bucket router: decides, per request, whether to dispatch to an
+//! AOT PJRT artifact (exact shape match, dense matrix, SAA/LSQR entries)
+//! or to the native f64 solver path (everything else).
+
+use crate::linalg::Matrix;
+use crate::runtime::Manifest;
+
+use super::SolverChoice;
+
+/// An execution route.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// Execute the named PJRT artifact.
+    Artifact(String),
+    /// Run the native Rust solver.
+    Native,
+}
+
+/// Routing policy.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Disable the PJRT path entirely (native-only deployments).
+    pub enable_pjrt: bool,
+    /// Problems above this f32 condition-risk bound are routed native even
+    /// when a bucket matches (the artifact path is f32; κ·ε₃₂ accuracy).
+    pub max_pjrt_tol: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        // f32 path certifies ~1e-3 comfortably for the bucketed shapes.
+        Self { enable_pjrt: true, max_pjrt_tol: 1e-3 }
+    }
+}
+
+/// The router: manifest buckets + policy.
+pub struct Router {
+    buckets: Vec<(usize, usize)>,
+    config: RouterConfig,
+}
+
+impl Router {
+    pub fn new(manifest: Option<&Manifest>, config: RouterConfig) -> Self {
+        let buckets = manifest.map(|m| m.buckets()).unwrap_or_default();
+        Self { buckets, config }
+    }
+
+    /// Route a request for matrix `a` solved with `solver` to tolerance
+    /// `tol`.
+    pub fn route(&self, a: &Matrix, solver: SolverChoice, tol: f64) -> Route {
+        if !self.config.enable_pjrt || self.buckets.is_empty() {
+            return Route::Native;
+        }
+        // Sparse matrices and tight tolerances go native (f64, O(nnz)).
+        if a.is_sparse() || tol < self.config.max_pjrt_tol {
+            return Route::Native;
+        }
+        let (m, n) = a.shape();
+        if !self.buckets.contains(&(m, n)) {
+            return Route::Native;
+        }
+        let entry = match solver {
+            SolverChoice::Saa => "saa_solve",
+            SolverChoice::Lsqr => "lsqr_baseline",
+            SolverChoice::SketchOnly => "sketch_and_solve_only",
+        };
+        Route::Artifact(format!("{entry}_{m}x{n}"))
+    }
+
+    /// The shape buckets this router can dispatch to PJRT.
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.buckets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CooBuilder;
+    use crate::linalg::DenseMatrix;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let json = r#"{"version":1,"artifacts":[
+          {"name":"saa_solve_64x8","entry":"saa_solve","file":"f","m":64,"n":8,
+           "s":32,"iters":8,"inputs":[],"outputs":[]},
+          {"name":"lsqr_baseline_64x8","entry":"lsqr_baseline","file":"f","m":64,"n":8,
+           "s":32,"iters":16,"inputs":[],"outputs":[]}
+        ]}"#;
+        Manifest::parse(Path::new("."), json).unwrap()
+    }
+
+    #[test]
+    fn exact_bucket_routes_to_artifact() {
+        let m = manifest();
+        let r = Router::new(Some(&m), RouterConfig::default());
+        let a = Matrix::Dense(DenseMatrix::zeros(64, 8));
+        assert_eq!(
+            r.route(&a, SolverChoice::Saa, 1e-2),
+            Route::Artifact("saa_solve_64x8".into())
+        );
+        assert_eq!(
+            r.route(&a, SolverChoice::Lsqr, 1e-2),
+            Route::Artifact("lsqr_baseline_64x8".into())
+        );
+    }
+
+    #[test]
+    fn mismatched_shape_goes_native() {
+        let m = manifest();
+        let r = Router::new(Some(&m), RouterConfig::default());
+        let a = Matrix::Dense(DenseMatrix::zeros(65, 8));
+        assert_eq!(r.route(&a, SolverChoice::Saa, 1e-2), Route::Native);
+    }
+
+    #[test]
+    fn sparse_and_tight_tolerance_go_native() {
+        let m = manifest();
+        let r = Router::new(Some(&m), RouterConfig::default());
+        let mut b = CooBuilder::new(64, 8);
+        b.push(0, 0, 1.0);
+        let sp = Matrix::Csr(b.build());
+        assert_eq!(r.route(&sp, SolverChoice::Saa, 1e-2), Route::Native);
+        let a = Matrix::Dense(DenseMatrix::zeros(64, 8));
+        assert_eq!(r.route(&a, SolverChoice::Saa, 1e-10), Route::Native);
+    }
+
+    #[test]
+    fn pjrt_disabled_goes_native() {
+        let m = manifest();
+        let r = Router::new(Some(&m), RouterConfig { enable_pjrt: false, ..Default::default() });
+        let a = Matrix::Dense(DenseMatrix::zeros(64, 8));
+        assert_eq!(r.route(&a, SolverChoice::Saa, 1e-2), Route::Native);
+        let r2 = Router::new(None, RouterConfig::default());
+        assert_eq!(r2.route(&a, SolverChoice::Saa, 1e-2), Route::Native);
+    }
+}

@@ -1,0 +1,420 @@
+//! The solve service: queue → dispatcher/batcher → worker pool → responses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batch, BatchKey, Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{BoundedQueue, PopError, PushError};
+use crate::coordinator::registry::{MatrixId, MatrixRegistry};
+use crate::coordinator::router::{Router, RouterConfig};
+use crate::coordinator::worker::{WorkerConfig, WorkerContext};
+use crate::coordinator::{
+    ExecutedOn, RequestId, ServiceError, SolveRequest, SolveResponse,
+};
+use crate::linalg::Matrix;
+use crate::runtime::Manifest;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+    pub worker: WorkerConfig,
+    /// How long submit() waits for queue space before Overloaded.
+    pub submit_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 256,
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+            worker: WorkerConfig::default(),
+            submit_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Internal queued item.
+struct Pending {
+    id: RequestId,
+    req: SolveRequest,
+    submitted: Instant,
+    responder: mpsc::Sender<SolveResponse>,
+}
+
+/// Handle to await one response.
+pub struct ResponseHandle {
+    pub id: RequestId,
+    rx: mpsc::Receiver<SolveResponse>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives (or the service dies).
+    pub fn wait(self) -> Result<SolveResponse, ServiceError> {
+        self.rx.recv().map_err(|_| ServiceError::ShuttingDown)
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Result<SolveResponse, ServiceError> {
+        self.rx.recv_timeout(d).map_err(|_| ServiceError::ShuttingDown)
+    }
+}
+
+/// The running service.
+pub struct Service {
+    registry: Arc<MatrixRegistry>,
+    metrics: Arc<Metrics>,
+    queue: Arc<BoundedQueue<Pending>>,
+    batch_queue: Arc<BoundedQueue<Batch<Pending>>>,
+    next_id: AtomicU64,
+    submit_timeout: Duration,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service: spawns the dispatcher and `workers` worker
+    /// threads (each builds its own PJRT engine if configured).
+    pub fn start(config: ServiceConfig) -> Arc<Service> {
+        let registry = Arc::new(MatrixRegistry::new());
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(BoundedQueue::<Pending>::new(config.queue_capacity));
+        let batch_queue =
+            Arc::new(BoundedQueue::<Batch<Pending>>::new(config.queue_capacity));
+
+        // Router needs the manifest (for buckets) but not the engine.
+        let manifest = config
+            .worker
+            .artifact_dir
+            .as_ref()
+            .and_then(|d| Manifest::load(d).ok());
+        let router = Arc::new(Router::new(manifest.as_ref(), config.router.clone()));
+
+        // Dispatcher: drain queue → batcher → batch_queue.
+        let dispatcher = {
+            let queue = queue.clone();
+            let batch_queue = batch_queue.clone();
+            let metrics = metrics.clone();
+            let bcfg = config.batcher.clone();
+            std::thread::Builder::new()
+                .name("sns-dispatch".into())
+                .spawn(move || dispatcher_loop(queue, batch_queue, bcfg, metrics))
+                .expect("spawn dispatcher")
+        };
+
+        // Workers.
+        let mut workers = Vec::with_capacity(config.workers);
+        for w in 0..config.workers.max(1) {
+            let batch_queue = batch_queue.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let router = router.clone();
+            let mut wcfg = config.worker.clone();
+            // De-correlate worker RNG streams (sketch seeds stay shared so
+            // the factor cache is consistent across workers).
+            wcfg.seed = config.worker.seed;
+            let _ = w;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sns-worker-{w}"))
+                    .spawn(move || worker_loop(batch_queue, registry, metrics, router, wcfg))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Arc::new(Service {
+            registry,
+            metrics,
+            queue,
+            batch_queue,
+            next_id: AtomicU64::new(1),
+            submit_timeout: config.submit_timeout,
+            dispatcher: Some(dispatcher),
+            workers,
+        })
+    }
+
+    pub fn registry(&self) -> &MatrixRegistry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Register a design matrix for subsequent solves.
+    pub fn register_matrix(&self, m: Matrix) -> MatrixId {
+        self.registry.register(m)
+    }
+
+    /// Submit a solve request; returns a handle to await the response.
+    pub fn submit(&self, req: SolveRequest) -> Result<ResponseHandle, ServiceError> {
+        Metrics::inc(&self.metrics.submitted);
+        if self.registry.get(req.matrix).is_none() {
+            Metrics::inc(&self.metrics.failed);
+            return Err(ServiceError::UnknownMatrix(req.matrix.0));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { id, req, submitted: Instant::now(), responder: tx };
+        match self.queue.push_timeout(pending, self.submit_timeout) {
+            Ok(()) => Ok(ResponseHandle { id, rx }),
+            Err(PushError::Full(_)) => {
+                Metrics::inc(&self.metrics.rejected_overload);
+                Err(ServiceError::Overloaded)
+            }
+            Err(PushError::Closed(_)) => Err(ServiceError::ShuttingDown),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn solve_blocking(&self, req: SolveRequest) -> Result<SolveResponse, ServiceError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Graceful shutdown: drain, then join all threads.
+    pub fn shutdown(mut self: Arc<Service>) {
+        self.queue.close();
+        // Wait for the dispatcher + workers to drain; Arc juggling because
+        // JoinHandles need ownership.
+        let this = Arc::get_mut(&mut self);
+        if let Some(svc) = this {
+            if let Some(d) = svc.dispatcher.take() {
+                let _ = d.join();
+            }
+            svc.batch_queue.close();
+            for w in svc.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn dispatcher_loop(
+    queue: Arc<BoundedQueue<Pending>>,
+    batch_queue: Arc<BoundedQueue<Batch<Pending>>>,
+    bcfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher: Batcher<Pending> = Batcher::new(bcfg);
+    loop {
+        let wait = batcher
+            .next_due_in(Instant::now())
+            .unwrap_or(Duration::from_millis(20))
+            .min(Duration::from_millis(20));
+        match queue.pop_timeout(wait.max(Duration::from_micros(100))) {
+            Ok(p) => {
+                let key = BatchKey { matrix: p.req.matrix, solver: p.req.solver };
+                let now = Instant::now();
+                if let Some(full) = batcher.offer(key, p, now) {
+                    emit(&batch_queue, &metrics, full);
+                }
+                // Opportunistically drain whatever else is queued.
+                for p in queue.drain_up_to(64) {
+                    let key = BatchKey { matrix: p.req.matrix, solver: p.req.solver };
+                    if let Some(full) = batcher.offer(key, p, now) {
+                        emit(&batch_queue, &metrics, full);
+                    }
+                }
+            }
+            Err(PopError::TimedOut) => {}
+            Err(PopError::Closed) => {
+                for b in batcher.flush_all() {
+                    emit(&batch_queue, &metrics, b);
+                }
+                batch_queue.close();
+                return;
+            }
+        }
+        for b in batcher.flush_due(Instant::now()) {
+            emit(&batch_queue, &metrics, b);
+        }
+    }
+}
+
+fn emit(
+    batch_queue: &BoundedQueue<Batch<Pending>>,
+    metrics: &Metrics,
+    batch: Batch<Pending>,
+) {
+    Metrics::inc(&metrics.batches);
+    Metrics::add(&metrics.batched_requests, batch.items.len() as u64);
+    // Blocking push: batches must not be dropped; queue bounds still apply
+    // end-to-end because the ingress queue is bounded.
+    let mut item = batch;
+    loop {
+        match batch_queue.push_timeout(item, Duration::from_secs(1)) {
+            Ok(()) => return,
+            Err(PushError::Full(b)) => item = b,
+            Err(PushError::Closed(b)) => {
+                // Shutting down: fail the batch.
+                for p in b.items {
+                    let _ = p.responder.send(SolveResponse {
+                        id: p.id,
+                        result: Err(ServiceError::ShuttingDown),
+                        executed_on: ExecutedOn::Native,
+                        queue_us: 0,
+                        solve_us: 0,
+                    });
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    batch_queue: Arc<BoundedQueue<Batch<Pending>>>,
+    registry: Arc<MatrixRegistry>,
+    metrics: Arc<Metrics>,
+    router: Arc<Router>,
+    wcfg: WorkerConfig,
+) {
+    // The PJRT engine must be constructed on this thread (!Send types).
+    let mut ctx = WorkerContext::new(wcfg, registry.clone(), metrics.clone());
+    loop {
+        let batch = match batch_queue.pop_timeout(Duration::from_millis(100)) {
+            Ok(b) => b,
+            Err(PopError::TimedOut) => continue,
+            Err(PopError::Closed) => return,
+        };
+        for p in batch.items {
+            let queue_us = p.submitted.elapsed().as_micros() as u64;
+            metrics.queue_latency.record(queue_us);
+
+            // Deadline check before burning CPU.
+            if p.req.deadline_us > 0 && queue_us > p.req.deadline_us {
+                Metrics::inc(&metrics.deadline_missed);
+                Metrics::inc(&metrics.failed);
+                let _ = p.responder.send(SolveResponse {
+                    id: p.id,
+                    result: Err(ServiceError::DeadlineExceeded),
+                    executed_on: ExecutedOn::Native,
+                    queue_us,
+                    solve_us: 0,
+                });
+                continue;
+            }
+
+            let route = match registry.get(p.req.matrix) {
+                Some(a) => router.route(&a, p.req.solver, p.req.tol),
+                None => crate::coordinator::router::Route::Native,
+            };
+            let t0 = Instant::now();
+            let (result, executed_on) =
+                ctx.execute(&route, p.req.matrix, &p.req.rhs, p.req.solver, p.req.tol);
+            let solve_us = t0.elapsed().as_micros() as u64;
+            metrics.solve_latency.record(solve_us);
+            metrics.e2e_latency.record(queue_us + solve_us);
+            match &result {
+                Ok(_) => Metrics::inc(&metrics.completed),
+                Err(_) => Metrics::inc(&metrics.failed),
+            }
+            let _ = p.responder.send(SolveResponse {
+                id: p.id,
+                result,
+                executed_on,
+                queue_us,
+                solve_us,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SolverChoice;
+    use crate::linalg::norms;
+    use crate::linalg::DenseMatrix;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    fn test_service(workers: usize) -> (Arc<Service>, MatrixId, Vec<f64>, Vec<f64>) {
+        let svc = Service::start(ServiceConfig {
+            workers,
+            ..Default::default()
+        });
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(11));
+        let a = DenseMatrix::gaussian(400, 16, &mut g);
+        let x_true = g.gaussian_vec(16);
+        let b = a.matvec(&x_true);
+        let id = svc.register_matrix(Matrix::Dense(a));
+        (svc, id, x_true, b)
+    }
+
+    fn req(id: MatrixId, b: &[f64]) -> SolveRequest {
+        SolveRequest {
+            matrix: id,
+            rhs: b.to_vec(),
+            solver: SolverChoice::Saa,
+            tol: 1e-10,
+            deadline_us: 0,
+        }
+    }
+
+    #[test]
+    fn end_to_end_single_solve() {
+        let (svc, id, x_true, b) = test_service(1);
+        let resp = svc.solve_blocking(req(id, &b)).unwrap();
+        let sol = resp.result.unwrap();
+        let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+        assert_eq!(resp.executed_on, ExecutedOn::Native);
+        assert_eq!(Metrics::get(&svc.metrics().completed), 1);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let (svc, id, x_true, b) = test_service(2);
+        let handles: Vec<_> = (0..32).map(|_| svc.submit(req(id, &b)).unwrap()).collect();
+        for h in handles {
+            let resp = h.wait().unwrap();
+            let sol = resp.result.unwrap();
+            let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+            assert!(err < 1e-8);
+        }
+        assert_eq!(Metrics::get(&svc.metrics().completed), 32);
+        // batching happened: fewer batches than requests (same matrix key).
+        assert!(Metrics::get(&svc.metrics().batches) <= 32);
+        // factor computed at most once per worker.
+        assert!(Metrics::get(&svc.metrics().factor_cache_misses) <= 2);
+    }
+
+    #[test]
+    fn unknown_matrix_rejected_at_submit() {
+        let (svc, _id, _xt, b) = test_service(1);
+        let r = svc.submit(req(MatrixId(12345), &b));
+        assert!(matches!(r, Err(ServiceError::UnknownMatrix(12345))));
+    }
+
+    #[test]
+    fn deadline_exceeded_reported() {
+        let (svc, id, _xt, b) = test_service(1);
+        let mut r = req(id, &b);
+        r.deadline_us = 1; // already expired by the time a worker sees it
+        let resp = svc.solve_blocking(r).unwrap();
+        assert!(matches!(resp.result, Err(ServiceError::DeadlineExceeded)));
+    }
+
+    #[test]
+    fn mixed_solvers_work() {
+        let (svc, id, x_true, b) = test_service(2);
+        for solver in [SolverChoice::Saa, SolverChoice::Lsqr, SolverChoice::SketchOnly] {
+            let mut r = req(id, &b);
+            r.solver = solver;
+            r.tol = 1e-10;
+            let resp = svc.solve_blocking(r).unwrap();
+            let sol = resp.result.unwrap();
+            let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+            assert!(err < 1e-6, "{}: err {err}", solver.name());
+        }
+    }
+}

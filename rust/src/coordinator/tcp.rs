@@ -1,0 +1,302 @@
+//! TCP front-end: a thread-per-connection server speaking the
+//! length-prefixed binary protocol, plus a blocking client for tests,
+//! examples and the CLI.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::protocol::*;
+use crate::coordinator::registry::MatrixId;
+use crate::coordinator::service::Service;
+use crate::coordinator::{ServiceError, SolveRequest, SolverChoice};
+use crate::linalg::{DenseMatrix, Matrix};
+
+/// Read one frame (payload including opcode) from a stream.
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> std::io::Result<()> {
+    stream.write_all(frame)?;
+    stream.flush()
+}
+
+fn error_frame(msg: &str) -> Vec<u8> {
+    Writer::new(OP_ERROR).utf8(msg).frame()
+}
+
+/// A running TCP server.
+pub struct TcpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn serve(service: Arc<Service>, addr: impl ToSocketAddrs) -> std::io::Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("sns-tcp-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _peer)) => {
+                            stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
+                            let svc = service.clone();
+                            // Detached: a connection thread lives exactly as
+                            // long as its client keeps the socket open, so
+                            // joining here would deadlock stop() whenever a
+                            // client is still connected.
+                            let _ = std::thread::Builder::new()
+                                .name("sns-tcp-conn".into())
+                                .spawn(move || connection_loop(&mut stream, svc))
+                                .expect("spawn conn thread");
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; existing connections finish on client disconnect.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn connection_loop(stream: &mut TcpStream, service: Arc<Service>) {
+    loop {
+        let payload = match read_frame(stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean EOF
+            Err(_) => return,
+        };
+        let resp = handle_frame(&payload, &service);
+        if write_frame(stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle_frame(payload: &[u8], service: &Arc<Service>) -> Vec<u8> {
+    let mut r = Reader::new(payload);
+    let op = match r.u8() {
+        Ok(op) => op,
+        Err(e) => return error_frame(&e.to_string()),
+    };
+    match op {
+        OP_REGISTER_DENSE => match decode_register(&mut r) {
+            Ok(matrix) => {
+                let id = service.register_matrix(matrix);
+                Writer::new(OP_OK_REGISTER).u64(id.0).frame()
+            }
+            Err(e) => error_frame(&e.to_string()),
+        },
+        OP_SOLVE => match decode_solve(&mut r) {
+            Ok(req) => match service.solve_blocking(req) {
+                Ok(resp) => match resp.result {
+                    Ok(sol) => Writer::new(OP_OK_SOLVE)
+                        .u32(sol.x.len() as u32)
+                        .f64_slice(&sol.x)
+                        .u32(sol.iterations as u32)
+                        .f64(sol.resnorm)
+                        .u8(sol.converged as u8)
+                        .u64(resp.queue_us)
+                        .u64(resp.solve_us)
+                        .frame(),
+                    Err(e) => error_frame(&e.to_string()),
+                },
+                Err(e) => error_frame(&e.to_string()),
+            },
+            Err(e) => error_frame(&e.to_string()),
+        },
+        OP_METRICS => Writer::new(OP_OK_METRICS).utf8(&service.metrics().report()).frame(),
+        OP_EVICT => match r.u64() {
+            Ok(id) => {
+                let existed = service.registry().evict(MatrixId(id));
+                Writer::new(OP_OK_EVICT).u8(existed as u8).frame()
+            }
+            Err(e) => error_frame(&e.to_string()),
+        },
+        other => error_frame(&format!("unknown opcode {other}")),
+    }
+}
+
+fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
+    let m = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if m == 0 || n == 0 || m.checked_mul(n).is_none() {
+        return Err(DecodeError(format!("bad dims {m}x{n}")));
+    }
+    let data = r.f64_vec(m * n)?;
+    let dm = DenseMatrix::from_vec(m, n, data)
+        .map_err(|e| DecodeError(e.to_string()))?;
+    Ok(Matrix::Dense(dm))
+}
+
+fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
+    let matrix = MatrixId(r.u64()?);
+    let solver = solver_from_u8(r.u8()?)?;
+    let tol = r.f64()?;
+    let deadline_us = r.u64()?;
+    let m = r.u32()? as usize;
+    let rhs = r.f64_vec(m)?;
+    Ok(SolveRequest { matrix, rhs, solver, tol, deadline_us })
+}
+
+// ----------------------------------------------------------------------
+// Client
+// ----------------------------------------------------------------------
+
+/// Blocking client for the TCP front-end.
+pub struct Client {
+    stream: TcpStream,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("decode: {0}")]
+    Decode(#[from] DecodeError),
+    #[error("server error: {0}")]
+    Server(String),
+    #[error("unexpected opcode {0}")]
+    UnexpectedOpcode(u8),
+}
+
+/// A solve result over the wire.
+#[derive(Debug, Clone)]
+pub struct WireSolution {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub resnorm: f64,
+    pub converged: bool,
+    pub queue_us: u64,
+    pub solve_us: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    fn call(&mut self, frame: Vec<u8>) -> Result<Vec<u8>, ClientError> {
+        write_frame(&mut self.stream, &frame)?;
+        match read_frame(&mut self.stream)? {
+            Some(p) => Ok(p),
+            None => Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed",
+            ))),
+        }
+    }
+
+    fn expect(&mut self, frame: Vec<u8>, opcode: u8) -> Result<Vec<u8>, ClientError> {
+        let p = self.call(frame)?;
+        let mut r = Reader::new(&p);
+        let op = r.u8()?;
+        if op == OP_ERROR {
+            return Err(ClientError::Server(r.rest_utf8()?));
+        }
+        if op != opcode {
+            return Err(ClientError::UnexpectedOpcode(op));
+        }
+        Ok(p[1..].to_vec())
+    }
+
+    /// Register a dense matrix; returns the server-side id.
+    pub fn register_dense(&mut self, a: &DenseMatrix) -> Result<u64, ClientError> {
+        let frame = Writer::new(OP_REGISTER_DENSE)
+            .u32(a.rows() as u32)
+            .u32(a.cols() as u32)
+            .f64_slice(a.data())
+            .frame();
+        let body = self.expect(frame, OP_OK_REGISTER)?;
+        Ok(Reader::new(&body).u64()?)
+    }
+
+    /// Solve against a registered matrix.
+    pub fn solve(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+    ) -> Result<WireSolution, ClientError> {
+        let frame = Writer::new(OP_SOLVE)
+            .u64(matrix_id)
+            .u8(solver_to_u8(solver))
+            .f64(tol)
+            .u64(0)
+            .u32(rhs.len() as u32)
+            .f64_slice(rhs)
+            .frame();
+        let body = self.expect(frame, OP_OK_SOLVE)?;
+        let mut r = Reader::new(&body);
+        let n = r.u32()? as usize;
+        let x = r.f64_vec(n)?;
+        let iterations = r.u32()? as usize;
+        let resnorm = r.f64()?;
+        let converged = r.u8()? != 0;
+        let queue_us = r.u64()?;
+        let solve_us = r.u64()?;
+        Ok(WireSolution { x, iterations, resnorm, converged, queue_us, solve_us })
+    }
+
+    /// Fetch the metrics report.
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        let body = self.expect(Writer::new(OP_METRICS).frame(), OP_OK_METRICS)?;
+        Ok(Reader::new(&body).rest_utf8()?)
+    }
+
+    /// Evict a matrix; true if it existed.
+    pub fn evict(&mut self, matrix_id: u64) -> Result<bool, ClientError> {
+        let body =
+            self.expect(Writer::new(OP_EVICT).u64(matrix_id).frame(), OP_OK_EVICT)?;
+        Ok(Reader::new(&body).u8()? != 0)
+    }
+}
+
+impl From<ServiceError> for ClientError {
+    fn from(e: ServiceError) -> Self {
+        ClientError::Server(e.to_string())
+    }
+}

@@ -1,0 +1,431 @@
+//! Worker: owns a PJRT engine (optional) and a per-matrix factor cache;
+//! executes batches.
+//!
+//! The factor cache is the serving win the batcher sets up: all requests in
+//! a batch share the design matrix, so the sketch → QR factorization (the
+//! expensive, b-independent 60–90% of SAA-SAS) is computed once and reused —
+//! the direct analogue of prefix/KV-cache reuse in LLM serving.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::linalg::operator::PreconditionedOperator;
+use crate::linalg::qr::{qr_compact, QrCompact};
+use crate::linalg::{norms, triangular, DenseMatrix, Matrix};
+use crate::runtime::{Engine, Tensor};
+use crate::sketch::{CountSketch, SketchOperator};
+use crate::solvers::lsqr::{lsqr, LsqrConfig};
+use crate::solvers::saa::SaaSolver;
+use crate::solvers::{Solution, Solver};
+
+use super::metrics::Metrics;
+use super::registry::{MatrixId, MatrixRegistry};
+use super::router::Route;
+use super::{ExecutedOn, ServiceError, SolverChoice};
+
+/// Cached, b-independent SAA factorization of one registered matrix.
+struct FactorEntry {
+    sketch: CountSketch,
+    qr: QrCompact,
+    r: DenseMatrix,
+    /// Materialized Y = A·R⁻¹ for dense A (fast LSQR GEMV); None for CSR.
+    y: Option<DenseMatrix>,
+    /// f32 copy for the PJRT path (built on first PJRT dispatch).
+    f32_data: Option<Arc<Vec<f32>>>,
+}
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub artifact_dir: Option<PathBuf>,
+    pub sketch_factor: f64,
+    pub seed: u64,
+    pub lsqr: LsqrConfig,
+    /// Max matrices whose factorization is kept (FIFO eviction).
+    pub factor_cache_cap: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: None,
+            sketch_factor: 4.0,
+            seed: 0xC0FF_EE00,
+            lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() },
+            factor_cache_cap: 4,
+        }
+    }
+}
+
+/// A worker execution context. `!Send` by design (owns the PJRT engine);
+/// construct inside the worker thread.
+pub struct WorkerContext {
+    config: WorkerConfig,
+    engine: Option<Engine>,
+    registry: Arc<MatrixRegistry>,
+    metrics: Arc<Metrics>,
+    cache: HashMap<MatrixId, FactorEntry>,
+    cache_order: Vec<MatrixId>,
+}
+
+impl WorkerContext {
+    /// Build the context (loads the PJRT engine if an artifact dir is set
+    /// and loadable; PJRT load failures degrade to native-only).
+    pub fn new(
+        config: WorkerConfig,
+        registry: Arc<MatrixRegistry>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let engine = config.artifact_dir.as_ref().and_then(|d| match Engine::load(d) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                log::warn!("worker: PJRT engine unavailable ({err}); native-only");
+                None
+            }
+        });
+        Self { config, engine, registry, metrics, cache: HashMap::new(), cache_order: Vec::new() }
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// Solve one request that was routed `route`. Returns the solution and
+    /// where it actually executed (PJRT failures fall back to native).
+    pub fn execute(
+        &mut self,
+        route: &Route,
+        matrix_id: MatrixId,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+    ) -> (Result<Solution, ServiceError>, ExecutedOn) {
+        let a = match self.registry.get(matrix_id) {
+            Some(a) => a,
+            None => {
+                return (Err(ServiceError::UnknownMatrix(matrix_id.0)), ExecutedOn::Native)
+            }
+        };
+        if rhs.len() != a.rows() {
+            return (
+                Err(ServiceError::BadRequest(format!(
+                    "rhs has {} entries, matrix has {} rows",
+                    rhs.len(),
+                    a.rows()
+                ))),
+                ExecutedOn::Native,
+            );
+        }
+        match route {
+            Route::Artifact(name) if self.engine.is_some() => {
+                match self.execute_pjrt(name, matrix_id, &a, rhs, tol) {
+                    Ok(sol) => {
+                        Metrics::inc(&self.metrics.pjrt_dispatches);
+                        (Ok(sol), ExecutedOn::Pjrt(name.clone()))
+                    }
+                    Err(e) => {
+                        log::warn!("pjrt path failed ({e}); falling back to native");
+                        let out = self.execute_native(matrix_id, &a, rhs, solver, tol);
+                        Metrics::inc(&self.metrics.native_dispatches);
+                        (out, ExecutedOn::Native)
+                    }
+                }
+            }
+            _ => {
+                let out = self.execute_native(matrix_id, &a, rhs, solver, tol);
+                Metrics::inc(&self.metrics.native_dispatches);
+                (out, ExecutedOn::Native)
+            }
+        }
+    }
+
+    // ---------------- native path with factor reuse ----------------------
+
+    fn factor_for(&mut self, id: MatrixId, a: &Matrix) -> Result<(), ServiceError> {
+        if self.cache.contains_key(&id) {
+            Metrics::inc(&self.metrics.factor_cache_hits);
+            return Ok(());
+        }
+        Metrics::inc(&self.metrics.factor_cache_misses);
+        let (m, n) = a.shape();
+        let s_rows = ((self.config.sketch_factor * n as f64).ceil() as usize)
+            .max(n + 1)
+            .min(m);
+        let sketch = CountSketch::new(s_rows, m, self.config.seed);
+        let b_sk = sketch.apply_matrix(a);
+        let qr = qr_compact(&b_sk).map_err(|e| ServiceError::Solver(e.to_string()))?;
+        let r = qr.r();
+        let y = match a {
+            Matrix::Dense(ad) => Some(
+                triangular::right_solve_upper(ad, &r)
+                    .map_err(|e| ServiceError::Solver(e.to_string()))?,
+            ),
+            Matrix::Csr(_) => None,
+        };
+        self.cache.insert(id, FactorEntry { sketch, qr, r, y, f32_data: None });
+        self.cache_order.push(id);
+        if self.cache_order.len() > self.config.factor_cache_cap {
+            let evict = self.cache_order.remove(0);
+            self.cache.remove(&evict);
+        }
+        Ok(())
+    }
+
+    fn execute_native(
+        &mut self,
+        id: MatrixId,
+        a: &Matrix,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+    ) -> Result<Solution, ServiceError> {
+        match solver {
+            SolverChoice::Lsqr => {
+                let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
+                let res = lsqr(a.as_operator(), rhs, None, &cfg);
+                Ok(Solution {
+                    x: res.x,
+                    iterations: res.itn,
+                    resnorm: res.r1norm.abs(),
+                    arnorm: res.arnorm,
+                    converged: res.istop.converged(),
+                    fallback_used: false,
+                    residual_history: res.history,
+                })
+            }
+            SolverChoice::Saa | SolverChoice::SketchOnly => {
+                self.factor_for(id, a)?;
+                let entry = self.cache.get(&id).expect("just inserted");
+                // b-dependent part only: c = S·b, z0 = Qᵀc.
+                let c = entry.sketch.apply_vec(rhs);
+                let z0 = entry.qr.q_transpose_vec(&c);
+                if solver == SolverChoice::SketchOnly {
+                    let x = triangular::solve_upper(&entry.r, &z0)
+                        .map_err(|e| ServiceError::Solver(e.to_string()))?;
+                    let ax = a.as_operator().apply_vec(&x);
+                    let rn = norms::nrm2(
+                        &ax.iter().zip(rhs.iter()).map(|(p, q)| p - q).collect::<Vec<_>>(),
+                    );
+                    return Ok(Solution {
+                        x,
+                        iterations: 0,
+                        resnorm: rn,
+                        arnorm: f64::NAN,
+                        converged: true,
+                        fallback_used: false,
+                        residual_history: Vec::new(),
+                    });
+                }
+                let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
+                let res = match (&entry.y, a) {
+                    (Some(y), _) => lsqr(y, rhs, Some(&z0), &cfg),
+                    (None, Matrix::Csr(ac)) => {
+                        let op = PreconditionedOperator::new(ac, &entry.r);
+                        lsqr(&op, rhs, Some(&z0), &cfg)
+                    }
+                    (None, Matrix::Dense(ad)) => {
+                        let op = PreconditionedOperator::new(ad, &entry.r);
+                        lsqr(&op, rhs, Some(&z0), &cfg)
+                    }
+                };
+                if !res.istop.converged() {
+                    // Algorithm 1 fallback: rare; run the full (uncached)
+                    // SAA solver which owns the perturbation logic.
+                    let saa = SaaSolver::new(crate::solvers::saa::SaaConfig {
+                        lsqr: cfg,
+                        seed: self.config.seed,
+                        sketch_factor: self.config.sketch_factor,
+                        ..Default::default()
+                    });
+                    return saa
+                        .solve(a, rhs)
+                        .map_err(|e| ServiceError::Solver(e.to_string()));
+                }
+                let x = triangular::solve_upper(&entry.r, &res.x)
+                    .map_err(|e| ServiceError::Solver(e.to_string()))?;
+                Ok(Solution {
+                    x,
+                    iterations: res.itn,
+                    resnorm: res.r1norm.abs(),
+                    arnorm: res.arnorm,
+                    converged: true,
+                    fallback_used: false,
+                    residual_history: res.history,
+                })
+            }
+        }
+    }
+
+    // ---------------- PJRT path ------------------------------------------
+
+    fn f32_matrix(&mut self, id: MatrixId, a: &Matrix) -> Result<Arc<Vec<f32>>, ServiceError> {
+        self.factor_for(id, a)?;
+        let entry = self.cache.get_mut(&id).expect("factored");
+        if entry.f32_data.is_none() {
+            let dense = match a {
+                Matrix::Dense(d) => d.clone(),
+                Matrix::Csr(c) => c.to_dense(),
+            };
+            entry.f32_data =
+                Some(Arc::new(dense.data().iter().map(|&v| v as f32).collect()));
+        }
+        Ok(entry.f32_data.clone().unwrap())
+    }
+
+    fn execute_pjrt(
+        &mut self,
+        artifact: &str,
+        id: MatrixId,
+        a: &Matrix,
+        rhs: &[f64],
+        tol: f64,
+    ) -> Result<Solution, ServiceError> {
+        let spec = {
+            let engine = self.engine.as_ref().expect("caller checked");
+            engine
+                .manifest()
+                .find(artifact)
+                .ok_or_else(|| ServiceError::Solver(format!("no artifact {artifact}")))?
+                .clone()
+        };
+        let (m, n, s) = (spec.m, spec.n, spec.s);
+        let a32 = self.f32_matrix(id, a)?;
+        let b32: Vec<f32> = rhs.iter().map(|&v| v as f32).collect();
+
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(4);
+        inputs.push(Tensor::F32 { data: a32.as_ref().clone(), shape: vec![m, n] });
+        match spec.entry.as_str() {
+            "lsqr_baseline" => {
+                inputs.push(Tensor::f32(b32, vec![m]));
+            }
+            _ => {
+                // CountSketch hash arrays shared with the native cache so
+                // both paths use the *same* S (cross-checkable).
+                let entry = self.cache.get(&id).expect("factored");
+                let (buckets, signs) = entry.sketch.hash_arrays();
+                if entry.sketch.sketch_dim() != s {
+                    return Err(ServiceError::Solver(format!(
+                        "sketch dim mismatch: cache {} vs artifact {s}",
+                        entry.sketch.sketch_dim()
+                    )));
+                }
+                inputs.push(Tensor::f32(b32, vec![m]));
+                inputs.push(Tensor::i32(
+                    buckets.iter().map(|&v| v as i32).collect(),
+                    vec![m],
+                ));
+                inputs.push(Tensor::f32(
+                    signs.iter().map(|&v| v as f32).collect(),
+                    vec![m],
+                ));
+            }
+        }
+        let engine = self.engine.as_ref().expect("caller checked");
+        let out = engine
+            .execute(artifact, &inputs)
+            .map_err(|e| ServiceError::Solver(e.to_string()))?;
+        let x = out[0].to_f64();
+        let (resnorm, history, iterations) = if out.len() > 1 {
+            let h = out[1].to_f64();
+            let last = h.last().copied().unwrap_or(f64::NAN);
+            let iters = h.len();
+            (last, h, iters)
+        } else {
+            (f64::NAN, Vec::new(), 0)
+        };
+        let bnorm = norms::nrm2(rhs).max(1e-300);
+        let converged = if resnorm.is_nan() { true } else { resnorm / bnorm <= tol.max(1e-5) };
+        Ok(Solution {
+            x,
+            iterations,
+            resnorm,
+            arnorm: f64::NAN,
+            converged,
+            fallback_used: false,
+            residual_history: history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    fn setup(
+        cap: usize,
+    ) -> (WorkerContext, Arc<MatrixRegistry>, Arc<Metrics>, MatrixId, Vec<f64>, Vec<f64>) {
+        let registry = Arc::new(MatrixRegistry::new());
+        let metrics = Arc::new(Metrics::new());
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(77));
+        let a = DenseMatrix::gaussian(300, 12, &mut g);
+        let x_true = g.gaussian_vec(12);
+        let b = a.matvec(&x_true);
+        let id = registry.register(Matrix::Dense(a));
+        let ctx = WorkerContext::new(
+            WorkerConfig { factor_cache_cap: cap, ..Default::default() },
+            registry.clone(),
+            metrics.clone(),
+        );
+        (ctx, registry, metrics, id, x_true, b)
+    }
+
+    #[test]
+    fn native_saa_solves_and_caches() {
+        let (mut ctx, _reg, metrics, id, x_true, b) = setup(4);
+        let (r1, on1) =
+            ctx.execute(&Route::Native, id, &b, SolverChoice::Saa, 1e-10);
+        assert_eq!(on1, ExecutedOn::Native);
+        let s1 = r1.unwrap();
+        let err = norms::nrm2_diff(&s1.x, &x_true) / norms::nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+        assert_eq!(Metrics::get(&metrics.factor_cache_misses), 1);
+        // Second request: cache hit, same answer.
+        let (r2, _) = ctx.execute(&Route::Native, id, &b, SolverChoice::Saa, 1e-10);
+        assert_eq!(Metrics::get(&metrics.factor_cache_hits), 1);
+        assert_eq!(r2.unwrap().x, s1.x);
+    }
+
+    #[test]
+    fn lsqr_and_sketch_only_choices() {
+        let (mut ctx, _reg, _m, id, x_true, b) = setup(4);
+        let (r, _) = ctx.execute(&Route::Native, id, &b, SolverChoice::Lsqr, 1e-12);
+        let sol = r.unwrap();
+        assert!(sol.converged);
+        assert!(norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true) < 1e-7);
+        let (r2, _) = ctx.execute(&Route::Native, id, &b, SolverChoice::SketchOnly, 1e-2);
+        let sol2 = r2.unwrap();
+        // consistent system: sketch-only is exact too
+        assert!(norms::nrm2_diff(&sol2.x, &x_true) / norms::nrm2(&x_true) < 1e-8);
+        assert_eq!(sol2.iterations, 0);
+    }
+
+    #[test]
+    fn unknown_matrix_and_bad_rhs() {
+        let (mut ctx, _reg, _m, id, _xt, _b) = setup(4);
+        let (r, _) = ctx.execute(&Route::Native, MatrixId(999), &[1.0], SolverChoice::Saa, 1e-6);
+        assert!(matches!(r, Err(ServiceError::UnknownMatrix(999))));
+        let (r2, _) = ctx.execute(&Route::Native, id, &[1.0, 2.0], SolverChoice::Saa, 1e-6);
+        assert!(matches!(r2, Err(ServiceError::BadRequest(_))));
+    }
+
+    #[test]
+    fn cache_eviction_fifo() {
+        let (mut ctx, reg, metrics, _id, _xt, _b) = setup(2);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(88));
+        let ids: Vec<MatrixId> = (0..3)
+            .map(|_| reg.register(Matrix::Dense(DenseMatrix::gaussian(100, 6, &mut g))))
+            .collect();
+        let b = g.gaussian_vec(100);
+        for &id in &ids {
+            let (r, _) = ctx.execute(&Route::Native, id, &b, SolverChoice::Saa, 1e-8);
+            r.unwrap();
+        }
+        assert_eq!(Metrics::get(&metrics.factor_cache_misses), 3);
+        // First registered matrix was evicted (cap 2): re-solving misses.
+        let (r, _) = ctx.execute(&Route::Native, ids[0], &b, SolverChoice::Saa, 1e-8);
+        r.unwrap();
+        assert_eq!(Metrics::get(&metrics.factor_cache_misses), 4);
+    }
+}

@@ -1,0 +1,39 @@
+//! # snsolve — Sketch 'n Solve
+//!
+//! A production-grade reproduction of *"Sketch-and-Solve: Optimized
+//! Overdetermined Least-Squares Using Randomized Numerical Linear Algebra"*
+//! (Lavaee, 2023/24) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — native solvers (LSQR, SAA-SAS, SAP-SAS),
+//!   sketching operators, problem generators, a batching solve service, and
+//!   the benchmark harness that regenerates every figure in the paper.
+//! * **Layer 2 (`python/compile/model.py`)** — the same pipeline as JAX
+//!   graphs, AOT-lowered to HLO text and executed from Rust via PJRT.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the sketch
+//!   application hot-spots (CountSketch, Gaussian matmul, FWHT).
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use snsolve::problems::{DenseProblemSpec, generate_dense};
+//! use snsolve::solvers::{saa::SaaSolver, Solver};
+//!
+//! let spec = DenseProblemSpec { m: 4000, n: 50, cond: 1e8, resid_norm: 1e-8, seed: 0 };
+//! let p = generate_dense(&spec);
+//! let sol = SaaSolver::default().solve(&p.a, &p.b).unwrap();
+//! println!("relative error = {:.2e}", p.relative_error(&sol.x));
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod problems;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod solvers;
+pub mod testing;
+
+pub use linalg::{CsrMatrix, DenseMatrix, LinearOperator};

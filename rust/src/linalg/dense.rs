@@ -1,0 +1,321 @@
+//! Row-major dense `f64` matrix.
+
+use super::{LinalgError, Result};
+use crate::rng::{GaussianSource, RngCore};
+
+/// A dense, row-major, `f64` matrix.
+///
+/// Row-major is the right layout for this codebase: the hot consumers are
+/// (a) streaming row-accumulation sketches (CountSketch reads whole rows),
+/// (b) GEMM with an explicitly blocked kernel, and (c) Householder QR on
+/// tall-thin panels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(LinalgError::DimensionMismatch(format!(
+                "from_vec: buffer has {} elements, expected {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// i.i.d. standard-Gaussian matrix.
+    pub fn gaussian<R: RngCore>(rows: usize, cols: usize, g: &mut GaussianSource<R>) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        g.fill_gaussian(&mut m.data);
+        m
+    }
+
+    /// Diagonal matrix from entries.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let mut m = Self::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the row-major buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Column copy (row-major storage: strided gather).
+    pub fn col_copy(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                let imax = (ib + B).min(self.rows);
+                let jmax = (jb + B).min(self.cols);
+                for i in ib..imax {
+                    for j in jb..jmax {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Extract rows `[r0, r1)` as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> DenseMatrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        DenseMatrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Extract columns `[c0, c1)` as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> DenseMatrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = DenseMatrix::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        super::norms::nrm2(&self.data)
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &DenseMatrix) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(LinalgError::DimensionMismatch(format!(
+                "axpy: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// `||self - other||_F`.
+    pub fn fro_distance(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Dense matvec `y = A x` (delegates to the blocked kernel).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        super::gemm::matvec(self, x)
+    }
+
+    /// Transposed matvec `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        super::gemm::matvec_t(self, x)
+    }
+
+    /// Dense matmul `C = A B` (blocked kernel).
+    pub fn matmul(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        super::gemm::matmul(self, b)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn construct_and_index() {
+        let mut m = DenseMatrix::zeros(3, 2);
+        m[(0, 0)] = 1.0;
+        m[(2, 1)] = 5.0;
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.row(2), &[0.0, 5.0]);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = DenseMatrix::eye(3);
+        assert_eq!(i3[(1, 1)], 1.0);
+        assert_eq!(i3[(0, 1)], 0.0);
+        let d = DenseMatrix::from_diag(&[2.0, 3.0]);
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(1, 1)], 3.0);
+        assert_eq!(d[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1));
+        let a = DenseMatrix::gaussian(37, 53, &mut g);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+        let t = a.transpose();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(a[(i, j)], t[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn slices() {
+        let a = DenseMatrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let r = a.slice_rows(1, 3);
+        assert_eq!(r.shape(), (2, 3));
+        assert_eq!(r[(0, 0)], 3.0);
+        let c = a.slice_cols(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c[(0, 0)], 1.0);
+        assert_eq!(c[(3, 1)], 11.0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = DenseMatrix::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = DenseMatrix::eye(2);
+        a.axpy(2.0, &b).unwrap();
+        assert_eq!(a[(0, 0)], 2.0);
+        assert_eq!(a[(1, 1)], 4.0);
+        a.scale(0.5);
+        assert_eq!(a[(1, 1)], 2.0);
+        let c = DenseMatrix::zeros(3, 2);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn col_copy_matches() {
+        let a = DenseMatrix::from_fn(5, 4, |i, j| (10 * i + j) as f64);
+        let c2 = a.col_copy(2);
+        assert_eq!(c2, vec![2.0, 12.0, 22.0, 32.0, 42.0]);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let a = DenseMatrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]).unwrap();
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,378 @@
+//! Blocked dense GEMM / GEMV kernels.
+//!
+//! Row-major `C = A·B` with L1/L2-aware blocking and an unrolled
+//! register-tile microkernel. This is the CPU stand-in for the MXU-tiled
+//! Pallas kernel at Layer 1 — same tiling idea (stream panels of B through a
+//! register-resident accumulator), different hardware target.
+
+use super::dense::DenseMatrix;
+use super::{LinalgError, Result};
+
+// Cache blocking parameters. MC*KC*8B ≈ 512 KB fits comfortably in L2;
+// KC*NC panels of B stream through L3/memory; the 4x8 register microkernel
+// keeps 32 accumulators live, which the compiler maps onto AVX registers.
+const MC: usize = 256;
+const KC: usize = 256;
+const NC: usize = 1024;
+const MR: usize = 4;
+const NR: usize = 8;
+
+/// `C = A · B`.
+pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    if a.cols() != b.rows() {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "matmul: ({}x{}) · ({}x{})",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let mut c = DenseMatrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// `C += A · B` into an existing (zeroed or accumulating) output.
+pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    if k != kb || c.shape() != (m, n) {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "matmul_into: A {}x{}, B {}x{}, C {:?}",
+            m, k, kb, n, c.shape()
+        )));
+    }
+    let adata = a.data();
+    let bdata = b.data();
+    let cdata = c.data_mut();
+
+    // Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A)
+    // -> microkernel over MR x NR register tiles.
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                block_kernel(
+                    adata, bdata, cdata, m, k, n, ic, jc, pc, mc, nc, kc,
+                );
+            }
+        }
+    }
+    let _ = m;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_kernel(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    _m: usize,
+    k: usize,
+    n: usize,
+    ic: usize,
+    jc: usize,
+    pc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+) {
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        let mut jr = 0;
+        while jr < nc {
+            let nr = NR.min(nc - jr);
+            if mr == MR && nr == NR {
+                micro_4x8(a, b, c, k, n, ic + ir, jc + jr, pc, kc);
+            } else {
+                micro_edge(a, b, c, k, n, ic + ir, jc + jr, pc, mr, nr, kc);
+            }
+            jr += NR;
+        }
+        ir += MR;
+    }
+}
+
+/// Full 4x8 register-tile microkernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_4x8(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    pc: usize,
+    kc: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    let a0 = i0 * k + pc;
+    let a1 = (i0 + 1) * k + pc;
+    let a2 = (i0 + 2) * k + pc;
+    let a3 = (i0 + 3) * k + pc;
+    for p in 0..kc {
+        let bp = (pc + p) * n + j0;
+        let brow = &b[bp..bp + NR];
+        let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
+        for (r, &ar) in av.iter().enumerate() {
+            for (s, &bv) in brow.iter().enumerate() {
+                acc[r][s] += ar * bv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let cp = (i0 + r) * n + j0;
+        for (s, &v) in row.iter().enumerate() {
+            c[cp + s] += v;
+        }
+    }
+}
+
+/// Edge microkernel for ragged tiles.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_edge(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+) {
+    for r in 0..mr {
+        let arow = (i0 + r) * k + pc;
+        let crow = (i0 + r) * n + j0;
+        for p in 0..kc {
+            let av = a[arow + p];
+            if av == 0.0 {
+                continue;
+            }
+            let bp = (pc + p) * n + j0;
+            for s in 0..nr {
+                c[crow + s] += av * b[bp + s];
+            }
+        }
+    }
+}
+
+/// `y = A x` — row-major matvec; each row is a contiguous dot product.
+pub fn matvec(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(
+        a.cols(),
+        x.len(),
+        "matvec: A is {}x{}, x has {}",
+        a.rows(),
+        a.cols(),
+        x.len()
+    );
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(a, x, &mut y, 0.0);
+    y
+}
+
+/// `y = beta*y + A x`.
+pub fn matvec_into(a: &DenseMatrix, x: &[f64], y: &mut [f64], beta: f64) {
+    let n = a.cols();
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a.data()[i * n..(i + 1) * n];
+        *yi = beta * *yi + dot(row, x);
+    }
+}
+
+/// `y = Aᵀ x` — accumulate x[i]-scaled rows; streams A once, writes y
+/// repeatedly (y is short: n entries, cache-resident).
+pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(
+        a.rows(),
+        x.len(),
+        "matvec_t: A is {}x{}, x has {}",
+        a.rows(),
+        a.cols(),
+        x.len()
+    );
+    let n = a.cols();
+    let mut y = vec![0.0; n];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a.data()[i * n..(i + 1) * n];
+        axpy(xi, row, &mut y);
+    }
+    y
+}
+
+/// Unrolled dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`, unrolled.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        y[i] += alpha * x[i];
+        y[i + 1] += alpha * x[i + 1];
+        y[i + 2] += alpha * x[i + 2];
+        y[i + 3] += alpha * x[i + 3];
+    }
+    for i in chunks * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    fn naive_matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = DenseMatrix::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[(i, p)];
+                for j in 0..n {
+                    c[(i, j)] += av * b[(p, j)];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(3));
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 4, 5),
+            (4, 8, 8),
+            (5, 7, 9),
+            (17, 33, 29),
+            (64, 64, 64),
+            (100, 37, 258),
+            (260, 270, 1030), // crosses all block boundaries
+        ] {
+            let a = DenseMatrix::gaussian(m, k, &mut g);
+            let b = DenseMatrix::gaussian(k, n, &mut g);
+            let c = matmul(&a, &b).unwrap();
+            let c_ref = naive_matmul(&a, &b);
+            let err = c.fro_distance(&c_ref) / c_ref.fro_norm().max(1e-300);
+            assert!(err < 1e-13, "({m},{k},{n}): rel err {err}");
+        }
+    }
+
+    #[test]
+    fn matmul_dim_mismatch() {
+        let a = DenseMatrix::zeros(2, 3);
+        let b = DenseMatrix::zeros(4, 2);
+        assert!(matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(4));
+        let a = DenseMatrix::gaussian(20, 20, &mut g);
+        let i = DenseMatrix::eye(20);
+        let c = matmul(&a, &i).unwrap();
+        assert!(a.fro_distance(&c) < 1e-14);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(5));
+        let a = DenseMatrix::gaussian(23, 17, &mut g);
+        let x = g.gaussian_vec(17);
+        let y = matvec(&a, &x);
+        let xm = DenseMatrix::from_vec(17, 1, x.clone()).unwrap();
+        let ym = matmul(&a, &xm).unwrap();
+        for i in 0..23 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose_matvec() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(6));
+        let a = DenseMatrix::gaussian(31, 13, &mut g);
+        let x = g.gaussian_vec(31);
+        let y1 = matvec_t(&a, &x);
+        let y2 = matvec(&a.transpose(), &x);
+        for (u, v) in y1.iter().zip(y2.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = [1.0; 5];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0, 9.0, 11.0]);
+        let mut z = [2.0, 4.0];
+        scal(0.5, &mut z);
+        assert_eq!(z, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_into_beta() {
+        let a = DenseMatrix::eye(3);
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        matvec_into(&a, &x, &mut y, 1.0);
+        assert_eq!(y, vec![11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = DenseMatrix::eye(2);
+        let b = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut c = b.clone();
+        matmul_into(&a, &b, &mut c).unwrap();
+        assert_eq!(c[(0, 0)], 2.0);
+        assert_eq!(c[(1, 1)], 8.0);
+    }
+}

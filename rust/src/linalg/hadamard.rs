@@ -1,0 +1,158 @@
+//! Fast Walsh–Hadamard transform (FWHT) — the core of the SRHT
+//! (subsampled randomized Hadamard transform) dense sketching operator.
+//!
+//! `fwht_inplace` applies the *unnormalized* H_n (entries ±1) in
+//! O(n log n); SRHT composes `P · H · D` with D a random sign flip and P a
+//! row subsample, normalized by 1/√n (Hadamard orthogonality) and √(n/s)
+//! (subsample variance correction).
+
+use super::{is_power_of_two, LinalgError, Result};
+
+/// In-place unnormalized FWHT of a power-of-two-length vector.
+pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
+    let n = x.len();
+    if !is_power_of_two(n) {
+        return Err(LinalgError::InvalidArgument(format!(
+            "fwht: length {n} is not a power of two"
+        )));
+    }
+    let mut h = 1;
+    while h < n {
+        // Butterfly stage at stride h; blocks of 2h.
+        for block in (0..n).step_by(2 * h) {
+            for i in block..block + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    Ok(())
+}
+
+/// FWHT each *column* of a row-major (rows × cols) buffer, where `rows` is a
+/// power of two. This is the operation SRHT applies to a tall matrix: mix
+/// along the sample (row) dimension, independently per feature column.
+///
+/// Implementation note: rather than transposing, we run the butterfly with
+/// row-strided accesses but process all columns of a row pair contiguously —
+/// each stage is a pass of length-`cols` vector adds/subs, which is
+/// bandwidth-optimal for row-major data.
+pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Result<()> {
+    if data.len() != rows * cols {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "fwht_columns: buffer {} != {rows}x{cols}",
+            data.len()
+        )));
+    }
+    if !is_power_of_two(rows) {
+        return Err(LinalgError::InvalidArgument(format!(
+            "fwht_columns: rows {rows} not a power of two"
+        )));
+    }
+    let mut h = 1;
+    while h < rows {
+        for block in (0..rows).step_by(2 * h) {
+            for i in block..block + h {
+                let (top, bot) = data.split_at_mut((i + h) * cols);
+                let a = &mut top[i * cols..i * cols + cols];
+                let b = &mut bot[..cols];
+                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = u + v;
+                    *y = u - v;
+                }
+            }
+        }
+        h *= 2;
+    }
+    Ok(())
+}
+
+/// Reference O(n²) Walsh–Hadamard for tests: `y[k] = Σ_i (-1)^{popcount(i&k)} x[i]`.
+pub fn wht_reference(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut y = vec![0.0; n];
+    for (k, yk) in y.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for (i, &xi) in x.iter().enumerate() {
+            let sign = if ((i & k).count_ones() & 1) == 0 { 1.0 } else { -1.0 };
+            s += sign * xi;
+        }
+        *yk = s;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn fwht_matches_reference() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(31));
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x = g.gaussian_vec(n);
+            let mut y = x.clone();
+            fwht_inplace(&mut y).unwrap();
+            let y_ref = wht_reference(&x);
+            for (u, v) in y.iter().zip(y_ref.iter()) {
+                assert!((u - v).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        // H (H x) = n x.
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(32));
+        let x = g.gaussian_vec(128);
+        let mut y = x.clone();
+        fwht_inplace(&mut y).unwrap();
+        fwht_inplace(&mut y).unwrap();
+        for (u, v) in y.iter().zip(x.iter()) {
+            assert!((u - 128.0 * v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_energy() {
+        // Parseval: ||Hx||² = n ||x||².
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(33));
+        let x = g.gaussian_vec(512);
+        let e0: f64 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht_inplace(&mut y).unwrap();
+        let e1: f64 = y.iter().map(|v| v * v).sum();
+        assert!((e1 - 512.0 * e0).abs() / (512.0 * e0) < 1e-12);
+    }
+
+    #[test]
+    fn fwht_rejects_non_pow2() {
+        let mut x = vec![0.0; 6];
+        assert!(fwht_inplace(&mut x).is_err());
+        let mut d = vec![0.0; 12];
+        assert!(fwht_columns_inplace(&mut d, 6, 2).is_err());
+        assert!(fwht_columns_inplace(&mut d, 4, 2).is_err()); // wrong buffer size
+    }
+
+    #[test]
+    fn fwht_columns_matches_per_column() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(34));
+        let (rows, cols) = (64usize, 7usize);
+        let data: Vec<f64> = g.gaussian_vec(rows * cols);
+        let mut block = data.clone();
+        fwht_columns_inplace(&mut block, rows, cols).unwrap();
+        for j in 0..cols {
+            let mut col: Vec<f64> = (0..rows).map(|i| data[i * cols + j]).collect();
+            fwht_inplace(&mut col).unwrap();
+            for i in 0..rows {
+                assert!((block[i * cols + j] - col[i]).abs() < 1e-10);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Dense and sparse linear-algebra substrate.
+//!
+//! Everything the sketch-and-solve stack needs and the offline environment
+//! does not provide: a row-major dense matrix, blocked GEMM, CSR sparse
+//! matrices, Householder QR, triangular solves, the fast Walsh–Hadamard
+//! transform, norms and a power-iteration 2-norm estimator.
+//!
+//! Scalar type is `f64` throughout the native path (the paper's experiments
+//! are NumPy/SciPy f64); the AOT/PJRT path runs f32 and is cross-checked in
+//! integration tests.
+
+pub mod dense;
+pub mod gemm;
+pub mod hadamard;
+pub mod norms;
+pub mod operator;
+pub mod qr;
+pub mod sparse;
+pub mod triangular;
+
+pub use dense::DenseMatrix;
+pub use operator::LinearOperator;
+pub use sparse::CsrMatrix;
+
+/// A dense-or-sparse matrix — the input type of the solver and service
+/// layers (dispatches sketching and matvec paths without generics).
+#[derive(Debug, Clone)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Csr(CsrMatrix),
+}
+
+impl Matrix {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Matrix::Dense(a) => a.shape(),
+            Matrix::Csr(a) => a.shape(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape().0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape().1
+    }
+
+    /// Number of stored nonzeros (dense: all entries).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.rows() * a.cols(),
+            Matrix::Csr(a) => a.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Matrix::Csr(_))
+    }
+
+    pub fn as_operator(&self) -> &dyn LinearOperator {
+        match self {
+            Matrix::Dense(a) => a,
+            Matrix::Csr(a) => a,
+        }
+    }
+
+    /// Dense materialization (small matrices / tests).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Matrix::Dense(a) => a.clone(),
+            Matrix::Csr(a) => a.to_dense(),
+        }
+    }
+}
+
+impl LinearOperator for Matrix {
+    fn shape(&self) -> (usize, usize) {
+        Matrix::shape(self)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.as_operator().apply(x, y)
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.as_operator().apply_transpose(x, y)
+    }
+}
+
+impl From<DenseMatrix> for Matrix {
+    fn from(a: DenseMatrix) -> Self {
+        Matrix::Dense(a)
+    }
+}
+
+impl From<CsrMatrix> for Matrix {
+    fn from(a: CsrMatrix) -> Self {
+        Matrix::Csr(a)
+    }
+}
+
+/// Errors surfaced by the linear-algebra layer.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("dimension mismatch: {0}")]
+    DimensionMismatch(String),
+    #[error("matrix is singular to working precision: {0}")]
+    Singular(String),
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+}
+
+pub type Result<T> = std::result::Result<T, LinalgError>;
+
+/// `true` iff `n` is a power of two (FHT precondition).
+#[inline]
+pub fn is_power_of_two(n: usize) -> bool {
+    n != 0 && (n & (n - 1)) == 0
+}
+
+/// Smallest power of two `>= n`.
+#[inline]
+pub fn next_power_of_two(n: usize) -> usize {
+    n.next_power_of_two()
+}

@@ -1,0 +1,157 @@
+//! Vector/matrix norms and spectral-norm estimation.
+
+use super::operator::LinearOperator;
+use crate::rng::{GaussianSource, Xoshiro256pp};
+
+/// Euclidean norm with overflow-safe scaling (LAPACK dnrm2 style).
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &v in x {
+        if v != 0.0 {
+            let a = v.abs();
+            if scale < a {
+                let r = scale / a;
+                ssq = 1.0 + ssq * r * r;
+                scale = a;
+            } else {
+                let r = a / scale;
+                ssq += r * r;
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// `||x - y||₂`.
+pub fn nrm2_diff(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for (&a, &b) in x.iter().zip(y.iter()) {
+        let d = a - b;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// ∞-norm.
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// 1-norm.
+pub fn norm_1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// Normalize in place; returns the original norm (0 leaves x untouched).
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = nrm2(x);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    }
+    n
+}
+
+/// Power-iteration estimate of the spectral norm ‖A‖₂ of a linear operator,
+/// via the symmetric iteration `v ← AᵀA v`. Used for Algorithm 1's
+/// perturbation scale σ = 10‖A‖₂·u and for condition diagnostics.
+///
+/// Converges geometrically in (σ₂/σ₁)²; `iters` ≈ 30 is plenty for the
+/// 4-digit accuracy σ needs.
+pub fn spectral_norm_est<Op: LinearOperator + ?Sized>(a: &Op, iters: usize, seed: u64) -> f64 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+    let mut v = g.gaussian_vec(n);
+    normalize(&mut v);
+    let mut u = vec![0.0; m];
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        a.apply(&v, &mut u);
+        let un = nrm2(&u);
+        if un == 0.0 {
+            return 0.0; // v in null space; A ≈ 0 on this subspace
+        }
+        a.apply_transpose(&u, &mut v);
+        sigma = nrm2(&v) / un; // Rayleigh-style estimate of σ₁
+        let vn = normalize(&mut v);
+        if vn == 0.0 {
+            break;
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn nrm2_basics() {
+        assert_eq!(nrm2(&[]), 0.0);
+        assert_eq!(nrm2(&[0.0, 0.0]), 0.0);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_overflow_safe() {
+        let big = 1e200;
+        let v = [big, big];
+        assert!((nrm2(&v) - big * 2f64.sqrt()).abs() / (big * 2f64.sqrt()) < 1e-15);
+        let small = 1e-200;
+        let w = [small, small];
+        assert!((nrm2(&w) - small * 2f64.sqrt()).abs() / (small * 2f64.sqrt()) < 1e-15);
+    }
+
+    #[test]
+    fn other_norms() {
+        let v = [1.0, -2.0, 3.0];
+        assert_eq!(norm_inf(&v), 3.0);
+        assert_eq!(norm_1(&v), 6.0);
+        assert!((nrm2_diff(&v, &[1.0, -2.0, 0.0]) - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn normalize_works() {
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-15);
+        assert!((nrm2(&v) - 1.0).abs() < 1e-15);
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let d = DenseMatrix::from_diag(&[1.0, 5.0, 2.0, 0.1]);
+        let est = spectral_norm_est(&d, 50, 7);
+        assert!((est - 5.0).abs() < 1e-6, "est={est}");
+    }
+
+    #[test]
+    fn spectral_norm_close_to_fro_bound() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(41));
+        let a = DenseMatrix::gaussian(60, 20, &mut g);
+        let est = spectral_norm_est(&a, 60, 8);
+        let fro = a.fro_norm();
+        assert!(est <= fro * (1.0 + 1e-9));
+        assert!(est >= fro / (20f64).sqrt() * 0.99);
+    }
+
+    #[test]
+    fn spectral_norm_orthogonal_is_one() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(42));
+        let a = DenseMatrix::gaussian(40, 10, &mut g);
+        let q = crate::linalg::qr::orthonormal_columns(&a).unwrap();
+        let est = spectral_norm_est(&q, 60, 9);
+        assert!((est - 1.0).abs() < 1e-8, "est={est}");
+    }
+}

@@ -1,0 +1,273 @@
+//! The `LinearOperator` abstraction LSQR iterates against.
+//!
+//! LSQR only ever needs `u ← Av` and `v ← Aᵀu`; abstracting them lets one
+//! solver implementation run over dense matrices, CSR matrices, the
+//! implicitly preconditioned operator `Y = A R⁻¹` (never materialized for
+//! sparse A), and the perturbed operator `Ã = A + σG/√m`.
+
+use super::dense::DenseMatrix;
+use super::sparse::CsrMatrix;
+use super::triangular;
+
+/// A (possibly implicit) m×n linear map with transpose action.
+pub trait LinearOperator {
+    /// `(m, n)`.
+    fn shape(&self) -> (usize, usize);
+
+    /// `y = A x` (y has length m, pre-allocated).
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    /// `y = Aᵀ x` (y has length n, pre-allocated).
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]);
+
+    /// Convenience allocating forms.
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.shape().0];
+        self.apply(x, &mut y);
+        y
+    }
+
+    fn apply_transpose_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.shape().1];
+        self.apply_transpose(x, &mut y);
+        y
+    }
+}
+
+impl LinearOperator for DenseMatrix {
+    fn shape(&self) -> (usize, usize) {
+        DenseMatrix::shape(self)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        super::gemm::matvec_into(self, x, y, 0.0);
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        let out = super::gemm::matvec_t(self, x);
+        y.copy_from_slice(&out);
+    }
+}
+
+impl LinearOperator for CsrMatrix {
+    fn shape(&self) -> (usize, usize) {
+        CsrMatrix::shape(self)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_t_into(x, y);
+    }
+}
+
+/// The right-preconditioned operator `Y = A R⁻¹` without materializing Y —
+/// essential for sparse A (Y would be dense m×n).
+///
+/// `Y v = A (R⁻¹ v)` and `Yᵀ u = R⁻ᵀ (Aᵀ u)`.
+pub struct PreconditionedOperator<'a, Op: LinearOperator + ?Sized> {
+    a: &'a Op,
+    r: &'a DenseMatrix,
+}
+
+impl<'a, Op: LinearOperator + ?Sized> PreconditionedOperator<'a, Op> {
+    /// `r` must be n×n upper triangular and nonsingular.
+    pub fn new(a: &'a Op, r: &'a DenseMatrix) -> Self {
+        debug_assert_eq!(a.shape().1, r.rows());
+        debug_assert_eq!(r.rows(), r.cols());
+        Self { a, r }
+    }
+}
+
+impl<Op: LinearOperator + ?Sized> LinearOperator for PreconditionedOperator<'_, Op> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let w = triangular::solve_upper(self.r, x).expect("R singular in preconditioned apply");
+        self.a.apply(&w, y);
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        let w = self.a.apply_transpose_vec(x);
+        let z = triangular::solve_upper_transpose(self.r, &w)
+            .expect("R singular in preconditioned apply_transpose");
+        y.copy_from_slice(&z);
+    }
+}
+
+/// The perturbed operator `Ã = A + (σ/√m) G` from Algorithm 1 line 11,
+/// applied implicitly (G is a dense Gaussian held separately so the original
+/// A — possibly sparse — is untouched).
+pub struct PerturbedOperator<'a, Op: LinearOperator + ?Sized> {
+    a: &'a Op,
+    g: &'a DenseMatrix,
+    scale: f64,
+}
+
+impl<'a, Op: LinearOperator + ?Sized> PerturbedOperator<'a, Op> {
+    pub fn new(a: &'a Op, g: &'a DenseMatrix, sigma: f64) -> Self {
+        debug_assert_eq!(a.shape(), g.shape());
+        let m = a.shape().0;
+        Self { a, g, scale: sigma / (m as f64).sqrt() }
+    }
+}
+
+impl<Op: LinearOperator + ?Sized> LinearOperator for PerturbedOperator<'_, Op> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply(x, y);
+        let gy = self.g.matvec(x);
+        for (yi, gi) in y.iter_mut().zip(gy.iter()) {
+            *yi += self.scale * gi;
+        }
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply_transpose(x, y);
+        let gy = self.g.matvec_t(x);
+        for (yi, gi) in y.iter_mut().zip(gy.iter()) {
+            *yi += self.scale * gi;
+        }
+    }
+}
+
+/// Scaled identity-augmented operator for damped least squares
+/// `min ‖Ax−b‖² + λ²‖x‖²` — exposed for completeness/testing of LSQR's
+/// damping path.
+pub struct ScaledOperator<'a, Op: LinearOperator + ?Sized> {
+    a: &'a Op,
+    alpha: f64,
+}
+
+impl<'a, Op: LinearOperator + ?Sized> ScaledOperator<'a, Op> {
+    pub fn new(a: &'a Op, alpha: f64) -> Self {
+        Self { a, alpha }
+    }
+}
+
+impl<Op: LinearOperator + ?Sized> LinearOperator for ScaledOperator<'_, Op> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply(x, y);
+        for v in y.iter_mut() {
+            *v *= self.alpha;
+        }
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply_transpose(x, y);
+        for v in y.iter_mut() {
+            *v *= self.alpha;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::qr;
+    use crate::linalg::sparse::CooBuilder;
+    use crate::rng::{GaussianSource, RngCore, Xoshiro256pp};
+
+    #[test]
+    fn dense_operator_matches_methods() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(51));
+        let a = DenseMatrix::gaussian(13, 7, &mut g);
+        let x = g.gaussian_vec(7);
+        let u = g.gaussian_vec(13);
+        assert_eq!(LinearOperator::shape(&a), (13, 7));
+        assert_eq!(a.apply_vec(&x), a.matvec(&x));
+        assert_eq!(a.apply_transpose_vec(&u), a.matvec_t(&u));
+    }
+
+    #[test]
+    fn csr_operator_matches_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(53));
+        let mut b = CooBuilder::new(20, 9);
+        for _ in 0..60 {
+            b.push(
+                rng.next_bounded(20) as usize,
+                rng.next_bounded(9) as usize,
+                g.next_gaussian(),
+            );
+        }
+        let s = b.build();
+        let d = s.to_dense();
+        let x = g.gaussian_vec(9);
+        let u = g.gaussian_vec(20);
+        let ys = s.apply_vec(&x);
+        let yd = d.apply_vec(&x);
+        for (a, b) in ys.iter().zip(yd.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        let zs = s.apply_transpose_vec(&u);
+        let zd = d.apply_transpose_vec(&u);
+        for (a, b) in zs.iter().zip(zd.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn preconditioned_operator_is_a_rinv() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(54));
+        let a = DenseMatrix::gaussian(30, 8, &mut g);
+        let f = qr(&a).unwrap();
+        let op = PreconditionedOperator::new(&a, &f.r);
+        // Explicit Y = A R^{-1}.
+        let y = crate::linalg::triangular::right_solve_upper(&a, &f.r).unwrap();
+        let x = g.gaussian_vec(8);
+        let u = g.gaussian_vec(30);
+        let y1 = op.apply_vec(&x);
+        let y2 = y.matvec(&x);
+        for (p, q) in y1.iter().zip(y2.iter()) {
+            assert!((p - q).abs() < 1e-10);
+        }
+        let z1 = op.apply_transpose_vec(&u);
+        let z2 = y.matvec_t(&u);
+        for (p, q) in z1.iter().zip(z2.iter()) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn perturbed_operator_matches_explicit_sum() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(55));
+        let a = DenseMatrix::gaussian(16, 5, &mut g);
+        let gm = DenseMatrix::gaussian(16, 5, &mut g);
+        let sigma = 0.3;
+        let op = PerturbedOperator::new(&a, &gm, sigma);
+        let mut explicit = a.clone();
+        explicit.axpy(sigma / 4.0, &gm).unwrap(); // sqrt(16) = 4
+        let x = g.gaussian_vec(5);
+        let u = g.gaussian_vec(16);
+        let y1 = op.apply_vec(&x);
+        let y2 = explicit.matvec(&x);
+        for (p, q) in y1.iter().zip(y2.iter()) {
+            assert!((p - q).abs() < 1e-12);
+        }
+        let z1 = op.apply_transpose_vec(&u);
+        let z2 = explicit.matvec_t(&u);
+        for (p, q) in z1.iter().zip(z2.iter()) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scaled_operator() {
+        let a = DenseMatrix::eye(3);
+        let op = ScaledOperator::new(&a, 2.5);
+        assert_eq!(op.apply_vec(&[1.0, 2.0, 0.0]), vec![2.5, 5.0, 0.0]);
+        assert_eq!(op.apply_transpose_vec(&[1.0, 0.0, 2.0]), vec![2.5, 0.0, 5.0]);
+    }
+}

@@ -1,0 +1,376 @@
+//! Compressed sparse row (CSR) matrices.
+//!
+//! The Figure-3 workload (m up to 2²⁰, n = 1000) is infeasible dense
+//! (≈ 33 GB); the paper uses "sparsified" matrices. CSR is the layout the
+//! LSQR inner loop wants: `A·v` streams rows, `Aᵀ·u` scatters per-row, both
+//! one pass over the nonzeros.
+
+use super::dense::DenseMatrix;
+use super::{LinalgError, Result};
+
+/// Coordinate-format builder; finalize into [`CsrMatrix`].
+#[derive(Debug, Clone, Default)]
+pub struct CooBuilder {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl CooBuilder {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn with_capacity(rows: usize, cols: usize, nnz: usize) -> Self {
+        Self { rows, cols, entries: Vec::with_capacity(nnz) }
+    }
+
+    /// Add `value` at `(i, j)`; duplicates are summed on finalize.
+    pub fn push(&mut self, i: usize, j: usize, value: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        if value != 0.0 {
+            self.entries.push((i as u32, j as u32, value));
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sort, merge duplicates, compress to CSR.
+    pub fn build(mut self) -> CsrMatrix {
+        self.entries
+            .sort_unstable_by_key(|&(i, j, _)| ((i as u64) << 32) | j as u64);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut row_counts = vec![0u64; self.rows];
+        let mut last: Option<(u32, u32)> = None;
+        for &(i, j, v) in &self.entries {
+            if last == Some((i, j)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(j);
+                values.push(v);
+                row_counts[i as usize] += 1;
+                last = Some((i, j));
+            }
+        }
+        let mut indptr = vec![0u64; self.rows + 1];
+        for r in 0..self.rows {
+            indptr[r + 1] = indptr[r] + row_counts[r];
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+/// Compressed sparse row matrix, f64 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Construct from raw CSR arrays, validating the invariants.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 {
+            return Err(LinalgError::InvalidArgument(format!(
+                "indptr len {} != rows+1 {}",
+                indptr.len(),
+                rows + 1
+            )));
+        }
+        if indptr[0] != 0 || *indptr.last().unwrap() as usize != indices.len() {
+            return Err(LinalgError::InvalidArgument("indptr endpoints invalid".into()));
+        }
+        if indices.len() != values.len() {
+            return Err(LinalgError::InvalidArgument("indices/values length mismatch".into()));
+        }
+        for w in indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(LinalgError::InvalidArgument("indptr not monotone".into()));
+            }
+        }
+        if indices.iter().any(|&j| j as usize >= cols) {
+            return Err(LinalgError::InvalidArgument("column index out of range".into()));
+        }
+        Ok(Self { rows, cols, indptr, indices, values })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density = nnz / (rows*cols).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// `(column indices, values)` of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.indptr[i] as usize;
+        let hi = self.indptr[i + 1] as usize;
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "csr matvec: x len {} != cols {}", x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller buffer (no allocation — LSQR hot loop).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            let mut s = 0.0;
+            for k in lo..hi {
+                s += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "csr matvec_t: x len {} != rows {}", x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` into a caller buffer.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            for k in lo..hi {
+                y[self.indices[k] as usize] += self.values[k] * xi;
+            }
+        }
+    }
+
+    /// Dense materialization (tests / small problems only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                d[(i, j as usize)] += v;
+            }
+        }
+        d
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        super::norms::nrm2(&self.values)
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in self.values.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Dense `B = A · X` where `X` is (cols × k) dense — used when sketching
+    /// sparse matrices against dense test inputs.
+    pub fn matmul_dense(&self, x: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.cols != x.rows() {
+            return Err(LinalgError::DimensionMismatch(format!(
+                "csr matmul_dense: ({}x{}) · ({}x{})",
+                self.rows,
+                self.cols,
+                x.rows(),
+                x.cols()
+            )));
+        }
+        let k = x.cols();
+        let mut out = DenseMatrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let orow = out.row_mut(i);
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                let xrow = x.row(j as usize);
+                super::gemm::axpy(v, xrow, orow);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Column 2-norms (for scaling/diagnostics).
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            s[j as usize] += v * v;
+        }
+        for v in s.iter_mut() {
+            *v = v.sqrt();
+        }
+        s
+    }
+
+    pub fn indptr(&self) -> &[u64] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, RngCore, Xoshiro256pp};
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        let mut b = CooBuilder::new(3, 3);
+        b.push(0, 0, 1.0);
+        b.push(0, 2, 2.0);
+        b.push(2, 0, 3.0);
+        b.push(2, 1, 4.0);
+        b.build()
+    }
+
+    #[test]
+    fn build_and_shape() {
+        let a = small();
+        assert_eq!(a.shape(), (3, 3));
+        assert_eq!(a.nnz(), 4);
+        let (idx, vals) = a.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        let (idx1, _) = a.row(1);
+        assert!(idx1.is_empty());
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 1, 1.5);
+        b.push(0, 1, 2.5);
+        b.push(1, 0, 1.0);
+        let a = b.build();
+        assert_eq!(a.to_dense()[(0, 1)], 4.0);
+        assert_eq!(a.to_dense()[(1, 0)], 1.0);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = small();
+        let y = a.matvec(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 0.0, 7.0]);
+        let yt = a.matvec_t(&[1.0, 1.0, 1.0]);
+        assert_eq!(yt, vec![4.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense_random() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let (m, n) = (64, 37);
+        let mut b = CooBuilder::new(m, n);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(12));
+        for _ in 0..400 {
+            let i = rng.next_bounded(m as u64) as usize;
+            let j = rng.next_bounded(n as u64) as usize;
+            b.push(i, j, g.next_gaussian());
+        }
+        let a = b.build();
+        let d = a.to_dense();
+        let x = g.gaussian_vec(n);
+        let u = g.gaussian_vec(m);
+        let y_s = a.matvec(&x);
+        let y_d = d.matvec(&x);
+        for (s, dd) in y_s.iter().zip(y_d.iter()) {
+            assert!((s - dd).abs() < 1e-12);
+        }
+        let z_s = a.matvec_t(&u);
+        let z_d = d.matvec_t(&u);
+        for (s, dd) in z_s.iter().zip(z_d.iter()) {
+            assert!((s - dd).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let a = small();
+        let x = DenseMatrix::from_fn(3, 2, |i, j| (i + j) as f64);
+        let c = a.matmul_dense(&x).unwrap();
+        let c_ref = a.to_dense().matmul(&x).unwrap();
+        assert!(c.fro_distance(&c_ref) < 1e-13);
+    }
+
+    #[test]
+    fn from_raw_validation() {
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).is_ok());
+        // bad indptr length
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // non-monotone
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 1, 0], vec![0], vec![1.0]).is_err());
+        // column out of range
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // len mismatch
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 1], vec![0], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn col_norms_and_scale() {
+        let mut a = small();
+        let n = a.col_norms();
+        assert!((n[0] - (1.0f64 + 9.0).sqrt()).abs() < 1e-14);
+        assert!((n[1] - 4.0).abs() < 1e-14);
+        a.scale(2.0);
+        assert_eq!(a.to_dense()[(2, 1)], 8.0);
+    }
+
+    #[test]
+    fn density() {
+        let a = small();
+        assert!((a.density() - 4.0 / 9.0).abs() < 1e-15);
+    }
+}

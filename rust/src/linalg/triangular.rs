@@ -1,0 +1,255 @@
+//! Triangular solves: forward/back substitution (Algorithm 1 steps 4 & 8)
+//! and the right-multiplication `Y = A R⁻¹` used to precondition LSQR.
+
+use super::dense::DenseMatrix;
+use super::{LinalgError, Result};
+
+/// Relative pivot threshold below which we declare R singular.
+const SINGULAR_RTOL: f64 = 1e-300;
+
+/// Solve `R x = b` with `R` upper triangular (back substitution).
+pub fn solve_upper(r: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = check_square(r)?;
+    if b.len() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "solve_upper: R is {n}x{n}, b has {}",
+            b.len()
+        )));
+    }
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        let row = r.row(i);
+        for j in i + 1..n {
+            s -= row[j] * x[j];
+        }
+        let d = row[i];
+        if d.abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("solve_upper: R[{i},{i}] = {d}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Solve `L x = b` with `L` lower triangular (forward substitution).
+pub fn solve_lower(l: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = check_square(l)?;
+    if b.len() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "solve_lower: L is {n}x{n}, b has {}",
+            b.len()
+        )));
+    }
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = x[i];
+        for j in 0..i {
+            s -= row[j] * x[j];
+        }
+        let d = row[i];
+        if d.abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("solve_lower: L[{i},{i}] = {d}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Solve `Rᵀ x = b` with `R` upper triangular (i.e. a lower-triangular solve
+/// against R's transpose, without forming it).
+pub fn solve_upper_transpose(r: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = check_square(r)?;
+    if b.len() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "solve_upper_transpose: R is {n}x{n}, b has {}",
+            b.len()
+        )));
+    }
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let d = r[(i, i)];
+        if d.abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("solve_upper_transpose: R[{i},{i}] = {d}")));
+        }
+        x[i] /= d;
+        let xi = x[i];
+        // Rᵀ is lower; eliminate column i of Rᵀ = row i of R beyond diag.
+        let row = r.row(i);
+        for j in i + 1..n {
+            x[j] -= row[j] * xi;
+        }
+    }
+    Ok(x)
+}
+
+/// Compute `Y = A R⁻¹` for tall dense `A` (m×n) and upper-triangular `R`
+/// (n×n) — "forward substitution" in the paper's Algorithm 1 step 4
+/// (each *row* of Y solves `Rᵀ yᵢᵀ = aᵢᵀ`).
+///
+/// Row-major A makes this embarrassingly row-parallel and cache-perfect:
+/// each row of A is transformed independently against cache-resident R.
+pub fn right_solve_upper(a: &DenseMatrix, r: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = check_square(r)?;
+    if a.cols() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "right_solve_upper: A is {}x{}, R is {n}x{n}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    for i in 0..n {
+        if r[(i, i)].abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("right_solve_upper: R[{i},{i}] = 0")));
+        }
+    }
+    let mut y = a.clone();
+    right_solve_upper_inplace(&mut y, r);
+    Ok(y)
+}
+
+/// In-place version of [`right_solve_upper`] (A is overwritten with Y).
+pub fn right_solve_upper_inplace(a: &mut DenseMatrix, r: &DenseMatrix) {
+    let n = r.rows();
+    debug_assert_eq!(a.cols(), n);
+    let m = a.rows();
+    // y_row Rᵀ-solve: y[j] = (a[j] - sum_{k<j} y[k] R[k,j]) / R[j,j]
+    // Process column j in increasing order; vectorize over rows in blocks.
+    let inv_diag: Vec<f64> = (0..n).map(|j| 1.0 / r[(j, j)]).collect();
+    for bi in (0..m).step_by(64) {
+        let bend = (bi + 64).min(m);
+        for j in 0..n {
+            // gather R column j above diagonal once
+            for i in bi..bend {
+                let row = a.row_mut(i);
+                let mut s = row[j];
+                for k in 0..j {
+                    s -= row[k] * r[(k, j)];
+                }
+                row[j] = s * inv_diag[j];
+            }
+        }
+    }
+}
+
+fn check_square(m: &DenseMatrix) -> Result<usize> {
+    let (r, c) = m.shape();
+    if r != c {
+        return Err(LinalgError::InvalidArgument(format!("expected square, got {r}x{c}")));
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::qr;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    fn rand_upper(n: usize, seed: u64) -> DenseMatrix {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+        let mut r = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = g.next_gaussian();
+            }
+            // keep diagonal away from zero
+            r[(i, i)] += 3.0 * r[(i, i)].signum();
+            if r[(i, i)] == 0.0 {
+                r[(i, i)] = 3.0;
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn upper_solve_roundtrip() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(21));
+        for n in [1usize, 2, 5, 33, 100] {
+            let r = rand_upper(n, n as u64);
+            let x_true = g.gaussian_vec(n);
+            let b = r.matvec(&x_true);
+            let x = solve_upper(&r, &b).unwrap();
+            for (u, v) in x.iter().zip(x_true.iter()) {
+                assert!((u - v).abs() < 1e-9 * (1.0 + v.abs()), "n={n}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_solve_roundtrip() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(22));
+        for n in [1usize, 3, 17, 64] {
+            let l = rand_upper(n, 100 + n as u64).transpose();
+            let x_true = g.gaussian_vec(n);
+            let b = l.matvec(&x_true);
+            let x = solve_lower(&l, &b).unwrap();
+            for (u, v) in x.iter().zip(x_true.iter()) {
+                assert!((u - v).abs() < 1e-9 * (1.0 + v.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn upper_transpose_solve_matches_explicit() {
+        let n = 20;
+        let r = rand_upper(n, 23);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(24));
+        let b = g.gaussian_vec(n);
+        let x1 = solve_upper_transpose(&r, &b).unwrap();
+        let x2 = solve_lower(&r.transpose(), &b).unwrap();
+        for (u, v) in x1.iter().zip(x2.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn right_solve_matches_per_row() {
+        let (m, n) = (47, 12);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(25));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let r = rand_upper(n, 26);
+        let y = right_solve_upper(&a, &r).unwrap();
+        // Check Y R = A.
+        let yr = y.matmul(&r).unwrap();
+        let rel = yr.fro_distance(&a) / a.fro_norm();
+        assert!(rel < 1e-11, "rel {rel}");
+    }
+
+    #[test]
+    fn right_solve_preconditions_qr() {
+        // Y = A R⁻¹ where R comes from QR(A) must have orthonormal columns.
+        let (m, n) = (120, 15);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(27));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let f = qr(&a).unwrap();
+        let y = right_solve_upper(&a, &f.r).unwrap();
+        let yty = y.transpose().matmul(&y).unwrap();
+        assert!(yty.fro_distance(&DenseMatrix::eye(n)) < 1e-10);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let mut r = DenseMatrix::eye(3);
+        r[(1, 1)] = 0.0;
+        assert!(matches!(solve_upper(&r, &[1.0, 1.0, 1.0]), Err(LinalgError::Singular(_))));
+        assert!(matches!(
+            solve_upper_transpose(&r, &[1.0, 1.0, 1.0]),
+            Err(LinalgError::Singular(_))
+        ));
+        let a = DenseMatrix::zeros(4, 3);
+        assert!(matches!(right_solve_upper(&a, &r), Err(LinalgError::Singular(_))));
+    }
+
+    #[test]
+    fn dimension_checks() {
+        let r = DenseMatrix::eye(3);
+        assert!(solve_upper(&r, &[1.0, 2.0]).is_err());
+        assert!(solve_lower(&r, &[1.0, 2.0]).is_err());
+        let a = DenseMatrix::zeros(5, 4);
+        assert!(right_solve_upper(&a, &r).is_err());
+        let ns = DenseMatrix::zeros(3, 4);
+        assert!(solve_upper(&ns, &[1.0, 2.0, 3.0]).is_err());
+    }
+}

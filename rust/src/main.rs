@@ -1,0 +1,274 @@
+//! `snsolve` — the Sketch 'n Solve CLI: solve problems, run the service,
+//! regenerate the paper's figures, check artifacts.
+
+use std::path::PathBuf;
+
+use snsolve::bench_harness::figures::{
+    run_figure3, run_figure4, run_sketch_ablation, run_sketch_size_ablation, AblationConfig,
+    Figure3Config, Figure4Config,
+};
+use snsolve::cli::{parse, usage, FlagSpec};
+use snsolve::coordinator::tcp::TcpServer;
+use snsolve::coordinator::{Service, ServiceConfig, SolverChoice};
+use snsolve::problems::{generate_dense, generate_sparse, DenseProblemSpec, SparseProblemSpec};
+use snsolve::runtime::Engine;
+use snsolve::sketch::SketchKind;
+use snsolve::solvers::lsqr::{LsqrConfig, LsqrSolver};
+use snsolve::solvers::saa::{SaaConfig, SaaSolver};
+use snsolve::solvers::Solver;
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("solve", "generate a problem and solve it (native solvers)"),
+    ("serve", "start the solve service with the TCP front-end"),
+    ("figure3", "regenerate Figure 3 (runtime sweep)"),
+    ("figure4", "regenerate Figure 4 (error comparison)"),
+    ("ablate", "run the sketching-operator + sketch-size ablations"),
+    ("artifacts", "verify AOT artifacts load and execute via PJRT"),
+];
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "m", takes_value: true, help: "rows (default 20000)" },
+        FlagSpec { name: "n", takes_value: true, help: "cols (default 100)" },
+        FlagSpec { name: "cond", takes_value: true, help: "condition number (default 1e10)" },
+        FlagSpec { name: "beta", takes_value: true, help: "residual norm (default 1e-10)" },
+        FlagSpec { name: "sparse", takes_value: false, help: "use the sparse generator" },
+        FlagSpec { name: "density", takes_value: true, help: "sparse density (default 5e-3)" },
+        FlagSpec { name: "solver", takes_value: true, help: "saa|lsqr|sas (default saa)" },
+        FlagSpec { name: "sketch", takes_value: true, help: "sketch operator (default countsketch)" },
+        FlagSpec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
+        FlagSpec { name: "trials", takes_value: true, help: "figure4 trials (default 10)" },
+        FlagSpec { name: "smoke", takes_value: false, help: "small/fast parameterization" },
+        FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7447)" },
+        FlagSpec { name: "workers", takes_value: true, help: "serve: worker threads (default 2)" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
+        FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
+        FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let args = match parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("figure3") => cmd_figure3(&args),
+        Some("figure4") => cmd_figure4(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            println!("{}", usage("snsolve", SUBCOMMANDS, &specs));
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
+    let m = args.flag_usize("m").unwrap().unwrap_or(20_000);
+    let n = args.flag_usize("n").unwrap().unwrap_or(100);
+    let cond = args.flag_f64("cond").unwrap().unwrap_or(1e10);
+    let beta = args.flag_f64("beta").unwrap().unwrap_or(1e-10);
+    let seed = args.flag_u64("seed").unwrap().unwrap_or(42);
+    let p = if args.flag_bool("sparse") {
+        let density = args.flag_f64("density").unwrap().unwrap_or(5e-3);
+        generate_sparse(&SparseProblemSpec {
+            m,
+            n,
+            density,
+            cond_scale: cond.min(1e6),
+            resid_norm: beta,
+            seed,
+        })
+    } else {
+        generate_dense(&DenseProblemSpec { m, n, cond, resid_norm: beta, seed })
+    };
+    let solver_name = args.flag("solver").unwrap_or("saa");
+    let solver: Box<dyn Solver> = match solver_name {
+        "lsqr" => Box::new(LsqrSolver::new(LsqrConfig {
+            atol: 1e-12,
+            btol: 1e-12,
+            conlim: 0.0,
+            ..Default::default()
+        })),
+        "sas" | "sketch-only" => Box::new(snsolve::solvers::sas::SketchAndSolve::default()),
+        _ => {
+            let sketch = args
+                .flag("sketch")
+                .and_then(SketchKind::parse)
+                .unwrap_or(SketchKind::CountSketch);
+            Box::new(SaaSolver::new(SaaConfig { sketch, ..Default::default() }))
+        }
+    };
+    println!(
+        "problem: {}x{} cond={cond:.1e} beta={beta:.1e} ({})",
+        m,
+        n,
+        if p.a.is_sparse() { "sparse" } else { "dense" }
+    );
+    let t0 = std::time::Instant::now();
+    match solver.solve(&p.a, &p.b) {
+        Ok(sol) => {
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "{}: {:.3}s, {} iters, rel_err={:.3e}, resid={:.3e}, converged={}{}",
+                solver.name(),
+                dt,
+                sol.iterations,
+                p.relative_error(&sol.x),
+                p.residual_norm(&sol.x),
+                sol.converged,
+                if sol.fallback_used { " (fallback)" } else { "" }
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
+    let mut cfg = if let Some(path) = args.flag("config") {
+        match snsolve::config::Config::load(std::path::Path::new(path)) {
+            Ok(c) => c.service_config(),
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        ServiceConfig::default()
+    };
+    if let Some(w) = args.flag_usize("workers").unwrap() {
+        cfg.workers = w.max(1);
+    }
+    let artifacts = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    if artifacts.join("manifest.json").exists() {
+        cfg.worker.artifact_dir = Some(artifacts);
+    } else {
+        eprintln!("note: no artifacts manifest found; native-only service");
+    }
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7447").to_string();
+    let service = Service::start(cfg);
+    let server = match TcpServer::serve(service.clone(), addr.as_str()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!("snsolve service listening on {}", server.addr());
+
+    if args.flag_bool("demo") {
+        // Self-test: register, solve, print metrics, exit.
+        let mut client =
+            snsolve::coordinator::tcp::Client::connect(server.addr()).expect("connect");
+        let mut g = snsolve::rng::GaussianSource::new(
+            snsolve::rng::Xoshiro256pp::seed_from_u64(1),
+        );
+        let a = snsolve::linalg::DenseMatrix::gaussian(512, 16, &mut g);
+        let x_true = g.gaussian_vec(16);
+        let b = a.matvec(&x_true);
+        let id = client.register_dense(&a).expect("register");
+        let sol = client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+        let err = snsolve::linalg::norms::nrm2_diff(&sol.x, &x_true)
+            / snsolve::linalg::norms::nrm2(&x_true);
+        println!("demo solve: rel_err={err:.3e} queue={}µs solve={}µs", sol.queue_us, sol.solve_us);
+        println!("{}", client.metrics().expect("metrics"));
+        server.stop();
+        service.shutdown();
+        return if err < 1e-6 { 0 } else { 1 };
+    }
+
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_figure3(args: &snsolve::cli::Args) -> i32 {
+    let cfg = if args.flag_bool("smoke") { Figure3Config::smoke() } else { Figure3Config::paper() };
+    let t = run_figure3(&cfg);
+    println!("{}", t.render());
+    match t.save("figure3_runtime") {
+        Ok(p) => println!("saved {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+    0
+}
+
+fn cmd_figure4(args: &snsolve::cli::Args) -> i32 {
+    let mut cfg = if args.flag_bool("smoke") { Figure4Config::smoke() } else { Figure4Config::paper() };
+    if let Some(t) = args.flag_usize("trials").unwrap() {
+        cfg.trials = t;
+    }
+    let t = run_figure4(&cfg);
+    println!("{}", t.render());
+    match t.save("figure4_error") {
+        Ok(p) => println!("saved {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+    0
+}
+
+fn cmd_ablate(args: &snsolve::cli::Args) -> i32 {
+    let cfg = if args.flag_bool("smoke") {
+        AblationConfig { m: 2048, n: 64, ..Default::default() }
+    } else {
+        AblationConfig::default()
+    };
+    let t1 = run_sketch_ablation(&cfg);
+    println!("{}", t1.render());
+    let _ = t1.save("sketch_operator_ablation");
+    let t2 = run_sketch_size_ablation(&cfg);
+    println!("{}", t2.render());
+    let _ = t2.save("sketch_size_ablation");
+    0
+}
+
+fn cmd_artifacts(args: &snsolve::cli::Args) -> i32 {
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine load failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "platform: {} | {} artifacts in {}",
+        engine.platform(),
+        engine.manifest().artifacts.len(),
+        dir.display()
+    );
+    let mut failures = 0;
+    let names: Vec<String> =
+        engine.manifest().artifacts.iter().map(|a| a.name.clone()).collect();
+    for name in names {
+        let t0 = std::time::Instant::now();
+        match engine.compile(&name) {
+            Ok(()) => println!("  {name}: compiled in {:.2}s", t0.elapsed().as_secs_f64()),
+            Err(e) => {
+                println!("  {name}: FAILED ({e})");
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        println!("all artifacts compile OK");
+        0
+    } else {
+        eprintln!("{failures} artifact(s) failed");
+        1
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving workload generation: the request traces the coordinator
+//! benchmarks and the e2e example replay.
+//!
+//! Real deployments of a least-squares service see a mix of problem shapes
+//! (the router buckets them), arrival bursts (the batcher coalesces them)
+//! and occasional pathological instances (the SAA fallback absorbs them).
+//! [`WorkloadSpec`] generates such traces deterministically.
+
+use crate::rng::{RngCore, Xoshiro256pp};
+
+/// One request in a synthetic trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    /// Shape-bucket index into [`WorkloadSpec::shapes`].
+    pub shape_idx: usize,
+    /// Problem seed.
+    pub seed: u64,
+}
+
+/// Synthetic request-trace specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Available (m, n) shape buckets with selection weights.
+    pub shapes: Vec<(usize, usize, f64)>,
+    /// Mean arrival rate, requests/second.
+    pub rate_per_sec: f64,
+    /// Total requests.
+    pub count: usize,
+    /// Burstiness: 1.0 = Poisson; >1 fattens gaps and clusters arrivals.
+    pub burstiness: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            shapes: vec![(4096, 64, 0.5), (8192, 128, 0.35), (16384, 256, 0.15)],
+            rate_per_sec: 200.0,
+            count: 200,
+            burstiness: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Generate the deterministic trace.
+    pub fn generate(&self) -> Vec<TraceEntry> {
+        assert!(!self.shapes.is_empty(), "workload needs at least one shape");
+        assert!(self.rate_per_sec > 0.0);
+        let mut rng = Xoshiro256pp::stream(self.seed, 7);
+        let total_w: f64 = self.shapes.iter().map(|s| s.2).sum();
+        let mean_gap_us = 1e6 / self.rate_per_sec;
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(self.count);
+        for i in 0..self.count {
+            // Exponential inter-arrival, optionally burst-modulated.
+            let u = rng.next_f64().max(1e-12);
+            let mut gap = -u.ln() * mean_gap_us;
+            if self.burstiness > 1.0 {
+                // Mixture: with prob 1/b, a long gap of b×mean; else short.
+                let b = self.burstiness;
+                if rng.next_f64() < 1.0 / b {
+                    gap *= b;
+                } else {
+                    gap /= b;
+                }
+            }
+            t += gap as u64;
+            // Weighted shape choice.
+            let mut pick = rng.next_f64() * total_w;
+            let mut shape_idx = 0;
+            for (k, s) in self.shapes.iter().enumerate() {
+                if pick < s.2 {
+                    shape_idx = k;
+                    break;
+                }
+                pick -= s.2;
+                shape_idx = k;
+            }
+            out.push(TraceEntry { arrival_us: t, shape_idx, seed: self.seed ^ (i as u64) << 8 });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_complete() {
+        let spec = WorkloadSpec { count: 500, ..Default::default() };
+        let t = spec.generate();
+        assert_eq!(t.len(), 500);
+        for w in t.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        for e in &t {
+            assert!(e.shape_idx < spec.shapes.len());
+        }
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let spec = WorkloadSpec { rate_per_sec: 1000.0, count: 2000, ..Default::default() };
+        let t = spec.generate();
+        let span_s = t.last().unwrap().arrival_us as f64 / 1e6;
+        let rate = t.len() as f64 / span_s;
+        assert!((rate - 1000.0).abs() / 1000.0 < 0.15, "rate {rate}");
+    }
+
+    #[test]
+    fn shape_mix_follows_weights() {
+        let spec = WorkloadSpec { count: 5000, ..Default::default() };
+        let t = spec.generate();
+        let mut counts = vec![0usize; spec.shapes.len()];
+        for e in &t {
+            counts[e.shape_idx] += 1;
+        }
+        let f0 = counts[0] as f64 / 5000.0;
+        assert!((f0 - 0.5).abs() < 0.05, "bucket0 fraction {f0}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(b.iter()).all(|(x, y)| x.arrival_us == y.arrival_us));
+    }
+}

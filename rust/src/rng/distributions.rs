@@ -1,0 +1,258 @@
+//! Derived distributions: Gaussians, Rademacher signs, permutations,
+//! without-replacement sampling.
+
+use super::RngCore;
+
+/// Stateful standard-normal source using the Marsaglia polar method.
+///
+/// The polar method generates Gaussians in pairs; we cache the spare, which
+/// makes dense Gaussian matrix fills ~2x cheaper than naive Box–Muller with
+/// trig calls.
+#[derive(Debug, Clone)]
+pub struct GaussianSource<R: RngCore> {
+    rng: R,
+    spare: Option<f64>,
+}
+
+impl<R: RngCore> GaussianSource<R> {
+    pub fn new(rng: R) -> Self {
+        Self { rng, spare: None }
+    }
+
+    /// Access the underlying uniform generator (e.g. for signs/indices
+    /// interleaved with Gaussian draws).
+    pub fn rng_mut(&mut self) -> &mut R {
+        // Interleaving uniform draws invalidates the cached spare pairing
+        // guarantee only statistically, not correctness-wise, but drop it to
+        // keep streams reproducible across refactors.
+        self.spare = None;
+        &mut self.rng
+    }
+
+    /// One standard normal deviate.
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            // u, v uniform in (-1, 1)
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let factor = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * factor);
+                return u * factor;
+            }
+        }
+    }
+
+    /// Fill `buf` with i.i.d. standard normals.
+    pub fn fill_gaussian(&mut self, buf: &mut [f64]) {
+        for x in buf.iter_mut() {
+            *x = self.next_gaussian();
+        }
+    }
+
+    /// A fresh vector of `n` i.i.d. standard normals.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill_gaussian(&mut v);
+        v
+    }
+}
+
+/// Fill `buf` with i.i.d. Rademacher (+1/-1) values, 64 signs per `u64`.
+pub fn fill_rademacher<R: RngCore>(rng: &mut R, buf: &mut [f64]) {
+    let mut i = 0;
+    while i < buf.len() {
+        let mut bits = rng.next_u64();
+        let chunk = 64.min(buf.len() - i);
+        for j in 0..chunk {
+            buf[i + j] = if bits & 1 == 1 { 1.0 } else { -1.0 };
+            bits >>= 1;
+        }
+        i += chunk;
+    }
+}
+
+/// i.i.d. Rademacher signs as i8 (+1/-1), for compact sketch storage.
+pub fn rademacher_signs_i8<R: RngCore>(rng: &mut R, n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let mut bits = rng.next_u64();
+        let chunk = 64.min(n - out.len());
+        for _ in 0..chunk {
+            out.push(if bits & 1 == 1 { 1 } else { -1 });
+            bits >>= 1;
+        }
+    }
+    out
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<R: RngCore, T>(rng: &mut R, slice: &mut [T]) {
+    let n = slice.len();
+    if n < 2 {
+        return;
+    }
+    for i in (1..n).rev() {
+        let j = rng.next_bounded((i + 1) as u64) as usize;
+        slice.swap(i, j);
+    }
+}
+
+/// A uniformly random permutation of `0..n`.
+pub fn permutation<R: RngCore>(rng: &mut R, n: usize) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..n as u32).collect();
+    shuffle(rng, &mut p);
+    p
+}
+
+/// Sample `k` distinct indices uniformly from `0..n` (partial Fisher–Yates;
+/// O(n) memory, O(k) swaps). Returned unsorted.
+pub fn sample_without_replacement<R: RngCore>(rng: &mut R, n: usize, k: usize) -> Vec<u32> {
+    assert!(k <= n, "cannot sample {k} distinct from {n}");
+    // For small k relative to n, Floyd's algorithm avoids the O(n) init.
+    if k * 16 < n {
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = rng.next_bounded((j + 1) as u64) as u32;
+            if chosen.insert(t) {
+                out.push(t);
+            } else {
+                chosen.insert(j as u32);
+                out.push(j as u32);
+            }
+        }
+        out
+    } else {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + rng.next_bounded((n - i) as u64) as usize;
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+}
+
+/// Uniform bucket assignments in `[0, buckets)` for CountSketch-style hashing.
+pub fn uniform_buckets<R: RngCore>(rng: &mut R, n: usize, buckets: usize) -> Vec<u32> {
+    assert!(buckets > 0);
+    (0..n).map(|_| rng.next_bounded(buckets as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(12345)
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut g = GaussianSource::new(rng());
+        let n = 200_000;
+        let (mut sum, mut sumsq, mut sum4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = g.next_gaussian();
+            sum += x;
+            sumsq += x * x;
+            sum4 += x * x * x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        let kurt = sum4 / n as f64 / (var * var);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+        assert!((kurt - 3.0).abs() < 0.15, "kurtosis={kurt}");
+    }
+
+    #[test]
+    fn gaussian_deterministic() {
+        let mut a = GaussianSource::new(rng());
+        let mut b = GaussianSource::new(rng());
+        for _ in 0..100 {
+            assert_eq!(a.next_gaussian(), b.next_gaussian());
+        }
+    }
+
+    #[test]
+    fn rademacher_balanced_and_pm1() {
+        let mut r = rng();
+        let mut buf = vec![0.0; 100_000];
+        fill_rademacher(&mut r, &mut buf);
+        let mut plus = 0usize;
+        for &x in &buf {
+            assert!(x == 1.0 || x == -1.0);
+            if x == 1.0 {
+                plus += 1;
+            }
+        }
+        let frac = plus as f64 / buf.len() as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn rademacher_i8_matches_semantics() {
+        let mut r = rng();
+        let signs = rademacher_signs_i8(&mut r, 1000);
+        assert_eq!(signs.len(), 1000);
+        assert!(signs.iter().all(|&s| s == 1 || s == -1));
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = rng();
+        for n in [0usize, 1, 2, 17, 1000] {
+            let p = permutation(&mut r, n);
+            let mut seen = vec![false; n];
+            for &i in &p {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn swr_distinct_and_in_range() {
+        let mut r = rng();
+        for (n, k) in [(100usize, 10usize), (100, 100), (1_000_000, 5), (50, 0)] {
+            let s = sample_without_replacement(&mut r, n, k);
+            assert_eq!(s.len(), k);
+            let mut set = std::collections::HashSet::new();
+            for &i in &s {
+                assert!((i as usize) < n);
+                assert!(set.insert(i));
+            }
+        }
+    }
+
+    #[test]
+    fn buckets_in_range_cover() {
+        let mut r = rng();
+        let b = uniform_buckets(&mut r, 20_000, 64);
+        let mut seen = vec![false; 64];
+        for &x in &b {
+            assert!((x as usize) < 64);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = rng();
+        let mut v: Vec<u32> = (0..500).map(|i| i % 7).collect();
+        let mut sorted_before = v.clone();
+        sorted_before.sort_unstable();
+        shuffle(&mut r, &mut v);
+        v.sort_unstable();
+        assert_eq!(v, sorted_before);
+    }
+}

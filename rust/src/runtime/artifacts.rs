@@ -1,0 +1,220 @@
+//! Artifact manifest model: the Rust-side view of `artifacts/manifest.json`
+//! written by `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+use super::json::{self, Json};
+use super::{Result, RuntimeError};
+
+/// Element type of a tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "s32" | "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "s32",
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-shape artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub entry: String,
+    pub file: String,
+    pub m: usize,
+    pub n: usize,
+    pub s: usize,
+    pub iters: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::Manifest(format!("reading {}: {e}", path.display()))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text)
+            .map_err(|e| RuntimeError::Manifest(format!("manifest.json: {e}")))?;
+        let version = root.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(RuntimeError::Manifest(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::Manifest("missing artifacts[]".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find by exact name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find by (entry, m, n).
+    pub fn find_shape(&self, entry: &str, m: usize, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.entry == entry && a.m == m && a.n == n)
+    }
+
+    /// All distinct (m, n) buckets.
+    pub fn buckets(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> =
+            self.artifacts.iter().map(|a| (a.m, a.n)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
+    let get_str = |k: &str| -> Result<String> {
+        a.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| RuntimeError::Manifest(format!("artifact missing {k}")))
+    };
+    let get_num = |k: &str| -> Result<usize> {
+        a.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| RuntimeError::Manifest(format!("artifact missing {k}")))
+    };
+    let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+        let arr = a
+            .get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::Manifest(format!("artifact missing {k}[]")))?;
+        arr.iter()
+            .map(|t| {
+                let name = t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                let dtype = t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .and_then(DType::parse)
+                    .ok_or_else(|| RuntimeError::Manifest("bad dtype".into()))?;
+                let shape = t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| RuntimeError::Manifest("bad shape".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| RuntimeError::Manifest("bad dim".into())))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(TensorSpec { name, dtype, shape })
+            })
+            .collect()
+    };
+    Ok(ArtifactSpec {
+        name: get_str("name")?,
+        entry: get_str("entry")?,
+        file: get_str("file")?,
+        m: get_num("m")?,
+        n: get_num("n")?,
+        s: get_num("s")?,
+        iters: get_num("iters").unwrap_or(0),
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "saa_solve_64x8", "entry": "saa_solve",
+         "file": "saa_solve_64x8.hlo.txt",
+         "m": 64, "n": 8, "s": 32, "iters": 8,
+         "inputs": [
+           {"name": "a", "dtype": "f32", "shape": [64, 8]},
+           {"name": "b", "dtype": "f32", "shape": [64]},
+           {"name": "buckets", "dtype": "s32", "shape": [64]},
+           {"name": "signs", "dtype": "f32", "shape": [64]}],
+         "outputs": [
+           {"name": "x", "dtype": "f32", "shape": [8]},
+           {"name": "history", "dtype": "f32", "shape": [8]}],
+         "sha256": "x"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("saa_solve_64x8").unwrap();
+        assert_eq!(a.m, 64);
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[2].dtype, DType::I32);
+        assert_eq!(a.outputs[0].shape, vec![8]);
+        assert_eq!(a.inputs[0].element_count(), 512);
+        assert_eq!(m.find_shape("saa_solve", 64, 8).unwrap().name, a.name);
+        assert!(m.find_shape("saa_solve", 63, 8).is_none());
+        assert_eq!(m.buckets(), vec![(64, 8)]);
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/a/saa_solve_64x8.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 1}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "nonsense").is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`). The engine compiles lazily and caches one
+//! executable per artifact.
+//!
+//! Threading: the `xla` wrapper types hold raw pointers and are `!Send`, so
+//! an [`Engine`] must be created *on the thread that uses it* — exactly how
+//! the coordinator's workers are structured (each worker owns an engine).
+
+pub mod artifacts;
+pub mod json;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use artifacts::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("unknown artifact: {0}")]
+    UnknownArtifact(String),
+    #[error("input mismatch for {artifact}: {message}")]
+    InputMismatch { artifact: String, message: String },
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        Tensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        Tensor::I32 { data, shape }
+    }
+
+    /// f64 convenience (narrowing to f32 — the AOT path is f32).
+    pub fn from_f64(data: &[f64], shape: Vec<usize>) -> Tensor {
+        Tensor::F32 { data: data.iter().map(|&v| v as f32).collect(), shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow f32 data (panics on dtype mismatch — used after spec checks).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to f64 vector.
+    pub fn to_f64(&self) -> Vec<f64> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+            Tensor::I32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape: Vec<usize> = lit
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape }),
+            other => Err(RuntimeError::Xla(format!("unsupported output dtype {other:?}"))),
+        }
+    }
+}
+
+/// A PJRT execution engine bound to the creating thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine for the artifact directory (reads the manifest;
+    /// compiles lazily on first execute of each artifact).
+    pub fn load(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pre-compile an artifact (optional warm-up; execute() compiles lazily).
+    pub fn compile(&self, name: &str) -> Result<()> {
+        self.ensure_compiled(name)
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate inputs against the artifact signature.
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(RuntimeError::InputMismatch {
+                artifact: spec.name.clone(),
+                message: format!("expected {} inputs, got {}", spec.inputs.len(), inputs.len()),
+            });
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            if t.dtype() != s.dtype || t.shape() != s.shape.as_slice() {
+                return Err(RuntimeError::InputMismatch {
+                    artifact: spec.name.clone(),
+                    message: format!(
+                        "input {i} ({}): expected {:?}{:?}, got {:?}{:?}",
+                        s.name,
+                        s.dtype,
+                        s.shape,
+                        t.dtype(),
+                        t.shape()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact by name.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?
+            .clone();
+        self.check_inputs(&spec, inputs)?;
+        self.ensure_compiled(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("just compiled");
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple()?;
+        let tensors: Vec<Tensor> =
+            parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+        if tensors.len() != spec.outputs.len() {
+            return Err(RuntimeError::Xla(format!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                spec.outputs.len(),
+                tensors.len()
+            )));
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_f32() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_roundtrip_i32() {
+        let t = Tensor::i32(vec![1, -2, 3], vec![3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_f64_narrowing() {
+        let t = Tensor::from_f64(&[1.5, 2.5], vec![2]);
+        assert_eq!(t.as_f32(), &[1.5f32, 2.5f32]);
+        assert_eq!(t.to_f64(), vec![1.5, 2.5]);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+}

@@ -1,0 +1,164 @@
+//! Clarkson–Woodruff sketch / CountSketch (§2.3) — the paper's final choice.
+//!
+//! Every column of `S` has exactly one nonzero, `±1`, at a uniformly random
+//! row: `S = Φ·D` with Φ a random bucket selector and D random signs.
+//! Applying it costs **one pass over the nonzeros of A** — `O(nnz(A))`,
+//! no flops wasted, no memory for S beyond the two length-m index/sign
+//! arrays. This is why sparse operators win the paper's runtime ablation.
+//!
+//! `E[SᵀS] = I` holds exactly (each column has unit norm, distinct columns
+//! are orthogonal in expectation), so no normalization factor is needed.
+
+use super::SketchOperator;
+use crate::linalg::{CsrMatrix, DenseMatrix};
+use crate::rng::distributions::{rademacher_signs_i8, uniform_buckets};
+use crate::rng::Xoshiro256pp;
+
+#[derive(Debug, Clone)]
+pub struct CountSketch {
+    s: usize,
+    m: usize,
+    /// bucket[i] ∈ [0, s): target row of input row i.
+    bucket: Vec<u32>,
+    /// sign[i] ∈ {+1, -1}.
+    sign: Vec<i8>,
+}
+
+impl CountSketch {
+    pub fn new(s: usize, m: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::stream(seed ^ 0xC0DE_5EED, 0);
+        let bucket = uniform_buckets(&mut rng, m, s);
+        let sign = rademacher_signs_i8(&mut rng, m);
+        Self { s, m, bucket, sign }
+    }
+
+    /// The hash arrays — exported so the AOT path can feed the *same*
+    /// sketch to the Pallas CountSketch kernel.
+    pub fn hash_arrays(&self) -> (&[u32], &[i8]) {
+        (&self.bucket, &self.sign)
+    }
+}
+
+impl SketchOperator for CountSketch {
+    fn sketch_dim(&self) -> usize {
+        self.s
+    }
+
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m, "countsketch: A has {} rows, expected {}", a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        // One streaming pass: B[bucket[i], :] += sign[i] * A[i, :].
+        for i in 0..self.m {
+            let row = a.row(i);
+            let out = b.row_mut(self.bucket[i] as usize);
+            if self.sign[i] > 0 {
+                crate::linalg::gemm::axpy(1.0, row, out);
+            } else {
+                crate::linalg::gemm::axpy(-1.0, row, out);
+            }
+        }
+        b
+    }
+
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        for i in 0..self.m {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            let sgn = self.sign[i] as f64;
+            let out = b.row_mut(self.bucket[i] as usize);
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                out[j as usize] += sgn * v;
+            }
+        }
+        b
+    }
+
+    fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut c = vec![0.0; self.s];
+        for i in 0..self.m {
+            c[self.bucket[i] as usize] += self.sign[i] as f64 * v[i];
+        }
+        c
+    }
+
+    fn name(&self) -> &'static str {
+        "countsketch"
+    }
+
+    fn is_sparse(&self) -> bool {
+        true
+    }
+
+    fn flops_estimate(&self, _n: usize, nnz: usize) -> f64 {
+        // one add per nonzero
+        nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn each_column_single_pm1() {
+        let op = CountSketch::new(16, 200, 1);
+        let s = op.materialize();
+        for j in 0..200 {
+            let col = s.col_copy(j);
+            let nnz: Vec<f64> = col.into_iter().filter(|v| *v != 0.0).collect();
+            assert_eq!(nnz.len(), 1, "column {j}");
+            assert!(nnz[0] == 1.0 || nnz[0] == -1.0);
+        }
+    }
+
+    #[test]
+    fn sts_identity_exact_diagonal() {
+        // SᵀS has exactly unit diagonal (each column has one ±1).
+        let op = CountSketch::new(32, 100, 2);
+        let s = op.materialize();
+        let sts = s.transpose().matmul(&s).unwrap();
+        for j in 0..100 {
+            assert_eq!(sts[(j, j)], 1.0);
+        }
+    }
+
+    #[test]
+    fn column_sums_preserved_up_to_sign() {
+        // Sum over sketched rows = Σᵢ signᵢ·A[i,:] — checkable invariant.
+        let (s, m, n) = (8, 50, 4);
+        let op = CountSketch::new(s, m, 3);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(4));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let b = op.apply_dense(&a);
+        let (_, signs) = op.hash_arrays();
+        for j in 0..n {
+            let expected: f64 = (0..m).map(|i| signs[i] as f64 * a[(i, j)]).sum();
+            let got: f64 = (0..s).map(|r| b[(r, j)]).sum();
+            assert!((expected - got).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn vec_path_consistent() {
+        let (s, m) = (8, 64);
+        let op = CountSketch::new(s, m, 5);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(6));
+        let v = g.gaussian_vec(m);
+        let c1 = op.apply_vec(&v);
+        let vm = DenseMatrix::from_vec(m, 1, v).unwrap();
+        let c2 = op.apply_dense(&vm).into_vec();
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Dense Gaussian sketch (§2.2): `S[i,j] ~ N(0, 1/s)` i.i.d.
+//!
+//! The strongest theoretical guarantees of the dense family (exact
+//! rotational invariance, sharpest subspace-embedding constants) at the
+//! highest cost: sketching costs `2·s·m·n` flops and — naively — `s·m`
+//! memory for S itself. We never store S: entries are generated on the fly,
+//! one *input-row block* at a time, from a per-block RNG stream, and applied
+//! by blocked GEMM. Memory is O(s · BLOCK).
+
+use super::SketchOperator;
+use crate::linalg::gemm;
+use crate::linalg::{CsrMatrix, DenseMatrix};
+use crate::rng::{GaussianSource, Xoshiro256pp};
+
+/// Number of input rows (columns of S) generated per block.
+const BLOCK: usize = 256;
+
+#[derive(Debug, Clone)]
+pub struct GaussianSketch {
+    s: usize,
+    m: usize,
+    seed: u64,
+    scale: f64,
+}
+
+impl GaussianSketch {
+    pub fn new(s: usize, m: usize, seed: u64) -> Self {
+        Self { s, m, seed, scale: 1.0 / (s as f64).sqrt() }
+    }
+
+    /// Generate columns `[j0, j0+w)` of S as a dense s×w block.
+    ///
+    /// Stream derivation is per block index, so any block can be generated
+    /// independently (sparse path touches only blocks with nonzeros).
+    fn gen_block(&self, block_idx: usize, w: usize) -> DenseMatrix {
+        let mut g = GaussianSource::new(Xoshiro256pp::stream(self.seed, block_idx as u64));
+        let mut blk = DenseMatrix::zeros(self.s, w);
+        // Fill column-major (column j of the block = column of S) so the
+        // sparse path can slice columns; transpose storage handled by index.
+        for j in 0..w {
+            for i in 0..self.s {
+                blk[(i, j)] = g.next_gaussian() * self.scale;
+            }
+        }
+        blk
+    }
+}
+
+impl SketchOperator for GaussianSketch {
+    fn sketch_dim(&self) -> usize {
+        self.s
+    }
+
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m, "gaussian sketch: A has {} rows, S expects {}", a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        let mut j0 = 0;
+        let mut block_idx = 0;
+        while j0 < self.m {
+            let w = BLOCK.min(self.m - j0);
+            let sblk = self.gen_block(block_idx, w);
+            // B += S[:, j0..j0+w] · A[j0..j0+w, :]
+            let ablk = a.slice_rows(j0, j0 + w);
+            gemm::matmul_into(&sblk, &ablk, &mut b).expect("block gemm dims");
+            j0 += w;
+            block_idx += 1;
+        }
+        b
+    }
+
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        // For each input row i with nonzeros {(j, v)}: B[:, j] += v * S[:, i].
+        // Generate S blocks lazily; rows are visited in order so each block
+        // is generated exactly once.
+        let mut block_idx = usize::MAX;
+        let mut sblk = DenseMatrix::zeros(0, 0);
+        for i in 0..self.m {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            let bi = i / BLOCK;
+            if bi != block_idx {
+                let w = BLOCK.min(self.m - bi * BLOCK);
+                sblk = self.gen_block(bi, w);
+                block_idx = bi;
+            }
+            let jcol = i - bi * BLOCK;
+            for r in 0..self.s {
+                let sri = sblk[(r, jcol)];
+                if sri == 0.0 {
+                    continue;
+                }
+                let brow = b.row_mut(r);
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    brow[j as usize] += sri * v;
+                }
+            }
+        }
+        b
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn is_sparse(&self) -> bool {
+        false
+    }
+
+    fn flops_estimate(&self, n: usize, _nnz: usize) -> f64 {
+        2.0 * self.s as f64 * self.m as f64 * n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_entries_have_right_variance() {
+        let op = GaussianSketch::new(64, 512, 7);
+        let s = op.materialize();
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        let cnt = (s.rows() * s.cols()) as f64;
+        for &v in s.data() {
+            sum += v;
+            sumsq += v * v;
+        }
+        let mean = sum / cnt;
+        let var = sumsq / cnt - mean * mean;
+        let expected_var = 1.0 / 64.0;
+        assert!(mean.abs() < 3.0 * (expected_var / cnt).sqrt() * 3.0, "mean {mean}");
+        assert!((var - expected_var).abs() / expected_var < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn block_boundary_exactness() {
+        // m not a multiple of BLOCK exercises the ragged final block.
+        let (s, m, n) = (8, BLOCK + 37, 3);
+        let op = GaussianSketch::new(s, m, 11);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(12));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let b = op.apply_dense(&a);
+        let b_ref = op.materialize().matmul(&a).unwrap();
+        assert!(b.fro_distance(&b_ref) / b_ref.fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn norm_preservation_single_vector() {
+        // Johnson–Lindenstrauss-style check at generous tolerance.
+        let (s, m) = (256, 2048);
+        let op = GaussianSketch::new(s, m, 5);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(6));
+        let mut x = g.gaussian_vec(m);
+        crate::linalg::norms::normalize(&mut x);
+        let sx = op.apply_vec(&x);
+        let norm: f64 = sx.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 0.2, "norm {norm}");
+    }
+}

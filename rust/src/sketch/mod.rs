@@ -1,0 +1,308 @@
+//! Sketching operators (§2 of the paper).
+//!
+//! A sketching operator is a random `s×m` matrix `S` (s ≪ m) such that
+//! `‖SAx − Sb‖ ≈ ‖Ax − b‖` for all x — a subspace embedding. The paper
+//! surveys two families:
+//!
+//! **Dense** (§2.2): [`gaussian::GaussianSketch`],
+//! [`uniform_dense::UniformDenseSketch`], [`srht::SrhtSketch`] (Hadamard).
+//!
+//! **Sparse** (§2.3): [`countsketch::CountSketch`] (Clarkson–Woodruff — the
+//! paper's final choice), [`sparse_sign::SparseSignSketch`],
+//! [`uniform_sparse::UniformSparseSketch`].
+//!
+//! All operators are deterministic in their seed, never materialize `S` for
+//! large m (dense operators stream generated column blocks), and are
+//! normalized so `E[SᵀS] = I` — an approximate isometry in expectation,
+//! which the property tests verify.
+
+pub mod countsketch;
+pub mod gaussian;
+pub mod sparse_sign;
+pub mod srht;
+pub mod uniform_dense;
+pub mod uniform_sparse;
+
+use crate::linalg::{CsrMatrix, DenseMatrix, Matrix};
+
+pub use countsketch::CountSketch;
+pub use gaussian::GaussianSketch;
+pub use sparse_sign::SparseSignSketch;
+pub use srht::SrhtSketch;
+pub use uniform_dense::UniformDenseSketch;
+pub use uniform_sparse::UniformSparseSketch;
+
+/// A random `s×m` sketching operator.
+pub trait SketchOperator: Send + Sync {
+    /// Output (sketch) dimension `s`.
+    fn sketch_dim(&self) -> usize;
+
+    /// Input dimension `m`.
+    fn input_dim(&self) -> usize;
+
+    /// `B = S·A` for dense `A` (m×n) → (s×n).
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix;
+
+    /// `B = S·A` for sparse `A` (m×n) → dense (s×n).
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix;
+
+    /// `c = S·b` for a vector (length m) → (length s).
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
+        let a = DenseMatrix::from_vec(b.len(), 1, b.to_vec()).expect("vector as column");
+        self.apply_dense(&a).into_vec()
+    }
+
+    /// `B = S·A` dispatching on the matrix representation.
+    fn apply_matrix(&self, a: &Matrix) -> DenseMatrix {
+        match a {
+            Matrix::Dense(d) => self.apply_dense(d),
+            Matrix::Csr(c) => self.apply_csr(c),
+        }
+    }
+
+    /// Human-readable operator name (ablation tables).
+    fn name(&self) -> &'static str;
+
+    /// Whether the operator is sparse (cost ∝ nnz) or dense (cost ∝ s·m).
+    fn is_sparse(&self) -> bool;
+
+    /// Estimated flops to sketch an m×n matrix with `nnz` nonzeros
+    /// (`nnz = m·n` when dense) — drives the ablation's cost model column.
+    fn flops_estimate(&self, n: usize, nnz: usize) -> f64;
+
+    /// Materialize S as a dense s×m matrix. **Test/diagnostic only** —
+    /// O(s·m) memory.
+    fn materialize(&self) -> DenseMatrix {
+        let m = self.input_dim();
+        let eye = DenseMatrix::eye(m);
+        self.apply_dense(&eye)
+    }
+}
+
+/// The operator family — CLI/config selection and ablation sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SketchKind {
+    Gaussian,
+    UniformDense,
+    Srht,
+    CountSketch,
+    SparseSign,
+    UniformSparse,
+}
+
+impl SketchKind {
+    pub const ALL: [SketchKind; 6] = [
+        SketchKind::Gaussian,
+        SketchKind::UniformDense,
+        SketchKind::Srht,
+        SketchKind::CountSketch,
+        SketchKind::SparseSign,
+        SketchKind::UniformSparse,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SketchKind::Gaussian => "gaussian",
+            SketchKind::UniformDense => "uniform-dense",
+            SketchKind::Srht => "srht",
+            SketchKind::CountSketch => "countsketch",
+            SketchKind::SparseSign => "sparse-sign",
+            SketchKind::UniformSparse => "uniform-sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SketchKind> {
+        match s {
+            "gaussian" => Some(SketchKind::Gaussian),
+            "uniform-dense" | "uniform_dense" => Some(SketchKind::UniformDense),
+            "srht" | "hadamard" => Some(SketchKind::Srht),
+            "countsketch" | "clarkson-woodruff" | "cw" => Some(SketchKind::CountSketch),
+            "sparse-sign" | "sparse_sign" => Some(SketchKind::SparseSign),
+            "uniform-sparse" | "uniform_sparse" => Some(SketchKind::UniformSparse),
+            _ => None,
+        }
+    }
+
+    pub fn is_sparse(self) -> bool {
+        matches!(
+            self,
+            SketchKind::CountSketch | SketchKind::SparseSign | SketchKind::UniformSparse
+        )
+    }
+}
+
+/// Build an operator of the given family: `s×m`, seeded.
+pub fn build(kind: SketchKind, s: usize, m: usize, seed: u64) -> Box<dyn SketchOperator> {
+    assert!(s > 0 && m > 0, "sketch dims must be positive (s={s}, m={m})");
+    assert!(s <= m, "sketch dim s={s} must not exceed input dim m={m}");
+    match kind {
+        SketchKind::Gaussian => Box::new(GaussianSketch::new(s, m, seed)),
+        SketchKind::UniformDense => Box::new(UniformDenseSketch::new(s, m, seed)),
+        SketchKind::Srht => Box::new(SrhtSketch::new(s, m, seed)),
+        SketchKind::CountSketch => Box::new(CountSketch::new(s, m, seed)),
+        SketchKind::SparseSign => Box::new(SparseSignSketch::new(s, m, 8, seed)),
+        SketchKind::UniformSparse => Box::new(UniformSparseSketch::new(s, m, 0.05, seed)),
+    }
+}
+
+/// Default sketch size for an n-column problem: the standard s = 2n rule
+/// (cf. Epperly 2024; enough for a (1/√2)-subspace embedding in practice),
+/// clamped to be at least n+16 and at most m.
+pub fn default_sketch_size(m: usize, n: usize) -> usize {
+    let s = (2 * n).max(n + 16);
+    s.min(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CooBuilder;
+    use crate::rng::{GaussianSource, RngCore, Xoshiro256pp};
+
+    fn dense_cases() -> Vec<(SketchKind, f64)> {
+        // (kind, tolerance multiplier for embedding distortion)
+        SketchKind::ALL.iter().map(|&k| (k, 1.0)).collect()
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in SketchKind::ALL {
+            assert_eq!(SketchKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SketchKind::parse("cw"), Some(SketchKind::CountSketch));
+        assert_eq!(SketchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_sketch_size_rules() {
+        assert_eq!(default_sketch_size(10_000, 100), 200);
+        assert_eq!(default_sketch_size(10_000, 10), 26);
+        assert_eq!(default_sketch_size(50, 40), 50); // clamped to m
+    }
+
+    #[test]
+    fn apply_dense_matches_materialized() {
+        // For every operator: S·A computed by the streaming path equals
+        // the explicit matmul with the materialized S.
+        let (s, m, n) = (24, 96, 7);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(61));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        for (kind, _) in dense_cases() {
+            let op = build(kind, s, m, 777);
+            let b_fast = op.apply_dense(&a);
+            let s_mat = op.materialize();
+            let b_ref = s_mat.matmul(&a).unwrap();
+            let rel = b_fast.fro_distance(&b_ref) / b_ref.fro_norm().max(1e-300);
+            assert!(rel < 1e-12, "{}: rel {rel}", kind.name());
+        }
+    }
+
+    #[test]
+    fn apply_csr_matches_dense_path() {
+        let (s, m, n) = (20, 80, 9);
+        let mut rng = Xoshiro256pp::seed_from_u64(62);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(63));
+        let mut builder = CooBuilder::new(m, n);
+        for _ in 0..300 {
+            builder.push(
+                rng.next_bounded(m as u64) as usize,
+                rng.next_bounded(n as u64) as usize,
+                g.next_gaussian(),
+            );
+        }
+        let sp = builder.build();
+        let dn = sp.to_dense();
+        for (kind, _) in dense_cases() {
+            let op = build(kind, s, m, 991);
+            let b1 = op.apply_csr(&sp);
+            let b2 = op.apply_dense(&dn);
+            let rel = b1.fro_distance(&b2) / b2.fro_norm().max(1e-300);
+            assert!(rel < 1e-12, "{}: rel {rel}", kind.name());
+        }
+    }
+
+    #[test]
+    fn apply_vec_matches_dense_column() {
+        let (s, m) = (16, 64);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(64));
+        let b = g.gaussian_vec(m);
+        for (kind, _) in dense_cases() {
+            let op = build(kind, s, m, 313);
+            let c1 = op.apply_vec(&b);
+            let bm = DenseMatrix::from_vec(m, 1, b.clone()).unwrap();
+            let c2 = op.apply_dense(&bm).into_vec();
+            for (u, v) in c1.iter().zip(c2.iter()) {
+                assert!((u - v).abs() < 1e-12, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (s, m, n) = (12, 48, 5);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(65));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        for (kind, _) in dense_cases() {
+            let b1 = build(kind, s, m, 42).apply_dense(&a);
+            let b2 = build(kind, s, m, 42).apply_dense(&a);
+            let b3 = build(kind, s, m, 43).apply_dense(&a);
+            assert_eq!(b1, b2, "{}", kind.name());
+            assert!(b1.fro_distance(&b3) > 1e-9, "{} not seed-sensitive", kind.name());
+        }
+    }
+
+    #[test]
+    fn expected_isometry() {
+        // E[SᵀS] = I ⇒ E‖Sx‖² = ‖x‖². Average over many seeds.
+        let (s, m) = (32, 128);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(66));
+        let mut x = g.gaussian_vec(m);
+        crate::linalg::norms::normalize(&mut x);
+        for (kind, _) in dense_cases() {
+            let trials = 200;
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let op = build(kind, s, m, 5000 + t);
+                let sx = op.apply_vec(&x);
+                acc += sx.iter().map(|v| v * v).sum::<f64>();
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                (mean - 1.0).abs() < 0.12,
+                "{}: E||Sx||^2 = {mean}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn subspace_embedding_distortion() {
+        // For an orthonormal basis U (m×n) and s = 4n, the Gram matrix of SU
+        // should be close to I: all operators must achieve moderate
+        // distortion (this is the property SAA-SAS relies on).
+        let (m, n) = (512, 8);
+        let s = 4 * n;
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(67));
+        let raw = DenseMatrix::gaussian(m, n, &mut g);
+        let u = crate::linalg::qr::orthonormal_columns(&raw).unwrap();
+        for (kind, tol_mult) in dense_cases() {
+            let op = build(kind, s, m, 2024);
+            let su = op.apply_dense(&u);
+            let gram = su.transpose().matmul(&su).unwrap();
+            let dist = gram.fro_distance(&DenseMatrix::eye(n));
+            // crude: Frobenius distortion scales like n/sqrt(s); allow wide
+            // statistical margin (countsketch is the loosest at this s/n).
+            assert!(
+                dist < 2.5 * tol_mult,
+                "{}: ||U'S'SU - I||_F = {dist}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn build_asserts_dims() {
+        let r = std::panic::catch_unwind(|| build(SketchKind::Gaussian, 10, 5, 0));
+        assert!(r.is_err());
+    }
+}

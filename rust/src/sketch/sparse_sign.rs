@@ -1,0 +1,154 @@
+//! Sparse sign embedding (§2.3): each column of `S` has exactly `k`
+//! nonzeros, `±1/√k`, at distinct random rows (Cohen 2016; the operator
+//! RandBLAS/Epperly recommend for general-purpose sketching).
+//!
+//! CountSketch is the `k = 1` special case; `k ≈ 8` buys much better
+//! embedding constants while keeping the apply cost at `k·nnz(A)`.
+
+use super::SketchOperator;
+use crate::linalg::{CsrMatrix, DenseMatrix};
+use crate::rng::distributions::sample_without_replacement;
+use crate::rng::{RngCore, Xoshiro256pp};
+
+#[derive(Debug, Clone)]
+pub struct SparseSignSketch {
+    s: usize,
+    m: usize,
+    k: usize,
+    /// Flattened (row, signed-weight) pairs: column i of S occupies
+    /// `targets[i*k..(i+1)*k]`.
+    targets: Vec<(u32, f32)>,
+}
+
+impl SparseSignSketch {
+    pub fn new(s: usize, m: usize, k: usize, seed: u64) -> Self {
+        let k = k.max(1).min(s);
+        let w = 1.0 / (k as f64).sqrt();
+        let mut rng = Xoshiro256pp::stream(seed ^ 0x55AA_77EE, 1);
+        let mut targets = Vec::with_capacity(m * k);
+        for _col in 0..m {
+            let rows = sample_without_replacement(&mut rng, s, k);
+            for r in rows {
+                let sign = if rng.next_u64() & 1 == 1 { w } else { -w };
+                targets.push((r, sign as f32));
+            }
+        }
+        Self { s, m, k, targets }
+    }
+
+    #[inline]
+    fn column(&self, i: usize) -> &[(u32, f32)] {
+        &self.targets[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn nnz_per_column(&self) -> usize {
+        self.k
+    }
+}
+
+impl SketchOperator for SparseSignSketch {
+    fn sketch_dim(&self) -> usize {
+        self.s
+    }
+
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        for i in 0..self.m {
+            let row = a.row(i);
+            for &(r, w) in self.column(i) {
+                crate::linalg::gemm::axpy(w as f64, row, b.row_mut(r as usize));
+            }
+        }
+        b
+    }
+
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        for i in 0..self.m {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            for &(r, w) in self.column(i) {
+                let out = b.row_mut(r as usize);
+                let wf = w as f64;
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    out[j as usize] += wf * v;
+                }
+            }
+        }
+        b
+    }
+
+    fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut c = vec![0.0; self.s];
+        for i in 0..self.m {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            for &(r, w) in self.column(i) {
+                c[r as usize] += w as f64 * vi;
+            }
+        }
+        c
+    }
+
+    fn name(&self) -> &'static str {
+        "sparse-sign"
+    }
+
+    fn is_sparse(&self) -> bool {
+        true
+    }
+
+    fn flops_estimate(&self, _n: usize, nnz: usize) -> f64 {
+        (self.k * 2) as f64 * nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn columns_have_k_distinct_targets_unit_norm() {
+        let k = 4;
+        let op = SparseSignSketch::new(32, 100, k, 7);
+        let s = op.materialize();
+        for j in 0..100 {
+            let col = s.col_copy(j);
+            let nnz: Vec<f64> = col.into_iter().filter(|v| *v != 0.0).collect();
+            assert_eq!(nnz.len(), k, "column {j}");
+            let norm2: f64 = nnz.iter().map(|v| v * v).sum();
+            assert!((norm2 - 1.0).abs() < 1e-10, "column {j} norm² {norm2}");
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_s() {
+        let op = SparseSignSketch::new(4, 10, 100, 1);
+        assert_eq!(op.nnz_per_column(), 4);
+    }
+
+    #[test]
+    fn countsketch_is_k1_special_case_structurally() {
+        let op = SparseSignSketch::new(16, 40, 1, 2);
+        let s = op.materialize();
+        for j in 0..40 {
+            let col = s.col_copy(j);
+            let nnz: Vec<f64> = col.into_iter().filter(|v| *v != 0.0).collect();
+            assert_eq!(nnz.len(), 1);
+            assert!((nnz[0].abs() - 1.0).abs() < 1e-12);
+        }
+    }
+}

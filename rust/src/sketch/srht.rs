@@ -1,0 +1,167 @@
+//! Subsampled randomized Hadamard transform (§2.2, "Hadamard sketches").
+//!
+//! `S = √(m̃/s) · P · (H/√m̃) · D` where D flips signs, H is the m̃×m̃
+//! Walsh–Hadamard matrix (m̃ = next power of two ≥ m, inputs zero-padded),
+//! and P samples `s` rows without replacement. Cost `O(m̃·n·log m̃)` via the
+//! FWHT — asymptotically between CountSketch and Gaussian, the classic
+//! "fast dense" operator.
+
+use super::SketchOperator;
+use crate::linalg::hadamard::fwht_columns_inplace;
+use crate::linalg::{next_power_of_two, CsrMatrix, DenseMatrix};
+use crate::rng::distributions::{rademacher_signs_i8, sample_without_replacement};
+use crate::rng::Xoshiro256pp;
+
+#[derive(Debug, Clone)]
+pub struct SrhtSketch {
+    s: usize,
+    m: usize,
+    m_pad: usize,
+    /// Sign flip per input row (length m).
+    sign: Vec<i8>,
+    /// Sampled Hadamard rows (length s, values in [0, m_pad)).
+    rows: Vec<u32>,
+    /// √(1/(m̃)) · √(m̃/s) = 1/√s overall.
+    scale: f64,
+}
+
+impl SrhtSketch {
+    pub fn new(s: usize, m: usize, seed: u64) -> Self {
+        let m_pad = next_power_of_two(m);
+        let mut rng = Xoshiro256pp::stream(seed ^ 0x44AD_1357, 2);
+        let sign = rademacher_signs_i8(&mut rng, m);
+        let rows = sample_without_replacement(&mut rng, m_pad, s.min(m_pad));
+        Self { s, m, m_pad, sign, rows, scale: 1.0 / (s as f64).sqrt() }
+    }
+
+    /// Apply to a dense padded buffer (m_pad × n, row-major), in place;
+    /// returns the sampled s×n result.
+    fn transform_padded(&self, buf: &mut [f64], n: usize) -> DenseMatrix {
+        fwht_columns_inplace(buf, self.m_pad, n).expect("padded rows are a power of two");
+        let mut out = DenseMatrix::zeros(self.s, n);
+        for (r_out, &r_in) in self.rows.iter().enumerate() {
+            let src = &buf[r_in as usize * n..(r_in as usize + 1) * n];
+            let dst = out.row_mut(r_out);
+            for (d, &v) in dst.iter_mut().zip(src.iter()) {
+                *d = v * self.scale;
+            }
+        }
+        out
+    }
+}
+
+impl SketchOperator for SrhtSketch {
+    fn sketch_dim(&self) -> usize {
+        self.s
+    }
+
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut buf = vec![0.0; self.m_pad * n];
+        for i in 0..self.m {
+            let sgn = self.sign[i] as f64;
+            let dst = &mut buf[i * n..(i + 1) * n];
+            for (d, &v) in dst.iter_mut().zip(a.row(i).iter()) {
+                *d = sgn * v;
+            }
+        }
+        self.transform_padded(&mut buf, n)
+    }
+
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut buf = vec![0.0; self.m_pad * n];
+        for i in 0..self.m {
+            let (idx, vals) = a.row(i);
+            let sgn = self.sign[i] as f64;
+            let dst = &mut buf[i * n..(i + 1) * n];
+            for (&j, &v) in idx.iter().zip(vals.iter()) {
+                dst[j as usize] = sgn * v;
+            }
+        }
+        self.transform_padded(&mut buf, n)
+    }
+
+    fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut buf = vec![0.0; self.m_pad];
+        for i in 0..self.m {
+            buf[i] = self.sign[i] as f64 * v[i];
+        }
+        crate::linalg::hadamard::fwht_inplace(&mut buf).expect("power of two");
+        self.rows.iter().map(|&r| buf[r as usize] * self.scale).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "srht"
+    }
+
+    fn is_sparse(&self) -> bool {
+        false
+    }
+
+    fn flops_estimate(&self, n: usize, _nnz: usize) -> f64 {
+        let mp = self.m_pad as f64;
+        mp * n as f64 * mp.log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn non_power_of_two_m_padded_correctly() {
+        // m = 100 pads to 128; materialized S must still satisfy the
+        // streaming == explicit-matmul contract (checked centrally too,
+        // but verify the odd-m case explicitly here).
+        let (s, m, n) = (16, 100, 3);
+        let op = SrhtSketch::new(s, m, 5);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(6));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let b = op.apply_dense(&a);
+        let b_ref = op.materialize().matmul(&a).unwrap();
+        assert!(b.fro_distance(&b_ref) / b_ref.fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn rows_of_s_are_orthogonal_when_m_is_pow2() {
+        // With m = m_pad, S Sᵀ = (m̃/s)·(1/m̃)·P H D D H P = (1/s)·P (HHᵀ) Pᵀ
+        // = (m̃/s)·I on the sampled rows.
+        let (s, m) = (8, 64);
+        let op = SrhtSketch::new(s, m, 7);
+        let smat = op.materialize();
+        let sst = smat.matmul(&smat.transpose()).unwrap();
+        let expect = m as f64 / s as f64 / m as f64 * m as f64; // = m̃/(s·m̃)·m̃
+        for i in 0..s {
+            assert!((sst[(i, i)] - expect).abs() < 1e-10, "diag {}", sst[(i, i)]);
+            for j in 0..i {
+                assert!(sst[(i, j)].abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_preserved_in_expectation() {
+        let (s, m) = (64, 256);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(8));
+        let mut x = g.gaussian_vec(m);
+        crate::linalg::norms::normalize(&mut x);
+        let trials = 100;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let op = SrhtSketch::new(s, m, 1000 + t);
+            let sx = op.apply_vec(&x);
+            acc += sx.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 1.0).abs() < 0.1, "mean energy {mean}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Dense uniform sketch (§2.2): `S[i,j] ~ U(-√(3/s), +√(3/s))` i.i.d.
+//!
+//! Var(U(-a,a)) = a²/3, so a = √(3/s) gives `E[SᵀS] = I`. Cheaper to
+//! generate than Gaussians (one uniform draw, no rejection loop) but with
+//! weaker tail guarantees — exactly the trade-off the paper's §2.2
+//! discussion draws.
+
+use super::SketchOperator;
+use crate::linalg::gemm;
+use crate::linalg::{CsrMatrix, DenseMatrix};
+use crate::rng::{RngCore, Xoshiro256pp};
+
+const BLOCK: usize = 256;
+
+#[derive(Debug, Clone)]
+pub struct UniformDenseSketch {
+    s: usize,
+    m: usize,
+    seed: u64,
+    amp: f64,
+}
+
+impl UniformDenseSketch {
+    pub fn new(s: usize, m: usize, seed: u64) -> Self {
+        Self { s, m, seed, amp: (3.0 / s as f64).sqrt() }
+    }
+
+    fn gen_block(&self, block_idx: usize, w: usize) -> DenseMatrix {
+        let mut rng = Xoshiro256pp::stream(self.seed ^ 0x5D4E_9A11, block_idx as u64);
+        let mut blk = DenseMatrix::zeros(self.s, w);
+        for j in 0..w {
+            for i in 0..self.s {
+                blk[(i, j)] = (2.0 * rng.next_f64() - 1.0) * self.amp;
+            }
+        }
+        blk
+    }
+}
+
+impl SketchOperator for UniformDenseSketch {
+    fn sketch_dim(&self) -> usize {
+        self.s
+    }
+
+    fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let mut b = DenseMatrix::zeros(self.s, a.cols());
+        let mut j0 = 0;
+        let mut block_idx = 0;
+        while j0 < self.m {
+            let w = BLOCK.min(self.m - j0);
+            let sblk = self.gen_block(block_idx, w);
+            let ablk = a.slice_rows(j0, j0 + w);
+            gemm::matmul_into(&sblk, &ablk, &mut b).expect("block gemm dims");
+            j0 += w;
+            block_idx += 1;
+        }
+        b
+    }
+
+    fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut b = DenseMatrix::zeros(self.s, n);
+        let mut block_idx = usize::MAX;
+        let mut sblk = DenseMatrix::zeros(0, 0);
+        for i in 0..self.m {
+            let (idx, vals) = a.row(i);
+            if idx.is_empty() {
+                continue;
+            }
+            let bi = i / BLOCK;
+            if bi != block_idx {
+                let w = BLOCK.min(self.m - bi * BLOCK);
+                sblk = self.gen_block(bi, w);
+                block_idx = bi;
+            }
+            let jcol = i - bi * BLOCK;
+            for r in 0..self.s {
+                let sri = sblk[(r, jcol)];
+                let brow = b.row_mut(r);
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    brow[j as usize] += sri * v;
+                }
+            }
+        }
+        b
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform-dense"
+    }
+
+    fn is_sparse(&self) -> bool {
+        false
+    }
+
+    fn flops_estimate(&self, n: usize, _nnz: usize) -> f64 {
+        2.0 * self.s as f64 * self.m as f64 * n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_bounded_and_unit_column_energy() {
+        let op = UniformDenseSketch::new(50, 300, 3);
+        let s = op.materialize();
+        let amp = (3.0f64 / 50.0).sqrt();
+        for &v in s.data() {
+            assert!(v.abs() <= amp);
+        }
+        // E[column norm²] = s · a²/3 = 1.
+        let mut acc = 0.0;
+        for j in 0..300 {
+            let col = s.col_copy(j);
+            acc += col.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / 300.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean col energy {mean}");
+    }
+
+    #[test]
+    fn ragged_block() {
+        let (s, m, n) = (6, BLOCK * 2 + 5, 2);
+        let op = UniformDenseSketch::new(s, m, 9);
+        let mut g = crate::rng::GaussianSource::new(Xoshiro256pp::seed_from_u64(10));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let b = op.apply_dense(&a);
+        let b_ref = op.materialize().matmul(&a).unwrap();
+        assert!(b.fro_distance(&b_ref) / b_ref.fro_norm() < 1e-12);
+    }
+}

@@ -1,0 +1,70 @@
+//! Direct dense QR solve — the small-problem oracle the randomized solvers
+//! are validated against (`x = R⁻¹Qᵀb` from the full, unsketched QR).
+
+use crate::linalg::{qr, triangular, Matrix};
+
+use super::{check_dims, Result, Solution, Solver};
+
+/// Householder-QR direct least-squares solver. O(mn²) — use at test scale.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DirectQr;
+
+impl Solver for DirectQr {
+    fn solve(&self, a: &Matrix, b: &[f64]) -> Result<Solution> {
+        check_dims(a, b)?;
+        // Sparse inputs are densified: this is an oracle, not a fast path.
+        let ad = a.to_dense();
+        let f = qr::qr_compact(&ad)?;
+        let z = f.q_transpose_vec(b);
+        let x = triangular::solve_upper(&f.r(), &z)?;
+        let ax = ad.matvec(&x);
+        let resid: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+        let resnorm = crate::linalg::norms::nrm2(&resid);
+        let arnorm = crate::linalg::norms::nrm2(&ad.matvec_t(&resid));
+        Ok(Solution {
+            x,
+            iterations: 0,
+            resnorm,
+            arnorm,
+            converged: true,
+            fallback_used: false,
+            residual_history: Vec::new(),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "direct-qr"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{nrm2, nrm2_diff};
+    use crate::linalg::DenseMatrix;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn matches_normal_equations_on_small_problem() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(401));
+        let a = DenseMatrix::gaussian(50, 7, &mut g);
+        let b = g.gaussian_vec(50);
+        let sol = DirectQr.solve(&Matrix::Dense(a.clone()), &b).unwrap();
+        // Normal equations via the same QR machinery on AᵀA is circular;
+        // instead check the optimality condition directly.
+        let ax = a.matvec(&sol.x);
+        let r: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+        let grad = a.matvec_t(&r);
+        assert!(nrm2(&grad) < 1e-10 * nrm2(&r), "grad {}", nrm2(&grad));
+    }
+
+    #[test]
+    fn exact_on_consistent() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(402));
+        let a = DenseMatrix::gaussian(40, 8, &mut g);
+        let x_true = g.gaussian_vec(8);
+        let b = a.matvec(&x_true);
+        let sol = DirectQr.solve(&Matrix::Dense(a), &b).unwrap();
+        assert!(nrm2_diff(&sol.x, &x_true) / nrm2(&x_true) < 1e-11);
+    }
+}

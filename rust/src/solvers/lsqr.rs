@@ -1,0 +1,523 @@
+//! LSQR (Paige & Saunders 1982) — the deterministic baseline (§3.1).
+//!
+//! A faithful port of the SciPy `lsqr` implementation: Golub–Kahan
+//! bidiagonalization with QR via Givens rotations, optional Tikhonov
+//! damping, warm start `x0`, and the standard three stopping tests
+//! (`atol`/`btol` residual tests, `conlim` condition guard). The SAA-SAS
+//! algorithm reuses this exact routine on the preconditioned operator, so
+//! baseline and treatment share every line of iteration code — differences
+//! in the figures are attributable to the sketching, not the solver.
+
+use crate::linalg::norms::nrm2;
+use crate::linalg::LinearOperator;
+use crate::linalg::Matrix;
+
+use super::{check_dims, Result, Solution, Solver};
+
+/// Why LSQR stopped (SciPy `istop` codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// x = x0 is already the exact solution (b in range, zero residual).
+    TrivialSolution = 0,
+    /// Ax − b is small enough relative to atol/btol: consistent system
+    /// solved.
+    ResidualTol = 1,
+    /// ‖Aᵀr‖ small: least-squares optimum reached to atol.
+    LeastSquaresTol = 2,
+    /// Condition estimate exceeded conlim.
+    ConditionLimit = 3,
+    /// Machine-precision version of `ResidualTol`.
+    ResidualMachineEps = 4,
+    /// Machine-precision version of `LeastSquaresTol`.
+    LeastSquaresMachineEps = 5,
+    /// Machine-precision version of `ConditionLimit`.
+    ConditionMachineEps = 6,
+    /// Iteration limit hit before convergence.
+    IterLimit = 7,
+}
+
+impl StopReason {
+    /// LSQR "converged" in Algorithm 1's sense (line 7): any stop that
+    /// certifies the residual/optimality tolerance, at machine precision or
+    /// requested precision.
+    pub fn converged(self) -> bool {
+        matches!(
+            self,
+            StopReason::TrivialSolution
+                | StopReason::ResidualTol
+                | StopReason::LeastSquaresTol
+                | StopReason::ResidualMachineEps
+                | StopReason::LeastSquaresMachineEps
+        )
+    }
+}
+
+/// LSQR tuning parameters (defaults mirror SciPy).
+#[derive(Debug, Clone)]
+pub struct LsqrConfig {
+    /// Relative tolerance on ‖Aᵀr‖.
+    pub atol: f64,
+    /// Relative tolerance on ‖r‖.
+    pub btol: f64,
+    /// Condition-number limit (0 = unlimited).
+    pub conlim: f64,
+    /// Tikhonov damping λ (0 = plain least squares).
+    pub damp: f64,
+    /// Max iterations; `None` → 2n.
+    pub iter_lim: Option<usize>,
+    /// Record ‖r‖ per iteration (Figure 4 needs it).
+    pub track_history: bool,
+}
+
+impl Default for LsqrConfig {
+    fn default() -> Self {
+        Self {
+            atol: 1e-8,
+            btol: 1e-8,
+            conlim: 1e8,
+            damp: 0.0,
+            iter_lim: None,
+            track_history: false,
+        }
+    }
+}
+
+/// Full LSQR diagnostics (superset of [`Solution`]).
+#[derive(Debug, Clone)]
+pub struct LsqrResult {
+    pub x: Vec<f64>,
+    pub istop: StopReason,
+    pub itn: usize,
+    /// ‖r‖ for the undamped problem.
+    pub r1norm: f64,
+    /// ‖[r; damp·x]‖ (= r1norm when damp = 0).
+    pub r2norm: f64,
+    /// Frobenius-ish estimate of ‖A‖.
+    pub anorm: f64,
+    /// Condition estimate of Ā.
+    pub acond: f64,
+    /// ‖Aᵀr‖.
+    pub arnorm: f64,
+    /// ‖x‖.
+    pub xnorm: f64,
+    /// ‖r‖ per iteration if tracked.
+    pub history: Vec<f64>,
+}
+
+/// Solve `min ‖Ax − b‖² + damp²‖x‖²` by LSQR.
+///
+/// `x0` warm-starts the iteration (Algorithm 1 step 6 passes `z₀ = Qᵀc`).
+pub fn lsqr<Op: LinearOperator + ?Sized>(
+    a: &Op,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    cfg: &LsqrConfig,
+) -> LsqrResult {
+    let (m, n) = a.shape();
+    assert_eq!(b.len(), m, "lsqr: b has {} entries, A is {m}x{n}", b.len());
+    let iter_lim = cfg.iter_lim.unwrap_or(2 * n);
+    let eps = f64::EPSILON;
+    let ctol = if cfg.conlim > 0.0 { 1.0 / cfg.conlim } else { 0.0 };
+    let dampsq = cfg.damp * cfg.damp;
+
+    let mut history = Vec::new();
+
+    // --- initialization ---------------------------------------------------
+    let bnorm = nrm2(b);
+    let mut x: Vec<f64>;
+    let mut u = b.to_vec();
+    let mut beta;
+    match x0 {
+        Some(x0v) => {
+            assert_eq!(x0v.len(), n, "lsqr: x0 has {} entries, need {n}", x0v.len());
+            x = x0v.to_vec();
+            let mut ax = vec![0.0; m];
+            a.apply(x0v, &mut ax);
+            for (ui, &axi) in u.iter_mut().zip(ax.iter()) {
+                *ui -= axi;
+            }
+            beta = nrm2(&u);
+        }
+        None => {
+            x = vec![0.0; n];
+            beta = bnorm;
+        }
+    }
+
+    let mut v = vec![0.0; n];
+    let mut alpha;
+    if beta > 0.0 {
+        let inv = 1.0 / beta;
+        for ui in u.iter_mut() {
+            *ui *= inv;
+        }
+        a.apply_transpose(&u, &mut v);
+        alpha = nrm2(&v);
+    } else {
+        // u is zero: x0 (or 0) is already exact.
+        v.copy_from_slice(&x);
+        alpha = 0.0;
+    }
+    if alpha > 0.0 {
+        let inv = 1.0 / alpha;
+        for vi in v.iter_mut() {
+            *vi *= inv;
+        }
+    }
+    let mut w = v.clone();
+
+    let mut rhobar = alpha;
+    let mut phibar = beta;
+    let mut rnorm = beta;
+    let mut r1norm = rnorm;
+    let mut r2norm = rnorm;
+    let mut anorm = 0.0f64;
+    let mut acond = 0.0f64;
+    let mut ddnorm = 0.0f64;
+    let mut res2 = 0.0f64;
+    let mut xnorm = 0.0f64;
+    let mut xxnorm = 0.0f64;
+    let mut z = 0.0f64;
+    let mut cs2 = -1.0f64;
+    let mut sn2 = 0.0f64;
+    let mut arnorm = alpha * beta;
+
+    if arnorm == 0.0 {
+        return LsqrResult {
+            x,
+            istop: StopReason::TrivialSolution,
+            itn: 0,
+            r1norm,
+            r2norm,
+            anorm,
+            acond,
+            arnorm,
+            xnorm,
+            history,
+        };
+    }
+
+    let mut istop = StopReason::IterLimit;
+    let mut itn = 0usize;
+    let mut scratch_m = vec![0.0; m];
+    let mut scratch_n = vec![0.0; n];
+
+    // --- main loop ---------------------------------------------------------
+    while itn < iter_lim {
+        itn += 1;
+
+        // Bidiagonalization: β u = A v − α u ; α v = Aᵀ u − β v.
+        a.apply(&v, &mut scratch_m);
+        for (ui, &avi) in u.iter_mut().zip(scratch_m.iter()) {
+            *ui = avi - alpha * *ui;
+        }
+        beta = nrm2(&u);
+        if beta > 0.0 {
+            let inv = 1.0 / beta;
+            for ui in u.iter_mut() {
+                *ui *= inv;
+            }
+            anorm = (anorm * anorm + alpha * alpha + beta * beta + dampsq).sqrt();
+            a.apply_transpose(&u, &mut scratch_n);
+            for (vi, &atui) in v.iter_mut().zip(scratch_n.iter()) {
+                *vi = atui - beta * *vi;
+            }
+            alpha = nrm2(&v);
+            if alpha > 0.0 {
+                let inv = 1.0 / alpha;
+                for vi in v.iter_mut() {
+                    *vi *= inv;
+                }
+            }
+        }
+
+        // Eliminate the damping parameter.
+        let (rhobar1, psi) = if cfg.damp > 0.0 {
+            let rhobar1 = (rhobar * rhobar + dampsq).sqrt();
+            let cs1 = rhobar / rhobar1;
+            let sn1 = cfg.damp / rhobar1;
+            let psi = sn1 * phibar;
+            phibar *= cs1;
+            (rhobar1, psi)
+        } else {
+            (rhobar, 0.0)
+        };
+
+        // Givens rotation on the bidiagonal system.
+        let rho = (rhobar1 * rhobar1 + beta * beta).sqrt();
+        let cs = rhobar1 / rho;
+        let sn = beta / rho;
+        let theta = sn * alpha;
+        rhobar = -cs * alpha;
+        let phi = cs * phibar;
+        phibar *= sn;
+        let tau = sn * phi;
+
+        // Update x and w.
+        let t1 = phi / rho;
+        let t2 = -theta / rho;
+        let inv_rho = 1.0 / rho;
+        let mut dknorm2 = 0.0;
+        for i in 0..n {
+            let wi = w[i];
+            let dk = wi * inv_rho;
+            dknorm2 += dk * dk;
+            x[i] += t1 * wi;
+            w[i] = v[i] + t2 * wi;
+        }
+        ddnorm += dknorm2;
+
+        // Norm estimates.
+        let delta = sn2 * rho;
+        let gambar = -cs2 * rho;
+        let rhs = phi - delta * z;
+        let zbar = rhs / gambar;
+        xnorm = (xxnorm + zbar * zbar).sqrt();
+        let gamma = (gambar * gambar + theta * theta).sqrt();
+        cs2 = gambar / gamma;
+        sn2 = theta / gamma;
+        z = rhs / gamma;
+        xxnorm += z * z;
+
+        acond = anorm * ddnorm.sqrt();
+        let res1 = phibar * phibar;
+        res2 += psi * psi;
+        rnorm = (res1 + res2).sqrt();
+        arnorm = alpha * tau.abs();
+
+        // r1norm: residual of the undamped system.
+        let r1sq = rnorm * rnorm - dampsq * xxnorm;
+        r1norm = r1sq.abs().sqrt();
+        if r1sq < 0.0 {
+            r1norm = -r1norm;
+        }
+        r2norm = rnorm;
+
+        if cfg.track_history {
+            history.push(rnorm);
+        }
+
+        // Stopping tests.
+        let test1 = rnorm / bnorm;
+        let test2 = arnorm / (anorm * rnorm + eps);
+        let test3 = 1.0 / (acond + eps);
+        let t1s = test1 / (1.0 + anorm * xnorm / bnorm);
+        let rtol = cfg.btol + cfg.atol * anorm * xnorm / bnorm;
+
+        if itn >= iter_lim {
+            istop = StopReason::IterLimit;
+        }
+        if 1.0 + test3 <= 1.0 {
+            istop = StopReason::ConditionMachineEps;
+        }
+        if 1.0 + test2 <= 1.0 {
+            istop = StopReason::LeastSquaresMachineEps;
+        }
+        if 1.0 + t1s <= 1.0 {
+            istop = StopReason::ResidualMachineEps;
+        }
+        if test3 <= ctol {
+            istop = StopReason::ConditionLimit;
+        }
+        if test2 <= cfg.atol {
+            istop = StopReason::LeastSquaresTol;
+        }
+        if test1 <= rtol {
+            istop = StopReason::ResidualTol;
+        }
+        if istop != StopReason::IterLimit || itn >= iter_lim {
+            break;
+        }
+    }
+
+    LsqrResult {
+        x,
+        istop,
+        itn,
+        r1norm,
+        r2norm,
+        anorm,
+        acond,
+        arnorm,
+        xnorm,
+        history,
+    }
+}
+
+/// The deterministic baseline as a [`Solver`].
+#[derive(Debug, Clone, Default)]
+pub struct LsqrSolver {
+    pub config: LsqrConfig,
+}
+
+impl LsqrSolver {
+    pub fn new(config: LsqrConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl Solver for LsqrSolver {
+    fn solve(&self, a: &Matrix, b: &[f64]) -> Result<Solution> {
+        check_dims(a, b)?;
+        let r = lsqr(a.as_operator(), b, None, &self.config);
+        Ok(Solution {
+            x: r.x,
+            iterations: r.itn,
+            resnorm: r.r1norm.abs(),
+            arnorm: r.arnorm,
+            converged: r.istop.converged(),
+            fallback_used: false,
+            residual_history: r.history,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "lsqr"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::nrm2_diff;
+    use crate::linalg::DenseMatrix;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    fn well_conditioned(m: usize, n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let x_true = g.gaussian_vec(n);
+        let b = a.matvec(&x_true);
+        (a, x_true, b)
+    }
+
+    #[test]
+    fn solves_consistent_system() {
+        let (a, x_true, b) = well_conditioned(60, 12, 71);
+        let r = lsqr(&a, &b, None, &LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() });
+        assert!(r.istop.converged(), "istop {:?}", r.istop);
+        let err = nrm2_diff(&r.x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn solves_inconsistent_least_squares() {
+        let (a, _xt, mut b) = well_conditioned(80, 10, 72);
+        // Add a residual component.
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(73));
+        for bi in b.iter_mut() {
+            *bi += 0.5 * g.next_gaussian();
+        }
+        let r = lsqr(&a, &b, None, &LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() });
+        // Optimality: Aᵀ(Ax−b) ≈ 0.
+        let ax = a.matvec(&r.x);
+        let resid: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+        let grad = a.matvec_t(&resid);
+        let rel = nrm2(&grad) / (nrm2(&resid) * r.anorm);
+        assert!(rel < 1e-8, "optimality {rel}");
+        assert!(matches!(r.istop, StopReason::LeastSquaresTol | StopReason::LeastSquaresMachineEps),
+            "istop {:?}", r.istop);
+    }
+
+    #[test]
+    fn warm_start_accelerates() {
+        let (a, x_true, b) = well_conditioned(100, 20, 74);
+        let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() };
+        let cold = lsqr(&a, &b, None, &cfg);
+        // Start very close to the solution.
+        let mut x0 = x_true.clone();
+        x0[0] += 1e-9;
+        let warm = lsqr(&a, &b, Some(&x0), &cfg);
+        assert!(warm.itn < cold.itn, "warm {} vs cold {}", warm.itn, cold.itn);
+        let err = nrm2_diff(&warm.x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8);
+    }
+
+    #[test]
+    fn exact_warm_start_is_trivial() {
+        let (a, x_true, b) = well_conditioned(40, 8, 75);
+        let r = lsqr(&a, &b, Some(&x_true), &LsqrConfig::default());
+        assert!(r.itn <= 1);
+        assert!(r.istop.converged());
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let (a, _xt, _b) = well_conditioned(30, 6, 76);
+        let b = vec![0.0; 30];
+        let r = lsqr(&a, &b, None, &LsqrConfig::default());
+        assert_eq!(r.istop, StopReason::TrivialSolution);
+        assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn iteration_limit_respected() {
+        let (a, _xt, b) = well_conditioned(200, 50, 77);
+        let cfg = LsqrConfig { iter_lim: Some(3), atol: 1e-16, btol: 1e-16, ..Default::default() };
+        let r = lsqr(&a, &b, None, &cfg);
+        assert_eq!(r.itn, 3);
+        assert_eq!(r.istop, StopReason::IterLimit);
+    }
+
+    #[test]
+    fn damping_shrinks_solution() {
+        let (a, _xt, b) = well_conditioned(60, 10, 78);
+        let plain = lsqr(&a, &b, None, &LsqrConfig::default());
+        let damped = lsqr(&a, &b, None, &LsqrConfig { damp: 10.0, ..Default::default() });
+        assert!(nrm2(&damped.x) < nrm2(&plain.x));
+    }
+
+    #[test]
+    fn history_tracked() {
+        let (a, _xt, b) = well_conditioned(50, 10, 79);
+        let cfg = LsqrConfig { track_history: true, ..Default::default() };
+        let r = lsqr(&a, &b, None, &cfg);
+        assert_eq!(r.history.len(), r.itn);
+        // residuals non-increasing (monotone for LSQR)
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn conlim_triggers_on_illconditioned() {
+        // Build an ill-conditioned A via scaled columns.
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(80));
+        let mut a = DenseMatrix::gaussian(100, 10, &mut g);
+        for j in 0..10 {
+            let s = 10f64.powi(-(j as i32) * 2);
+            for i in 0..100 {
+                a[(i, j)] *= s;
+            }
+        }
+        let b = g.gaussian_vec(100);
+        let cfg = LsqrConfig { conlim: 1e6, atol: 1e-16, btol: 1e-16, ..Default::default() };
+        let r = lsqr(&a, &b, None, &cfg);
+        assert!(
+            matches!(r.istop, StopReason::ConditionLimit | StopReason::ConditionMachineEps),
+            "istop {:?} acond {:.3e}",
+            r.istop,
+            r.acond
+        );
+    }
+
+    #[test]
+    fn solver_trait_wrapper() {
+        let (a, x_true, b) = well_conditioned(50, 8, 81);
+        let s = LsqrSolver::new(LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() });
+        let sol = s.solve(&Matrix::Dense(a), &b).unwrap();
+        assert!(sol.converged);
+        let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8);
+        assert_eq!(s.name(), "lsqr");
+    }
+
+    #[test]
+    fn dimension_errors() {
+        let a = Matrix::Dense(DenseMatrix::zeros(5, 3));
+        let s = LsqrSolver::default();
+        assert!(s.solve(&a, &[0.0; 4]).is_err());
+        let wide = Matrix::Dense(DenseMatrix::zeros(3, 5));
+        assert!(s.solve(&wide, &[0.0; 3]).is_err());
+    }
+}

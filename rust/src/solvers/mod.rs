@@ -1,0 +1,91 @@
+//! Least-squares solvers (§3–§4 of the paper).
+//!
+//! * [`lsqr`] — the deterministic baseline: Paige–Saunders LSQR with
+//!   SciPy-compatible stopping rules.
+//! * [`saa`] — **SAA-SAS**, the paper's Algorithm 1 (sketch-and-apply):
+//!   sketch → HHQR → implicit right-preconditioning → warm-started LSQR →
+//!   back substitution, with the σ-perturbation fallback.
+//! * [`sap`] — SAP-SAS (sketch-and-precondition), the ablation the paper
+//!   found no faster than the baseline.
+//! * [`sas`] — the classical one-shot sketch-and-solve estimate
+//!   `x̂ = R⁻¹Qᵀ(Sb)` (cheapest, lowest accuracy).
+//! * [`direct`] — dense Householder-QR direct solve (small-problem oracle).
+//! * [`perturb`] — the implicit `A + σG/√m` operator for the fallback path.
+
+pub mod direct;
+pub mod lsqr;
+pub mod perturb;
+pub mod saa;
+pub mod sap;
+pub mod sas;
+
+use crate::linalg::Matrix;
+
+pub use lsqr::{lsqr, LsqrConfig, LsqrResult, StopReason};
+pub use saa::SaaSolver;
+pub use sap::SapSolver;
+pub use sas::SketchAndSolve;
+
+/// Errors from the solver layer.
+#[derive(Debug, thiserror::Error)]
+pub enum SolverError {
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+    #[error(transparent)]
+    Linalg(#[from] crate::linalg::LinalgError),
+    #[error("solver failed to converge: {0}")]
+    NoConvergence(String),
+}
+
+pub type Result<T> = std::result::Result<T, SolverError>;
+
+/// A solve outcome with enough diagnostics to drive the figures.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// The approximate solution x̂ (length n).
+    pub x: Vec<f64>,
+    /// Total LSQR (or equivalent) iterations performed.
+    pub iterations: usize,
+    /// Final residual norm ‖Ax̂ − b‖ as tracked by the solver.
+    pub resnorm: f64,
+    /// Final ‖Aᵀr‖ (least-squares optimality measure).
+    pub arnorm: f64,
+    /// Whether the solver's own convergence test passed.
+    pub converged: bool,
+    /// Whether Algorithm 1's perturbation fallback path ran (SAA only).
+    pub fallback_used: bool,
+    /// Per-iteration residual norms, when tracked (drives Figure 4).
+    pub residual_history: Vec<f64>,
+}
+
+impl Solution {
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+}
+
+/// A named least-squares solver over dense-or-sparse inputs — the interface
+/// the coordinator workers and bench harness drive.
+pub trait Solver: Send + Sync {
+    /// Solve `min ‖Ax − b‖₂`.
+    fn solve(&self, a: &Matrix, b: &[f64]) -> Result<Solution>;
+
+    /// Solver name for reports ("lsqr", "saa-sas", ...).
+    fn name(&self) -> &'static str;
+}
+
+pub(crate) fn check_dims(a: &Matrix, b: &[f64]) -> Result<(usize, usize)> {
+    let (m, n) = a.shape();
+    if b.len() != m {
+        return Err(SolverError::Dimension(format!(
+            "A is {m}x{n} but b has length {}",
+            b.len()
+        )));
+    }
+    if m < n {
+        return Err(SolverError::Dimension(format!(
+            "problem must be overdetermined (m >= n), got {m}x{n}"
+        )));
+    }
+    Ok((m, n))
+}

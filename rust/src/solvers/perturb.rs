@@ -1,0 +1,202 @@
+//! The perturbation fallback substrate (Algorithm 1, lines 10–11):
+//! `Ã = A + σ·G/√m`, `σ = 10·‖A‖₂·u` with `u` the unit roundoff.
+//!
+//! For dense A we materialize Ã (one pass, same footprint). For sparse A a
+//! dense m×n Gaussian would dwarf the problem itself (m = 2²⁰, n = 1000 →
+//! 8 GB), so [`StreamingGaussianOperator`] regenerates G block-by-block
+//! from per-block RNG streams on every matvec — O(s·BLOCK) memory,
+//! deterministic in the seed, exact same distribution. DESIGN.md §6
+//! records this substitution.
+
+use crate::linalg::{DenseMatrix, LinearOperator};
+use crate::rng::{GaussianSource, Xoshiro256pp};
+
+/// Unit roundoff for f64.
+pub const UNIT_ROUNDOFF: f64 = f64::EPSILON / 2.0;
+
+/// Algorithm 1 line 11: σ = 10‖A‖₂·u.
+pub fn perturbation_sigma(a_norm2: f64) -> f64 {
+    10.0 * a_norm2 * UNIT_ROUNDOFF
+}
+
+/// An m×n standard-Gaussian matrix that is never stored: entries are
+/// regenerated from seeded row-block streams on each application.
+pub struct StreamingGaussianOperator {
+    m: usize,
+    n: usize,
+    seed: u64,
+    scale: f64,
+}
+
+const BLOCK: usize = 512;
+
+impl StreamingGaussianOperator {
+    /// `scale` multiplies every entry (callers pass σ/√m).
+    pub fn new(m: usize, n: usize, seed: u64, scale: f64) -> Self {
+        Self { m, n, seed, scale }
+    }
+
+    fn block_rows(&self, block_idx: usize) -> DenseMatrix {
+        let r0 = block_idx * BLOCK;
+        let rows = BLOCK.min(self.m - r0);
+        let mut g = GaussianSource::new(Xoshiro256pp::stream(self.seed, block_idx as u64));
+        let mut blk = DenseMatrix::zeros(rows, self.n);
+        g.fill_gaussian(blk.data_mut());
+        blk
+    }
+}
+
+impl LinearOperator for StreamingGaussianOperator {
+    fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.m);
+        let nblocks = self.m.div_ceil(BLOCK);
+        for bi in 0..nblocks {
+            let blk = self.block_rows(bi);
+            let yb = blk.matvec(x);
+            let r0 = bi * BLOCK;
+            for (dst, &v) in y[r0..r0 + yb.len()].iter_mut().zip(yb.iter()) {
+                *dst = self.scale * v;
+            }
+        }
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.m);
+        debug_assert_eq!(y.len(), self.n);
+        y.fill(0.0);
+        let nblocks = self.m.div_ceil(BLOCK);
+        for bi in 0..nblocks {
+            let blk = self.block_rows(bi);
+            let r0 = bi * BLOCK;
+            let yb = blk.matvec_t(&x[r0..r0 + blk.rows()]);
+            for (dst, &v) in y.iter_mut().zip(yb.iter()) {
+                *dst += self.scale * v;
+            }
+        }
+    }
+}
+
+/// `Ã = A + G_stream` as an implicit operator (sparse fallback path).
+pub struct StreamPerturbedOperator<'a, Op: LinearOperator + ?Sized> {
+    a: &'a Op,
+    g: StreamingGaussianOperator,
+}
+
+impl<'a, Op: LinearOperator + ?Sized> StreamPerturbedOperator<'a, Op> {
+    pub fn new(a: &'a Op, seed: u64, sigma: f64) -> Self {
+        let (m, n) = a.shape();
+        let g = StreamingGaussianOperator::new(m, n, seed, sigma / (m as f64).sqrt());
+        Self { a, g }
+    }
+}
+
+impl<Op: LinearOperator + ?Sized> LinearOperator for StreamPerturbedOperator<'_, Op> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply(x, y);
+        let mut gy = vec![0.0; y.len()];
+        self.g.apply(x, &mut gy);
+        for (yi, gi) in y.iter_mut().zip(gy.iter()) {
+            *yi += gi;
+        }
+    }
+
+    fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
+        self.a.apply_transpose(x, y);
+        let mut gy = vec![0.0; y.len()];
+        self.g.apply_transpose(x, &mut gy);
+        for (yi, gi) in y.iter_mut().zip(gy.iter()) {
+            *yi += gi;
+        }
+    }
+}
+
+/// Materialized dense perturbation `Ã = A + (σ/√m)·G` with the *same* G as
+/// the streaming operator (shared seed): used on the dense path and by the
+/// equivalence tests.
+pub fn perturb_dense(a: &DenseMatrix, seed: u64, sigma: f64) -> DenseMatrix {
+    let (m, n) = a.shape();
+    let scale = sigma / (m as f64).sqrt();
+    let mut out = a.clone();
+    let nblocks = m.div_ceil(BLOCK);
+    for bi in 0..nblocks {
+        let r0 = bi * BLOCK;
+        let rows = BLOCK.min(m - r0);
+        let mut g = GaussianSource::new(Xoshiro256pp::stream(seed, bi as u64));
+        for i in 0..rows {
+            let row = out.row_mut(r0 + i);
+            for v in row.iter_mut().take(n) {
+                *v += scale * g.next_gaussian();
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+
+    #[test]
+    fn sigma_formula() {
+        let s = perturbation_sigma(2.0);
+        assert!((s - 20.0 * UNIT_ROUNDOFF).abs() < 1e-30);
+    }
+
+    #[test]
+    fn streaming_matches_materialized() {
+        let (m, n) = (BLOCK + 100, 17);
+        let a = DenseMatrix::zeros(m, n);
+        let sigma = 3.0;
+        let tilde = perturb_dense(&a, 99, sigma);
+        let op = StreamPerturbedOperator::new(&a, 99, sigma);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1));
+        let x = g.gaussian_vec(n);
+        let u = g.gaussian_vec(m);
+        let y1 = op.apply_vec(&x);
+        let y2 = tilde.matvec(&x);
+        for (p, q) in y1.iter().zip(y2.iter()) {
+            assert!((p - q).abs() < 1e-10, "{p} vs {q}");
+        }
+        let z1 = op.apply_transpose_vec(&u);
+        let z2 = tilde.matvec_t(&u);
+        for (p, q) in z1.iter().zip(z2.iter()) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn perturbation_is_small_relative_to_a() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(2));
+        let a = DenseMatrix::gaussian(200, 10, &mut g);
+        let norm_a = crate::linalg::norms::spectral_norm_est(&a, 40, 3);
+        let sigma = perturbation_sigma(norm_a);
+        let tilde = perturb_dense(&a, 4, sigma);
+        let diff = tilde.fro_distance(&a);
+        // ‖ΔA‖_F ≈ σ/√m · √(mn) = σ√n — tiny compared to ‖A‖.
+        assert!(diff < 1e-10 * a.fro_norm(), "diff {diff}");
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn streaming_gaussian_entries_standard() {
+        let op = StreamingGaussianOperator::new(2048, 4, 7, 1.0);
+        // Apply to e_0: extracts column 0 of G.
+        let mut e0 = vec![0.0; 4];
+        e0[0] = 1.0;
+        let col = op.apply_vec(&e0);
+        let mean: f64 = col.iter().sum::<f64>() / col.len() as f64;
+        let var: f64 = col.iter().map(|v| v * v).sum::<f64>() / col.len() as f64 - mean * mean;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.15, "var {var}");
+    }
+}

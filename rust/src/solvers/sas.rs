@@ -1,0 +1,117 @@
+//! Classical one-shot **sketch-and-solve**: solve the sketched problem
+//! `min ‖SA·x − Sb‖` exactly and return its minimizer `x̂ = R⁻¹Qᵀ(Sb)`.
+//!
+//! This is SAA-SAS *without* the LSQR refinement — the estimate Algorithm 1
+//! uses as its warm start (`x̂ = R⁻¹z₀`). Error is O(ε‖r‖) rather than
+//! machine precision; it anchors the accuracy end of the ablation table.
+
+use crate::linalg::{qr, triangular, Matrix};
+use crate::sketch::{self, SketchKind};
+
+use super::saa::sketch_rows;
+use super::{check_dims, Result, Solution, Solver, SolverError};
+
+/// One-shot sketch-and-solve configuration.
+#[derive(Debug, Clone)]
+pub struct SasConfig {
+    pub sketch: SketchKind,
+    pub sketch_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for SasConfig {
+    fn default() -> Self {
+        Self { sketch: SketchKind::CountSketch, sketch_factor: 4.0, seed: 0xD00D_CAFE }
+    }
+}
+
+/// The classical sketch-and-solve estimator.
+#[derive(Debug, Clone, Default)]
+pub struct SketchAndSolve {
+    pub config: SasConfig,
+}
+
+impl SketchAndSolve {
+    pub fn new(config: SasConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl Solver for SketchAndSolve {
+    fn solve(&self, a: &Matrix, b: &[f64]) -> Result<Solution> {
+        let (m, n) = check_dims(a, b)?;
+        let cfg = &self.config;
+        if m <= n + 1 {
+            return Err(SolverError::Dimension(format!(
+                "sketch-and-solve needs m ≫ s > n; got m={m}, n={n}"
+            )));
+        }
+        let s_rows = sketch_rows(cfg.sketch_factor, m, n);
+        let s_op = sketch::build(cfg.sketch, s_rows, m, cfg.seed);
+        let b_sk = s_op.apply_matrix(a);
+        let c = s_op.apply_vec(b);
+        let f = qr::qr_compact(&b_sk)?;
+        let z0 = f.q_transpose_vec(&c);
+        let x = triangular::solve_upper(&f.r(), &z0)?;
+
+        // Diagnostics: true residual of the returned estimate.
+        let ax = a.as_operator().apply_vec(&x);
+        let resnorm = crate::linalg::norms::nrm2(
+            &ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect::<Vec<_>>(),
+        );
+        Ok(Solution {
+            x,
+            iterations: 0,
+            resnorm,
+            arnorm: f64::NAN,
+            converged: true,
+            fallback_used: false,
+            residual_history: Vec::new(),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "sketch-and-solve"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{nrm2, nrm2_diff};
+    use crate::linalg::DenseMatrix;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    #[test]
+    fn one_shot_estimate_is_close_but_not_exact() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(301));
+        let a = DenseMatrix::gaussian(3000, 30, &mut g);
+        let x_true = g.gaussian_vec(30);
+        let mut b = a.matvec(&x_true);
+        for v in b.iter_mut() {
+            *v += 0.01 * g.next_gaussian();
+        }
+        let am = Matrix::Dense(a);
+        let sol = SketchAndSolve::default().solve(&am, &b).unwrap();
+        let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+        // Close (sketch preserves the solution) but far from machine eps.
+        assert!(err < 0.05, "err {err}");
+        // The refined SAA solution must beat one-shot on the same problem.
+        let saa = crate::solvers::saa::SaaSolver::default().solve(&am, &b).unwrap();
+        let err_saa = nrm2_diff(&saa.x, &x_true) / nrm2(&x_true);
+        assert!(err_saa <= err, "saa {err_saa} vs sas {err}");
+    }
+
+    #[test]
+    fn exact_on_consistent_systems() {
+        // b in range(A): sketched solve recovers x exactly (S preserves
+        // the row space of [A b]).
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(302));
+        let a = DenseMatrix::gaussian(500, 10, &mut g);
+        let x_true = g.gaussian_vec(10);
+        let b = a.matvec(&x_true);
+        let sol = SketchAndSolve::default().solve(&Matrix::Dense(a), &b).unwrap();
+        let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-10, "err {err}");
+    }
+}

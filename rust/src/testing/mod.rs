@@ -1,0 +1,158 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Seeded generators + a `forall` runner with counterexample reporting.
+//! Deterministic: every run uses a fixed base seed (override with
+//! `SNSOLVE_PROP_SEED`), and each case derives its seed from the case
+//! index, so failures reproduce exactly.
+
+use crate::rng::{GaussianSource, RngCore, Xoshiro256pp};
+
+/// Per-case RNG handed to generators and properties.
+pub struct PropRng {
+    pub rng: Xoshiro256pp,
+    pub gauss: GaussianSource<Xoshiro256pp>,
+    pub case_seed: u64,
+}
+
+impl PropRng {
+    fn new(case_seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::stream(case_seed, 0),
+            gauss: GaussianSource::new(Xoshiro256pp::stream(case_seed, 1)),
+            case_seed,
+        }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.next_bounded((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_bounded(items.len() as u64) as usize]
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        self.gauss.next_gaussian()
+    }
+
+    /// Vector of standard normals.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        self.gauss.gaussian_vec(n)
+    }
+}
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 50;
+
+fn base_seed() -> u64 {
+    std::env::var("SNSOLVE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_u64)
+}
+
+/// Run `property` over `cases` seeded cases; panics with the failing case
+/// seed on the first failure (re-run that case via SNSOLVE_PROP_SEED).
+pub fn forall_cases<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut PropRng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let case_seed = base ^ ((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = PropRng::new(case_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (seed 0x{case_seed:x}): {msg}\n\
+                 reproduce: SNSOLVE_PROP_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn forall<F>(name: &str, property: F)
+where
+    F: FnMut(&mut PropRng) -> Result<(), String>,
+{
+    forall_cases(name, DEFAULT_CASES, property)
+}
+
+/// Assertion helpers returning Result<(), String> for use in properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert two floats are within a relative-or-absolute tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol}, scaled {})", tol * scale))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x_in_range", |rng| {
+            let x = rng.f64_in(2.0, 3.0);
+            prop_assert!((2.0..3.0).contains(&x), "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn forall_reports_failure() {
+        forall_cases("always_fails", 3, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen_a = Vec::new();
+        forall_cases("collect_a", 5, |rng| {
+            seen_a.push(rng.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        forall_cases("collect_b", 5, |rng| {
+            seen_b.push(rng.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+
+    #[test]
+    fn helpers_behave() {
+        let mut rng = PropRng::new(7);
+        for _ in 0..100 {
+            let u = rng.usize_in(3, 5);
+            assert!((3..=5).contains(&u));
+        }
+        let pick = *rng.choose(&[1, 2, 3]);
+        assert!([1, 2, 3].contains(&pick));
+        assert_eq!(rng.gaussian_vec(4).len(), 4);
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-9).is_err());
+    }
+}

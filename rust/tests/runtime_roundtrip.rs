@@ -1,0 +1,216 @@
+//! The authoritative AOT round-trip test: HLO text written by
+//! `python -m compile.aot` is loaded, compiled and executed through the
+//! PJRT CPU client, and its numerics are checked against the native f64
+//! solvers on the *same* problem with the *same* CountSketch.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests skip with a
+//! message when it is missing so `cargo test` stays green pre-build.
+
+use std::path::PathBuf;
+
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::DenseMatrix;
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+use snsolve::runtime::{Engine, Tensor};
+use snsolve::sketch::{CountSketch, SketchOperator};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var("SNSOLVE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        None
+    }
+}
+
+/// Build a small consistent problem in f32-friendly conditioning.
+fn planted(m: usize, n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let mut x = g.gaussian_vec(n);
+    snsolve::linalg::norms::normalize(&mut x);
+    let b = a.matvec(&x);
+    (a, x, b)
+}
+
+fn saa_inputs(
+    a: &DenseMatrix,
+    b: &[f64],
+    sketch: &CountSketch,
+) -> Vec<Tensor> {
+    let (m, n) = a.shape();
+    let (buckets, signs) = sketch.hash_arrays();
+    vec![
+        Tensor::from_f64(a.data(), vec![m, n]),
+        Tensor::from_f64(b, vec![m]),
+        Tensor::i32(buckets.iter().map(|&v| v as i32).collect(), vec![m]),
+        Tensor::f32(signs.iter().map(|&v| v as f32).collect(), vec![m]),
+    ]
+}
+
+#[test]
+fn manifest_loads_and_buckets_exist() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    assert_eq!(engine.platform(), "cpu");
+    let manifest = engine.manifest();
+    assert!(manifest.artifacts.len() >= 8);
+    assert!(manifest.find_shape("saa_solve", 64, 8).is_some());
+    assert!(manifest.find_shape("lsqr_baseline", 4096, 64).is_some());
+}
+
+#[test]
+fn saa_solve_smoke_artifact_recovers_planted_solution() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let spec = engine.manifest().find("saa_solve_64x8").expect("smoke artifact").clone();
+    let (a, x_true, b) = planted(spec.m, spec.n, 1234);
+    let sketch = CountSketch::new(spec.s, spec.m, 99);
+    let out = engine
+        .execute(&spec.name, &saa_inputs(&a, &b, &sketch))
+        .expect("execute");
+    assert_eq!(out.len(), 2);
+    let x = out[0].to_f64();
+    let hist = out[1].to_f64();
+    assert_eq!(x.len(), spec.n);
+    assert_eq!(hist.len(), spec.iters);
+    let err = nrm2_diff(&x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-4, "pjrt saa err {err}");
+    // history decreasing
+    for w in hist.windows(2) {
+        assert!(w[1] <= w[0] + 1e-6, "history not monotone: {hist:?}");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_saa_with_same_sketch() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let spec = engine.manifest().find("saa_solve_64x8").expect("artifact").clone();
+    let (a, _x_true, mut b) = planted(spec.m, spec.n, 777);
+    // make it inconsistent so the LSQR refinement matters
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(778));
+    for v in b.iter_mut() {
+        *v += 1e-3 * g.next_gaussian();
+    }
+    let sketch = CountSketch::new(spec.s, spec.m, 31);
+
+    // PJRT result.
+    let out = engine.execute(&spec.name, &saa_inputs(&a, &b, &sketch)).expect("execute");
+    let x_pjrt = out[0].to_f64();
+
+    // Native result using the same sketch + same fixed iterations.
+    let b_sk = sketch.apply_dense(&a);
+    let c = sketch.apply_vec(&b);
+    let f = snsolve::linalg::qr::qr_compact(&b_sk).unwrap();
+    let r = f.r();
+    let z0 = f.q_transpose_vec(&c);
+    let y = snsolve::linalg::triangular::right_solve_upper(&a, &r).unwrap();
+    let cfg = snsolve::solvers::lsqr::LsqrConfig {
+        atol: 0.0,
+        btol: 0.0,
+        conlim: 0.0,
+        iter_lim: Some(spec.iters),
+        ..Default::default()
+    };
+    let res = snsolve::solvers::lsqr::lsqr(&y, &b, Some(&z0), &cfg);
+    let x_native = snsolve::linalg::triangular::solve_upper(&r, &res.x).unwrap();
+
+    let rel = nrm2_diff(&x_pjrt, &x_native) / nrm2(&x_native).max(1e-300);
+    // f32 artifact vs f64 native: agreement bounded by f32 rounding through
+    // ~30 iterations; observed ~1e-5.
+    assert!(rel < 5e-3, "pjrt vs native rel diff {rel}");
+}
+
+#[test]
+fn lsqr_baseline_artifact_runs() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let spec = engine.manifest().find("lsqr_baseline_64x8").expect("artifact").clone();
+    let (a, x_true, b) = planted(spec.m, spec.n, 555);
+    let out = engine
+        .execute(
+            &spec.name,
+            &[
+                Tensor::from_f64(a.data(), vec![spec.m, spec.n]),
+                Tensor::from_f64(&b, vec![spec.m]),
+            ],
+        )
+        .expect("execute");
+    let x = out[0].to_f64();
+    let err = nrm2_diff(&x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-3, "baseline err {err}");
+}
+
+#[test]
+fn sketch_only_artifact_matches_native_countsketch() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let spec = engine.manifest().find("sketch_only_64x8").expect("artifact").clone();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(444));
+    let a = DenseMatrix::gaussian(spec.m, spec.n, &mut g);
+    let sketch = CountSketch::new(spec.s, spec.m, 17);
+    let (buckets, signs) = sketch.hash_arrays();
+    let out = engine
+        .execute(
+            &spec.name,
+            &[
+                Tensor::from_f64(a.data(), vec![spec.m, spec.n]),
+                Tensor::i32(buckets.iter().map(|&v| v as i32).collect(), vec![spec.m]),
+                Tensor::f32(signs.iter().map(|&v| v as f32).collect(), vec![spec.m]),
+            ],
+        )
+        .expect("execute");
+    let b_pjrt = out[0].to_f64();
+    let b_native = sketch.apply_dense(&a);
+    let mut max_err = 0.0f64;
+    for (i, &v) in b_pjrt.iter().enumerate() {
+        let (r, c) = (i / spec.n, i % spec.n);
+        max_err = max_err.max((v - b_native[(r, c)]).abs());
+    }
+    assert!(max_err < 1e-4, "sketch mismatch {max_err}");
+}
+
+#[test]
+fn input_validation_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    // Wrong input count.
+    let err = engine.execute("saa_solve_64x8", &[]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+    // Wrong shape.
+    let bad = vec![
+        Tensor::f32(vec![0.0; 64 * 8], vec![8, 64]), // transposed dims
+        Tensor::f32(vec![0.0; 64], vec![64]),
+        Tensor::i32(vec![0; 64], vec![64]),
+        Tensor::f32(vec![1.0; 64], vec![64]),
+    ];
+    assert!(engine.execute("saa_solve_64x8", &bad).is_err());
+    // Unknown artifact.
+    assert!(engine.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn medium_bucket_end_to_end() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).expect("engine");
+    let Some(spec) = engine.manifest().find("saa_solve_4096x64").cloned() else {
+        eprintln!("skipping: 4096x64 bucket not present");
+        return;
+    };
+    let (a, x_true, b) = planted(spec.m, spec.n, 9);
+    let sketch = CountSketch::new(spec.s, spec.m, 5);
+    let t0 = std::time::Instant::now();
+    let out = engine.execute(&spec.name, &saa_inputs(&a, &b, &sketch)).expect("execute");
+    let dt = t0.elapsed();
+    let x = out[0].to_f64();
+    let err = nrm2_diff(&x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-3, "err {err}");
+    eprintln!("saa_solve_4096x64 executed in {dt:?} (err {err:.2e})");
+}

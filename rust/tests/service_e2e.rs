@@ -1,0 +1,225 @@
+//! End-to-end service tests: TCP front-end, batching under load,
+//! backpressure, PJRT-bucket routing when artifacts are present.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use snsolve::coordinator::tcp::{Client, TcpServer};
+use snsolve::coordinator::{
+    Service, ServiceConfig, SolveRequest, SolverChoice,
+};
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::{DenseMatrix, Matrix};
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+
+fn planted(m: usize, n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let x = g.gaussian_vec(n);
+    let b = a.matvec(&x);
+    (a, x, b)
+}
+
+#[test]
+fn tcp_register_solve_metrics_evict() {
+    let svc = Service::start(ServiceConfig { workers: 2, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(300, 10, 42);
+    let mut client = Client::connect(addr).expect("connect");
+    let id = client.register_dense(&a).expect("register");
+    let sol = client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+    assert!(sol.converged);
+    let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-8, "err {err}");
+
+    let metrics = client.metrics().expect("metrics");
+    assert!(metrics.contains("completed=1"), "{metrics}");
+
+    assert!(client.evict(id).expect("evict"));
+    assert!(!client.evict(id).expect("evict twice"));
+    // Solving against the evicted matrix errors cleanly.
+    let e = client.solve(id, &b, SolverChoice::Saa, 1e-10);
+    assert!(e.is_err());
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_multiple_clients_interleaved() {
+    let svc = Service::start(ServiceConfig { workers: 2, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(200, 8, 7);
+    let mut c0 = Client::connect(addr).unwrap();
+    let id = c0.register_dense(&a).unwrap();
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let b = b.clone();
+            let x_true = x_true.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..5 {
+                    let sol = c.solve(id, &b, SolverChoice::Saa, 1e-10).unwrap();
+                    let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+                    assert!(err < 1e-8);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_overloaded() {
+    // One slow worker + tiny queue + zero submit timeout → Overloaded.
+    let svc = Service::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 2,
+        submit_timeout: Duration::from_millis(0),
+        ..Default::default()
+    });
+    let (a, _xt, b) = planted(1500, 100, 9); // slow enough to back up
+    let id = svc.register_matrix(Matrix::Dense(a));
+    let req = || SolveRequest {
+        matrix: id,
+        rhs: b.clone(),
+        solver: SolverChoice::Lsqr,
+        tol: 1e-14,
+        deadline_us: 0,
+    };
+    let mut rejected = 0;
+    let mut handles = Vec::new();
+    for _ in 0..50 {
+        match svc.submit(req()) {
+            Ok(h) => handles.push(h),
+            Err(snsolve::coordinator::ServiceError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(rejected > 0, "expected overload rejections");
+    for h in handles {
+        let _ = h.wait();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn batching_coalesces_same_matrix_bursts() {
+    let svc = Service::start(ServiceConfig {
+        workers: 1,
+        batcher: snsolve::coordinator::batcher::BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+        },
+        ..Default::default()
+    });
+    let (a, _xt, b) = planted(400, 16, 11);
+    let id = svc.register_matrix(Matrix::Dense(a));
+    let handles: Vec<_> = (0..24)
+        .map(|_| {
+            svc.submit(SolveRequest {
+                matrix: id,
+                rhs: b.clone(),
+                solver: SolverChoice::Saa,
+                tol: 1e-10,
+                deadline_us: 0,
+            })
+            .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().unwrap().result.unwrap();
+    }
+    let m = svc.metrics();
+    let batches = snsolve::coordinator::metrics::Metrics::get(&m.batches);
+    assert!(batches < 24, "expected coalescing, got {batches} batches for 24 reqs");
+    assert!(m.mean_batch_size() > 1.0, "mean batch {}", m.mean_batch_size());
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_bucket_routing_when_artifacts_present() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut cfg = ServiceConfig { workers: 1, ..Default::default() };
+    cfg.worker.artifact_dir = Some(dir);
+    let svc = Service::start(cfg);
+    // 64x8 matches the smoke bucket exactly → PJRT route.
+    let (a, x_true, b) = planted(64, 8, 13);
+    let id = svc.register_matrix(Matrix::Dense(a));
+    let resp = svc
+        .solve_blocking(SolveRequest {
+            matrix: id,
+            rhs: b.clone(),
+            solver: SolverChoice::Saa,
+            tol: 1e-2, // loose → PJRT-eligible
+            deadline_us: 0,
+        })
+        .unwrap();
+    let sol = resp.result.unwrap();
+    match &resp.executed_on {
+        snsolve::coordinator::ExecutedOn::Pjrt(name) => {
+            assert_eq!(name, "saa_solve_64x8");
+        }
+        other => panic!("expected PJRT route, got {other:?}"),
+    }
+    let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-3, "err {err}");
+
+    // Tight tolerance diverts to native (f64).
+    let resp2 = svc
+        .solve_blocking(SolveRequest {
+            matrix: id,
+            rhs: b,
+            solver: SolverChoice::Saa,
+            tol: 1e-12,
+            deadline_us: 0,
+        })
+        .unwrap();
+    assert_eq!(resp2.executed_on, snsolve::coordinator::ExecutedOn::Native);
+    svc.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains() {
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let (a, _xt, b) = planted(200, 10, 17);
+    let id = svc.register_matrix(Matrix::Dense(a));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            svc.submit(SolveRequest {
+                matrix: id,
+                rhs: b.clone(),
+                solver: SolverChoice::Saa,
+                tol: 1e-8,
+                deadline_us: 0,
+            })
+            .unwrap()
+        })
+        .collect();
+    let svc2: Arc<Service> = svc.clone();
+    // Shutdown while work may be in flight: all responders must resolve.
+    std::thread::spawn(move || svc2.shutdown());
+    let mut ok = 0;
+    for h in handles {
+        if let Ok(resp) = h.wait() {
+            if resp.result.is_ok() {
+                ok += 1;
+            }
+        }
+    }
+    // Submitted before close: the dispatcher drains them.
+    assert!(ok >= 1, "at least some requests must complete, got {ok}");
+}

@@ -1,0 +1,193 @@
+//! Property-based tests over the solver stack (via the in-crate `testing`
+//! mini-framework — proptest is unavailable offline).
+
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::qr::qr_compact;
+use snsolve::linalg::{triangular, DenseMatrix, Matrix};
+use snsolve::problems::{generate_dense, DenseProblemSpec};
+use snsolve::sketch::{self, SketchKind};
+use snsolve::solvers::direct::DirectQr;
+use snsolve::solvers::lsqr::{lsqr, LsqrConfig};
+use snsolve::solvers::saa::{SaaConfig, SaaSolver};
+use snsolve::solvers::Solver;
+use snsolve::testing::{forall, forall_cases};
+
+#[test]
+fn prop_qr_reconstructs_and_orthonormal() {
+    forall("qr_invariants", |rng| {
+        let n = rng.usize_in(2, 24);
+        let s = n + rng.usize_in(1, 40);
+        let data = rng.gaussian_vec(s * n);
+        let a = DenseMatrix::from_vec(s, n, data).unwrap();
+        let f = qr_compact(&a).map_err(|e| e.to_string())?;
+        let q = f.q();
+        let r = f.r();
+        let qr = q.matmul(&r).unwrap();
+        let rel = qr.fro_distance(&a) / a.fro_norm().max(1e-300);
+        if rel > 1e-11 {
+            return Err(format!("QR != A: rel {rel} (s={s}, n={n})"));
+        }
+        let qtq = q.transpose().matmul(&q).unwrap();
+        let dist = qtq.fro_distance(&DenseMatrix::eye(n));
+        if dist > 1e-11 * n as f64 {
+            return Err(format!("QtQ != I: {dist}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangular_solve_inverts() {
+    forall("triangular_roundtrip", |rng| {
+        let n = rng.usize_in(1, 32);
+        let mut r = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = rng.gaussian();
+            }
+            r[(i, i)] += 2.0 * r[(i, i)].signum();
+            if r[(i, i)] == 0.0 {
+                r[(i, i)] = 2.0;
+            }
+        }
+        let x_true = rng.gaussian_vec(n);
+        let b = r.matvec(&x_true);
+        let x = triangular::solve_upper(&r, &b).map_err(|e| e.to_string())?;
+        let err = nrm2_diff(&x, &x_true) / nrm2(&x_true).max(1e-300);
+        if err > 1e-8 {
+            return Err(format!("solve_upper err {err} (n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lsqr_matches_direct_on_wellconditioned() {
+    forall_cases("lsqr_vs_direct", 20, |rng| {
+        let n = rng.usize_in(2, 16);
+        let m = n + rng.usize_in(8, 120);
+        let a = DenseMatrix::from_vec(m, n, rng.gaussian_vec(m * n)).unwrap();
+        let b = rng.gaussian_vec(m);
+        let am = Matrix::Dense(a);
+        let direct = DirectQr.solve(&am, &b).map_err(|e| e.to_string())?;
+        let cfg = LsqrConfig { atol: 1e-13, btol: 1e-13, conlim: 0.0, ..Default::default() };
+        let res = lsqr(am.as_operator(), &b, None, &cfg);
+        let err = nrm2_diff(&res.x, &direct.x) / nrm2(&direct.x).max(1e-300);
+        if err > 1e-7 {
+            return Err(format!("lsqr vs direct err {err} (m={m}, n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_saa_matches_direct_all_operators() {
+    forall_cases("saa_vs_direct_operators", 18, |rng| {
+        let n = rng.usize_in(4, 20);
+        let m = 8 * n + rng.usize_in(0, 200);
+        let a = DenseMatrix::from_vec(m, n, rng.gaussian_vec(m * n)).unwrap();
+        let b = rng.gaussian_vec(m);
+        let am = Matrix::Dense(a);
+        let kind = *rng.choose(&SketchKind::ALL);
+        let direct = DirectQr.solve(&am, &b).map_err(|e| e.to_string())?;
+        let saa = SaaSolver::new(SaaConfig {
+            sketch: kind,
+            seed: rng.case_seed,
+            ..Default::default()
+        });
+        let sol = saa.solve(&am, &b).map_err(|e| e.to_string())?;
+        let err = nrm2_diff(&sol.x, &direct.x) / nrm2(&direct.x).max(1e-300);
+        if err > 1e-6 {
+            return Err(format!(
+                "saa({}) vs direct err {err} (m={m}, n={n})",
+                kind.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sketch_embedding_preserves_residual_ordering() {
+    // If ‖Ax₁−b‖ ≪ ‖Ax₂−b‖ then the sketched residuals keep the order —
+    // the property sketch-and-solve correctness rests on.
+    forall_cases("sketch_preserves_order", 20, |rng| {
+        let n = rng.usize_in(3, 12);
+        let m = 40 * n;
+        let s = 8 * n;
+        let a = DenseMatrix::from_vec(m, n, rng.gaussian_vec(m * n)).unwrap();
+        let x_good = rng.gaussian_vec(n);
+        let b = a.matvec(&x_good); // residual 0 at x_good
+        let mut x_bad = x_good.clone();
+        for v in x_bad.iter_mut() {
+            *v += rng.gaussian();
+        }
+        let kind = *rng.choose(&SketchKind::ALL);
+        let op = sketch::build(kind, s, m, rng.case_seed);
+        let resid = |x: &[f64]| {
+            let ax = a.matvec(x);
+            let r: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+            op.apply_vec(&r).iter().map(|v| v * v).sum::<f64>().sqrt()
+        };
+        let r_good = resid(&x_good);
+        let r_bad = resid(&x_bad);
+        if r_good > r_bad * 0.5 {
+            return Err(format!(
+                "{}: sketched residual ordering broken: good {r_good} vs bad {r_bad}",
+                kind.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_problems_have_planted_minimizer() {
+    forall_cases("generator_plants_minimizer", 15, |rng| {
+        let n = rng.usize_in(4, 24);
+        let m = 10 * n + rng.usize_in(0, 100);
+        let cond = 10f64.powi(rng.usize_in(0, 8) as i32);
+        let beta = 10f64.powf(-(rng.usize_in(2, 10) as f64));
+        let p = generate_dense(&DenseProblemSpec {
+            m,
+            n,
+            cond,
+            resid_norm: beta,
+            seed: rng.case_seed,
+        });
+        // Perturbing x* in any direction must not reduce the residual.
+        let base = p.residual_norm(&p.x_true);
+        for _ in 0..3 {
+            let mut xp = p.x_true.clone();
+            let dir = rng.gaussian_vec(n);
+            for (v, d) in xp.iter_mut().zip(dir.iter()) {
+                *v += 1e-3 * d;
+            }
+            let perturbed = p.residual_norm(&xp);
+            if perturbed + 1e-12 < base {
+                return Err(format!(
+                    "x* not a minimizer: base {base}, perturbed {perturbed} (cond {cond})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_saa_deterministic_in_seed() {
+    forall_cases("saa_deterministic", 10, |rng| {
+        let n = rng.usize_in(4, 12);
+        let m = 20 * n;
+        let a = DenseMatrix::from_vec(m, n, rng.gaussian_vec(m * n)).unwrap();
+        let b = rng.gaussian_vec(m);
+        let am = Matrix::Dense(a);
+        let cfg = SaaConfig { seed: rng.case_seed, ..Default::default() };
+        let s1 = SaaSolver::new(cfg.clone()).solve(&am, &b).map_err(|e| e.to_string())?;
+        let s2 = SaaSolver::new(cfg).solve(&am, &b).map_err(|e| e.to_string())?;
+        if s1.x != s2.x {
+            return Err("same seed produced different solutions".to_string());
+        }
+        Ok(())
+    });
+}
