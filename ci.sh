@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verify plus lint gates, as run by .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "CI OK"

@@ -2,21 +2,28 @@
 //! blocked GEMM (GFLOP/s), Householder QR, FWHT, CountSketch apply
 //! (GB/s — bandwidth-bound), CSR matvec (the LSQR inner loop), and the
 //! Y = A·R⁻¹ right solve. These drive the §Perf iteration log.
+//!
+//! `--threads 1,2,4` (or `--threads N`; default sweep {1, 2, 4}) also runs
+//! the parallel-scaling sweep: GEMM and SRHT apply at each pool size, with
+//! wall-clock speedup over the 1-thread baseline and the max deviation from
+//! the serial result (must stay ≤ 1e-12).
 
 use snsolve::bench_harness::report::Table;
-use snsolve::bench_harness::{bench, config_from_env};
+use snsolve::bench_harness::{bench, config_from_env, max_abs_dev, parse_threads_arg, threads_in_use};
 use snsolve::linalg::sparse::CooBuilder;
 use snsolve::linalg::{gemm, hadamard, qr, triangular, DenseMatrix};
 use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
-use snsolve::sketch::{CountSketch, SketchOperator};
+use snsolve::sketch::{CountSketch, SketchOperator, SrhtSketch};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
     let cfg = config_from_env();
     let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1));
     let mut table = Table::new(
         "micro — L3 hot paths (achieved throughput)",
-        &["kernel", "shape", "median_s", "throughput", "unit"],
+        &["kernel", "shape", "threads", "median_s", "throughput", "unit"],
     );
+    let threads_now = threads_in_use().to_string();
 
     // GEMM: C = A·B, classic compute-bound kernel.
     for n in [256usize, 512, 1024] {
@@ -27,6 +34,7 @@ fn main() {
         table.row(vec![
             "gemm".into(),
             format!("{n}x{n}x{n}"),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{gflops:.2}"),
             "GFLOP/s".into(),
@@ -43,6 +51,7 @@ fn main() {
         table.row(vec![
             "hhqr".into(),
             format!("{s}x{n}"),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{:.2}", fl / st.median / 1e9),
             "GFLOP/s".into(),
@@ -62,6 +71,7 @@ fn main() {
         table.row(vec![
             "fwht".into(),
             format!("2^{logm}"),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{mops:.2}"),
             "Gop/s".into(),
@@ -77,6 +87,7 @@ fn main() {
         table.row(vec![
             "countsketch".into(),
             format!("{m}x{n}"),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{gbs:.2}"),
             "GB/s".into(),
@@ -101,6 +112,7 @@ fn main() {
         table.row(vec![
             "csr_matvec".into(),
             format!("{m}x{n} nnz={}", a.nnz()),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{gbs:.2}"),
             "GB/s".into(),
@@ -118,6 +130,7 @@ fn main() {
         table.row(vec![
             "right_solve".into(),
             format!("{m}x{n}"),
+            threads_now.clone(),
             format!("{:.6}", st.median),
             format!("{:.2}", fl / st.median / 1e9),
             "GFLOP/s".into(),
@@ -126,4 +139,76 @@ fn main() {
 
     println!("{}", table.render());
     let _ = table.save("micro_linalg");
+
+    // ---- parallel scaling sweep: GEMM + SRHT apply ----------------------
+    let sweep = parse_threads_arg(&argv).unwrap_or_else(|| vec![1, 2, 4]);
+    let sweep_table = run_threads_sweep(&sweep);
+    println!("{}", sweep_table.render());
+    let _ = sweep_table.save("micro_linalg_threads");
+    // Restore the ambient thread configuration.
+    snsolve::parallel::set_threads(0);
+}
+
+/// Time GEMM (m = 4096) and SRHT apply (m = 16384) at each pool size,
+/// reporting speedup over a measured 1-thread baseline and max |dev| from
+/// the serial result.
+fn run_threads_sweep(sweep: &[usize]) -> Table {
+    let mut table = Table::new(
+        "threads sweep — parallel kernels vs 1-thread baseline",
+        &["kernel", "shape", "threads", "median_s", "speedup_vs_1t", "max_abs_dev"],
+    );
+    let cfg = snsolve::bench_harness::BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(17));
+
+    // GEMM at m = 4096 (acceptance: ≥2x at 4 threads).
+    {
+        let (m, k, n) = (4096usize, 256usize, 256usize);
+        let a = DenseMatrix::gaussian(m, k, &mut g);
+        let b = DenseMatrix::gaussian(k, n, &mut g);
+        snsolve::parallel::set_threads(1);
+        let reference = gemm::matmul(&a, &b).unwrap();
+        let base = bench(&cfg, || gemm::matmul(&a, &b).unwrap()).median;
+        for &t in sweep {
+            snsolve::parallel::set_threads(t);
+            let st = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+            let out = gemm::matmul(&a, &b).unwrap();
+            let dev = max_abs_dev(reference.data(), out.data());
+            assert!(dev <= 1e-12, "gemm parallel deviation {dev} at {t} threads");
+            table.row(vec![
+                "gemm".into(),
+                format!("{m}x{k}x{n}"),
+                t.to_string(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", base / st.median),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+
+    // SRHT apply at m = 16384 (acceptance: ≥2x at 4 threads).
+    {
+        let (m, n, s) = (16384usize, 256usize, 1024usize);
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let op = SrhtSketch::new(s, m, 23);
+        snsolve::parallel::set_threads(1);
+        let reference = op.apply_dense(&a);
+        let base = bench(&cfg, || op.apply_dense(&a)).median;
+        for &t in sweep {
+            snsolve::parallel::set_threads(t);
+            let st = bench(&cfg, || op.apply_dense(&a));
+            let out = op.apply_dense(&a);
+            let dev = max_abs_dev(reference.data(), out.data());
+            assert!(dev <= 1e-12, "srht parallel deviation {dev} at {t} threads");
+            table.row(vec![
+                "srht_apply".into(),
+                format!("{m}x{n} s={s}"),
+                t.to_string(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", base / st.median),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+
+    table
 }

@@ -2,25 +2,87 @@
 //! operators: apply time, subspace-embedding distortion, end-to-end SAA
 //! time/error) and the **T-s** sketch-size sweep (s/n ratio).
 //!
+//! `--threads 1,2,4` (default {1, 2, 4}) additionally sweeps the sketch
+//! *apply* kernels over pool sizes, asserting the parallel outputs match
+//! the serial path within 1e-12.
+//!
 //! Output: console tables + target/bench-reports/
-//! {sketch_operator_ablation, sketch_size_ablation}.{csv,json}.
+//! {sketch_operator_ablation, sketch_size_ablation, sketch_apply_threads}.{csv,json}.
 
 use snsolve::bench_harness::figures::{
     run_sketch_ablation, run_sketch_size_ablation, AblationConfig,
 };
+use snsolve::bench_harness::report::Table;
+use snsolve::bench_harness::{bench, max_abs_dev, parse_threads_arg, threads_in_use, BenchConfig};
+use snsolve::linalg::DenseMatrix;
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+use snsolve::sketch::{self, SketchKind, SketchOperator};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
     let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let cfg = if quick {
         AblationConfig { m: 4096, n: 128, ..Default::default() }
     } else {
         AblationConfig::default()
     };
-    eprintln!("ablation workload: {}x{} κ={:.0e} (quick={quick})", cfg.m, cfg.n, cfg.cond);
+    eprintln!(
+        "ablation workload: {}x{} κ={:.0e} (quick={quick}, threads={})",
+        cfg.m,
+        cfg.n,
+        cfg.cond,
+        threads_in_use()
+    );
     let t1 = run_sketch_ablation(&cfg);
     println!("{}", t1.render());
     let _ = t1.save("sketch_operator_ablation");
     let t2 = run_sketch_size_ablation(&cfg);
     println!("{}", t2.render());
     let _ = t2.save("sketch_size_ablation");
+
+    // ---- sketch-apply thread sweep --------------------------------------
+    let sweep = parse_threads_arg(&argv).unwrap_or_else(|| vec![1, 2, 4]);
+    let t3 = run_apply_threads_sweep(&cfg, &sweep);
+    println!("{}", t3.render());
+    let _ = t3.save("sketch_apply_threads");
+    snsolve::parallel::set_threads(0);
+}
+
+/// Time every operator's `apply_dense` at each pool size; speedup is over
+/// a measured 1-thread baseline, and outputs are checked against serial.
+fn run_apply_threads_sweep(cfg: &AblationConfig, sweep: &[usize]) -> Table {
+    let mut table = Table::new(
+        "T-threads — sketch apply time vs pool size",
+        &["operator", "shape", "threads", "apply_s", "speedup_vs_1t", "max_abs_dev"],
+    );
+    let bench_cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(cfg.seed));
+    let a = DenseMatrix::gaussian(cfg.m, cfg.n, &mut g);
+    let s_rows = 4 * cfg.n;
+    for kind in SketchKind::ALL {
+        let op = sketch::build(kind, s_rows, cfg.m, cfg.seed ^ 0xAB);
+        snsolve::parallel::set_threads(1);
+        let reference = op.apply_dense(&a);
+        let base = bench(&bench_cfg, || op.apply_dense(&a)).median;
+        for &t in sweep {
+            snsolve::parallel::set_threads(t);
+            let st = bench(&bench_cfg, || op.apply_dense(&a));
+            let out = op.apply_dense(&a);
+            let dev = max_abs_dev(out.data(), reference.data());
+            assert!(
+                dev <= 1e-12,
+                "{}: parallel deviation {dev} at {t} threads",
+                kind.name()
+            );
+            table.row(vec![
+                kind.name().to_string(),
+                format!("{}x{}", cfg.m, cfg.n),
+                t.to_string(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", base / st.median),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+    table
 }

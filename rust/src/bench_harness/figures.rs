@@ -10,7 +10,7 @@ use crate::bench_harness::report::Table;
 use crate::problems::{
     generate_dense, generate_sparse, paper_error_spec, DenseProblemSpec, SparseProblemSpec,
 };
-use crate::sketch::SketchKind;
+use crate::sketch::{SketchKind, SketchOperator};
 use crate::solvers::lsqr::{LsqrConfig, LsqrSolver};
 use crate::solvers::saa::{SaaConfig, SaaSolver};
 use crate::solvers::sap::SapSolver;
@@ -116,7 +116,7 @@ pub fn run_figure3(cfg: &Figure3Config) -> Table {
             format!("{:.3e}", p.relative_error(&sol_s.x)),
             format!("{:.3e}", p.relative_error(&sol_l.x)),
         ]);
-        log::info!(
+        eprintln!(
             "figure3 m={m}: lsqr {} saa {} speedup {:.2}",
             fmt_secs(s_lsqr.median),
             fmt_secs(s_saa.median),
@@ -232,8 +232,9 @@ pub fn run_sketch_ablation(cfg: &AblationConfig) -> Table {
     use crate::sketch;
     let mut table = Table::new(
         "T-op — sketching operators: dense vs sparse (§2.2–2.3)",
-        &["operator", "class", "apply_s", "distortion", "saa_total_s", "saa_iters", "rel_err", "flops_est"],
+        &["operator", "class", "threads", "apply_s", "distortion", "saa_total_s", "saa_iters", "rel_err", "flops_est"],
     );
+    let threads = crate::bench_harness::threads_in_use().to_string();
     let spec = DenseProblemSpec {
         m: cfg.m,
         n: cfg.n,
@@ -267,6 +268,7 @@ pub fn run_sketch_ablation(cfg: &AblationConfig) -> Table {
         table.row(vec![
             kind.name().to_string(),
             if kind.is_sparse() { "sparse" } else { "dense" }.to_string(),
+            threads.clone(),
             format!("{:.6}", stats.median),
             format!("{:.3}", dist),
             format!("{:.6}", saa_time),

@@ -121,6 +121,48 @@ pub fn config_from_env() -> BenchConfig {
     }
 }
 
+/// The effective kernel thread count — reported in bench tables so every
+/// number is attributable to a pool size.
+pub fn threads_in_use() -> usize {
+    crate::parallel::max_threads()
+}
+
+/// Max absolute elementwise deviation between two equal-length buffers —
+/// the parallel-vs-serial agreement metric the sweeps and determinism
+/// tests share.
+pub fn max_abs_dev(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_dev: length mismatch");
+    a.iter().zip(b.iter()).fold(0.0f64, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// Parse a `--threads` flag from a bench's raw argv: `--threads 4`,
+/// `--threads 1,2,4` or `--threads=1,2,4`. Unknown flags are ignored (cargo
+/// bench forwards its own). Returns the parsed list, or `None` if absent.
+pub fn parse_threads_arg(argv: &[String]) -> Option<Vec<usize>> {
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        let val: Option<&str> = if let Some(v) = tok.strip_prefix("--threads=") {
+            Some(v)
+        } else if tok == "--threads" {
+            i += 1;
+            argv.get(i).map(|s| s.as_str())
+        } else {
+            None
+        };
+        if let Some(v) = val {
+            let list: Vec<usize> =
+                v.split(',').filter_map(|p| p.trim().parse::<usize>().ok()).collect();
+            if list.is_empty() {
+                return None;
+            }
+            return Some(list);
+        }
+        i += 1;
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +212,16 @@ mod tests {
         assert!(fmt_secs(2.5).contains("s"));
         assert!(fmt_secs(2.5e-3).contains("ms"));
         assert!(fmt_secs(2.5e-6).contains("µs"));
+    }
+
+    #[test]
+    fn threads_arg_parsing() {
+        let sv = |args: &[&str]| -> Vec<String> { args.iter().map(|s| s.to_string()).collect() };
+        assert_eq!(parse_threads_arg(&sv(&["--threads", "4"])), Some(vec![4]));
+        assert_eq!(parse_threads_arg(&sv(&["--bench", "--threads=1,2,4"])), Some(vec![1, 2, 4]));
+        assert_eq!(parse_threads_arg(&sv(&["--threads", "1, 2 ,7"])), Some(vec![1, 2, 7]));
+        assert_eq!(parse_threads_arg(&sv(&["--bench"])), None);
+        assert_eq!(parse_threads_arg(&sv(&[])), None);
+        assert!(threads_in_use() >= 1);
     }
 }

@@ -13,15 +13,26 @@ pub struct Args {
     pub positionals: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag: --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{flag}: {value} ({message})")]
     InvalidValue { flag: String, value: String, message: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(n) => write!(f, "unknown flag: --{n}"),
+            CliError::MissingValue(n) => write!(f, "flag --{n} requires a value"),
+            CliError::InvalidValue { flag, value, message } => {
+                write!(f, "invalid value for --{flag}: {value} ({message})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Flag specification: name and whether it takes a value.
 #[derive(Debug, Clone)]

@@ -53,12 +53,19 @@ pub struct Config {
     values: BTreeMap<(String, String), Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {message}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
@@ -127,11 +134,22 @@ impl Config {
         self.values.is_empty()
     }
 
+    /// Build a [`SolveConfig`] from the `[parallel]` section.
+    pub fn solve_config(&self) -> SolveConfig {
+        SolveConfig {
+            threads: self.get_usize("parallel", "threads").unwrap_or(0),
+        }
+    }
+
     /// Build a [`crate::coordinator::ServiceConfig`] from `[service]` /
-    /// `[batcher]` / `[worker]` sections, defaulting absent keys.
+    /// `[batcher]` / `[worker]` / `[parallel]` sections, defaulting absent
+    /// keys.
     pub fn service_config(&self) -> crate::coordinator::ServiceConfig {
         use std::time::Duration;
         let mut cfg = crate::coordinator::ServiceConfig::default();
+        if let Some(t) = self.get_usize("parallel", "threads") {
+            cfg.worker.threads = t;
+        }
         if let Some(w) = self.get_usize("service", "workers") {
             cfg.workers = w.max(1);
         }
@@ -163,6 +181,29 @@ impl Config {
             cfg.router.enable_pjrt = e;
         }
         cfg
+    }
+}
+
+/// Process-wide solve/kernel execution settings: the thread budget the
+/// parallel GEMM/FWHT/sketch kernels draw from (`[parallel] threads`,
+/// 0 = auto-detect).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SolveConfig {
+    /// Kernel worker-pool size; 0 resolves to the machine's available
+    /// parallelism (possibly overridden by `SNSOLVE_THREADS`).
+    pub threads: usize,
+}
+
+impl SolveConfig {
+    /// Install these settings process-wide (the kernels read them through
+    /// [`crate::parallel`]).
+    pub fn install(self) {
+        crate::parallel::set_threads(self.threads);
+    }
+
+    /// The thread count the kernels will actually use.
+    pub fn effective_threads(self) -> usize {
+        crate::parallel::resolve(self.threads)
     }
 }
 
@@ -220,6 +261,9 @@ seed = 99
 
 [router]
 enable_pjrt = false
+
+[parallel]
+threads = 3
 "#;
 
     #[test]
@@ -245,6 +289,19 @@ enable_pjrt = false
             sc.worker.artifact_dir.as_deref(),
             Some(std::path::Path::new("artifacts"))
         );
+        assert_eq!(sc.worker.threads, 3);
+    }
+
+    #[test]
+    fn solve_config_threads() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = c.solve_config();
+        assert_eq!(s.threads, 3);
+        assert_eq!(s.effective_threads(), 3);
+        // absent section → auto
+        let d = Config::parse("").unwrap().solve_config();
+        assert_eq!(d.threads, 0);
+        assert!(d.effective_threads() >= 1);
     }
 
     #[test]

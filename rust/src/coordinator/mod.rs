@@ -109,18 +109,29 @@ pub struct SolveResponse {
 }
 
 /// Service-level failures.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum ServiceError {
-    #[error("queue full: the service is overloaded")]
     Overloaded,
-    #[error("deadline exceeded before completion")]
     DeadlineExceeded,
-    #[error("unknown matrix id {0}")]
     UnknownMatrix(u64),
-    #[error("solver error: {0}")]
     Solver(String),
-    #[error("service is shutting down")]
     ShuttingDown,
-    #[error("bad request: {0}")]
     BadRequest(String),
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Overloaded => write!(f, "queue full: the service is overloaded"),
+            ServiceError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before completion")
+            }
+            ServiceError::UnknownMatrix(id) => write!(f, "unknown matrix id {id}"),
+            ServiceError::Solver(m) => write!(f, "solver error: {m}"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}

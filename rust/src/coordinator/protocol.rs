@@ -38,9 +38,16 @@ pub struct Reader<'a> {
     pos: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("protocol decode error: {0}")]
+#[derive(Debug)]
 pub struct DecodeError(pub String);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

@@ -188,16 +188,45 @@ pub struct Client {
     stream: TcpStream,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ClientError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("decode: {0}")]
-    Decode(#[from] DecodeError),
-    #[error("server error: {0}")]
+    Io(std::io::Error),
+    Decode(DecodeError),
     Server(String),
-    #[error("unexpected opcode {0}")]
     UnexpectedOpcode(u8),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Decode(e) => write!(f, "decode: {e}"),
+            ClientError::Server(m) => write!(f, "server error: {m}"),
+            ClientError::UnexpectedOpcode(op) => write!(f, "unexpected opcode {op}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Decode(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<DecodeError> for ClientError {
+    fn from(e: DecodeError) -> Self {
+        ClientError::Decode(e)
+    }
 }
 
 /// A solve result over the wire.

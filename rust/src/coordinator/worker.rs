@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::linalg::operator::PreconditionedOperator;
 use crate::linalg::qr::{qr_compact, QrCompact};
-use crate::linalg::{norms, triangular, DenseMatrix, Matrix};
+use crate::linalg::{norms, triangular, DenseMatrix, LinearOperator, Matrix};
 use crate::runtime::{Engine, Tensor};
 use crate::sketch::{CountSketch, SketchOperator};
 use crate::solvers::lsqr::{lsqr, LsqrConfig};
@@ -44,6 +44,16 @@ pub struct WorkerConfig {
     pub lsqr: LsqrConfig,
     /// Max matrices whose factorization is kept (FIFO eviction).
     pub factor_cache_cap: usize,
+    /// Kernel worker-pool size for the parallel GEMM/FWHT/sketch hot paths
+    /// (0 = auto / inherit the process-wide setting). Sized from the same
+    /// `[parallel]` config section as [`crate::config::SolveConfig`].
+    ///
+    /// Note: the pool setting is process-wide, so with `workers > 1`
+    /// service workers solving concurrently the box can run up to
+    /// `workers × threads` compute threads. Deployments with several
+    /// workers should set `threads ≈ cores / workers` (per-worker pools
+    /// are a ROADMAP item).
+    pub threads: usize,
 }
 
 impl Default for WorkerConfig {
@@ -54,6 +64,7 @@ impl Default for WorkerConfig {
             seed: 0xC0FF_EE00,
             lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() },
             factor_cache_cap: 4,
+            threads: 0,
         }
     }
 }
@@ -77,10 +88,16 @@ impl WorkerContext {
         registry: Arc<MatrixRegistry>,
         metrics: Arc<Metrics>,
     ) -> Self {
+        if config.threads != 0 {
+            // Explicit pool size: install process-wide so the parallel
+            // kernels this worker drives see it (0 keeps the ambient
+            // setting — env var or auto-detect).
+            crate::parallel::set_threads(config.threads);
+        }
         let engine = config.artifact_dir.as_ref().and_then(|d| match Engine::load(d) {
             Ok(e) => Some(e),
             Err(err) => {
-                log::warn!("worker: PJRT engine unavailable ({err}); native-only");
+                eprintln!("worker: PJRT engine unavailable ({err}); native-only");
                 None
             }
         });
@@ -125,7 +142,7 @@ impl WorkerContext {
                         (Ok(sol), ExecutedOn::Pjrt(name.clone()))
                     }
                     Err(e) => {
-                        log::warn!("pjrt path failed ({e}); falling back to native");
+                        eprintln!("worker: pjrt path failed ({e}); falling back to native");
                         let out = self.execute_native(matrix_id, &a, rhs, solver, tol);
                         Metrics::inc(&self.metrics.native_dispatches);
                         (out, ExecutedOn::Native)

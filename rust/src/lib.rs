@@ -29,6 +29,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod linalg;
+pub mod parallel;
 pub mod problems;
 pub mod rng;
 pub mod runtime;

@@ -34,6 +34,12 @@ pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
 }
 
 /// `C += A · B` into an existing (zeroed or accumulating) output.
+///
+/// Parallel: C's rows are sharded into contiguous panels, one scoped worker
+/// per panel (each also owning the matching rows of A; B is shared
+/// read-only). Every C element accumulates over `pc` in the same order as
+/// the serial nest, so the result is **bitwise identical** at any thread
+/// count.
 pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
@@ -47,22 +53,41 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Res
     let bdata = b.data();
     let cdata = c.data_mut();
 
-    // Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A)
-    // -> microkernel over MR x NR register tiles.
+    let flops = m.saturating_mul(k).saturating_mul(n);
+    let threads = if flops < 4 * crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(m, MR)
+    };
+    if threads <= 1 {
+        gemm_nest(adata, bdata, cdata, m, k, n);
+    } else {
+        // MR-aligned panel boundaries keep the register-tile layout (and
+        // hence every rounding) identical to the serial nest.
+        let panels = crate::parallel::partition_aligned(m, threads, MR);
+        crate::parallel::for_each_row_range(cdata, n, &panels, |_, rows, cblock| {
+            let ablock = &adata[rows.start * k..rows.end * k];
+            gemm_nest(ablock, bdata, cblock, rows.len(), k, n);
+        });
+    }
+    Ok(())
+}
+
+/// The serial blocked loop nest over an `m`-row panel of A/C.
+///
+/// Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A)
+/// -> microkernel over MR x NR register tiles.
+fn gemm_nest(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
-                block_kernel(
-                    adata, bdata, cdata, m, k, n, ic, jc, pc, mc, nc, kc,
-                );
+                block_kernel(a, b, c, m, k, n, ic, jc, pc, mc, nc, kc);
             }
         }
     }
-    let _ = m;
-    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]

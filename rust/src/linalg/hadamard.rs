@@ -40,6 +40,11 @@ pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
 /// row-strided accesses but process all columns of a row pair contiguously —
 /// each stage is a pass of length-`cols` vector adds/subs, which is
 /// bandwidth-optimal for row-major data.
+///
+/// Parallel: columns are independent, so the buffer is split into disjoint
+/// column *bands*, one scoped worker per band. Every column runs exactly
+/// the serial butterfly, so the result is **bitwise identical** at any
+/// thread count.
 pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Result<()> {
     if data.len() != rows * cols {
         return Err(LinalgError::DimensionMismatch(format!(
@@ -52,6 +57,29 @@ pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Resul
             "fwht_columns: rows {rows} not a power of two"
         )));
     }
+    if rows <= 1 {
+        return Ok(());
+    }
+    let threads = if rows * cols < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(cols, 8)
+    };
+    if threads <= 1 {
+        fwht_columns_serial(data, rows, cols);
+        return Ok(());
+    }
+    let ptr = crate::parallel::SendMutPtr(data.as_mut_ptr());
+    crate::parallel::run_partitioned(cols, threads, |_, band| {
+        // SAFETY: bands partition the column index space, so workers write
+        // disjoint elements of `data`, which outlives the scoped threads.
+        unsafe { fwht_column_band(ptr, rows, cols, band.start, band.end) };
+    });
+    Ok(())
+}
+
+/// Serial full-width butterfly (all columns at once).
+fn fwht_columns_serial(data: &mut [f64], rows: usize, cols: usize) {
     let mut h = 1;
     while h < rows {
         for block in (0..rows).step_by(2 * h) {
@@ -69,7 +97,38 @@ pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Resul
         }
         h *= 2;
     }
-    Ok(())
+}
+
+/// Butterfly restricted to columns `[j0, j1)` of the row-major buffer.
+///
+/// # Safety
+/// `ptr` must point at a live `rows × cols` buffer and no other thread may
+/// touch columns `[j0, j1)` while this runs.
+unsafe fn fwht_column_band(
+    ptr: crate::parallel::SendMutPtr,
+    rows: usize,
+    cols: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let base = ptr.0;
+    let w = j1 - j0;
+    let mut h = 1;
+    while h < rows {
+        for block in (0..rows).step_by(2 * h) {
+            for i in block..block + h {
+                let a = std::slice::from_raw_parts_mut(base.add(i * cols + j0), w);
+                let b = std::slice::from_raw_parts_mut(base.add((i + h) * cols + j0), w);
+                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = u + v;
+                    *y = u - v;
+                }
+            }
+        }
+        h *= 2;
+    }
 }
 
 /// Reference O(n²) Walsh–Hadamard for tests: `y[k] = Σ_i (-1)^{popcount(i&k)} x[i]`.

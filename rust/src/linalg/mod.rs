@@ -101,15 +101,26 @@ impl From<CsrMatrix> for Matrix {
 }
 
 /// Errors surfaced by the linear-algebra layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("dimension mismatch: {0}")]
     DimensionMismatch(String),
-    #[error("matrix is singular to working precision: {0}")]
     Singular(String),
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::DimensionMismatch(m) => write!(f, "dimension mismatch: {m}"),
+            LinalgError::Singular(m) => {
+                write!(f, "matrix is singular to working precision: {m}")
+            }
+            LinalgError::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 pub type Result<T> = std::result::Result<T, LinalgError>;
 

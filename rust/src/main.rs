@@ -41,6 +41,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "smoke", takes_value: false, help: "small/fast parameterization" },
         FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7447)" },
         FlagSpec { name: "workers", takes_value: true, help: "serve: worker threads (default 2)" },
+        FlagSpec { name: "threads", takes_value: true, help: "kernel pool size for GEMM/FWHT/sketch (0 = auto)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -57,6 +58,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    match args.flag_usize("threads") {
+        Ok(Some(t)) => snsolve::config::SolveConfig { threads: t }.install(),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
+            std::process::exit(2);
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
@@ -151,6 +160,9 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
     };
     if let Some(w) = args.flag_usize("workers").unwrap() {
         cfg.workers = w.max(1);
+    }
+    if let Some(t) = args.flag_usize("threads").unwrap() {
+        cfg.worker.threads = t;
     }
     let artifacts = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
     if artifacts.join("manifest.json").exists() {

@@ -1,0 +1,365 @@
+//! Dependency-free scoped worker pool for the GEMM/FWHT/sketch hot paths.
+//!
+//! Design constraints (Murray et al. 2023 §software; Epperly 2024):
+//!
+//! * **No external crates.** Everything is `std::thread::scope` + atomics.
+//! * **Deterministic.** For a fixed thread count every kernel produces the
+//!   same bits on every run, and every partitioning is a pure function of
+//!   `(total, threads)`. Kernels that shard *disjoint output regions*
+//!   (GEMM row panels, FWHT column bands, sketch output rows) are bitwise
+//!   identical to the serial path at any thread count; kernels that merge
+//!   per-thread accumulators ([`partitioned_reduce`]) reduce in fixed
+//!   partition order, so they differ from serial only by floating-point
+//!   re-association (≪ 1e-12 relative — asserted by
+//!   `tests/parallel_determinism.rs`).
+//! * **No nesting.** Code running inside a pool worker sees
+//!   [`threads_for`] == 1, so a parallel GEMM called from a parallel sketch
+//!   never oversubscribes the machine.
+//!
+//! Thread count resolution order: [`set_threads`] (e.g. from
+//! [`crate::config::SolveConfig`] or a bench `--threads` flag) →
+//! `SNSOLVE_THREADS` env var → `std::thread::available_parallelism()`.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Work-size floor below which the kernels stay serial: spawning threads
+/// costs ~10µs; anything under ~64k element-ops is faster single-threaded.
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Sentinel: thread count not yet configured programmatically.
+const UNSET: usize = usize::MAX;
+
+/// Process-wide configured thread count (0 = auto, UNSET = fall through to
+/// the environment).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(UNSET);
+
+thread_local! {
+    /// True while this thread is executing inside a pool region.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SNSOLVE_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Configure the pool size for this process. `0` means auto (available
+/// parallelism). Overrides `SNSOLVE_THREADS`.
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n, Ordering::SeqCst);
+}
+
+/// Resolve a requested thread count (0 = auto) to an effective one.
+pub fn resolve(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The effective pool size: configured → env → available parallelism.
+pub fn max_threads() -> usize {
+    let c = CONFIGURED.load(Ordering::SeqCst);
+    let requested = if c == UNSET { env_threads() } else { c };
+    resolve(requested)
+}
+
+/// True while the calling thread is itself a pool worker.
+pub fn in_parallel_region() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Thread count a kernel should use for `items` units of work, keeping at
+/// least `min_per_thread` units per thread. Returns 1 inside a pool region
+/// (no nested parallelism).
+pub fn threads_for(items: usize, min_per_thread: usize) -> usize {
+    if in_parallel_region() {
+        return 1;
+    }
+    let t = max_threads();
+    if t <= 1 || items == 0 {
+        return 1;
+    }
+    let cap = items.div_ceil(min_per_thread.max(1));
+    t.min(cap).max(1)
+}
+
+/// Run `f` with the in-pool flag set (restored afterwards).
+fn enter_pool<T>(f: impl FnOnce() -> T) -> T {
+    IN_POOL.with(|c| {
+        let prev = c.get();
+        c.set(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Split `[0, total)` into at most `parts` contiguous, non-empty,
+/// near-equal ranges. Deterministic: the first `total % parts` ranges get
+/// one extra element.
+pub fn partition(total: usize, parts: usize) -> Vec<Range<usize>> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, total);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(part_index, range)` over a partitioning of `[0, total)` on up to
+/// `threads` scoped workers. Partition 0 runs on the calling thread.
+///
+/// `f` must only touch state that is disjoint per partition (or shared
+/// immutably); the partitioning itself is deterministic.
+pub fn run_partitioned<F>(total: usize, threads: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let parts = partition(total, threads);
+    match parts.len() {
+        0 => {}
+        1 => enter_pool(|| f(0, parts[0].clone())),
+        _ => std::thread::scope(|s| {
+            for (i, r) in parts.iter().cloned().enumerate().skip(1) {
+                let f = &f;
+                s.spawn(move || enter_pool(|| f(i, r)));
+            }
+            enter_pool(|| f(0, parts[0].clone()));
+        }),
+    }
+}
+
+/// Deterministic partitioned reduction: map each range of `[0, total)` to a
+/// value on its own worker, then return the values **in partition order**
+/// so the caller's fold is independent of thread scheduling.
+pub fn partitioned_reduce<T, F>(total: usize, threads: usize, map: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    let parts = partition(total, threads);
+    match parts.len() {
+        0 => Vec::new(),
+        1 => vec![enter_pool(|| map(0, parts[0].clone()))],
+        _ => std::thread::scope(|s| {
+            let handles: Vec<_> = parts
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, r)| {
+                    let map = &map;
+                    s.spawn(move || enter_pool(|| map(i, r)))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("parallel worker panicked"))
+                .collect()
+        }),
+    }
+}
+
+/// Like [`partition`], but every boundary except the last is a multiple of
+/// `align` — so a kernel whose inner tiling is `align`-periodic (e.g. the
+/// GEMM MR register tile) produces bitwise-identical results at any part
+/// count.
+pub fn partition_aligned(total: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    let groups = total.div_ceil(align);
+    partition(groups, parts)
+        .into_iter()
+        .map(|g| (g.start * align)..(g.end * align).min(total))
+        .collect()
+}
+
+/// Shard a row-major `rows × row_len` buffer into disjoint contiguous row
+/// blocks and run `f(part_index, row_range, block)` on scoped workers.
+/// Each worker owns its block mutably — safe output-row sharding for the
+/// sketch scatter kernels and GEMM C panels.
+pub fn for_each_row_block<F>(data: &mut [f64], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * row_len);
+    for_each_row_range(data, row_len, &partition(rows, threads), f);
+}
+
+/// [`for_each_row_block`] over caller-supplied contiguous row ranges (they
+/// must tile `[0, rows)` in order — e.g. from [`partition_aligned`]).
+/// Range 0 runs on the calling thread; the rest on scoped workers.
+pub fn for_each_row_range<F>(data: &mut [f64], row_len: usize, ranges: &[Range<usize>], f: F)
+where
+    F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
+{
+    match ranges.len() {
+        0 => {}
+        1 => enter_pool(|| f(0, ranges[0].clone(), data)),
+        _ => std::thread::scope(|s| {
+            let mut rest = data;
+            let mut first: Option<(Range<usize>, &mut [f64])> = None;
+            for (i, r) in ranges.iter().cloned().enumerate() {
+                let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_len);
+                rest = tail;
+                if i == 0 {
+                    first = Some((r, block));
+                    continue;
+                }
+                let f = &f;
+                s.spawn(move || enter_pool(|| f(i, r, block)));
+            }
+            let (r0, block0) = first.expect("ranges non-empty");
+            enter_pool(|| f(0, r0, block0));
+        }),
+    }
+}
+
+/// A raw mutable `f64` pointer that may cross thread boundaries.
+///
+/// # Safety contract (on the *user*, not this type)
+/// Every thread must access a disjoint set of elements, and the underlying
+/// buffer must outlive all accesses — exactly the guarantee the FWHT column
+/// bands provide. The type only exists because disjoint *strided* regions
+/// (column bands of a row-major buffer) cannot be expressed as `&mut`
+/// slices.
+#[derive(Clone, Copy)]
+pub(crate) struct SendMutPtr(pub(crate) *mut f64);
+
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (total, parts) in [(0usize, 4usize), (1, 4), (7, 3), (12, 4), (5, 9), (100, 7)] {
+            let p = partition(total, parts);
+            if total == 0 {
+                assert!(p.is_empty());
+                continue;
+            }
+            assert!(p.len() <= parts.max(1));
+            assert_eq!(p[0].start, 0);
+            assert_eq!(p.last().unwrap().end, total);
+            for w in p.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            for r in &p {
+                assert!(!r.is_empty());
+            }
+            // near-equal: lengths differ by at most 1
+            let lens: Vec<usize> = p.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn partition_deterministic() {
+        assert_eq!(partition(10, 3), partition(10, 3));
+        assert_eq!(partition(10, 3), vec![0..4, 4..7, 7..10]);
+    }
+
+    #[test]
+    fn partition_aligned_boundaries() {
+        for (total, parts, align) in
+            [(256usize, 7usize, 4usize), (37, 3, 4), (100, 16, 8), (12, 5, 1), (3, 4, 4)]
+        {
+            let p = partition_aligned(total, parts, align);
+            assert_eq!(p[0].start, 0);
+            assert_eq!(p.last().unwrap().end, total);
+            for w in p.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                // every interior boundary is aligned
+                assert_eq!(w[0].end % align, 0, "{total}/{parts}/{align}: {p:?}");
+            }
+            for r in &p {
+                assert!(!r.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn run_partitioned_touches_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        run_partitioned(n, 4, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn partitioned_reduce_in_order() {
+        // Each partition returns its index; the output must be sorted.
+        for threads in [1usize, 2, 3, 8] {
+            let out = partitioned_reduce(64, threads, |idx, _range| idx);
+            let expect: Vec<usize> = (0..out.len()).collect();
+            assert_eq!(out, expect);
+        }
+        // Sum over ranges equals the serial sum regardless of threads.
+        let serial: usize = (0..500).sum();
+        for threads in [1usize, 2, 5, 7] {
+            let total: usize = partitioned_reduce(500, threads, |_, r| r.sum::<usize>())
+                .into_iter()
+                .sum();
+            assert_eq!(total, serial);
+        }
+    }
+
+    #[test]
+    fn row_blocks_are_disjoint_and_complete() {
+        let (rows, cols) = (37, 5);
+        let mut data = vec![0.0f64; rows * cols];
+        for_each_row_block(&mut data, rows, cols, 4, |_, row_range, block| {
+            assert_eq!(block.len(), row_range.len() * cols);
+            for v in block.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn no_nested_parallelism() {
+        run_partitioned(8, 4, |_, _| {
+            assert!(in_parallel_region());
+            assert_eq!(threads_for(1_000_000, 1), 1);
+        });
+        assert!(!in_parallel_region());
+    }
+
+    #[test]
+    fn threads_for_respects_floor() {
+        // Can't assert the exact machine count; only the invariants.
+        assert_eq!(threads_for(0, 8), 1);
+        assert!(threads_for(1, 8) >= 1);
+        assert!(threads_for(16, 8) <= 2);
+    }
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert!(resolve(0) >= 1);
+        assert_eq!(resolve(3), 3);
+    }
+}

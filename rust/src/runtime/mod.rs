@@ -10,25 +10,41 @@
 
 pub mod artifacts;
 pub mod json;
+mod xla_stub;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
+// Offline builds use the in-tree PJRT stub; with the real `xla` crate
+// available this line becomes `use xla;`.
+use self::xla_stub as xla;
+
 pub use artifacts::{ArtifactSpec, DType, Manifest, TensorSpec};
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("unknown artifact: {0}")]
     UnknownArtifact(String),
-    #[error("input mismatch for {artifact}: {message}")]
     InputMismatch { artifact: String, message: String },
-    #[error("xla error: {0}")]
     Xla(String),
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::UnknownArtifact(a) => write!(f, "unknown artifact: {a}"),
+            RuntimeError::InputMismatch { artifact, message } => {
+                write!(f, "input mismatch for {artifact}: {message}")
+            }
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {

@@ -1,0 +1,258 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment has no network and no XLA shared library, so the
+//! real `xla` crate cannot be a dependency. This module mirrors the slice
+//! of its API that [`super`] (the runtime engine) uses:
+//!
+//! * [`Literal`] is **functional**: an in-memory tensor with
+//!   `vec1`/`reshape`/`to_vec`/`array_shape`/`ty`, so host-side tensor
+//!   round-trips (and their unit tests) behave exactly like the real crate.
+//! * [`PjRtClient::cpu`] always fails with a descriptive error, so every
+//!   execution path degrades to the native f64 solvers — the same graceful
+//!   fallback the workers already implement for a missing artifact dir.
+//!
+//! Swapping the real crate back in is a one-line change in
+//! `runtime/mod.rs` (`use xla` instead of `use self::xla_stub as xla`).
+
+#![allow(dead_code)]
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Pred,
+}
+
+/// Literal storage (exposed only through the [`NativeType`] trait).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// In-memory literal (host tensor).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Shape view returned by [`Literal::array_shape`].
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Conversion trait tying Rust element types to [`Literal`] payloads
+/// (mirrors `xla::NativeType`).
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+
+    fn unwrap(payload: &Payload) -> Result<Vec<f32>> {
+        match payload {
+            Payload::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+
+    fn unwrap(payload: &Payload) -> Result<Vec<i32>> {
+        match payload {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal { payload: T::wrap(data.to_vec()), dims: vec![n] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.payload {
+            Payload::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.payload {
+            Payload::F32(_) => Ok(ElementType::F32),
+            Payload::I32(_) => Ok(ElementType::S32),
+            Payload::Tuple(_) => Err(Error("tuple literal has no element type".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Ok(vec![self.clone()]),
+        }
+    }
+}
+
+/// PJRT client stub. `cpu()` always fails offline; the `!Send` marker
+/// (via `Rc`) mirrors the real wrapper's thread affinity.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(
+            "PJRT unavailable: offline build without the XLA runtime \
+             (native f64 solvers remain fully functional)"
+                .into(),
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error("PJRT unavailable: offline build".into()))
+    }
+}
+
+/// Parsed HLO module stub.
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper stub.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer stub returned by `execute`.
+pub struct PjRtBuffer {
+    literal: RefCell<Option<Literal>>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        self.literal
+            .borrow()
+            .clone()
+            .ok_or_else(|| Error("empty buffer".into()))
+    }
+}
+
+/// Loaded executable stub (unreachable offline: `compile` always fails).
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("PJRT unavailable: offline build".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        let r = l.reshape(&[4, 1]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[4, 1]);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_offline() {
+        let e = PjRtClient::cpu().err().expect("offline stub must fail");
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+}

@@ -37,6 +37,16 @@ impl CountSketch {
     pub fn hash_arrays(&self) -> (&[u32], &[i8]) {
         (&self.bucket, &self.sign)
     }
+
+    /// Worker count for an apply pass over ~`work` element-ops: one band
+    /// per worker over the `s` output rows, serial below the overhead floor.
+    fn apply_threads(&self, work: usize) -> usize {
+        if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(self.s, 8)
+        }
+    }
 }
 
 impl SketchOperator for CountSketch {
@@ -53,15 +63,36 @@ impl SketchOperator for CountSketch {
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
         // One streaming pass: B[bucket[i], :] += sign[i] * A[i, :].
-        for i in 0..self.m {
-            let row = a.row(i);
-            let out = b.row_mut(self.bucket[i] as usize);
-            if self.sign[i] > 0 {
-                crate::linalg::gemm::axpy(1.0, row, out);
-            } else {
-                crate::linalg::gemm::axpy(-1.0, row, out);
+        //
+        // Parallel: shard the *output* rows into disjoint bands; each worker
+        // scans the bucket array and accumulates only the input rows that
+        // land in its band, preserving the serial i-order per output row —
+        // bitwise identical to the serial pass at any thread count.
+        let threads = self.apply_threads(self.m * n);
+        if threads <= 1 {
+            for i in 0..self.m {
+                let row = a.row(i);
+                let out = b.row_mut(self.bucket[i] as usize);
+                if self.sign[i] > 0 {
+                    crate::linalg::gemm::axpy(1.0, row, out);
+                } else {
+                    crate::linalg::gemm::axpy(-1.0, row, out);
+                }
             }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                let r = self.bucket[i] as usize;
+                if r < band.start || r >= band.end {
+                    continue;
+                }
+                let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                let w = if self.sign[i] > 0 { 1.0 } else { -1.0 };
+                crate::linalg::gemm::axpy(w, a.row(i), out);
+            }
+        });
         b
     }
 
@@ -69,17 +100,39 @@ impl SketchOperator for CountSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
-        for i in 0..self.m {
-            let (idx, vals) = a.row(i);
-            if idx.is_empty() {
-                continue;
+        let threads = self.apply_threads(a.nnz() * 8);
+        if threads <= 1 {
+            for i in 0..self.m {
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                let sgn = self.sign[i] as f64;
+                let out = b.row_mut(self.bucket[i] as usize);
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    out[j as usize] += sgn * v;
+                }
             }
-            let sgn = self.sign[i] as f64;
-            let out = b.row_mut(self.bucket[i] as usize);
-            for (&j, &v) in idx.iter().zip(vals.iter()) {
-                out[j as usize] += sgn * v;
-            }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                let r = self.bucket[i] as usize;
+                if r < band.start || r >= band.end {
+                    continue;
+                }
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                let sgn = self.sign[i] as f64;
+                let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    out[j as usize] += sgn * v;
+                }
+            }
+        });
         b
     }
 

@@ -58,17 +58,34 @@ impl SketchOperator for GaussianSketch {
     fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
         assert_eq!(a.rows(), self.m, "gaussian sketch: A has {} rows, S expects {}", a.rows(), self.m);
         let n = a.cols();
-        let mut b = DenseMatrix::zeros(self.s, n);
-        let mut j0 = 0;
-        let mut block_idx = 0;
-        while j0 < self.m {
-            let w = BLOCK.min(self.m - j0);
-            let sblk = self.gen_block(block_idx, w);
-            // B += S[:, j0..j0+w] · A[j0..j0+w, :]
-            let ablk = a.slice_rows(j0, j0 + w);
-            gemm::matmul_into(&sblk, &ablk, &mut b).expect("block gemm dims");
-            j0 += w;
-            block_idx += 1;
+        // Parallel: shard the independent column-block streams of S across
+        // workers, each accumulating into a private s×n buffer; partials
+        // are merged in fixed block order (deterministic for a given thread
+        // count; differs from serial only by fp re-association, ≪ 1e-12).
+        let nblocks = self.m.div_ceil(BLOCK);
+        let work = self.s.saturating_mul(self.m).saturating_mul(n);
+        let threads = if work < 4 * crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(nblocks, 1)
+        };
+        let partials =
+            crate::parallel::partitioned_reduce(nblocks, threads, |_, block_range| {
+                let mut acc = DenseMatrix::zeros(self.s, n);
+                for block_idx in block_range {
+                    let j0 = block_idx * BLOCK;
+                    let w = BLOCK.min(self.m - j0);
+                    let sblk = self.gen_block(block_idx, w);
+                    // acc += S[:, j0..j0+w] · A[j0..j0+w, :]
+                    let ablk = a.slice_rows(j0, j0 + w);
+                    gemm::matmul_into(&sblk, &ablk, &mut acc).expect("block gemm dims");
+                }
+                acc
+            });
+        let mut parts = partials.into_iter();
+        let mut b = parts.next().unwrap_or_else(|| DenseMatrix::zeros(self.s, n));
+        for p in parts {
+            b.axpy(1.0, &p).expect("partials share the sketch shape");
         }
         b
     }

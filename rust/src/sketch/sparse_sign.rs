@@ -44,6 +44,15 @@ impl SparseSignSketch {
     pub fn nnz_per_column(&self) -> usize {
         self.k
     }
+
+    /// Worker count for an apply pass over ~`work` element-ops.
+    fn apply_threads(&self, work: usize) -> usize {
+        if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(self.s, 8)
+        }
+    }
 }
 
 impl SketchOperator for SparseSignSketch {
@@ -59,12 +68,32 @@ impl SketchOperator for SparseSignSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
-        for i in 0..self.m {
-            let row = a.row(i);
-            for &(r, w) in self.column(i) {
-                crate::linalg::gemm::axpy(w as f64, row, b.row_mut(r as usize));
+        // Parallel: disjoint output-row bands; each worker applies only the
+        // (r, w) targets that fall inside its band, in the serial (i, then
+        // within-column) order — bitwise identical at any thread count.
+        let threads = self.apply_threads(self.m * self.k * n);
+        if threads <= 1 {
+            for i in 0..self.m {
+                let row = a.row(i);
+                for &(r, w) in self.column(i) {
+                    crate::linalg::gemm::axpy(w as f64, row, b.row_mut(r as usize));
+                }
             }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                for &(r, w) in self.column(i) {
+                    let r = r as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                }
+            }
+        });
         b
     }
 
@@ -72,19 +101,43 @@ impl SketchOperator for SparseSignSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
-        for i in 0..self.m {
-            let (idx, vals) = a.row(i);
-            if idx.is_empty() {
-                continue;
-            }
-            for &(r, w) in self.column(i) {
-                let out = b.row_mut(r as usize);
-                let wf = w as f64;
-                for (&j, &v) in idx.iter().zip(vals.iter()) {
-                    out[j as usize] += wf * v;
+        let threads = self.apply_threads(a.nnz() * self.k * 4);
+        if threads <= 1 {
+            for i in 0..self.m {
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                for &(r, w) in self.column(i) {
+                    let out = b.row_mut(r as usize);
+                    let wf = w as f64;
+                    for (&j, &v) in idx.iter().zip(vals.iter()) {
+                        out[j as usize] += wf * v;
+                    }
                 }
             }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                for &(r, w) in self.column(i) {
+                    let r = r as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    let wf = w as f64;
+                    for (&j, &v) in idx.iter().zip(vals.iter()) {
+                        out[j as usize] += wf * v;
+                    }
+                }
+            }
+        });
         b
     }
 

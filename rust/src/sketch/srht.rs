@@ -34,6 +34,15 @@ impl SrhtSketch {
         Self { s, m, m_pad, sign, rows, scale: 1.0 / (s as f64).sqrt() }
     }
 
+    /// Worker count for the padded sign-flip copy.
+    fn copy_threads(&self, n: usize) -> usize {
+        if self.m_pad.saturating_mul(n) < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(self.m_pad, 64)
+        }
+    }
+
     /// Apply to a dense padded buffer (m_pad × n, row-major), in place;
     /// returns the sampled s×n result.
     fn transform_padded(&self, buf: &mut [f64], n: usize) -> DenseMatrix {
@@ -63,13 +72,19 @@ impl SketchOperator for SrhtSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut buf = vec![0.0; self.m_pad * n];
-        for i in 0..self.m {
-            let sgn = self.sign[i] as f64;
-            let dst = &mut buf[i * n..(i + 1) * n];
-            for (d, &v) in dst.iter_mut().zip(a.row(i).iter()) {
-                *d = sgn * v;
+        // Parallel: the sign-flip copy shards the padded buffer by disjoint
+        // row blocks (bitwise identical at any thread count); the FWHT then
+        // parallelizes internally over column bands.
+        let threads = self.copy_threads(n);
+        crate::parallel::for_each_row_block(&mut buf, self.m_pad, n, threads, |_, rows, block| {
+            for i in rows.start..rows.end.min(self.m) {
+                let sgn = self.sign[i] as f64;
+                let dst = &mut block[(i - rows.start) * n..(i - rows.start + 1) * n];
+                for (d, &v) in dst.iter_mut().zip(a.row(i).iter()) {
+                    *d = sgn * v;
+                }
             }
-        }
+        });
         self.transform_padded(&mut buf, n)
     }
 
@@ -77,14 +92,17 @@ impl SketchOperator for SrhtSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut buf = vec![0.0; self.m_pad * n];
-        for i in 0..self.m {
-            let (idx, vals) = a.row(i);
-            let sgn = self.sign[i] as f64;
-            let dst = &mut buf[i * n..(i + 1) * n];
-            for (&j, &v) in idx.iter().zip(vals.iter()) {
-                dst[j as usize] = sgn * v;
+        let threads = self.copy_threads(n);
+        crate::parallel::for_each_row_block(&mut buf, self.m_pad, n, threads, |_, rows, block| {
+            for i in rows.start..rows.end.min(self.m) {
+                let (idx, vals) = a.row(i);
+                let sgn = self.sign[i] as f64;
+                let dst = &mut block[(i - rows.start) * n..(i - rows.start + 1) * n];
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    dst[j as usize] = sgn * v;
+                }
             }
-        }
+        });
         self.transform_padded(&mut buf, n)
     }
 

@@ -61,6 +61,15 @@ impl UniformSparseSketch {
     pub fn nominal_density(&self) -> f64 {
         self.density
     }
+
+    /// Worker count for an apply pass over ~`work` element-ops.
+    fn apply_threads(&self, work: usize) -> usize {
+        if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(self.s, 8)
+        }
+    }
 }
 
 impl SketchOperator for UniformSparseSketch {
@@ -76,16 +85,36 @@ impl SketchOperator for UniformSparseSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
-        for i in 0..self.m {
-            let col = self.column(i);
-            if col.is_empty() {
-                continue;
+        // Parallel: disjoint output-row bands (see countsketch.rs) — each
+        // worker filters this operator's CSR-like columns by target row,
+        // preserving the serial accumulation order per output row.
+        let threads = self.apply_threads(self.entries.len().saturating_mul(n));
+        if threads <= 1 {
+            for i in 0..self.m {
+                let col = self.column(i);
+                if col.is_empty() {
+                    continue;
+                }
+                let row = a.row(i);
+                for &(r, w) in col {
+                    crate::linalg::gemm::axpy(w as f64, row, b.row_mut(r as usize));
+                }
             }
-            let row = a.row(i);
-            for &(r, w) in col {
-                crate::linalg::gemm::axpy(w as f64, row, b.row_mut(r as usize));
-            }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                for &(r, w) in self.column(i) {
+                    let r = r as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                }
+            }
+        });
         b
     }
 
@@ -93,19 +122,43 @@ impl SketchOperator for UniformSparseSketch {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let mut b = DenseMatrix::zeros(self.s, n);
-        for i in 0..self.m {
-            let (idx, vals) = a.row(i);
-            if idx.is_empty() {
-                continue;
-            }
-            for &(r, w) in self.column(i) {
-                let out = b.row_mut(r as usize);
-                let wf = w as f64;
-                for (&j, &v) in idx.iter().zip(vals.iter()) {
-                    out[j as usize] += wf * v;
+        let threads = self.apply_threads(a.nnz() * 8);
+        if threads <= 1 {
+            for i in 0..self.m {
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                for &(r, w) in self.column(i) {
+                    let out = b.row_mut(r as usize);
+                    let wf = w as f64;
+                    for (&j, &v) in idx.iter().zip(vals.iter()) {
+                        out[j as usize] += wf * v;
+                    }
                 }
             }
+            return b;
         }
+        let s = self.s;
+        crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
+            for i in 0..self.m {
+                let (idx, vals) = a.row(i);
+                if idx.is_empty() {
+                    continue;
+                }
+                for &(r, w) in self.column(i) {
+                    let r = r as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    let wf = w as f64;
+                    for (&j, &v) in idx.iter().zip(vals.iter()) {
+                        out[j as usize] += wf * v;
+                    }
+                }
+            }
+        });
         b
     }
 

@@ -27,14 +27,36 @@ pub use sap::SapSolver;
 pub use sas::SketchAndSolve;
 
 /// Errors from the solver layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SolverError {
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
-    #[error(transparent)]
-    Linalg(#[from] crate::linalg::LinalgError),
-    #[error("solver failed to converge: {0}")]
+    Linalg(crate::linalg::LinalgError),
     NoConvergence(String),
+}
+
+impl std::fmt::Display for SolverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverError::Dimension(m) => write!(f, "dimension mismatch: {m}"),
+            SolverError::Linalg(e) => write!(f, "{e}"),
+            SolverError::NoConvergence(m) => write!(f, "solver failed to converge: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SolverError::Linalg(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::linalg::LinalgError> for SolverError {
+    fn from(e: crate::linalg::LinalgError) -> Self {
+        SolverError::Linalg(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, SolverError>;

@@ -10,7 +10,7 @@
 
 use crate::linalg::operator::PreconditionedOperator;
 use crate::linalg::{qr, triangular, Matrix};
-use crate::sketch::{self, SketchKind};
+use crate::sketch::{self, SketchKind, SketchOperator};
 
 use super::lsqr::{lsqr, LsqrConfig};
 use super::saa::sketch_rows;

@@ -6,7 +6,7 @@
 //! machine precision; it anchors the accuracy end of the ablation table.
 
 use crate::linalg::{qr, triangular, Matrix};
-use crate::sketch::{self, SketchKind};
+use crate::sketch::{self, SketchKind, SketchOperator};
 
 use super::saa::sketch_rows;
 use super::{check_dims, Result, Solution, Solver, SolverError};

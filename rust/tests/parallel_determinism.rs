@@ -1,0 +1,138 @@
+//! Parallel-execution invariants (the contract `src/parallel` promises):
+//!
+//! (a) the parallel GEMM / FWHT / sketch-apply paths match the serial
+//!     (1-thread) results within 1e-12 at thread counts {1, 2, 4, 7}, and
+//!     are deterministic run-to-run at a fixed thread count;
+//! (b) every sketch operator preserves norms in expectation,
+//!     `E[‖Sx‖²] ≈ ‖x‖²`, checked through the in-tree property harness.
+//!
+//! The thread-count sweep lives in ONE test function: the pool size is a
+//! process-wide setting, and keeping the sweep single-threaded at the test
+//! level makes the `set_threads` transitions race-free.
+
+use snsolve::bench_harness::max_abs_dev;
+use snsolve::linalg::sparse::CooBuilder;
+use snsolve::linalg::{gemm, hadamard, DenseMatrix};
+use snsolve::prop_assert;
+use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
+use snsolve::sketch::{self, SketchKind, SketchOperator};
+use snsolve::testing::forall_cases;
+
+/// Thread counts the acceptance criteria call out (7 is deliberately not a
+/// divisor of anything).
+const SWEEP: [usize; 4] = [1, 2, 4, 7];
+
+/// Tolerance for parallel-vs-serial agreement.
+const TOL: f64 = 1e-12;
+
+/// Sizes must clear the kernels' serial-below-this floors
+/// (`parallel::PAR_MIN_ELEMS`) or the sweep would never leave the serial
+/// path. GEMM: m·k·n = 256·96·64 ≈ 1.6M; FWHT: 256·300 = 76.8k;
+/// sketches: m·n = 4096·24 ≈ 98k element-ops.
+#[test]
+fn parallel_paths_match_serial_across_thread_counts() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(7001));
+
+    // --- GEMM -----------------------------------------------------------
+    let (gm, gk, gn) = (256usize, 96usize, 64usize);
+    let ga = DenseMatrix::gaussian(gm, gk, &mut g);
+    let gb = DenseMatrix::gaussian(gk, gn, &mut g);
+
+    // --- FWHT columns ---------------------------------------------------
+    let (frows, fcols) = (256usize, 300usize);
+    let fdata: Vec<f64> = g.gaussian_vec(frows * fcols);
+
+    // --- sketch inputs --------------------------------------------------
+    let (sm, sn, ss) = (4096usize, 24usize, 96usize);
+    let sa_dense = DenseMatrix::gaussian(sm, sn, &mut g);
+    let sa_csr = {
+        let mut rng = Xoshiro256pp::seed_from_u64(7002);
+        let mut bld = CooBuilder::with_capacity(sm, sn, sm * 4);
+        for i in 0..sm {
+            for _ in 0..4 {
+                bld.push(i, rng.next_bounded(sn as u64) as usize, g.next_gaussian());
+            }
+        }
+        bld.build()
+    };
+
+    // Serial references at 1 thread.
+    snsolve::parallel::set_threads(1);
+    let gemm_ref = gemm::matmul(&ga, &gb).unwrap();
+    let fwht_ref = {
+        let mut d = fdata.clone();
+        hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
+        d
+    };
+    let sketch_ref: Vec<(SketchKind, DenseMatrix, DenseMatrix)> = SketchKind::ALL
+        .iter()
+        .map(|&kind| {
+            let op = sketch::build(kind, ss, sm, 4242);
+            (kind, op.apply_dense(&sa_dense), op.apply_csr(&sa_csr))
+        })
+        .collect();
+
+    for &t in &SWEEP {
+        snsolve::parallel::set_threads(t);
+
+        // GEMM: disjoint C panels — bitwise-stable, asserted at 1e-12.
+        let c1 = gemm::matmul(&ga, &gb).unwrap();
+        let c2 = gemm::matmul(&ga, &gb).unwrap();
+        assert_eq!(c1, c2, "gemm not deterministic at {t} threads");
+        let dev = max_abs_dev(c1.data(), gemm_ref.data());
+        assert!(dev <= TOL, "gemm dev {dev} at {t} threads");
+
+        // FWHT: disjoint column bands.
+        let mut d1 = fdata.clone();
+        hadamard::fwht_columns_inplace(&mut d1, frows, fcols).unwrap();
+        let mut d2 = fdata.clone();
+        hadamard::fwht_columns_inplace(&mut d2, frows, fcols).unwrap();
+        assert_eq!(d1, d2, "fwht not deterministic at {t} threads");
+        let dev = max_abs_dev(&d1, &fwht_ref);
+        assert!(dev <= TOL, "fwht dev {dev} at {t} threads");
+
+        // Every sketch operator, dense and CSR paths.
+        for (kind, dense_ref, csr_ref) in &sketch_ref {
+            let op = sketch::build(*kind, ss, sm, 4242);
+            let b1 = op.apply_dense(&sa_dense);
+            let b2 = op.apply_dense(&sa_dense);
+            assert_eq!(b1, b2, "{}: apply_dense not deterministic at {t} threads", kind.name());
+            let dev = max_abs_dev(b1.data(), dense_ref.data());
+            assert!(dev <= TOL, "{}: apply_dense dev {dev} at {t} threads", kind.name());
+
+            let c1 = op.apply_csr(&sa_csr);
+            let dev = max_abs_dev(c1.data(), csr_ref.data());
+            assert!(dev <= TOL, "{}: apply_csr dev {dev} at {t} threads", kind.name());
+        }
+    }
+
+    // Restore the ambient (auto) configuration for other tests.
+    snsolve::parallel::set_threads(0);
+}
+
+/// (b) `E[‖Sx‖²] ≈ ‖x‖²` for every operator family — the approximate
+/// isometry the solvers rely on, via the in-tree property harness.
+#[test]
+fn sketch_operators_preserve_norms_in_expectation() {
+    forall_cases("expected_isometry_all_operators", 3, |rng| {
+        let (s, m) = (32usize, 128usize);
+        let mut x = rng.gaussian_vec(m);
+        snsolve::linalg::norms::normalize(&mut x);
+        for kind in SketchKind::ALL {
+            let trials = 150u64;
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let op = sketch::build(kind, s, m, rng.case_seed ^ (t.wrapping_mul(7919)));
+                let sx = op.apply_vec(&x);
+                acc += sx.iter().map(|v| v * v).sum::<f64>();
+            }
+            let mean = acc / trials as f64;
+            prop_assert!(
+                (mean - 1.0).abs() < 0.15,
+                "{}: E[||Sx||^2] = {mean} (expected ~1)",
+                kind.name()
+            );
+        }
+        Ok(())
+    });
+}

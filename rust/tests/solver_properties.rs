@@ -5,7 +5,7 @@ use snsolve::linalg::norms::{nrm2, nrm2_diff};
 use snsolve::linalg::qr::qr_compact;
 use snsolve::linalg::{triangular, DenseMatrix, Matrix};
 use snsolve::problems::{generate_dense, DenseProblemSpec};
-use snsolve::sketch::{self, SketchKind};
+use snsolve::sketch::{self, SketchKind, SketchOperator};
 use snsolve::solvers::direct::DirectQr;
 use snsolve::solvers::lsqr::{lsqr, LsqrConfig};
 use snsolve::solvers::saa::{SaaConfig, SaaSolver};
