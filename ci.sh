@@ -9,6 +9,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Release-mode run: exercises the blocked multi-RHS kernels with
+# optimizations on (debug-only runs hide FMA/reassociation drift).
+echo "== cargo test -q --release =="
+cargo test -q --release
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

@@ -1,24 +1,114 @@
 //! Bench: coordinator serving performance — requests/s and latency through
 //! the full queue→batcher→worker path, the factor-cache ablation
-//! (cache ON vs OFF is the batching win), and raw dispatch overhead vs a
-//! direct in-thread solve.
+//! (cache ON vs OFF is the batching win), raw dispatch overhead vs a
+//! direct in-thread solve, and the blocked multi-RHS sweep
+//! (`--block-rhs` runs only that sweep): 16-RHS same-matrix batches solved
+//! by one `lsqr_block` vs the per-item loop, reporting solves/sec and the
+//! speedup ratio.
 
 use std::time::Duration;
 
 use snsolve::bench_harness::report::Table;
 use snsolve::coordinator::batcher::BatcherConfig;
+use snsolve::coordinator::metrics::Metrics;
 use snsolve::coordinator::{Service, ServiceConfig, SolveRequest, SolverChoice};
 use snsolve::linalg::{DenseMatrix, Matrix};
 use snsolve::rng::{GaussianSource, Xoshiro256pp};
 use snsolve::solvers::saa::SaaSolver;
 use snsolve::solvers::Solver;
 
+/// Run `requests` same-matrix SAA solves through a 1-worker service with
+/// 16-deep batches; returns (wall seconds, blocked-RHS count).
+fn run_block_config(
+    a: &DenseMatrix,
+    b: &[f64],
+    requests: usize,
+    block_rhs: bool,
+) -> (f64, u64) {
+    let mut cfg = ServiceConfig {
+        workers: 1,
+        queue_capacity: 1024,
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(500) },
+        ..Default::default()
+    };
+    cfg.worker.block_rhs = block_rhs;
+    let svc = Service::start(cfg);
+    let id = svc.register_matrix(Matrix::Dense(a.clone()));
+    // Warm the factor cache outside the timed window.
+    svc.solve_blocking(SolveRequest {
+        matrix: id,
+        rhs: b.to_vec(),
+        solver: SolverChoice::Saa,
+        tol: 1e-10,
+        deadline_us: 0,
+    })
+    .expect("warmup")
+    .result
+    .expect("warmup solution");
+    let blocked_before = Metrics::get(&svc.metrics().blocked_rhs);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            svc.submit(SolveRequest {
+                matrix: id,
+                rhs: b.to_vec(),
+                solver: SolverChoice::Saa,
+                tol: 1e-10,
+                deadline_us: 0,
+            })
+            .expect("submit")
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("resp").result.expect("solution");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // Delta over the warmup so the column counts only timed requests.
+    let blocked = Metrics::get(&svc.metrics().blocked_rhs) - blocked_before;
+    svc.shutdown();
+    (wall, blocked)
+}
+
+/// The `--block-rhs` sweep: blocked multi-RHS batches vs the per-item loop.
+fn block_rhs_sweep(a: &DenseMatrix, b: &[f64], requests: usize) {
+    let mut table = Table::new(
+        "coordinator — blocked multi-RHS (16-deep same-matrix batches)",
+        &["config", "requests", "wall_s", "solves_per_s", "blocked_rhs"],
+    );
+    let mut rates = Vec::new();
+    for block in [false, true] {
+        let (wall, blocked) = run_block_config(a, b, requests, block);
+        let rate = requests as f64 / wall;
+        rates.push(rate);
+        table.row(vec![
+            if block { "block-rhs=on (lsqr_block)" } else { "block-rhs=off (per-item)" }.into(),
+            requests.to_string(),
+            format!("{wall:.3}"),
+            format!("{rate:.1}"),
+            blocked.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "block-rhs speedup: {:.2}x solves/sec over the per-item loop (16-RHS batches)",
+        rates[1] / rates[0]
+    );
+    let _ = table.save("coordinator_block_rhs");
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let only_block = argv.iter().any(|a| a == "--block-rhs");
     let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let (m, n, requests) = if quick { (2048, 64, 60) } else { (8192, 128, 200) };
     let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(5));
     let a = DenseMatrix::gaussian(m, n, &mut g);
     let b = a.matvec(&g.gaussian_vec(n));
+
+    if only_block {
+        block_rhs_sweep(&a, &b, requests);
+        return;
+    }
 
     let mut table = Table::new(
         "coordinator — serving throughput and dispatch overhead",
@@ -109,4 +199,6 @@ fn main() {
 
     println!("{}", table.render());
     let _ = table.save("coordinator_throughput");
+
+    block_rhs_sweep(&a, &b, requests);
 }

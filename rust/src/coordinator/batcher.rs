@@ -176,4 +176,66 @@ mod tests {
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending(), 0);
     }
+
+    #[test]
+    fn flush_is_fifo_within_key() {
+        // The blocked multi-RHS path pairs results back to requests by
+        // position, so submission order must survive every flush path.
+        let cfg = BatcherConfig { max_batch: 5, max_wait: Duration::from_millis(1) };
+        let mut b = Batcher::new(cfg);
+        let t = Instant::now();
+        for item in ["a", "b", "c"] {
+            assert!(b.offer(key(1), item, t).is_none());
+        }
+        let due = b.flush_due(t + Duration::from_millis(2));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].items, vec!["a", "b", "c"]);
+
+        // Size-triggered flush preserves order too.
+        let full = ["d", "e", "f", "g", "h"]
+            .iter()
+            .find_map(|&item| b.offer(key(1), item, t))
+            .expect("fifth offer fills the batch");
+        assert_eq!(full.items, vec!["d", "e", "f", "g", "h"]);
+    }
+
+    #[test]
+    fn single_item_age_flush_is_a_batch() {
+        // A lone request that ages out still flushes as a (k=1) batch — it
+        // routes through Worker::execute_batch like any other flush.
+        let cfg = BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(3) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        b.offer(key(9), "solo", t0);
+        let due = b.flush_due(t0 + Duration::from_millis(4));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].key, key(9));
+        assert_eq!(due[0].items, vec!["solo"]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn interleaved_keys_never_cross_contaminate() {
+        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(10) };
+        let mut b = Batcher::new(cfg);
+        let t = Instant::now();
+        // Interleave three keys; key 1 fills first.
+        assert!(b.offer(key(1), (1, 'a'), t).is_none());
+        assert!(b.offer(key(2), (2, 'a'), t).is_none());
+        assert!(b.offer(key(3), (3, 'a'), t).is_none());
+        assert!(b.offer(key(1), (1, 'b'), t).is_none());
+        assert!(b.offer(key(2), (2, 'b'), t).is_none());
+        let full = b.offer(key(1), (1, 'c'), t).expect("key 1 full");
+        assert_eq!(full.key, key(1));
+        assert_eq!(full.items, vec![(1, 'a'), (1, 'b'), (1, 'c')]);
+        // The other groups are intact, in order, under their own keys.
+        let rest = b.flush_due(t + Duration::from_millis(20));
+        assert_eq!(rest.len(), 2);
+        for batch in rest {
+            let expect_id = batch.key.matrix.0 as i32;
+            let expect: Vec<(i32, char)> = vec![(expect_id, 'a'), (expect_id, 'b')];
+            assert_eq!(batch.items, expect, "key {expect_id}");
+        }
+        assert_eq!(b.pending(), 0);
+    }
 }

@@ -96,6 +96,10 @@ pub struct Metrics {
     pub native_dispatches: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Batches a worker solved as one blocked multi-RHS LSQR.
+    pub blocked_batches: AtomicU64,
+    /// Right-hand sides solved through the blocked path (per-RHS count).
+    pub blocked_rhs: AtomicU64,
     pub factor_cache_hits: AtomicU64,
     pub factor_cache_misses: AtomicU64,
     pub queue_latency: LatencyHistogram,
@@ -137,7 +141,7 @@ impl Metrics {
         format!(
             "submitted={} completed={} failed={} rejected={} deadline_missed={}\n\
              dispatch: pjrt={} native={} | batches={} mean_batch={:.2} \
-             factor_cache hit={} miss={}\n\
+             blocked_batches={} blocked_rhs={} factor_cache hit={} miss={}\n\
              queue_us:  n={} mean={:.0} p50={} p99={} max={}\n\
              solve_us:  mean={:.0} p50={} p99={} max={}\n\
              e2e_us:    mean={:.0} p50={} p99={} max={}",
@@ -150,6 +154,8 @@ impl Metrics {
             Self::get(&self.native_dispatches),
             Self::get(&self.batches),
             self.mean_batch_size(),
+            Self::get(&self.blocked_batches),
+            Self::get(&self.blocked_rhs),
             Self::get(&self.factor_cache_hits),
             Self::get(&self.factor_cache_misses),
             qc,

@@ -10,8 +10,8 @@ use crate::coordinator::batcher::{Batch, BatchKey, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::{BoundedQueue, PopError, PushError};
 use crate::coordinator::registry::{MatrixId, MatrixRegistry};
-use crate::coordinator::router::{Router, RouterConfig};
-use crate::coordinator::worker::{WorkerConfig, WorkerContext};
+use crate::coordinator::router::{Route, Router, RouterConfig};
+use crate::coordinator::worker::{BatchItem, WorkerConfig, WorkerContext};
 use crate::coordinator::{
     ExecutedOn, RequestId, ServiceError, SolveRequest, SolveResponse,
 };
@@ -286,11 +286,13 @@ fn worker_loop(
             Err(PopError::TimedOut) => continue,
             Err(PopError::Closed) => return,
         };
+        let key = batch.key;
+
+        // Deadline checks up front; survivors drain into blocked solves.
+        let mut live: Vec<(Pending, u64)> = Vec::new();
         for p in batch.items {
             let queue_us = p.submitted.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
-
-            // Deadline check before burning CPU.
             if p.req.deadline_us > 0 && queue_us > p.req.deadline_us {
                 Metrics::inc(&metrics.deadline_missed);
                 Metrics::inc(&metrics.failed);
@@ -303,28 +305,57 @@ fn worker_loop(
                 });
                 continue;
             }
+            live.push((p, queue_us));
+        }
+        if live.is_empty() {
+            continue;
+        }
 
-            let route = match registry.get(p.req.matrix) {
-                Some(a) => router.route(&a, p.req.solver, p.req.tol),
-                None => crate::coordinator::router::Route::Native,
+        // A batch shares matrix + solver, but routes can differ per item
+        // (tolerance-dependent PJRT eligibility): group by route and hand
+        // each group to the worker as one blocked multi-RHS solve.
+        let matrix = registry.get(key.matrix);
+        let mut route_groups: Vec<(Route, Vec<usize>)> = Vec::new();
+        for (i, (p, _)) in live.iter().enumerate() {
+            let route = match &matrix {
+                Some(a) => router.route(a, p.req.solver, p.req.tol),
+                None => Route::Native,
             };
-            let t0 = Instant::now();
-            let (result, executed_on) =
-                ctx.execute(&route, p.req.matrix, &p.req.rhs, p.req.solver, p.req.tol);
-            let solve_us = t0.elapsed().as_micros() as u64;
-            metrics.solve_latency.record(solve_us);
-            metrics.e2e_latency.record(queue_us + solve_us);
-            match &result {
-                Ok(_) => Metrics::inc(&metrics.completed),
-                Err(_) => Metrics::inc(&metrics.failed),
+            match route_groups.iter_mut().find(|(r, _)| *r == route) {
+                Some((_, idxs)) => idxs.push(i),
+                None => route_groups.push((route, vec![i])),
             }
-            let _ = p.responder.send(SolveResponse {
-                id: p.id,
-                result,
-                executed_on,
-                queue_us,
-                solve_us,
-            });
+        }
+
+        for (route, idxs) in route_groups {
+            let bitems: Vec<BatchItem> = idxs
+                .iter()
+                .map(|&i| BatchItem {
+                    rhs: std::mem::take(&mut live[i].0.req.rhs),
+                    tol: live[i].0.req.tol,
+                })
+                .collect();
+            let t0 = Instant::now();
+            let results = ctx.execute_batch(&route, key.matrix, key.solver, &bitems);
+            // The group solves as one blocked operation; its wall time is
+            // every member's solve latency.
+            let solve_us = t0.elapsed().as_micros() as u64;
+            for (&i, (result, executed_on)) in idxs.iter().zip(results) {
+                let (p, queue_us) = &live[i];
+                metrics.solve_latency.record(solve_us);
+                metrics.e2e_latency.record(*queue_us + solve_us);
+                match &result {
+                    Ok(_) => Metrics::inc(&metrics.completed),
+                    Err(_) => Metrics::inc(&metrics.failed),
+                }
+                let _ = p.responder.send(SolveResponse {
+                    id: p.id,
+                    result,
+                    executed_on,
+                    queue_us: *queue_us,
+                    solve_us,
+                });
+            }
         }
     }
 }

@@ -15,7 +15,7 @@ use crate::linalg::qr::{qr_compact, QrCompact};
 use crate::linalg::{norms, triangular, DenseMatrix, LinearOperator, Matrix};
 use crate::runtime::{Engine, Tensor};
 use crate::sketch::{CountSketch, SketchOperator};
-use crate::solvers::lsqr::{lsqr, LsqrConfig};
+use crate::solvers::lsqr::{lsqr_block, LsqrConfig};
 use crate::solvers::saa::SaaSolver;
 use crate::solvers::{Solution, Solver};
 
@@ -54,6 +54,12 @@ pub struct WorkerConfig {
     /// workers should set `threads ≈ cores / workers` (per-worker pools
     /// are a ROADMAP item).
     pub threads: usize,
+    /// Solve a flushed same-matrix batch as one blocked multi-RHS LSQR
+    /// ([`crate::solvers::lsqr::lsqr_block`]) instead of a per-item loop.
+    /// Per-RHS results are identical either way (the blocked kernels are
+    /// bitwise-per-column equivalents); `false` restores the per-item loop
+    /// — kept as the baseline for `coordinator_throughput --block-rhs`.
+    pub block_rhs: bool,
 }
 
 impl Default for WorkerConfig {
@@ -65,8 +71,18 @@ impl Default for WorkerConfig {
             lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() },
             factor_cache_cap: 4,
             threads: 0,
+            block_rhs: true,
         }
     }
+}
+
+/// One request's payload inside a flushed batch handed to
+/// [`WorkerContext::execute_batch`] (the batch shares matrix and solver;
+/// tolerance stays per-request).
+#[derive(Debug)]
+pub struct BatchItem {
+    pub rhs: Vec<f64>,
+    pub tol: f64,
 }
 
 /// A worker execution context. `!Send` by design (owns the PJRT engine);
@@ -157,6 +173,90 @@ impl WorkerContext {
         }
     }
 
+    /// Execute a flushed same-key batch, returning one result per item in
+    /// submission order.
+    ///
+    /// The native route drains the whole batch into **one blocked
+    /// multi-RHS solve** against the cached factorization ([`lsqr_block`]):
+    /// the RHS block is sketched in a single parallel pass, `Qᵀ` and the
+    /// triangular back-substitution are applied block-wise, and the LSQR
+    /// iterations share every operator apply across the batch. Per-item
+    /// results are identical to the per-item loop (the blocked kernels are
+    /// bitwise-per-column), so batching is invisible to clients.
+    ///
+    /// Shape validation is hoisted here per item: a malformed right-hand
+    /// side fails with its own `BadRequest` instead of poisoning the rest
+    /// of the batch. Items may carry different tolerances; the batch is
+    /// sub-grouped by tolerance (FIFO order preserved within each group).
+    ///
+    /// PJRT-routed batches (single-RHS executables) and configurations with
+    /// `block_rhs = false` fall back to the per-item loop.
+    pub fn execute_batch(
+        &mut self,
+        route: &Route,
+        matrix_id: MatrixId,
+        solver: SolverChoice,
+        items: &[BatchItem],
+    ) -> Vec<(Result<Solution, ServiceError>, ExecutedOn)> {
+        let use_block = self.config.block_rhs
+            && !(matches!(route, Route::Artifact(_)) && self.engine.is_some());
+        if !use_block {
+            return items
+                .iter()
+                .map(|it| self.execute(route, matrix_id, &it.rhs, solver, it.tol))
+                .collect();
+        }
+        let a = match self.registry.get(matrix_id) {
+            Some(a) => a,
+            None => {
+                return items
+                    .iter()
+                    .map(|_| (Err(ServiceError::UnknownMatrix(matrix_id.0)), ExecutedOn::Native))
+                    .collect()
+            }
+        };
+        let m = a.rows();
+        let mut out: Vec<Option<(Result<Solution, ServiceError>, ExecutedOn)>> = items
+            .iter()
+            .map(|it| {
+                if it.rhs.len() != m {
+                    Some((
+                        Err(ServiceError::BadRequest(format!(
+                            "rhs has {} entries, matrix has {m} rows",
+                            it.rhs.len()
+                        ))),
+                        ExecutedOn::Native,
+                    ))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        // Sub-group the valid items by tolerance bits, FIFO within a group.
+        let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+        for (i, slot) in out.iter().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let bits = items[i].tol.to_bits();
+            match groups.iter_mut().find(|(b, _)| *b == bits) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((bits, vec![i])),
+            }
+        }
+        for (bits, idxs) in groups {
+            let tol = f64::from_bits(bits);
+            let solved = self.solve_block_native(matrix_id, &a, items, &idxs, solver, tol);
+            Metrics::add(&self.metrics.native_dispatches, idxs.len() as u64);
+            Metrics::inc(&self.metrics.blocked_batches);
+            Metrics::add(&self.metrics.blocked_rhs, idxs.len() as u64);
+            for (&i, res) in idxs.iter().zip(solved) {
+                out[i] = Some((res, ExecutedOn::Native));
+            }
+        }
+        out.into_iter().map(|o| o.expect("every batch item resolved")).collect()
+    }
+
     // ---------------- native path with factor reuse ----------------------
 
     fn factor_for(&mut self, id: MatrixId, a: &Matrix) -> Result<(), ServiceError> {
@@ -174,8 +274,10 @@ impl WorkerContext {
         let qr = qr_compact(&b_sk).map_err(|e| ServiceError::Solver(e.to_string()))?;
         let r = qr.r();
         let y = match a {
+            // Row-parallel right-solve (bitwise identical to the serial
+            // path, so cached factors agree across pool sizes).
             Matrix::Dense(ad) => Some(
-                triangular::right_solve_upper(ad, &r)
+                triangular::right_solve_upper_multi(ad, &r)
                     .map_err(|e| ServiceError::Solver(e.to_string()))?,
             ),
             Matrix::Csr(_) => None,
@@ -197,79 +299,146 @@ impl WorkerContext {
         solver: SolverChoice,
         tol: f64,
     ) -> Result<Solution, ServiceError> {
+        // A single request is the k = 1 column of the blocked path — the
+        // blocked kernels are bitwise-per-column equivalents of the vector
+        // kernels (pinned by tests/block_solve_properties.rs), so there is
+        // exactly one native solve implementation to keep correct.
+        let items = [BatchItem { rhs: rhs.to_vec(), tol }];
+        self.solve_block_native(id, a, &items, &[0], solver, tol)
+            .pop()
+            .expect("one item in, one result out")
+    }
+
+    /// Blocked native solve of one tolerance group (`idxs` into `items`).
+    /// This is **the** native solve implementation: single requests run it
+    /// with k = 1 (via [`WorkerContext::execute_native`]), so the per-RHS
+    /// equivalence of batched and solo solves is structural, not maintained
+    /// by hand.
+    fn solve_block_native(
+        &mut self,
+        id: MatrixId,
+        a: &Matrix,
+        items: &[BatchItem],
+        idxs: &[usize],
+        solver: SolverChoice,
+        tol: f64,
+    ) -> Vec<Result<Solution, ServiceError>> {
+        let k = idxs.len();
+        let (m, n) = a.shape();
+        let mut rhs_block = DenseMatrix::zeros(k, m);
+        for (r, &i) in idxs.iter().enumerate() {
+            rhs_block.row_mut(r).copy_from_slice(&items[i].rhs);
+        }
         match solver {
             SolverChoice::Lsqr => {
                 let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
-                let res = lsqr(a.as_operator(), rhs, None, &cfg);
-                Ok(Solution {
-                    x: res.x,
-                    iterations: res.itn,
-                    resnorm: res.r1norm.abs(),
-                    arnorm: res.arnorm,
-                    converged: res.istop.converged(),
-                    fallback_used: false,
-                    residual_history: res.history,
-                })
+                lsqr_block(a.as_operator(), &rhs_block, None, &cfg)
+                    .into_iter()
+                    .map(|res| {
+                        Ok(Solution {
+                            x: res.x,
+                            iterations: res.itn,
+                            resnorm: res.r1norm.abs(),
+                            arnorm: res.arnorm,
+                            converged: res.istop.converged(),
+                            fallback_used: false,
+                            residual_history: res.history,
+                        })
+                    })
+                    .collect()
             }
             SolverChoice::Saa | SolverChoice::SketchOnly => {
-                self.factor_for(id, a)?;
+                if let Err(e) = self.factor_for(id, a) {
+                    return (0..k).map(|_| Err(e.clone())).collect();
+                }
                 let entry = self.cache.get(&id).expect("just inserted");
-                // b-dependent part only: c = S·b, z0 = Qᵀc.
-                let c = entry.sketch.apply_vec(rhs);
-                let z0 = entry.qr.q_transpose_vec(&c);
+                // b-dependent part only, blocked: C = S·B, Z₀ = Qᵀ·C —
+                // one parallel pass each for the whole batch.
+                let c_block = entry.sketch.apply_mat(&rhs_block);
+                let z0_block = entry.qr.q_transpose_mat(&c_block);
                 if solver == SolverChoice::SketchOnly {
-                    let x = triangular::solve_upper(&entry.r, &z0)
-                        .map_err(|e| ServiceError::Solver(e.to_string()))?;
-                    let ax = a.as_operator().apply_vec(&x);
-                    let rn = norms::nrm2(
-                        &ax.iter().zip(rhs.iter()).map(|(p, q)| p - q).collect::<Vec<_>>(),
-                    );
-                    return Ok(Solution {
-                        x,
-                        iterations: 0,
-                        resnorm: rn,
-                        arnorm: f64::NAN,
-                        converged: true,
-                        fallback_used: false,
-                        residual_history: Vec::new(),
-                    });
+                    let x_block = match triangular::solve_upper_block(&entry.r, &z0_block) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            let err = ServiceError::Solver(e.to_string());
+                            return (0..k).map(|_| Err(err.clone())).collect();
+                        }
+                    };
+                    let mut ax = DenseMatrix::zeros(k, m);
+                    a.as_operator().apply_mat(&x_block, &mut ax);
+                    let mut out = Vec::with_capacity(k);
+                    for r in 0..k {
+                        let diff: Vec<f64> = ax
+                            .row(r)
+                            .iter()
+                            .zip(rhs_block.row(r).iter())
+                            .map(|(p, q)| p - q)
+                            .collect();
+                        out.push(Ok(Solution {
+                            x: x_block.row(r).to_vec(),
+                            iterations: 0,
+                            resnorm: norms::nrm2(&diff),
+                            arnorm: f64::NAN,
+                            converged: true,
+                            fallback_used: false,
+                            residual_history: Vec::new(),
+                        }));
+                    }
+                    return out;
                 }
                 let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
-                let res = match (&entry.y, a) {
-                    (Some(y), _) => lsqr(y, rhs, Some(&z0), &cfg),
+                let results = match (&entry.y, a) {
+                    (Some(y), _) => lsqr_block(y, &rhs_block, Some(&z0_block), &cfg),
                     (None, Matrix::Csr(ac)) => {
                         let op = PreconditionedOperator::new(ac, &entry.r);
-                        lsqr(&op, rhs, Some(&z0), &cfg)
+                        lsqr_block(&op, &rhs_block, Some(&z0_block), &cfg)
                     }
                     (None, Matrix::Dense(ad)) => {
                         let op = PreconditionedOperator::new(ad, &entry.r);
-                        lsqr(&op, rhs, Some(&z0), &cfg)
+                        lsqr_block(&op, &rhs_block, Some(&z0_block), &cfg)
                     }
                 };
-                if !res.istop.converged() {
-                    // Algorithm 1 fallback: rare; run the full (uncached)
-                    // SAA solver which owns the perturbation logic.
-                    let saa = SaaSolver::new(crate::solvers::saa::SaaConfig {
-                        lsqr: cfg,
-                        seed: self.config.seed,
-                        sketch_factor: self.config.sketch_factor,
-                        ..Default::default()
-                    });
-                    return saa
-                        .solve(a, rhs)
-                        .map_err(|e| ServiceError::Solver(e.to_string()));
+                // One blocked back-substitution for every column; columns
+                // whose LSQR did not converge take the solo fallback below.
+                let mut zx = DenseMatrix::zeros(k, n);
+                for (r, res) in results.iter().enumerate() {
+                    zx.row_mut(r).copy_from_slice(&res.x);
                 }
-                let x = triangular::solve_upper(&entry.r, &res.x)
-                    .map_err(|e| ServiceError::Solver(e.to_string()))?;
-                Ok(Solution {
-                    x,
-                    iterations: res.itn,
-                    resnorm: res.r1norm.abs(),
-                    arnorm: res.arnorm,
-                    converged: true,
-                    fallback_used: false,
-                    residual_history: res.history,
-                })
+                let x_block = match triangular::solve_upper_block(&entry.r, &zx) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        let err = ServiceError::Solver(e.to_string());
+                        return (0..k).map(|_| Err(err.clone())).collect();
+                    }
+                };
+                let mut out = Vec::with_capacity(k);
+                for (r, res) in results.into_iter().enumerate() {
+                    if !res.istop.converged() {
+                        // Algorithm 1 fallback: rare; identical to the
+                        // single-vector path's uncached SAA solve.
+                        let saa = SaaSolver::new(crate::solvers::saa::SaaConfig {
+                            lsqr: cfg.clone(),
+                            seed: self.config.seed,
+                            sketch_factor: self.config.sketch_factor,
+                            ..Default::default()
+                        });
+                        out.push(
+                            saa.solve(a, &items[idxs[r]].rhs)
+                                .map_err(|e| ServiceError::Solver(e.to_string())),
+                        );
+                        continue;
+                    }
+                    out.push(Ok(Solution {
+                        x: x_block.row(r).to_vec(),
+                        iterations: res.itn,
+                        resnorm: res.r1norm.abs(),
+                        arnorm: res.arnorm,
+                        converged: true,
+                        fallback_used: false,
+                        residual_history: res.history,
+                    }));
+                }
+                out
             }
         }
     }
@@ -425,6 +594,87 @@ mod tests {
         assert!(matches!(r, Err(ServiceError::UnknownMatrix(999))));
         let (r2, _) = ctx.execute(&Route::Native, id, &[1.0, 2.0], SolverChoice::Saa, 1e-6);
         assert!(matches!(r2, Err(ServiceError::BadRequest(_))));
+    }
+
+    #[test]
+    fn execute_batch_matches_per_item_results() {
+        let (mut ctx, _reg, metrics, id, x_true, b) = setup(4);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(90));
+        let mut noisy = b.clone();
+        for bi in noisy.iter_mut() {
+            *bi += 0.1 * g.next_gaussian();
+        }
+        let items = vec![
+            BatchItem { rhs: b.clone(), tol: 1e-10 },
+            BatchItem { rhs: noisy.clone(), tol: 1e-10 },
+            BatchItem { rhs: b.clone(), tol: 1e-8 }, // second tol group
+        ];
+        let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
+        assert_eq!(out.len(), 3);
+        assert!(Metrics::get(&metrics.blocked_rhs) >= 3);
+        // A separate context (same seed => same sketch) solving one-by-one
+        // must produce the same answers.
+        let (mut solo_ctx, _r2, _m2, _id2, _xt2, _b2) = setup(4);
+        for (it, (res, on)) in items.iter().zip(&out) {
+            assert_eq!(*on, ExecutedOn::Native);
+            let x = res.as_ref().unwrap().x.clone();
+            let (solo, _) = solo_ctx.execute(&Route::Native, id, &it.rhs, SolverChoice::Saa, it.tol);
+            assert_eq!(x, solo.unwrap().x);
+        }
+        let err = norms::nrm2_diff(&out[0].0.as_ref().unwrap().x, &x_true) / norms::nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn malformed_item_fails_alone_in_batch() {
+        // Hoisted shape validation: a bad RHS inside a batch must return a
+        // per-item BadRequest without poisoning its batch-mates.
+        let (mut ctx, _reg, _m, id, x_true, b) = setup(4);
+        let items = vec![
+            BatchItem { rhs: b.clone(), tol: 1e-10 },
+            BatchItem { rhs: vec![1.0, 2.0], tol: 1e-10 }, // wrong length
+            BatchItem { rhs: b.clone(), tol: 1e-10 },
+        ];
+        let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
+        assert!(matches!(out[1].0, Err(ServiceError::BadRequest(_))));
+        for j in [0usize, 2] {
+            let sol = out[j].0.as_ref().unwrap();
+            let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+            assert!(err < 1e-8, "item {j} err {err}");
+        }
+    }
+
+    #[test]
+    fn execute_batch_per_item_loop_when_disabled() {
+        let registry = Arc::new(MatrixRegistry::new());
+        let metrics = Arc::new(Metrics::new());
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(91));
+        let a = DenseMatrix::gaussian(120, 8, &mut g);
+        let x_true = g.gaussian_vec(8);
+        let b = a.matvec(&x_true);
+        let id = registry.register(Matrix::Dense(a));
+        let mut ctx = WorkerContext::new(
+            WorkerConfig { block_rhs: false, ..Default::default() },
+            registry,
+            metrics.clone(),
+        );
+        let items =
+            vec![BatchItem { rhs: b.clone(), tol: 1e-10 }, BatchItem { rhs: b, tol: 1e-10 }];
+        let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
+        assert_eq!(Metrics::get(&metrics.blocked_rhs), 0);
+        for (res, _) in &out {
+            let sol = res.as_ref().unwrap();
+            let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+            assert!(err < 1e-8);
+        }
+    }
+
+    #[test]
+    fn execute_batch_unknown_matrix_errors_every_item() {
+        let (mut ctx, _reg, _m, _id, _xt, b) = setup(4);
+        let items = vec![BatchItem { rhs: b.clone(), tol: 1e-8 }];
+        let out = ctx.execute_batch(&Route::Native, MatrixId(4242), SolverChoice::Saa, &items);
+        assert!(matches!(out[0].0, Err(ServiceError::UnknownMatrix(4242))));
     }
 
     #[test]

@@ -86,6 +86,14 @@ impl LinearOperator for Matrix {
     fn apply_transpose(&self, x: &[f64], y: &mut [f64]) {
         self.as_operator().apply_transpose(x, y)
     }
+
+    fn apply_mat(&self, x: &DenseMatrix, y: &mut DenseMatrix) {
+        self.as_operator().apply_mat(x, y)
+    }
+
+    fn apply_transpose_mat(&self, x: &DenseMatrix, y: &mut DenseMatrix) {
+        self.as_operator().apply_transpose_mat(x, y)
+    }
 }
 
 impl From<DenseMatrix> for Matrix {

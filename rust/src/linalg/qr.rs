@@ -148,6 +148,37 @@ impl QrCompact {
         y
     }
 
+    /// Apply `Qᵀ` to a row-stored block of k length-s vectors (`c` is k×s),
+    /// returning the k×n block of economy parts — the batched
+    /// `z₀ = Qᵀc` of Algorithm 1 step 5, one row per right-hand side.
+    ///
+    /// Rows shard across the worker pool; row r is bitwise identical to
+    /// [`QrCompact::q_transpose_vec`]`(c.row(r))` at any thread count,
+    /// which keeps the blocked serving path per-RHS equivalent to the
+    /// single-vector path.
+    pub fn q_transpose_mat(&self, c: &DenseMatrix) -> DenseMatrix {
+        let (n, s) = self.vrt.shape();
+        assert_eq!(c.cols(), s, "q_transpose_mat: block has {} cols, need {s}", c.cols());
+        let k = c.rows();
+        let mut out = DenseMatrix::zeros(k, n);
+        if k == 0 || n == 0 {
+            return out;
+        }
+        let work = k.saturating_mul(s.saturating_mul(n));
+        let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(k, 1)
+        };
+        crate::parallel::for_each_row_block(out.data_mut(), k, n, threads, |_, rows, block| {
+            for (local, r) in rows.enumerate() {
+                let z = self.q_transpose_vec(c.row(r));
+                block[local * n..(local + 1) * n].copy_from_slice(&z);
+            }
+        });
+        out
+    }
+
     /// Apply `Q` to a length-n vector, returning length s (`Q z`).
     pub fn q_vec(&self, z: &[f64]) -> Vec<f64> {
         let (n, s) = self.vrt.shape();
@@ -340,6 +371,21 @@ mod tests {
         for (u, v) in y_fast.iter().zip(y_ref.iter()) {
             assert!((u - v).abs() < 1e-11);
         }
+    }
+
+    #[test]
+    fn q_transpose_mat_matches_per_row_bitwise() {
+        let a = rand_matrix(48, 11, 15);
+        let compact = qr_compact(&a).unwrap();
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(16));
+        let c = DenseMatrix::gaussian(5, 48, &mut g);
+        let z = compact.q_transpose_mat(&c);
+        assert_eq!(z.shape(), (5, 11));
+        for r in 0..5 {
+            assert_eq!(z.row(r), &compact.q_transpose_vec(c.row(r))[..], "row {r}");
+        }
+        let empty = DenseMatrix::zeros(0, 48);
+        assert_eq!(compact.q_transpose_mat(&empty).rows(), 0);
     }
 
     #[test]

@@ -114,15 +114,25 @@ pub fn right_solve_upper_inplace(a: &mut DenseMatrix, r: &DenseMatrix) {
     let n = r.rows();
     debug_assert_eq!(a.cols(), n);
     let m = a.rows();
+    let inv_diag: Vec<f64> = (0..n).map(|j| 1.0 / r[(j, j)]).collect();
+    right_solve_rows(a.data_mut(), m, r, &inv_diag);
+}
+
+/// The serial kernel shared by [`right_solve_upper_inplace`] and
+/// [`right_solve_upper_multi`]: transform `rows` contiguous rows of a
+/// row-major block. Each row is independent, so any row partitioning is
+/// bitwise identical to the full serial pass.
+fn right_solve_rows(block: &mut [f64], rows: usize, r: &DenseMatrix, inv_diag: &[f64]) {
+    let n = r.rows();
+    debug_assert_eq!(block.len(), rows * n);
     // y_row Rᵀ-solve: y[j] = (a[j] - sum_{k<j} y[k] R[k,j]) / R[j,j]
     // Process column j in increasing order; vectorize over rows in blocks.
-    let inv_diag: Vec<f64> = (0..n).map(|j| 1.0 / r[(j, j)]).collect();
-    for bi in (0..m).step_by(64) {
-        let bend = (bi + 64).min(m);
+    for bi in (0..rows).step_by(64) {
+        let bend = (bi + 64).min(rows);
         for j in 0..n {
             // gather R column j above diagonal once
             for i in bi..bend {
-                let row = a.row_mut(i);
+                let row = &mut block[i * n..(i + 1) * n];
                 let mut s = row[j];
                 for k in 0..j {
                     s -= row[k] * r[(k, j)];
@@ -131,6 +141,128 @@ pub fn right_solve_upper_inplace(a: &mut DenseMatrix, r: &DenseMatrix) {
             }
         }
     }
+}
+
+/// Row-parallel `Y = A R⁻¹` — the multithreaded version of
+/// [`right_solve_upper`] (the "solve half" of the ROADMAP's parallel QR +
+/// right-solve item). Rows of A are independent, so sharding them across
+/// the pool at 64-row (cache-block) aligned boundaries is **bitwise
+/// identical** to the serial path at any thread count.
+pub fn right_solve_upper_multi(a: &DenseMatrix, r: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = check_square(r)?;
+    if a.cols() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "right_solve_upper_multi: A is {}x{}, R is {n}x{n}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    for i in 0..n {
+        if r[(i, i)].abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("right_solve_upper_multi: R[{i},{i}] = 0")));
+        }
+    }
+    let m = a.rows();
+    let mut y = a.clone();
+    let inv_diag: Vec<f64> = (0..n).map(|j| 1.0 / r[(j, j)]).collect();
+    let work = m.saturating_mul(n.saturating_mul(n));
+    let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(m, 64)
+    };
+    let ranges = crate::parallel::partition_aligned(m, threads, 64);
+    crate::parallel::for_each_row_range(y.data_mut(), n, &ranges, |_, rows, block| {
+        right_solve_rows(block, rows.len(), r, &inv_diag);
+    });
+    Ok(y)
+}
+
+/// Solve `R xᵣ = bᵣ` for a row-stored block of k right-hand sides (`b` is
+/// k×n; row r holds RHS r) — back substitution, row-parallel over the k
+/// independent systems. Row r is bitwise identical to
+/// [`solve_upper`]`(r, b.row(r))` at any thread count.
+pub fn solve_upper_block(r: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = check_square(r)?;
+    if b.cols() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "solve_upper_block: R is {n}x{n}, block has {} cols",
+            b.cols()
+        )));
+    }
+    for i in 0..n {
+        if r[(i, i)].abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!("solve_upper_block: R[{i},{i}] = 0")));
+        }
+    }
+    let k = b.rows();
+    let mut x = b.clone();
+    if k == 0 || n == 0 {
+        return Ok(x);
+    }
+    let work = k.saturating_mul(n.saturating_mul(n));
+    let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(k, 1)
+    };
+    crate::parallel::for_each_row_block(x.data_mut(), k, n, threads, |_, _rows, block| {
+        for xr in block.chunks_mut(n) {
+            for i in (0..n).rev() {
+                let mut s = xr[i];
+                let row = r.row(i);
+                for j in i + 1..n {
+                    s -= row[j] * xr[j];
+                }
+                xr[i] = s / row[i];
+            }
+        }
+    });
+    Ok(x)
+}
+
+/// Solve `Rᵀ xᵣ = bᵣ` for a row-stored block of k right-hand sides —
+/// forward substitution against R's transpose, row-parallel. Row r is
+/// bitwise identical to [`solve_upper_transpose`]`(r, b.row(r))`.
+pub fn solve_upper_transpose_block(r: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = check_square(r)?;
+    if b.cols() != n {
+        return Err(LinalgError::DimensionMismatch(format!(
+            "solve_upper_transpose_block: R is {n}x{n}, block has {} cols",
+            b.cols()
+        )));
+    }
+    for i in 0..n {
+        if r[(i, i)].abs() <= SINGULAR_RTOL {
+            return Err(LinalgError::Singular(format!(
+                "solve_upper_transpose_block: R[{i},{i}] = 0"
+            )));
+        }
+    }
+    let k = b.rows();
+    let mut x = b.clone();
+    if k == 0 || n == 0 {
+        return Ok(x);
+    }
+    let work = k.saturating_mul(n.saturating_mul(n));
+    let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(k, 1)
+    };
+    crate::parallel::for_each_row_block(x.data_mut(), k, n, threads, |_, _rows, block| {
+        for xr in block.chunks_mut(n) {
+            for i in 0..n {
+                let row = r.row(i);
+                xr[i] /= row[i];
+                let xi = xr[i];
+                for j in i + 1..n {
+                    xr[j] -= row[j] * xi;
+                }
+            }
+        }
+    });
+    Ok(x)
 }
 
 fn check_square(m: &DenseMatrix) -> Result<usize> {
@@ -251,5 +383,54 @@ mod tests {
         assert!(right_solve_upper(&a, &r).is_err());
         let ns = DenseMatrix::zeros(3, 4);
         assert!(solve_upper(&ns, &[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn right_solve_multi_matches_serial_bitwise() {
+        // The parallel path must be bit-for-bit the serial one (the factor
+        // cache shares results across workers at different pool sizes).
+        let (m, n) = (331, 24);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(28));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let r = rand_upper(n, 29);
+        let serial = right_solve_upper(&a, &r).unwrap();
+        let multi = right_solve_upper_multi(&a, &r).unwrap();
+        assert_eq!(serial, multi);
+    }
+
+    #[test]
+    fn solve_upper_block_matches_per_row_bitwise() {
+        let (k, n) = (7, 19);
+        let r = rand_upper(n, 30);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(31));
+        let b = DenseMatrix::gaussian(k, n, &mut g);
+        let x = solve_upper_block(&r, &b).unwrap();
+        let xt = solve_upper_transpose_block(&r, &b).unwrap();
+        for j in 0..k {
+            assert_eq!(x.row(j), &solve_upper(&r, b.row(j)).unwrap()[..], "row {j}");
+            assert_eq!(
+                xt.row(j),
+                &solve_upper_transpose(&r, b.row(j)).unwrap()[..],
+                "transpose row {j}"
+            );
+        }
+        // Empty block is a no-op, not a panic.
+        let empty = DenseMatrix::zeros(0, n);
+        assert_eq!(solve_upper_block(&r, &empty).unwrap().rows(), 0);
+    }
+
+    #[test]
+    fn block_solvers_reject_singular_and_mismatch() {
+        let mut r = DenseMatrix::eye(3);
+        r[(1, 1)] = 0.0;
+        let b = DenseMatrix::zeros(2, 3);
+        assert!(matches!(solve_upper_block(&r, &b), Err(LinalgError::Singular(_))));
+        assert!(matches!(solve_upper_transpose_block(&r, &b), Err(LinalgError::Singular(_))));
+        assert!(matches!(right_solve_upper_multi(&b, &r), Err(LinalgError::Singular(_))));
+        let ok = DenseMatrix::eye(3);
+        let wide = DenseMatrix::zeros(2, 4);
+        assert!(solve_upper_block(&ok, &wide).is_err());
+        assert!(solve_upper_transpose_block(&ok, &wide).is_err());
+        assert!(right_solve_upper_multi(&wide, &ok).is_err());
     }
 }

@@ -214,4 +214,19 @@ mod tests {
         let c2 = op.apply_dense(&vm).into_vec();
         assert_eq!(c1, c2);
     }
+
+    #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        // The worker's batched path: one apply_mat over a k-RHS block must
+        // reproduce each per-request scatter exactly (the factor-cache
+        // serving equivalence rides on this).
+        let (s, m, k) = (12, 96, 5);
+        let op = CountSketch::new(s, m, 7);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(8));
+        let block = DenseMatrix::gaussian(k, m, &mut g);
+        let c = op.apply_mat(&block);
+        for r in 0..k {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
 }

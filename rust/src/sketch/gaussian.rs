@@ -173,6 +173,21 @@ mod tests {
     }
 
     #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        // Block spanning a ragged generator block boundary: each row of the
+        // k-RHS pass must equal its single-vector sketch exactly.
+        let (s, m, k) = (8, BLOCK + 19, 4);
+        let op = GaussianSketch::new(s, m, 13);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(14));
+        let block = DenseMatrix::gaussian(k, m, &mut g);
+        let c = op.apply_mat(&block);
+        assert_eq!(c.shape(), (k, s));
+        for r in 0..k {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn norm_preservation_single_vector() {
         // Johnson–Lindenstrauss-style check at generous tolerance.
         let (s, m) = (256, 2048);

@@ -52,6 +52,45 @@ pub trait SketchOperator: Send + Sync {
         self.apply_dense(&a).into_vec()
     }
 
+    /// Sketch a row-stored block of k vectors in one parallel pass:
+    /// `b` is k×m (row r = vector r), the result is k×s with
+    /// `out[r, :] = S·b[r, :]` — the batched right-hand-side sketch the
+    /// blocked serving path uses.
+    ///
+    /// Contract (asserted per operator and by `tests/parallel_determinism`):
+    /// row r is **bitwise identical** to the *serial* single-vector sketch
+    /// of row r, at any thread count — the rows shard across the worker
+    /// pool and each runs the single-vector kernel inside the (non-nesting)
+    /// pool region. For the sparse scatter operators and SRHT, whose
+    /// `apply_vec` is always serial, that makes a batched right-hand side
+    /// bitwise equal to its solo request; a *stand-alone* `apply_vec` call
+    /// on the dense block-stream operators (gaussian, uniform-dense) may
+    /// instead take their internally parallel reduction, which re-associates
+    /// sums and can differ from the serial kernel by ≤ 1e-12 relative.
+    fn apply_mat(&self, b: &DenseMatrix) -> DenseMatrix {
+        let m = self.input_dim();
+        let s = self.sketch_dim();
+        assert_eq!(b.cols(), m, "apply_mat: block has {} cols, S expects {m}", b.cols());
+        let k = b.rows();
+        let mut out = DenseMatrix::zeros(k, s);
+        if k == 0 {
+            return out;
+        }
+        let work = k.saturating_mul(m);
+        let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(k, 1)
+        };
+        crate::parallel::for_each_row_block(out.data_mut(), k, s, threads, |_, rows, block| {
+            for (local, r) in rows.enumerate() {
+                let c = self.apply_vec(b.row(r));
+                block[local * s..(local + 1) * s].copy_from_slice(&c);
+            }
+        });
+        out
+    }
+
     /// `B = S·A` dispatching on the matrix representation.
     fn apply_matrix(&self, a: &Matrix) -> DenseMatrix {
         match a {
@@ -233,6 +272,30 @@ mod tests {
             let c2 = op.apply_dense(&bm).into_vec();
             for (u, v) in c1.iter().zip(c2.iter()) {
                 assert!((u - v).abs() < 1e-12, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn apply_mat_matches_apply_vec_rows_all_operators() {
+        // The blocked-RHS contract: sketching a k-row block is bitwise the
+        // k single-vector sketches, for every operator family.
+        let (s, m) = (16, 128);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(68));
+        for k in [0usize, 1, 2, 5, 16] {
+            let block = DenseMatrix::gaussian(k, m, &mut g);
+            for (kind, _) in dense_cases() {
+                let op = build(kind, s, m, 515);
+                let c = op.apply_mat(&block);
+                assert_eq!(c.shape(), (k, s), "{}", kind.name());
+                for r in 0..k {
+                    assert_eq!(
+                        c.row(r),
+                        &op.apply_vec(block.row(r))[..],
+                        "{} row {r} of k={k}",
+                        kind.name()
+                    );
+                }
             }
         }
     }

@@ -194,6 +194,21 @@ mod tests {
     }
 
     #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        // Multi-target scatter (k nnz per column): the blocked pass must
+        // reproduce each single-vector apply exactly, including the
+        // zero-coefficient skip.
+        let op = SparseSignSketch::new(24, 80, 4, 3);
+        let mut g = crate::rng::GaussianSource::new(Xoshiro256pp::seed_from_u64(4));
+        let mut block = DenseMatrix::gaussian(6, 80, &mut g);
+        block.row_mut(2)[7] = 0.0; // exercise the vi == 0 skip
+        let c = op.apply_mat(&block);
+        for r in 0..6 {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn countsketch_is_k1_special_case_structurally() {
         let op = SparseSignSketch::new(16, 40, 1, 2);
         let s = op.materialize();

@@ -167,6 +167,21 @@ mod tests {
     }
 
     #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        // Non-power-of-two m exercises the per-row padded FWHT; each row of
+        // the block pass must equal its single-vector transform exactly.
+        let (s, m, k) = (16, 100, 5);
+        let op = SrhtSketch::new(s, m, 9);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(10));
+        let block = DenseMatrix::gaussian(k, m, &mut g);
+        let c = op.apply_mat(&block);
+        assert_eq!(c.shape(), (k, s));
+        for r in 0..k {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn energy_preserved_in_expectation() {
         let (s, m) = (64, 256);
         let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(8));

@@ -143,6 +143,19 @@ mod tests {
     }
 
     #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        let (s, m, k) = (6, BLOCK + 11, 3);
+        let op = UniformDenseSketch::new(s, m, 15);
+        let mut g = crate::rng::GaussianSource::new(Xoshiro256pp::seed_from_u64(16));
+        let block = DenseMatrix::gaussian(k, m, &mut g);
+        let c = op.apply_mat(&block);
+        assert_eq!(c.shape(), (k, s));
+        for r in 0..k {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn ragged_block() {
         let (s, m, n) = (6, BLOCK * 2 + 5, 2);
         let op = UniformDenseSketch::new(s, m, 9);

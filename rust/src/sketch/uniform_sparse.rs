@@ -216,6 +216,18 @@ mod tests {
     }
 
     #[test]
+    fn blocked_rhs_sketch_matches_per_vector() {
+        let op = UniformSparseSketch::new(20, 90, 0.1, 17);
+        let mut g = crate::rng::GaussianSource::new(Xoshiro256pp::seed_from_u64(18));
+        let block = DenseMatrix::gaussian(4, 90, &mut g);
+        let c = op.apply_mat(&block);
+        assert_eq!(c.shape(), (4, 20));
+        for r in 0..4 {
+            assert_eq!(c.row(r), &op.apply_vec(block.row(r))[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn density_clamped_to_give_nonempty_columns() {
         // density below 1/s is clamped so columns aren't all empty.
         let op = UniformSparseSketch::new(16, 100, 1e-9, 13);

@@ -9,6 +9,7 @@
 //! in the figures are attributable to the sketching, not the solver.
 
 use crate::linalg::norms::nrm2;
+use crate::linalg::DenseMatrix;
 use crate::linalg::LinearOperator;
 use crate::linalg::Matrix;
 
@@ -344,6 +345,361 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
     }
 }
 
+/// Per-column scalar state of the blocked iteration — exactly the locals of
+/// [`lsqr`], one copy per right-hand side.
+struct BlockCol {
+    alpha: f64,
+    beta: f64,
+    rhobar: f64,
+    phibar: f64,
+    bnorm: f64,
+    rnorm: f64,
+    r1norm: f64,
+    r2norm: f64,
+    anorm: f64,
+    acond: f64,
+    ddnorm: f64,
+    res2: f64,
+    xnorm: f64,
+    xxnorm: f64,
+    z: f64,
+    cs2: f64,
+    sn2: f64,
+    arnorm: f64,
+    istop: StopReason,
+    itn: usize,
+    done: bool,
+    history: Vec<f64>,
+}
+
+/// Blocked multi-RHS LSQR: solve `min ‖A xᵣ − bᵣ‖² + damp²‖xᵣ‖²` for the k
+/// right-hand sides stored as the rows of `b` (k×m; row r = RHS r), with
+/// optional per-RHS warm starts `x0` (k×n).
+///
+/// Each iteration performs **one** shared [`LinearOperator::apply_mat`] /
+/// [`LinearOperator::apply_transpose_mat`] over the still-active columns
+/// (GEMM-shaped: the operator streams through memory once for the whole
+/// block) while every column keeps its own α/β/ρ̄/φ̄ scalar recurrence and
+/// its own stopping tests. Columns that converge are masked out of
+/// subsequent applies and stop iterating — exactly as if they had been
+/// solved alone.
+///
+/// **Per-RHS equivalence contract** (pinned by
+/// `tests/block_solve_properties.rs`): because the block applies are
+/// bitwise identical per row to the single-vector applies, column r of the
+/// result — `x`, `istop`, *and* the iteration count — matches an
+/// independent `lsqr(a, b.row(r), x0.row(r), cfg)` call.
+pub fn lsqr_block<Op: LinearOperator + ?Sized>(
+    a: &Op,
+    b: &DenseMatrix,
+    x0: Option<&DenseMatrix>,
+    cfg: &LsqrConfig,
+) -> Vec<LsqrResult> {
+    let (m, n) = a.shape();
+    let k = b.rows();
+    assert_eq!(b.cols(), m, "lsqr_block: RHS block has {} cols, A is {m}x{n}", b.cols());
+    if k == 0 {
+        return Vec::new();
+    }
+    let iter_lim = cfg.iter_lim.unwrap_or(2 * n);
+    let eps = f64::EPSILON;
+    let ctol = if cfg.conlim > 0.0 { 1.0 / cfg.conlim } else { 0.0 };
+    let dampsq = cfg.damp * cfg.damp;
+
+    // --- initialization (identical to lsqr, vectorized over columns) -----
+    let mut x: DenseMatrix;
+    let mut u = b.clone();
+    let mut betas = vec![0.0f64; k];
+    match x0 {
+        Some(x0m) => {
+            assert_eq!(
+                x0m.shape(),
+                (k, n),
+                "lsqr_block: x0 block is {:?}, need ({k}, {n})",
+                x0m.shape()
+            );
+            x = x0m.clone();
+            let mut ax = DenseMatrix::zeros(k, m);
+            a.apply_mat(x0m, &mut ax);
+            for j in 0..k {
+                let urow = u.row_mut(j);
+                for (ui, &axi) in urow.iter_mut().zip(ax.row(j).iter()) {
+                    *ui -= axi;
+                }
+                betas[j] = nrm2(u.row(j));
+            }
+        }
+        None => {
+            x = DenseMatrix::zeros(k, n);
+            for j in 0..k {
+                betas[j] = nrm2(b.row(j));
+            }
+        }
+    }
+
+    let mut v = DenseMatrix::zeros(k, n);
+    let mut alphas = vec![0.0f64; k];
+    {
+        // One shared transpose apply for every column with β > 0; columns
+        // with β = 0 copy x (their u is zero — x0 already exact).
+        let pos: Vec<usize> = (0..k).filter(|&j| betas[j] > 0.0).collect();
+        for &j in &pos {
+            let inv = 1.0 / betas[j];
+            for ui in u.row_mut(j).iter_mut() {
+                *ui *= inv;
+            }
+        }
+        if !pos.is_empty() {
+            let mut ub = DenseMatrix::zeros(pos.len(), m);
+            for (bi, &j) in pos.iter().enumerate() {
+                ub.row_mut(bi).copy_from_slice(u.row(j));
+            }
+            let mut atu = DenseMatrix::zeros(pos.len(), n);
+            a.apply_transpose_mat(&ub, &mut atu);
+            for (bi, &j) in pos.iter().enumerate() {
+                v.row_mut(j).copy_from_slice(atu.row(bi));
+                alphas[j] = nrm2(v.row(j));
+            }
+        }
+        for j in 0..k {
+            if betas[j] > 0.0 {
+                continue;
+            }
+            v.row_mut(j).copy_from_slice(x.row(j));
+            alphas[j] = 0.0;
+        }
+        for j in 0..k {
+            if alphas[j] > 0.0 {
+                let inv = 1.0 / alphas[j];
+                for vi in v.row_mut(j).iter_mut() {
+                    *vi *= inv;
+                }
+            }
+        }
+    }
+    let mut w = v.clone();
+
+    let mut cols: Vec<BlockCol> = (0..k)
+        .map(|j| {
+            let bnorm = nrm2(b.row(j));
+            let (alpha, beta) = (alphas[j], betas[j]);
+            let arnorm = alpha * beta;
+            // arnorm == 0 is lsqr's early TrivialSolution return: b is in
+            // range of the warm start (or zero) — the column never iterates.
+            let (istop, done) = if arnorm == 0.0 {
+                (StopReason::TrivialSolution, true)
+            } else {
+                (StopReason::IterLimit, false)
+            };
+            BlockCol {
+                alpha,
+                beta,
+                rhobar: alpha,
+                phibar: beta,
+                bnorm,
+                rnorm: beta,
+                r1norm: beta,
+                r2norm: beta,
+                anorm: 0.0,
+                acond: 0.0,
+                ddnorm: 0.0,
+                res2: 0.0,
+                xnorm: 0.0,
+                xxnorm: 0.0,
+                z: 0.0,
+                cs2: -1.0,
+                sn2: 0.0,
+                arnorm,
+                istop,
+                itn: 0,
+                done,
+                history: Vec::new(),
+            }
+        })
+        .collect();
+
+    // --- main loop (shared applies, per-column scalars and masking) ------
+    let mut itn = 0usize;
+    while itn < iter_lim {
+        let active: Vec<usize> = (0..k).filter(|&j| !cols[j].done).collect();
+        if active.is_empty() {
+            break;
+        }
+        itn += 1;
+
+        // Bidiagonalization, blocked: β u = A v − α u ; α v = Aᵀ u − β v.
+        let ka = active.len();
+        let mut va = DenseMatrix::zeros(ka, n);
+        for (ai, &j) in active.iter().enumerate() {
+            va.row_mut(ai).copy_from_slice(v.row(j));
+        }
+        let mut av = DenseMatrix::zeros(ka, m);
+        a.apply_mat(&va, &mut av);
+        for (ai, &j) in active.iter().enumerate() {
+            let alpha = cols[j].alpha;
+            let urow = u.row_mut(j);
+            for (ui, &avi) in urow.iter_mut().zip(av.row(ai).iter()) {
+                *ui = avi - alpha * *ui;
+            }
+            cols[j].beta = nrm2(u.row(j));
+        }
+
+        let tcols: Vec<usize> = active.iter().copied().filter(|&j| cols[j].beta > 0.0).collect();
+        if !tcols.is_empty() {
+            for &j in &tcols {
+                let c = &mut cols[j];
+                let inv = 1.0 / c.beta;
+                for ui in u.row_mut(j).iter_mut() {
+                    *ui *= inv;
+                }
+                c.anorm =
+                    (c.anorm * c.anorm + c.alpha * c.alpha + c.beta * c.beta + dampsq).sqrt();
+            }
+            let kb = tcols.len();
+            let mut ub = DenseMatrix::zeros(kb, m);
+            for (bi, &j) in tcols.iter().enumerate() {
+                ub.row_mut(bi).copy_from_slice(u.row(j));
+            }
+            let mut atu = DenseMatrix::zeros(kb, n);
+            a.apply_transpose_mat(&ub, &mut atu);
+            for (bi, &j) in tcols.iter().enumerate() {
+                let beta = cols[j].beta;
+                let vrow = v.row_mut(j);
+                for (vi, &atui) in vrow.iter_mut().zip(atu.row(bi).iter()) {
+                    *vi = atui - beta * *vi;
+                }
+                let alpha = nrm2(v.row(j));
+                cols[j].alpha = alpha;
+                if alpha > 0.0 {
+                    let inv = 1.0 / alpha;
+                    for vi in v.row_mut(j).iter_mut() {
+                        *vi *= inv;
+                    }
+                }
+            }
+        }
+
+        // Per-column Givens rotation, x/w update, norm estimates and
+        // stopping tests — the exact scalar recurrences of lsqr.
+        for &j in &active {
+            let c = &mut cols[j];
+
+            let (rhobar1, psi) = if cfg.damp > 0.0 {
+                let rhobar1 = (c.rhobar * c.rhobar + dampsq).sqrt();
+                let cs1 = c.rhobar / rhobar1;
+                let sn1 = cfg.damp / rhobar1;
+                let psi = sn1 * c.phibar;
+                c.phibar *= cs1;
+                (rhobar1, psi)
+            } else {
+                (c.rhobar, 0.0)
+            };
+
+            let rho = (rhobar1 * rhobar1 + c.beta * c.beta).sqrt();
+            let cs = rhobar1 / rho;
+            let sn = c.beta / rho;
+            let theta = sn * c.alpha;
+            c.rhobar = -cs * c.alpha;
+            let phi = cs * c.phibar;
+            c.phibar *= sn;
+            let tau = sn * phi;
+
+            let t1 = phi / rho;
+            let t2 = -theta / rho;
+            let inv_rho = 1.0 / rho;
+            let mut dknorm2 = 0.0;
+            {
+                let xrow = x.row_mut(j);
+                let wrow = w.row_mut(j);
+                let vrow = v.row(j);
+                for i in 0..n {
+                    let wi = wrow[i];
+                    let dk = wi * inv_rho;
+                    dknorm2 += dk * dk;
+                    xrow[i] += t1 * wi;
+                    wrow[i] = vrow[i] + t2 * wi;
+                }
+            }
+            c.ddnorm += dknorm2;
+
+            let delta = c.sn2 * rho;
+            let gambar = -c.cs2 * rho;
+            let rhs = phi - delta * c.z;
+            let zbar = rhs / gambar;
+            c.xnorm = (c.xxnorm + zbar * zbar).sqrt();
+            let gamma = (gambar * gambar + theta * theta).sqrt();
+            c.cs2 = gambar / gamma;
+            c.sn2 = theta / gamma;
+            c.z = rhs / gamma;
+            c.xxnorm += c.z * c.z;
+
+            c.acond = c.anorm * c.ddnorm.sqrt();
+            let res1 = c.phibar * c.phibar;
+            c.res2 += psi * psi;
+            c.rnorm = (res1 + c.res2).sqrt();
+            c.arnorm = c.alpha * tau.abs();
+
+            let r1sq = c.rnorm * c.rnorm - dampsq * c.xxnorm;
+            c.r1norm = r1sq.abs().sqrt();
+            if r1sq < 0.0 {
+                c.r1norm = -c.r1norm;
+            }
+            c.r2norm = c.rnorm;
+
+            if cfg.track_history {
+                c.history.push(c.rnorm);
+            }
+
+            let test1 = c.rnorm / c.bnorm;
+            let test2 = c.arnorm / (c.anorm * c.rnorm + eps);
+            let test3 = 1.0 / (c.acond + eps);
+            let t1s = test1 / (1.0 + c.anorm * c.xnorm / c.bnorm);
+            let rtol = cfg.btol + cfg.atol * c.anorm * c.xnorm / c.bnorm;
+
+            let mut istop = StopReason::IterLimit;
+            if 1.0 + test3 <= 1.0 {
+                istop = StopReason::ConditionMachineEps;
+            }
+            if 1.0 + test2 <= 1.0 {
+                istop = StopReason::LeastSquaresMachineEps;
+            }
+            if 1.0 + t1s <= 1.0 {
+                istop = StopReason::ResidualMachineEps;
+            }
+            if test3 <= ctol {
+                istop = StopReason::ConditionLimit;
+            }
+            if test2 <= cfg.atol {
+                istop = StopReason::LeastSquaresTol;
+            }
+            if test1 <= rtol {
+                istop = StopReason::ResidualTol;
+            }
+            if istop != StopReason::IterLimit || itn >= iter_lim {
+                c.istop = istop;
+                c.itn = itn;
+                c.done = true;
+            }
+        }
+    }
+
+    cols.into_iter()
+        .enumerate()
+        .map(|(j, c)| LsqrResult {
+            x: x.row(j).to_vec(),
+            istop: c.istop,
+            itn: c.itn,
+            r1norm: c.r1norm,
+            r2norm: c.r2norm,
+            anorm: c.anorm,
+            acond: c.acond,
+            arnorm: c.arnorm,
+            xnorm: c.xnorm,
+            history: c.history,
+        })
+        .collect()
+}
+
 /// The deterministic baseline as a [`Solver`].
 #[derive(Debug, Clone, Default)]
 pub struct LsqrSolver {
@@ -499,6 +855,106 @@ mod tests {
             r.istop,
             r.acond
         );
+    }
+
+    /// Stack k RHS vectors as the rows of a block.
+    fn rhs_block(rows: &[Vec<f64>]) -> DenseMatrix {
+        let m = rows[0].len();
+        let mut b = DenseMatrix::zeros(rows.len(), m);
+        for (j, r) in rows.iter().enumerate() {
+            b.row_mut(j).copy_from_slice(r);
+        }
+        b
+    }
+
+    #[test]
+    fn block_matches_independent_solves_exactly() {
+        let (a, x_true, b0) = well_conditioned(90, 14, 82);
+        // Mixed batch: consistent, noisy, scaled, and all-zero columns.
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(83));
+        let mut b1 = b0.clone();
+        for bi in b1.iter_mut() {
+            *bi += 0.3 * g.next_gaussian();
+        }
+        let b2: Vec<f64> = b0.iter().map(|v| 1e-3 * v).collect();
+        let b3 = vec![0.0; 90];
+        let rhs = [b0.clone(), b1, b2, b3];
+        let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() };
+        let block = lsqr_block(&a, &rhs_block(&rhs), None, &cfg);
+        assert_eq!(block.len(), 4);
+        for (j, bj) in rhs.iter().enumerate() {
+            let solo = lsqr(&a, bj, None, &cfg);
+            assert_eq!(block[j].istop, solo.istop, "col {j}");
+            assert_eq!(block[j].itn, solo.itn, "col {j}");
+            assert_eq!(block[j].x, solo.x, "col {j}");
+        }
+        // The zero column is trivial; the consistent one recovers x_true.
+        assert_eq!(block[3].istop, StopReason::TrivialSolution);
+        let err = nrm2_diff(&block[0].x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn block_mixed_convergence_masks_columns() {
+        // Columns of very different difficulty converge at different
+        // iterations; each must still match its solo run.
+        let (a, x_true, b) = well_conditioned(120, 16, 84);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(85));
+        let mut noisy = b.clone();
+        for bi in noisy.iter_mut() {
+            *bi += 2.0 * g.next_gaussian();
+        }
+        let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() };
+        // Warm-start the first column at the exact solution: converges at
+        // iteration 0/1 while the others keep iterating.
+        let mut x0 = DenseMatrix::zeros(3, 16);
+        x0.row_mut(0).copy_from_slice(&x_true);
+        let rhs = rhs_block(&[b.clone(), b.clone(), noisy.clone()]);
+        let block = lsqr_block(&a, &rhs, Some(&x0), &cfg);
+        assert!(block[0].itn <= 1, "warm col itn {}", block[0].itn);
+        assert!(block[2].itn > block[0].itn, "mixed convergence expected");
+        let zeros = vec![0.0; 16];
+        let solo0 = lsqr(&a, &b, Some(&x_true), &cfg);
+        let solo2 = lsqr(&a, &noisy, Some(&zeros), &cfg);
+        assert_eq!(block[0].itn, solo0.itn);
+        assert_eq!(block[0].x, solo0.x);
+        assert_eq!(block[2].itn, solo2.itn);
+        assert_eq!(block[2].x, solo2.x);
+    }
+
+    #[test]
+    fn block_k1_equals_single() {
+        let (a, _xt, b) = well_conditioned(70, 10, 86);
+        let cfg = LsqrConfig { atol: 1e-10, btol: 1e-10, track_history: true, ..Default::default() };
+        let block = lsqr_block(&a, &rhs_block(&[b.clone()]), None, &cfg);
+        let solo = lsqr(&a, &b, None, &cfg);
+        assert_eq!(block[0].x, solo.x);
+        assert_eq!(block[0].itn, solo.itn);
+        assert_eq!(block[0].history, solo.history);
+        assert_eq!(block[0].r1norm.to_bits(), solo.r1norm.to_bits());
+    }
+
+    #[test]
+    fn block_damping_matches_solo() {
+        let (a, _xt, b) = well_conditioned(60, 8, 87);
+        let cfg = LsqrConfig { damp: 2.5, ..Default::default() };
+        let block = lsqr_block(&a, &rhs_block(&[b.clone(), b.clone()]), None, &cfg);
+        let solo = lsqr(&a, &b, None, &cfg);
+        for r in &block {
+            assert_eq!(r.x, solo.x);
+            assert_eq!(r.itn, solo.itn);
+        }
+    }
+
+    #[test]
+    fn block_iteration_limit_and_empty() {
+        let (a, _xt, b) = well_conditioned(150, 40, 88);
+        let cfg = LsqrConfig { iter_lim: Some(3), atol: 1e-16, btol: 1e-16, ..Default::default() };
+        let block = lsqr_block(&a, &rhs_block(&[b.clone()]), None, &cfg);
+        assert_eq!(block[0].itn, 3);
+        assert_eq!(block[0].istop, StopReason::IterLimit);
+        let empty = lsqr_block(&a, &DenseMatrix::zeros(0, 150), None, &cfg);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Property tests pinning the blocked multi-RHS solve to the per-RHS path.
+//!
+//! The serving guarantee the batcher rides on (cf. Epperly 2311.04362 and
+//! Meier et al. 2302.07202 on where sketch-and-precondition accuracy
+//! lives): solving k right-hand sides as one `lsqr_block` — shared operator
+//! applies, per-column scalar recurrences, per-column convergence masking —
+//! must match k independent `lsqr` calls. Pinned here to ≤ 1e-10 per
+//! column *and* to identical per-column stop reasons / iteration counts,
+//! for k ∈ {1, 2, 5, 16}, on well- and ill-conditioned problems, with and
+//! without warm starts, including mixed-convergence batches where some
+//! columns finish early.
+
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::operator::PreconditionedOperator;
+use snsolve::linalg::qr::qr_compact;
+use snsolve::linalg::triangular::right_solve_upper_multi;
+use snsolve::linalg::DenseMatrix;
+use snsolve::prop_assert;
+use snsolve::sketch::{CountSketch, SketchOperator};
+use snsolve::solvers::lsqr::{lsqr, lsqr_block, LsqrConfig, StopReason};
+use snsolve::testing::{forall_cases, PropRng};
+
+const BLOCK_SIZES: [usize; 4] = [1, 2, 5, 16];
+
+/// Max per-column deviation the acceptance criteria allow. (In practice the
+/// blocked path is bitwise per column; the tolerance guards the contract,
+/// the istop/itn equality below guards the trajectory.)
+const COL_TOL: f64 = 1e-10;
+
+/// Random m×n problem matrix; `ill` grades column scales over ~6 decades.
+fn problem_matrix(rng: &mut PropRng, m: usize, n: usize, ill: bool) -> DenseMatrix {
+    let mut a = DenseMatrix::from_vec(m, n, rng.gaussian_vec(m * n)).unwrap();
+    if ill {
+        let decades = 6.0 / (n.max(2) - 1) as f64;
+        for j in 0..n {
+            let s = 10f64.powf(-decades * j as f64);
+            for i in 0..m {
+                a[(i, j)] *= s;
+            }
+        }
+    }
+    a
+}
+
+/// A batch of k RHS of deliberately mixed difficulty: consistent systems,
+/// noisy (inconsistent) ones, rescaled ones, and the occasional zero vector
+/// — so columns converge at different iterations within one block.
+fn rhs_batch(rng: &mut PropRng, a: &DenseMatrix, k: usize) -> DenseMatrix {
+    let (m, n) = a.shape();
+    let mut b = DenseMatrix::from_fn(k, m, |_, _| 0.0);
+    for j in 0..k {
+        let style = rng.usize_in(0, 3);
+        let row = match style {
+            0 => a.matvec(&rng.gaussian_vec(n)), // consistent
+            1 => {
+                // consistent + residual component
+                let mut r = a.matvec(&rng.gaussian_vec(n));
+                for ri in r.iter_mut() {
+                    *ri += 0.5 * rng.gaussian();
+                }
+                r
+            }
+            2 => {
+                let scale = 10f64.powf(rng.f64_in(-4.0, 3.0));
+                a.matvec(&rng.gaussian_vec(n)).iter().map(|v| v * scale).collect()
+            }
+            _ => vec![0.0; m], // trivial column
+        };
+        b.row_mut(j).copy_from_slice(&row);
+    }
+    b
+}
+
+fn assert_columns_match(
+    block: &[snsolve::solvers::lsqr::LsqrResult],
+    a: &impl snsolve::linalg::LinearOperator,
+    b: &DenseMatrix,
+    x0: Option<&DenseMatrix>,
+    cfg: &LsqrConfig,
+) -> Result<(), String> {
+    for (j, bres) in block.iter().enumerate() {
+        let x0j: Option<Vec<f64>> = x0.map(|m| m.row(j).to_vec());
+        let solo = lsqr(a, b.row(j), x0j.as_deref(), cfg);
+        prop_assert!(
+            bres.istop == solo.istop,
+            "col {j}: istop {:?} vs solo {:?}",
+            bres.istop,
+            solo.istop
+        );
+        prop_assert!(bres.itn == solo.itn, "col {j}: itn {} vs solo {}", bres.itn, solo.itn);
+        let scale = nrm2(&solo.x).max(1.0);
+        let dev = nrm2_diff(&bres.x, &solo.x) / scale;
+        prop_assert!(dev <= COL_TOL, "col {j}: x deviates by {dev:.3e} (tol {COL_TOL:.0e})");
+    }
+    Ok(())
+}
+
+#[test]
+fn blocked_lsqr_matches_independent_solves() {
+    forall_cases("lsqr_block == k independent lsqr", 24, |rng| {
+        let k = *rng.choose(&BLOCK_SIZES);
+        let ill = rng.usize_in(0, 1) == 1;
+        let n = rng.usize_in(4, 10);
+        let m = rng.usize_in(3 * n, 8 * n);
+        let a = problem_matrix(rng, m, n, ill);
+        let b = rhs_batch(rng, &a, k);
+        let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() };
+        let block = lsqr_block(&a, &b, None, &cfg);
+        prop_assert!(block.len() == k, "expected {k} results, got {}", block.len());
+        assert_columns_match(&block, &a, &b, None, &cfg)
+    });
+}
+
+#[test]
+fn blocked_lsqr_matches_with_warm_starts() {
+    forall_cases("warm-started lsqr_block == solo", 16, |rng| {
+        let k = *rng.choose(&BLOCK_SIZES);
+        let ill = rng.usize_in(0, 1) == 1;
+        let n = rng.usize_in(4, 9);
+        let m = rng.usize_in(3 * n, 7 * n);
+        let a = problem_matrix(rng, m, n, ill);
+        let b = rhs_batch(rng, &a, k);
+        // Warm starts of mixed quality (one exact-ish, rest random).
+        let mut x0 = DenseMatrix::from_fn(k, n, |_, _| 0.0);
+        for j in 0..k {
+            let row = rng.gaussian_vec(n);
+            x0.row_mut(j).copy_from_slice(&row);
+        }
+        let cfg = LsqrConfig { atol: 1e-11, btol: 1e-11, ..Default::default() };
+        let block = lsqr_block(&a, &b, Some(&x0), &cfg);
+        assert_columns_match(&block, &a, &b, Some(&x0), &cfg)
+    });
+}
+
+/// The SAA serving shape: right-preconditioned operator + sketched warm
+/// start, exactly what `Worker::execute_batch` runs against the factor
+/// cache.
+#[test]
+fn blocked_preconditioned_solve_matches_serving_path() {
+    forall_cases("preconditioned lsqr_block == solo", 12, |rng| {
+        let k = *rng.choose(&BLOCK_SIZES);
+        let n = rng.usize_in(4, 8);
+        let m = rng.usize_in(6 * n, 12 * n);
+        let a = problem_matrix(rng, m, n, rng.usize_in(0, 1) == 1);
+        let b = rhs_batch(rng, &a, k);
+        let s_rows = (4 * n).min(m);
+        let sketch = CountSketch::new(s_rows, m, rng.case_seed ^ 0xBEEF);
+        let b_sk = sketch.apply_dense(&a);
+        let qr = qr_compact(&b_sk).map_err(|e| e.to_string())?;
+        let r = qr.r();
+        let y = right_solve_upper_multi(&a, &r).map_err(|e| e.to_string())?;
+        // Warm starts z0 = Qᵀ S b, blocked exactly like the worker.
+        let z0 = qr.q_transpose_mat(&sketch.apply_mat(&b));
+        let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..Default::default() };
+        let block_y = lsqr_block(&y, &b, Some(&z0), &cfg);
+        assert_columns_match(&block_y, &y, &b, Some(&z0), &cfg)?;
+        // And through the implicit operator (the CSR-path shape).
+        let op = PreconditionedOperator::new(&a, &r);
+        let block_op = lsqr_block(&op, &b, Some(&z0), &cfg);
+        assert_columns_match(&block_op, &op, &b, Some(&z0), &cfg)
+    });
+}
+
+/// Deterministic mixed-convergence batch: a trivial (zero) column, a
+/// warm-started-at-the-solution column and two cold columns stop at
+/// different iterations — masking must keep every column identical to its
+/// solo run, bit for bit.
+#[test]
+fn mixed_convergence_batch_masks_early_columns() {
+    use snsolve::rng::{GaussianSource, Xoshiro256pp};
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(0xD00D));
+    let (m, n, k) = (60, 8, 4);
+    let a = DenseMatrix::from_vec(m, n, g.gaussian_vec(m * n)).unwrap();
+    let x_true = g.gaussian_vec(n);
+    let easy = a.matvec(&x_true);
+    let mut hard = easy.clone();
+    for h in hard.iter_mut() {
+        *h += 2.0 * g.next_gaussian();
+    }
+    let mut b = DenseMatrix::zeros(k, m);
+    // row 0 stays zero: trivial column.
+    b.row_mut(1).copy_from_slice(&easy); // warm-started at x_true below
+    b.row_mut(2).copy_from_slice(&easy); // cold consistent
+    b.row_mut(3).copy_from_slice(&hard); // cold inconsistent
+    let mut x0 = DenseMatrix::zeros(k, n);
+    x0.row_mut(1).copy_from_slice(&x_true);
+    let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, ..Default::default() };
+    let block = lsqr_block(&a, &b, Some(&x0), &cfg);
+    assert_eq!(block[0].istop, StopReason::TrivialSolution);
+    assert_eq!(block[0].itn, 0);
+    assert!(block[1].itn <= 1, "warm column itn {}", block[1].itn);
+    assert!(block[2].itn > block[1].itn, "cold column must outlast the warm one");
+    assert!(block[3].itn >= 1);
+    for j in 0..k {
+        let x0j = x0.row(j).to_vec();
+        let solo = lsqr(&a, b.row(j), Some(&x0j), &cfg);
+        assert_eq!(block[j].istop, solo.istop, "col {j}");
+        assert_eq!(block[j].itn, solo.itn, "col {j}");
+        assert_eq!(block[j].x, solo.x, "col {j}");
+    }
+}

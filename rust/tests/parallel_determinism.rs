@@ -3,7 +3,13 @@
 //! (a) the parallel GEMM / FWHT / sketch-apply paths match the serial
 //!     (1-thread) results within 1e-12 at thread counts {1, 2, 4, 7}, and
 //!     are deterministic run-to-run at a fixed thread count;
-//! (b) every sketch operator preserves norms in expectation,
+//! (b) the blocked multi-RHS paths (`apply_mat` on every sketch operator
+//!     and on dense operators, `right_solve_upper_multi`,
+//!     `solve_upper_block`, `q_transpose_mat`) are **bitwise identical**
+//!     across thread counts — they shard rows over the pool and run the
+//!     serial vector kernels per row, matching the guarantees PR 1
+//!     established for the vector paths;
+//! (c) every sketch operator preserves norms in expectation,
 //!     `E[‖Sx‖²] ≈ ‖x‖²`, checked through the in-tree property harness.
 //!
 //! The thread-count sweep lives in ONE test function: the pool size is a
@@ -11,8 +17,10 @@
 //! level makes the `set_threads` transitions race-free.
 
 use snsolve::bench_harness::max_abs_dev;
+use snsolve::linalg::qr::qr_compact;
 use snsolve::linalg::sparse::CooBuilder;
-use snsolve::linalg::{gemm, hadamard, DenseMatrix};
+use snsolve::linalg::triangular::{right_solve_upper_multi, solve_upper_block};
+use snsolve::linalg::{gemm, hadamard, DenseMatrix, LinearOperator};
 use snsolve::prop_assert;
 use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
 use snsolve::sketch::{self, SketchKind, SketchOperator};
@@ -56,6 +64,30 @@ fn parallel_paths_match_serial_across_thread_counts() {
         bld.build()
     };
 
+    // --- blocked multi-RHS inputs (k×m row blocks, PR 2) ----------------
+    // Sizes chosen to clear the kernels' serial floors so the sweep
+    // actually exercises the sharded paths.
+    let k_rhs = 16usize;
+    let sketch_blk = DenseMatrix::gaussian(k_rhs, sm, &mut g); // k·m = 64k
+    let x_blk = DenseMatrix::gaussian(k_rhs, gk, &mut g); // vs ga (gm×gk)
+    let u_blk = DenseMatrix::gaussian(k_rhs, gm, &mut g);
+    let rtri = {
+        let n = 48usize;
+        let mut r = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = g.next_gaussian();
+            }
+            let d = r[(i, i)];
+            r[(i, i)] = d + if d >= 0.0 { 3.0 } else { -3.0 };
+        }
+        r
+    };
+    let a_rs = DenseMatrix::gaussian(1000, 48, &mut g); // right-solve input
+    let z_blk = DenseMatrix::gaussian(64, 48, &mut g); // back-substitution
+    let qrc = qr_compact(&DenseMatrix::gaussian(96, 24, &mut g)).unwrap();
+    let c_blk = DenseMatrix::gaussian(32, 96, &mut g); // Qᵀ block input
+
     // Serial references at 1 thread.
     snsolve::parallel::set_threads(1);
     let gemm_ref = gemm::matmul(&ga, &gb).unwrap();
@@ -71,6 +103,23 @@ fn parallel_paths_match_serial_across_thread_counts() {
             (kind, op.apply_dense(&sa_dense), op.apply_csr(&sa_csr))
         })
         .collect();
+    let sketch_mat_ref: Vec<(SketchKind, DenseMatrix)> = SketchKind::ALL
+        .iter()
+        .map(|&kind| (kind, sketch::build(kind, ss, sm, 4242).apply_mat(&sketch_blk)))
+        .collect();
+    let apply_mat_ref = {
+        let mut y = DenseMatrix::zeros(k_rhs, gm);
+        ga.apply_mat(&x_blk, &mut y);
+        y
+    };
+    let apply_tmat_ref = {
+        let mut v = DenseMatrix::zeros(k_rhs, gk);
+        ga.apply_transpose_mat(&u_blk, &mut v);
+        v
+    };
+    let rsm_ref = right_solve_upper_multi(&a_rs, &rtri).unwrap();
+    let sub_ref = solve_upper_block(&rtri, &z_blk).unwrap();
+    let qtm_ref = qrc.q_transpose_mat(&c_blk);
 
     for &t in &SWEEP {
         snsolve::parallel::set_threads(t);
@@ -104,13 +153,45 @@ fn parallel_paths_match_serial_across_thread_counts() {
             let dev = max_abs_dev(c1.data(), csr_ref.data());
             assert!(dev <= TOL, "{}: apply_csr dev {dev} at {t} threads", kind.name());
         }
+
+        // Blocked multi-RHS paths: bitwise identical to the 1-thread
+        // reference (rows run the serial vector kernels, so not even fp
+        // re-association is allowed here).
+        for (kind, mat_ref) in &sketch_mat_ref {
+            let op = sketch::build(*kind, ss, sm, 4242);
+            let m1 = op.apply_mat(&sketch_blk);
+            assert_eq!(&m1, mat_ref, "{}: apply_mat differs at {t} threads", kind.name());
+        }
+        {
+            let mut y = DenseMatrix::zeros(k_rhs, gm);
+            ga.apply_mat(&x_blk, &mut y);
+            assert_eq!(y, apply_mat_ref, "dense apply_mat differs at {t} threads");
+            let mut v = DenseMatrix::zeros(k_rhs, gk);
+            ga.apply_transpose_mat(&u_blk, &mut v);
+            assert_eq!(v, apply_tmat_ref, "dense apply_transpose_mat differs at {t} threads");
+        }
+        assert_eq!(
+            right_solve_upper_multi(&a_rs, &rtri).unwrap(),
+            rsm_ref,
+            "right_solve_upper_multi differs at {t} threads"
+        );
+        assert_eq!(
+            solve_upper_block(&rtri, &z_blk).unwrap(),
+            sub_ref,
+            "solve_upper_block differs at {t} threads"
+        );
+        assert_eq!(
+            qrc.q_transpose_mat(&c_blk),
+            qtm_ref,
+            "q_transpose_mat differs at {t} threads"
+        );
     }
 
     // Restore the ambient (auto) configuration for other tests.
     snsolve::parallel::set_threads(0);
 }
 
-/// (b) `E[‖Sx‖²] ≈ ‖x‖²` for every operator family — the approximate
+/// (c) `E[‖Sx‖²] ≈ ‖x‖²` for every operator family — the approximate
 /// isometry the solvers rely on, via the in-tree property harness.
 #[test]
 fn sketch_operators_preserve_norms_in_expectation() {

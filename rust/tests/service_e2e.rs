@@ -147,6 +147,109 @@ fn batching_coalesces_same_matrix_bursts() {
 }
 
 #[test]
+fn malformed_rhs_inside_batch_fails_alone() {
+    // Regression for the hoisted shape validation: a wrong-length RHS that
+    // lands in the middle of a coalesced batch must fail with its own
+    // BadRequest while its batch-mates solve normally (previously only the
+    // single-vector path validated shapes).
+    let svc = Service::start(ServiceConfig {
+        workers: 1,
+        batcher: snsolve::coordinator::batcher::BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(30),
+        },
+        ..Default::default()
+    });
+    let (a, x_true, b) = planted(250, 12, 21);
+    let id = svc.register_matrix(Matrix::Dense(a));
+    let mk = |rhs: Vec<f64>| SolveRequest {
+        matrix: id,
+        rhs,
+        solver: SolverChoice::Saa,
+        tol: 1e-10,
+        deadline_us: 0,
+    };
+    let handles = vec![
+        svc.submit(mk(b.clone())).unwrap(),
+        svc.submit(mk(vec![1.0, 2.0, 3.0])).unwrap(), // malformed
+        svc.submit(mk(b.clone())).unwrap(),
+        svc.submit(mk(b.clone())).unwrap(),
+    ];
+    let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    assert!(
+        matches!(
+            responses[1].result,
+            Err(snsolve::coordinator::ServiceError::BadRequest(_))
+        ),
+        "malformed item: {:?}",
+        responses[1].result
+    );
+    for j in [0usize, 2, 3] {
+        let sol = responses[j].result.as_ref().unwrap();
+        let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8, "batch-mate {j} err {err}");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn blocked_batches_match_per_item_loop_results() {
+    // Per-RHS equivalence end to end: a 16-deep same-matrix burst solved
+    // through the blocked multi-RHS path returns exactly what the per-item
+    // loop returns for the same requests.
+    let run = |block_rhs: bool| -> Vec<Vec<f64>> {
+        let mut cfg = ServiceConfig {
+            workers: 1,
+            batcher: snsolve::coordinator::batcher::BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(20),
+            },
+            ..Default::default()
+        };
+        cfg.worker.block_rhs = block_rhs;
+        let svc = Service::start(cfg);
+        let (a, _xt, b) = planted(300, 14, 23);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(24));
+        let id = svc.register_matrix(Matrix::Dense(a));
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                // Vary the RHS per request so columns differ.
+                let mut rhs = b.clone();
+                if i % 2 == 1 {
+                    for v in rhs.iter_mut() {
+                        *v += 0.05 * g.next_gaussian();
+                    }
+                }
+                svc.submit(SolveRequest {
+                    matrix: id,
+                    rhs,
+                    solver: SolverChoice::Saa,
+                    tol: 1e-10,
+                    deadline_us: 0,
+                })
+                .unwrap()
+            })
+            .collect();
+        let xs: Vec<Vec<f64>> = handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().result.unwrap().x)
+            .collect();
+        if block_rhs {
+            let blocked =
+                snsolve::coordinator::metrics::Metrics::get(&svc.metrics().blocked_rhs);
+            assert!(blocked >= 16, "expected all 16 RHS on the blocked path, got {blocked}");
+        }
+        svc.shutdown();
+        xs
+    };
+    let blocked = run(true);
+    let per_item = run(false);
+    for (j, (xb, xs)) in blocked.iter().zip(per_item.iter()).enumerate() {
+        assert_eq!(xb, xs, "request {j}: blocked and per-item solutions differ");
+    }
+}
+
+#[test]
 fn pjrt_bucket_routing_when_artifacts_present() {
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
