@@ -14,6 +14,12 @@ cargo test -q
 echo "== cargo test -q --release =="
 cargo test -q --release
 
+# Forced-scalar run: keeps the portable reference path covered on
+# SIMD-capable runners (the default run above dispatches to AVX2/NEON
+# when the host supports it).
+echo "== cargo test -q (SNSOLVE_SIMD=scalar) =="
+SNSOLVE_SIMD=scalar cargo test -q
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

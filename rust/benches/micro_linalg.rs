@@ -7,9 +7,17 @@
 //! the parallel-scaling sweep: GEMM and SRHT apply at each pool size, with
 //! wall-clock speedup over the 1-thread baseline and the max deviation from
 //! the serial result (must stay ≤ 1e-12).
+//!
+//! `--simd scalar|avx2|neon|auto` forces the kernel backend for the main
+//! table; the per-backend sweep at the end always times every backend the
+//! host supports (GEMM/dot/axpy/FWHT GFLOP/s per backend) and cross-checks
+//! each against the scalar reference (≤ 1e-12 relative; FWHT bitwise).
 
 use snsolve::bench_harness::report::Table;
-use snsolve::bench_harness::{bench, config_from_env, max_abs_dev, parse_threads_arg, threads_in_use};
+use snsolve::bench_harness::{
+    bench, config_from_env, max_abs_dev, parse_simd_arg, parse_threads_arg, simd_in_use,
+    threads_in_use, BenchConfig,
+};
 use snsolve::linalg::sparse::CooBuilder;
 use snsolve::linalg::{gemm, hadamard, qr, triangular, DenseMatrix};
 use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
@@ -17,13 +25,17 @@ use snsolve::sketch::{CountSketch, SketchOperator, SrhtSketch};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(choice) = parse_simd_arg(&argv) {
+        snsolve::simd::set_choice(choice);
+    }
     let cfg = config_from_env();
     let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1));
     let mut table = Table::new(
         "micro — L3 hot paths (achieved throughput)",
-        &["kernel", "shape", "threads", "median_s", "throughput", "unit"],
+        &["kernel", "shape", "threads", "simd", "median_s", "throughput", "unit"],
     );
     let threads_now = threads_in_use().to_string();
+    let simd_now = simd_in_use().to_string();
 
     // GEMM: C = A·B, classic compute-bound kernel.
     for n in [256usize, 512, 1024] {
@@ -35,6 +47,7 @@ fn main() {
             "gemm".into(),
             format!("{n}x{n}x{n}"),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{gflops:.2}"),
             "GFLOP/s".into(),
@@ -52,6 +65,7 @@ fn main() {
             "hhqr".into(),
             format!("{s}x{n}"),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{:.2}", fl / st.median / 1e9),
             "GFLOP/s".into(),
@@ -72,6 +86,7 @@ fn main() {
             "fwht".into(),
             format!("2^{logm}"),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{mops:.2}"),
             "Gop/s".into(),
@@ -88,6 +103,7 @@ fn main() {
             "countsketch".into(),
             format!("{m}x{n}"),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{gbs:.2}"),
             "GB/s".into(),
@@ -113,6 +129,7 @@ fn main() {
             "csr_matvec".into(),
             format!("{m}x{n} nnz={}", a.nnz()),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{gbs:.2}"),
             "GB/s".into(),
@@ -131,6 +148,7 @@ fn main() {
             "right_solve".into(),
             format!("{m}x{n}"),
             threads_now.clone(),
+            simd_now.clone(),
             format!("{:.6}", st.median),
             format!("{:.2}", fl / st.median / 1e9),
             "GFLOP/s".into(),
@@ -145,8 +163,14 @@ fn main() {
     let sweep_table = run_threads_sweep(&sweep);
     println!("{}", sweep_table.render());
     let _ = sweep_table.save("micro_linalg_threads");
-    // Restore the ambient thread configuration.
+
+    // ---- SIMD backend sweep: every backend vs the scalar reference ------
+    let simd_table = run_simd_sweep();
+    println!("{}", simd_table.render());
+    let _ = simd_table.save("micro_linalg_simd");
+    // Restore the ambient thread/backend configuration.
     snsolve::parallel::set_threads(0);
+    snsolve::simd::clear_choice();
 }
 
 /// Time GEMM (m = 4096) and SRHT apply (m = 16384) at each pool size,
@@ -210,5 +234,134 @@ fn run_threads_sweep(sweep: &[usize]) -> Table {
         }
     }
 
+    table
+}
+
+/// Time the dispatched kernels (GEMM, dot, axpy, FWHT) at 1 thread on each
+/// backend this host supports, reporting GFLOP/s, speedup over the scalar
+/// backend, and the relative deviation from the scalar reference — the
+/// cross-check line the SIMD determinism contract promises (≤ 1e-12;
+/// FWHT must be bitwise).
+fn run_simd_sweep() -> Table {
+    let mut table = Table::new(
+        "simd sweep — kernel backends vs scalar reference (1 thread)",
+        &["kernel", "shape", "backend", "median_s", "gflops", "speedup_vs_scalar", "rel_dev"],
+    );
+    let cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(29));
+    snsolve::parallel::set_threads(1);
+
+    let n = 512usize;
+    let a = DenseMatrix::gaussian(n, n, &mut g);
+    let b = DenseMatrix::gaussian(n, n, &mut g);
+    let len = 1usize << 20;
+    let xv = g.gaussian_vec(len);
+    let yv = g.gaussian_vec(len);
+
+    // Scalar references and baseline timings.
+    snsolve::simd::set_choice(snsolve::simd::SimdChoice::Scalar);
+    let gemm_ref = gemm::matmul(&a, &b).unwrap();
+    let gemm_scale = gemm_ref.max_abs().max(1e-300);
+    let gemm_base = bench(&cfg, || gemm::matmul(&a, &b).unwrap()).median;
+    let dot_ref = gemm::dot(&xv, &yv);
+    let dot_scale: f64 = xv.iter().zip(yv.iter()).map(|(x, y)| (x * y).abs()).sum();
+    let dot_base = bench(&cfg, || gemm::dot(&xv, &yv)).median;
+    let axpy_ref = {
+        let mut y = yv.clone();
+        gemm::axpy(0.37, &xv, &mut y);
+        y
+    };
+    let axpy_scale = axpy_ref.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-300);
+    let axpy_base = bench(&cfg, || {
+        let mut y = yv.clone();
+        gemm::axpy(0.37, &xv, &mut y);
+        y
+    })
+    .median;
+    let fwht_ref = {
+        let mut y = xv.clone();
+        hadamard::fwht_inplace(&mut y).unwrap();
+        y
+    };
+    let fwht_base = bench(&cfg, || {
+        let mut y = xv.clone();
+        hadamard::fwht_inplace(&mut y).unwrap();
+        y
+    })
+    .median;
+
+    for backend in snsolve::simd::available() {
+        snsolve::simd::set_choice(backend.as_choice());
+        assert_eq!(snsolve::simd::active(), backend, "backend failed to activate");
+
+        // GEMM.
+        let out = gemm::matmul(&a, &b).unwrap();
+        let dev = max_abs_dev(out.data(), gemm_ref.data()) / gemm_scale;
+        assert!(dev <= 1e-12, "{}: gemm rel dev {dev}", backend.name());
+        let st = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+        table.row(vec![
+            "gemm".into(),
+            format!("{n}x{n}x{n}"),
+            backend.name().into(),
+            format!("{:.6}", st.median),
+            format!("{:.2}", 2.0 * (n as f64).powi(3) / st.median / 1e9),
+            format!("{:.2}", gemm_base / st.median),
+            format!("{dev:.2e}"),
+        ]);
+
+        // dot.
+        let d = gemm::dot(&xv, &yv);
+        let dev = (d - dot_ref).abs() / dot_scale.max(1e-300);
+        assert!(dev <= 1e-12, "{}: dot rel dev {dev}", backend.name());
+        let st = bench(&cfg, || gemm::dot(&xv, &yv));
+        table.row(vec![
+            "dot".into(),
+            "2^20".into(),
+            backend.name().into(),
+            format!("{:.6}", st.median),
+            format!("{:.2}", 2.0 * len as f64 / st.median / 1e9),
+            format!("{:.2}", dot_base / st.median),
+            format!("{dev:.2e}"),
+        ]);
+
+        // axpy.
+        let mut y = yv.clone();
+        gemm::axpy(0.37, &xv, &mut y);
+        let dev = max_abs_dev(&y, &axpy_ref) / axpy_scale;
+        assert!(dev <= 1e-12, "{}: axpy rel dev {dev}", backend.name());
+        let st = bench(&cfg, || {
+            let mut y = yv.clone();
+            gemm::axpy(0.37, &xv, &mut y);
+            y
+        });
+        table.row(vec![
+            "axpy".into(),
+            "2^20".into(),
+            backend.name().into(),
+            format!("{:.6}", st.median),
+            format!("{:.2}", 2.0 * len as f64 / st.median / 1e9),
+            format!("{:.2}", axpy_base / st.median),
+            format!("{dev:.2e}"),
+        ]);
+
+        // FWHT — adds/subs only: bitwise identical on every backend.
+        let mut y = xv.clone();
+        hadamard::fwht_inplace(&mut y).unwrap();
+        assert_eq!(y, fwht_ref, "{}: fwht not bitwise vs scalar", backend.name());
+        let st = bench(&cfg, || {
+            let mut y = xv.clone();
+            hadamard::fwht_inplace(&mut y).unwrap();
+            y
+        });
+        table.row(vec![
+            "fwht".into(),
+            "2^20".into(),
+            backend.name().into(),
+            format!("{:.6}", st.median),
+            format!("{:.2}", len as f64 * 20.0 / st.median / 1e9),
+            format!("{:.2}", fwht_base / st.median),
+            "0.0e0 (bitwise)".into(),
+        ]);
+    }
     table
 }

@@ -4,22 +4,32 @@
 //!
 //! `--threads 1,2,4` (default {1, 2, 4}) additionally sweeps the sketch
 //! *apply* kernels over pool sizes, asserting the parallel outputs match
-//! the serial path within 1e-12.
+//! the serial path within 1e-12; `--simd scalar|avx2|neon|auto` forces the
+//! kernel backend for the main tables, and a final per-backend sweep times
+//! every operator's apply on each backend the host supports with a scalar
+//! cross-check line (GFLOP/s + relative deviation ≤ 1e-12).
 //!
 //! Output: console tables + target/bench-reports/
-//! {sketch_operator_ablation, sketch_size_ablation, sketch_apply_threads}.{csv,json}.
+//! {sketch_operator_ablation, sketch_size_ablation, sketch_apply_threads,
+//! sketch_apply_simd}.{csv,json}.
 
 use snsolve::bench_harness::figures::{
     run_sketch_ablation, run_sketch_size_ablation, AblationConfig,
 };
 use snsolve::bench_harness::report::Table;
-use snsolve::bench_harness::{bench, max_abs_dev, parse_threads_arg, threads_in_use, BenchConfig};
+use snsolve::bench_harness::{
+    bench, max_abs_dev, parse_simd_arg, parse_threads_arg, simd_in_use, threads_in_use,
+    BenchConfig,
+};
 use snsolve::linalg::DenseMatrix;
 use snsolve::rng::{GaussianSource, Xoshiro256pp};
 use snsolve::sketch::{self, SketchKind, SketchOperator};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(choice) = parse_simd_arg(&argv) {
+        snsolve::simd::set_choice(choice);
+    }
     let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let cfg = if quick {
         AblationConfig { m: 4096, n: 128, ..Default::default() }
@@ -27,11 +37,12 @@ fn main() {
         AblationConfig::default()
     };
     eprintln!(
-        "ablation workload: {}x{} κ={:.0e} (quick={quick}, threads={})",
+        "ablation workload: {}x{} κ={:.0e} (quick={quick}, threads={}, simd={})",
         cfg.m,
         cfg.n,
         cfg.cond,
-        threads_in_use()
+        threads_in_use(),
+        simd_in_use()
     );
     let t1 = run_sketch_ablation(&cfg);
     println!("{}", t1.render());
@@ -45,7 +56,51 @@ fn main() {
     let t3 = run_apply_threads_sweep(&cfg, &sweep);
     println!("{}", t3.render());
     let _ = t3.save("sketch_apply_threads");
+
+    // ---- sketch-apply SIMD backend sweep --------------------------------
+    let t4 = run_apply_simd_sweep(&cfg);
+    println!("{}", t4.render());
+    let _ = t4.save("sketch_apply_simd");
     snsolve::parallel::set_threads(0);
+    snsolve::simd::clear_choice();
+}
+
+/// Time every operator's `apply_dense` at 1 thread on each backend this
+/// host supports; speedup and the relative-deviation cross-check line are
+/// against the scalar backend (≤ 1e-12 — the SIMD determinism contract).
+fn run_apply_simd_sweep(cfg: &AblationConfig) -> Table {
+    let mut table = Table::new(
+        "T-simd — sketch apply time per kernel backend",
+        &["operator", "shape", "backend", "apply_s", "speedup_vs_scalar", "rel_dev"],
+    );
+    let bench_cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(cfg.seed));
+    let a = DenseMatrix::gaussian(cfg.m, cfg.n, &mut g);
+    let s_rows = 4 * cfg.n;
+    snsolve::parallel::set_threads(1);
+    for kind in SketchKind::ALL {
+        let op = sketch::build(kind, s_rows, cfg.m, cfg.seed ^ 0xAB);
+        snsolve::simd::set_choice(snsolve::simd::SimdChoice::Scalar);
+        let reference = op.apply_dense(&a);
+        let scale = reference.max_abs().max(1e-300);
+        let base = bench(&bench_cfg, || op.apply_dense(&a)).median;
+        for backend in snsolve::simd::available() {
+            snsolve::simd::set_choice(backend.as_choice());
+            let out = op.apply_dense(&a);
+            let dev = max_abs_dev(out.data(), reference.data()) / scale;
+            assert!(dev <= 1e-12, "{}: rel dev {dev} on {}", kind.name(), backend.name());
+            let st = bench(&bench_cfg, || op.apply_dense(&a));
+            table.row(vec![
+                kind.name().to_string(),
+                format!("{}x{}", cfg.m, cfg.n),
+                backend.name().into(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", base / st.median),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+    table
 }
 
 /// Time every operator's `apply_dense` at each pool size; speedup is over

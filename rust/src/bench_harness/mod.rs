@@ -127,12 +127,32 @@ pub fn threads_in_use() -> usize {
     crate::parallel::max_threads()
 }
 
+/// The active SIMD backend's name — reported in bench tables so every
+/// number is attributable to a kernel backend.
+pub fn simd_in_use() -> &'static str {
+    crate::simd::active().name()
+}
+
 /// Max absolute elementwise deviation between two equal-length buffers —
 /// the parallel-vs-serial agreement metric the sweeps and determinism
 /// tests share.
+///
+/// NaN anywhere (a non-finite element on either side, or Inf−Inf) returns
+/// NaN, so a `dev <= tol` assertion fails instead of max-folding the
+/// breakage away — the same audit `norm_inf` got.
 pub fn max_abs_dev(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len(), "max_abs_dev: length mismatch");
-    a.iter().zip(b.iter()).fold(0.0f64, |m, (&x, &y)| m.max((x - y).abs()))
+    let mut m = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = (x - y).abs();
+        if d.is_nan() {
+            return f64::NAN;
+        }
+        if d > m {
+            m = d;
+        }
+    }
+    m
 }
 
 /// Parse a `--threads` flag from a bench's raw argv: `--threads 4`,
@@ -157,6 +177,29 @@ pub fn parse_threads_arg(argv: &[String]) -> Option<Vec<usize>> {
                 return None;
             }
             return Some(list);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse a `--simd` flag from a bench's raw argv: `--simd scalar` or
+/// `--simd=avx2`. Unknown flags are ignored (cargo bench forwards its
+/// own). Returns the parsed choice, or `None` if absent or unparseable.
+pub fn parse_simd_arg(argv: &[String]) -> Option<crate::simd::SimdChoice> {
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        let val: Option<&str> = if let Some(v) = tok.strip_prefix("--simd=") {
+            Some(v)
+        } else if tok == "--simd" {
+            i += 1;
+            argv.get(i).map(|s| s.as_str())
+        } else {
+            None
+        };
+        if let Some(v) = val {
+            return crate::simd::SimdChoice::parse(v);
         }
         i += 1;
     }
@@ -223,5 +266,27 @@ mod tests {
         assert_eq!(parse_threads_arg(&sv(&["--bench"])), None);
         assert_eq!(parse_threads_arg(&sv(&[])), None);
         assert!(threads_in_use() >= 1);
+    }
+
+    #[test]
+    fn max_abs_dev_propagates_nan() {
+        assert_eq!(max_abs_dev(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert!(max_abs_dev(&[f64::NAN, 0.0], &[0.0, 0.0]).is_nan());
+        assert!(max_abs_dev(&[5.0, 0.0], &[5.0, f64::NAN]).is_nan());
+        // Inf on both sides is still a broken comparison (Inf − Inf), and a
+        // NaN dev can never satisfy a `dev <= tol` gate.
+        assert!(max_abs_dev(&[f64::INFINITY], &[f64::INFINITY]).is_nan());
+        assert!(max_abs_dev(&[0.0, f64::NAN], &[0.0, 1.0]).is_nan());
+    }
+
+    #[test]
+    fn simd_arg_parsing() {
+        use crate::simd::SimdChoice;
+        let sv = |args: &[&str]| -> Vec<String> { args.iter().map(|s| s.to_string()).collect() };
+        assert_eq!(parse_simd_arg(&sv(&["--simd", "scalar"])), Some(SimdChoice::Scalar));
+        assert_eq!(parse_simd_arg(&sv(&["--bench", "--simd=avx2"])), Some(SimdChoice::Avx2));
+        assert_eq!(parse_simd_arg(&sv(&["--simd", "bogus"])), None);
+        assert_eq!(parse_simd_arg(&sv(&["--bench"])), None);
+        assert!(!simd_in_use().is_empty());
     }
 }

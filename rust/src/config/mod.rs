@@ -138,6 +138,7 @@ impl Config {
     pub fn solve_config(&self) -> SolveConfig {
         SolveConfig {
             threads: self.get_usize("parallel", "threads").unwrap_or(0),
+            simd: self.get_str("parallel", "simd").and_then(crate::simd::SimdChoice::parse),
         }
     }
 
@@ -186,24 +187,43 @@ impl Config {
 
 /// Process-wide solve/kernel execution settings: the thread budget the
 /// parallel GEMM/FWHT/sketch kernels draw from (`[parallel] threads`,
-/// 0 = auto-detect).
+/// 0 = auto-detect) and the SIMD backend they dispatch to
+/// (`[parallel] simd = "auto"|"scalar"|"avx2"|"neon"`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
     /// parallelism (possibly overridden by `SNSOLVE_THREADS`).
     pub threads: usize,
+    /// Requested SIMD backend. `None` (key absent) leaves the ambient
+    /// resolution alone — `SNSOLVE_SIMD`, then auto-detection — so a
+    /// config file without the key never stomps the env var. An explicit
+    /// `Auto` overrides the env; an unsupported forced backend falls back
+    /// to scalar.
+    pub simd: Option<crate::simd::SimdChoice>,
 }
 
 impl SolveConfig {
     /// Install these settings process-wide (the kernels read them through
-    /// [`crate::parallel`]).
+    /// [`crate::parallel`] and [`crate::simd`]).
     pub fn install(self) {
         crate::parallel::set_threads(self.threads);
+        if let Some(c) = self.simd {
+            crate::simd::set_choice(c);
+        }
     }
 
     /// The thread count the kernels will actually use.
     pub fn effective_threads(self) -> usize {
         crate::parallel::resolve(self.threads)
+    }
+
+    /// The SIMD backend the kernels will actually use (`None` → whatever
+    /// the process currently resolves to).
+    pub fn effective_simd(self) -> crate::simd::Backend {
+        match self.simd {
+            Some(c) => crate::simd::resolve(c),
+            None => crate::simd::active(),
+        }
     }
 }
 
@@ -264,6 +284,7 @@ enable_pjrt = false
 
 [parallel]
 threads = 3
+simd = "scalar"
 "#;
 
     #[test]
@@ -298,10 +319,17 @@ threads = 3
         let s = c.solve_config();
         assert_eq!(s.threads, 3);
         assert_eq!(s.effective_threads(), 3);
-        // absent section → auto
+        assert_eq!(s.simd, Some(crate::simd::SimdChoice::Scalar));
+        assert_eq!(s.effective_simd(), crate::simd::Backend::Scalar);
+        // absent key → ambient (and an unparseable simd value → ambient),
+        // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
         assert_eq!(d.threads, 0);
         assert!(d.effective_threads() >= 1);
+        assert_eq!(d.simd, None);
+        assert_eq!(d.effective_simd(), crate::simd::active());
+        let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
+        assert_eq!(bad.simd, None);
     }
 
     #[test]

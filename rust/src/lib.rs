@@ -33,6 +33,7 @@ pub mod parallel;
 pub mod problems;
 pub mod rng;
 pub mod runtime;
+pub mod simd;
 pub mod sketch;
 pub mod solvers;
 pub mod testing;

@@ -1,21 +1,27 @@
 //! Blocked dense GEMM / GEMV kernels.
 //!
-//! Row-major `C = A·B` with L1/L2-aware blocking and an unrolled
-//! register-tile microkernel. This is the CPU stand-in for the MXU-tiled
-//! Pallas kernel at Layer 1 — same tiling idea (stream panels of B through a
-//! register-resident accumulator), different hardware target.
+//! Row-major `C = A·B` with L1/L2-aware blocking and a register-tile
+//! microkernel dispatched through [`crate::simd`] (scalar / AVX2+FMA /
+//! NEON, selected at runtime). This is the CPU stand-in for the MXU-tiled
+//! Pallas kernel at Layer 1 — same tiling idea (stream panels of B through
+//! a register-resident accumulator), different hardware target.
+//!
+//! **IEEE contract:** no kernel on this path skips zero operands, so
+//! `0·NaN = 0·Inf = NaN` reaches C identically whether an element lands in
+//! a full register tile or a ragged edge tile (see
+//! `tests/nan_propagation.rs`).
 
 use super::dense::DenseMatrix;
 use super::{LinalgError, Result};
+use crate::simd::{self, SimdKernels};
 
 // Cache blocking parameters. MC*KC*8B ≈ 512 KB fits comfortably in L2;
-// KC*NC panels of B stream through L3/memory; the 4x8 register microkernel
-// keeps 32 accumulators live, which the compiler maps onto AVX registers.
+// KC*NC panels of B stream through L3/memory; the MR x NR register tile
+// (backend-dependent: 4x8 scalar/NEON, 4x12 AVX2+FMA) keeps the
+// accumulators live in vector registers.
 const MC: usize = 256;
 const KC: usize = 256;
 const NC: usize = 1024;
-const MR: usize = 4;
-const NR: usize = 8;
 
 /// `C = A · B`.
 pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
@@ -37,9 +43,10 @@ pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
 ///
 /// Parallel: C's rows are sharded into contiguous panels, one scoped worker
 /// per panel (each also owning the matching rows of A; B is shared
-/// read-only). Every C element accumulates over `pc` in the same order as
-/// the serial nest, so the result is **bitwise identical** at any thread
-/// count.
+/// read-only). Panel boundaries are aligned to the active SIMD backend's
+/// register-tile height, and every C element accumulates over `pc` in the
+/// same order as the serial nest, so for a fixed backend the result is
+/// **bitwise identical** at any thread count.
 pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Result<()> {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
@@ -52,22 +59,23 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Res
     let adata = a.data();
     let bdata = b.data();
     let cdata = c.data_mut();
+    let kern = simd::kernels();
 
     let flops = m.saturating_mul(k).saturating_mul(n);
     let threads = if flops < 4 * crate::parallel::PAR_MIN_ELEMS {
         1
     } else {
-        crate::parallel::threads_for(m, MR)
+        crate::parallel::threads_for(m, kern.mr())
     };
     if threads <= 1 {
-        gemm_nest(adata, bdata, cdata, m, k, n);
+        gemm_nest(adata, bdata, cdata, m, k, n, kern);
     } else {
         // MR-aligned panel boundaries keep the register-tile layout (and
         // hence every rounding) identical to the serial nest.
-        let panels = crate::parallel::partition_aligned(m, threads, MR);
+        let panels = crate::parallel::partition_aligned(m, threads, kern.mr());
         crate::parallel::for_each_row_range(cdata, n, &panels, |_, rows, cblock| {
             let ablock = &adata[rows.start * k..rows.end * k];
-            gemm_nest(ablock, bdata, cblock, rows.len(), k, n);
+            gemm_nest(ablock, bdata, cblock, rows.len(), k, n, kern);
         });
     }
     Ok(())
@@ -77,14 +85,30 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Res
 ///
 /// Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A)
 /// -> microkernel over MR x NR register tiles.
-fn gemm_nest(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
+#[allow(clippy::too_many_arguments)]
+fn gemm_nest(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    kern: &dyn SimdKernels,
+) {
+    // Column blocks rounded down to a multiple of the backend's tile width
+    // (1024 for NR=8, 1020 for the AVX2 NR=12) — otherwise every interior
+    // jc block would end in a permanent ragged strip served by the scalar
+    // edge kernel. Per-element accumulation order is unaffected (each C
+    // element lives in exactly one jr tile per pc step), so the per-backend
+    // bitwise thread-determinism contract is untouched.
+    let nc_step = (NC - NC % kern.nr()).max(kern.nr());
+    for jc in (0..n).step_by(nc_step) {
+        let nc = nc_step.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kc = KC.min(k - pc);
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
-                block_kernel(a, b, c, m, k, n, ic, jc, pc, mc, nc, kc);
+                block_kernel(a, b, c, k, n, ic, jc, pc, mc, nc, kc, kern);
             }
         }
     }
@@ -96,7 +120,6 @@ fn block_kernel(
     a: &[f64],
     b: &[f64],
     c: &mut [f64],
-    _m: usize,
     k: usize,
     n: usize,
     ic: usize,
@@ -105,62 +128,30 @@ fn block_kernel(
     mc: usize,
     nc: usize,
     kc: usize,
+    kern: &dyn SimdKernels,
 ) {
+    let (tmr, tnr) = (kern.mr(), kern.nr());
     let mut ir = 0;
     while ir < mc {
-        let mr = MR.min(mc - ir);
+        let mr = tmr.min(mc - ir);
         let mut jr = 0;
         while jr < nc {
-            let nr = NR.min(nc - jr);
-            if mr == MR && nr == NR {
-                micro_4x8(a, b, c, k, n, ic + ir, jc + jr, pc, kc);
+            let nr = tnr.min(nc - jr);
+            if mr == tmr && nr == tnr {
+                kern.gemm_tile(a, b, c, k, n, ic + ir, jc + jr, pc, kc);
             } else {
                 micro_edge(a, b, c, k, n, ic + ir, jc + jr, pc, mr, nr, kc);
             }
-            jr += NR;
+            jr += tnr;
         }
-        ir += MR;
+        ir += tmr;
     }
 }
 
-/// Full 4x8 register-tile microkernel.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn micro_4x8(
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-    k: usize,
-    n: usize,
-    i0: usize,
-    j0: usize,
-    pc: usize,
-    kc: usize,
-) {
-    let mut acc = [[0.0f64; NR]; MR];
-    let a0 = i0 * k + pc;
-    let a1 = (i0 + 1) * k + pc;
-    let a2 = (i0 + 2) * k + pc;
-    let a3 = (i0 + 3) * k + pc;
-    for p in 0..kc {
-        let bp = (pc + p) * n + j0;
-        let brow = &b[bp..bp + NR];
-        let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
-        for (r, &ar) in av.iter().enumerate() {
-            for (s, &bv) in brow.iter().enumerate() {
-                acc[r][s] += ar * bv;
-            }
-        }
-    }
-    for (r, row) in acc.iter().enumerate() {
-        let cp = (i0 + r) * n + j0;
-        for (s, &v) in row.iter().enumerate() {
-            c[cp + s] += v;
-        }
-    }
-}
-
-/// Edge microkernel for ragged tiles.
+/// Scalar edge microkernel for ragged tiles (shared by every backend).
+///
+/// No `av == 0.0` shortcut: skipping would drop `0·NaN`/`0·Inf`, making
+/// C's non-finite propagation depend on which tile an element lands in.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_edge(
@@ -181,9 +172,6 @@ fn micro_edge(
         let crow = (i0 + r) * n + j0;
         for p in 0..kc {
             let av = a[arow + p];
-            if av == 0.0 {
-                continue;
-            }
             let bp = (pc + p) * n + j0;
             for s in 0..nr {
                 c[crow + s] += av * b[bp + s];
@@ -210,14 +198,19 @@ pub fn matvec(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
 /// `y = beta*y + A x`.
 pub fn matvec_into(a: &DenseMatrix, x: &[f64], y: &mut [f64], beta: f64) {
     let n = a.cols();
+    let kern = simd::kernels();
     for (i, yi) in y.iter_mut().enumerate() {
         let row = &a.data()[i * n..(i + 1) * n];
-        *yi = beta * *yi + dot(row, x);
+        *yi = beta * *yi + kern.dot(row, x);
     }
 }
 
 /// `y = Aᵀ x` — accumulate x[i]-scaled rows; streams A once, writes y
 /// repeatedly (y is short: n entries, cache-resident).
+///
+/// Zero coefficients are **not** skipped: `0 · row` must still propagate
+/// NaN/Inf from A into y (same IEEE contract as the GEMM tiles), and the
+/// blocked `apply_transpose_mat` path stays bitwise identical per row.
 pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(
         a.rows(),
@@ -229,61 +222,32 @@ pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
     );
     let n = a.cols();
     let mut y = vec![0.0; n];
+    let kern = simd::kernels();
     for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
         let row = &a.data()[i * n..(i + 1) * n];
-        axpy(xi, row, &mut y);
+        kern.axpy(xi, row, &mut y);
     }
     y
 }
 
-/// Unrolled dot product.
+/// Unrolled dot product (dispatched to the active SIMD backend).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    simd::kernels().dot(a, b)
 }
 
-/// `y += alpha * x`, unrolled.
+/// `y += alpha * x` (dispatched to the active SIMD backend).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        y[i] += alpha * x[i];
-        y[i + 1] += alpha * x[i + 1];
-        y[i + 2] += alpha * x[i + 2];
-        y[i + 3] += alpha * x[i + 3];
-    }
-    for i in chunks * 4..n {
-        y[i] += alpha * x[i];
-    }
+    simd::kernels().axpy(alpha, x, y)
 }
 
-/// `x *= alpha`.
+/// `x *= alpha` (dispatched to the active SIMD backend).
 #[inline]
 pub fn scal(alpha: f64, x: &mut [f64]) {
-    for v in x.iter_mut() {
-        *v *= alpha;
-    }
+    simd::kernels().scal(alpha, x)
 }
 
 #[cfg(test)]
@@ -314,6 +278,8 @@ mod tests {
             (3, 4, 5),
             (4, 8, 8),
             (5, 7, 9),
+            (4, 8, 12),
+            (5, 9, 13),
             (17, 33, 29),
             (64, 64, 64),
             (100, 37, 258),

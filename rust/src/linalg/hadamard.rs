@@ -9,6 +9,10 @@
 use super::{is_power_of_two, LinalgError, Result};
 
 /// In-place unnormalized FWHT of a power-of-two-length vector.
+///
+/// Each stage's block halves are contiguous, so the whole butterfly runs
+/// through the dispatched SIMD add/sub pass. The pass is adds/subs only —
+/// bitwise identical on every backend.
 pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
     let n = x.len();
     if !is_power_of_two(n) {
@@ -16,15 +20,26 @@ pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
             "fwht: length {n} is not a power of two"
         )));
     }
+    let kern = crate::simd::kernels();
     let mut h = 1;
     while h < n {
-        // Butterfly stage at stride h; blocks of 2h.
-        for block in (0..n).step_by(2 * h) {
-            for i in block..block + h {
-                let a = x[i];
-                let b = x[i + h];
-                x[i] = a + b;
-                x[i + h] = a - b;
+        // Butterfly stage at stride h; blocks of 2h. The early stages
+        // (h < 8) stay inline: one dispatched call per 1-4-element half
+        // would cost more than the adds it performs, and the inline loop
+        // is bitwise identical to every backend's butterfly anyway.
+        if h < 8 {
+            for block in (0..n).step_by(2 * h) {
+                for i in block..block + h {
+                    let a = x[i];
+                    let b = x[i + h];
+                    x[i] = a + b;
+                    x[i + h] = a - b;
+                }
+            }
+        } else {
+            for block in (0..n).step_by(2 * h) {
+                let (lo, hi) = x[block..block + 2 * h].split_at_mut(h);
+                kern.butterfly(lo, hi);
             }
         }
         h *= 2;
@@ -78,21 +93,16 @@ pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Resul
     Ok(())
 }
 
-/// Serial full-width butterfly (all columns at once).
+/// Serial full-width butterfly (all columns at once), each row pair through
+/// the dispatched SIMD add/sub pass.
 fn fwht_columns_serial(data: &mut [f64], rows: usize, cols: usize) {
+    let kern = crate::simd::kernels();
     let mut h = 1;
     while h < rows {
         for block in (0..rows).step_by(2 * h) {
             for i in block..block + h {
                 let (top, bot) = data.split_at_mut((i + h) * cols);
-                let a = &mut top[i * cols..i * cols + cols];
-                let b = &mut bot[..cols];
-                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
-                    let u = *x;
-                    let v = *y;
-                    *x = u + v;
-                    *y = u - v;
-                }
+                kern.butterfly(&mut top[i * cols..i * cols + cols], &mut bot[..cols]);
             }
         }
         h *= 2;
@@ -113,18 +123,14 @@ unsafe fn fwht_column_band(
 ) {
     let base = ptr.0;
     let w = j1 - j0;
+    let kern = crate::simd::kernels();
     let mut h = 1;
     while h < rows {
         for block in (0..rows).step_by(2 * h) {
             for i in block..block + h {
                 let a = std::slice::from_raw_parts_mut(base.add(i * cols + j0), w);
                 let b = std::slice::from_raw_parts_mut(base.add((i + h) * cols + j0), w);
-                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
-                    let u = *x;
-                    let v = *y;
-                    *x = u + v;
-                    *y = u - v;
-                }
+                kern.butterfly(a, b);
             }
         }
         h *= 2;

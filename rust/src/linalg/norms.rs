@@ -4,13 +4,25 @@ use super::operator::LinearOperator;
 use crate::rng::{GaussianSource, Xoshiro256pp};
 
 /// Euclidean norm with overflow-safe scaling (LAPACK dnrm2 style).
+///
+/// NaN/Inf audit: the `v != 0.0` shortcut does **not** swallow NaN — IEEE
+/// comparison makes `NaN != 0.0` true, so NaN enters the scaled update and
+/// poisons `ssq` (and `0.0 * sqrt(NaN)` at the end is still NaN even when
+/// `scale` never left zero). Infinities take the `hypot` convention: any
+/// ±∞ entry makes the norm +∞ — even alongside NaN, and without the
+/// `Inf/Inf = NaN` artifact a second infinite entry would feed the scaled
+/// update. Pinned by `nan_and_inf_propagate` below and
+/// `tests/nan_propagation.rs`.
 pub fn nrm2(x: &[f64]) -> f64 {
     let mut scale = 0.0f64;
     let mut ssq = 1.0f64;
+    let mut inf = false;
     for &v in x {
         if v != 0.0 {
             let a = v.abs();
-            if scale < a {
+            if a.is_infinite() {
+                inf = true;
+            } else if scale < a {
                 let r = scale / a;
                 ssq = 1.0 + ssq * r * r;
                 scale = a;
@@ -19,6 +31,9 @@ pub fn nrm2(x: &[f64]) -> f64 {
                 ssq += r * r;
             }
         }
+    }
+    if inf {
+        return f64::INFINITY;
     }
     scale * ssq.sqrt()
 }
@@ -34,9 +49,21 @@ pub fn nrm2_diff(x: &[f64], y: &[f64]) -> f64 {
     s.sqrt()
 }
 
-/// ∞-norm.
+/// ∞-norm. NaN propagates: folding with `f64::max` would silently drop it
+/// (`f64::max(x, NaN) == x`), so a vector of NaNs reported ∞-norm 0.0 and
+/// a diverged solve could be mistaken for a converged one.
 pub fn norm_inf(x: &[f64]) -> f64 {
-    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    let mut m = 0.0f64;
+    for &v in x {
+        let a = v.abs();
+        if a.is_nan() {
+            return f64::NAN;
+        }
+        if a > m {
+            m = a;
+        }
+    }
+    m
 }
 
 /// 1-norm.
@@ -117,6 +144,29 @@ mod tests {
         assert_eq!(norm_inf(&v), 3.0);
         assert_eq!(norm_1(&v), 6.0);
         assert!((nrm2_diff(&v, &[1.0, -2.0, 0.0]) - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nan_and_inf_propagate() {
+        // norm_inf: NaN anywhere (even alongside a larger finite value or
+        // after Inf) must surface, not be max-folded away.
+        assert!(norm_inf(&[f64::NAN]).is_nan());
+        assert!(norm_inf(&[f64::NAN; 4]).is_nan());
+        assert!(norm_inf(&[1.0, f64::NAN, 3.0]).is_nan());
+        assert!(norm_inf(&[f64::INFINITY, f64::NAN]).is_nan());
+        assert_eq!(norm_inf(&[1.0, f64::NEG_INFINITY]), f64::INFINITY);
+        // nrm2: the zero-skip must not swallow non-finite entries either.
+        assert!(nrm2(&[f64::NAN]).is_nan());
+        assert!(nrm2(&[0.0, f64::NAN, 1.0]).is_nan());
+        assert!(nrm2(&[2.0, f64::NAN]).is_nan());
+        // hypot convention: ±∞ dominates — even repeated (no Inf/Inf = NaN
+        // artifact) and even alongside NaN.
+        assert_eq!(nrm2(&[1.0, f64::INFINITY]), f64::INFINITY);
+        assert_eq!(nrm2(&[f64::INFINITY, f64::INFINITY]), f64::INFINITY);
+        assert_eq!(nrm2(&[f64::NEG_INFINITY, 2.0]), f64::INFINITY);
+        assert_eq!(nrm2(&[f64::INFINITY, f64::NAN]), f64::INFINITY);
+        // norm_1 inherits propagation from `+`.
+        assert!(norm_1(&[1.0, f64::NAN]).is_nan());
     }
 
     #[test]

@@ -158,8 +158,9 @@ impl LinearOperator for DenseMatrix {
     /// Blocked transpose apply with a shared pass over A: for each input
     /// row i, `y[r, :] += x[r, i] · A[i, :]` for every r in the worker's
     /// row shard — the per-row accumulation order (i ascending, zero
-    /// coefficients skipped) matches `matvec_t` exactly, so each row is
-    /// bitwise identical to [`LinearOperator::apply_transpose`].
+    /// coefficients **not** skipped, same IEEE contract as `matvec_t`)
+    /// matches `matvec_t` exactly, so each row is bitwise identical to
+    /// [`LinearOperator::apply_transpose`].
     fn apply_transpose_mat(&self, x: &DenseMatrix, y: &mut DenseMatrix) {
         let (m, n) = DenseMatrix::shape(self);
         let k = x.rows();
@@ -176,16 +177,18 @@ impl LinearOperator for DenseMatrix {
         } else {
             crate::parallel::threads_for(k, 1)
         };
+        // Hoisted once per pass: this axpy runs m·k times per apply, so the
+        // per-call dispatch (atomic load + vtable) would sit in the
+        // innermost loop. Same kernel object `matvec_t` resolves, so the
+        // bitwise-per-row contract is unaffected.
+        let kern = crate::simd::kernels();
         crate::parallel::for_each_row_block(y.data_mut(), k, n, threads, |_, rows, block| {
             block.fill(0.0);
             for i in 0..m {
                 let arow = self.row(i);
                 for (local, r) in rows.clone().enumerate() {
                     let xi = x[(r, i)];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    super::gemm::axpy(xi, arow, &mut block[local * n..(local + 1) * n]);
+                    kern.axpy(xi, arow, &mut block[local * n..(local + 1) * n]);
                 }
             }
         });

@@ -3,10 +3,10 @@
 //! Tall-thin economy QR: `B (s×n) = Q (s×n) · R (n×n)`, s ≥ n. This runs on
 //! the *sketched* matrix, so s is a small multiple of n and an unblocked
 //! column-at-a-time Householder sweep is already BLAS-2-bound on matrices
-//! that fit in cache; we add light inner unrolling via `gemm::{dot, axpy}`.
+//! that fit in cache; the inner streams run on the dispatched SIMD
+//! `dot`/`axpy` kernels (hoisted once per sweep — see [`crate::simd`]).
 
 use super::dense::DenseMatrix;
-use super::gemm::{axpy, dot};
 use super::{LinalgError, Result};
 
 /// Economy QR factorization `A = Q R`.
@@ -54,6 +54,9 @@ pub fn qr_compact(a: &DenseMatrix) -> Result<QrCompact> {
     // at[(k, i)] = a[(i, k)]: row k of `at` is column k of A, contiguous.
     let mut at = a.transpose();
     let mut tau = vec![0.0; n];
+    // Hoisted: dot/axpy run O(n^2) times below; per-call dispatch would sit
+    // in the inner loop.
+    let kern = crate::simd::kernels();
     for j in 0..n {
         // Reflector from column j (= row j of at), entries j..s.
         let row_j = at.row(j);
@@ -81,10 +84,10 @@ pub fn qr_compact(a: &DenseMatrix) -> Result<QrCompact> {
         let v_j = &head[j * s + j + 1..j * s + s];
         for k in j + 1..n {
             let row_k = &mut tail[(k - j - 1) * s..(k - j - 1) * s + s];
-            let w = row_k[j] + dot(v_j, &row_k[j + 1..s]);
+            let w = row_k[j] + kern.dot(v_j, &row_k[j + 1..s]);
             let tw = tau_j * w;
             row_k[j] -= tw;
-            axpy(-tw, v_j, &mut row_k[j + 1..s]);
+            kern.axpy(-tw, v_j, &mut row_k[j + 1..s]);
         }
     }
     Ok(QrCompact { vrt: at, tau })
@@ -131,6 +134,7 @@ impl QrCompact {
         let (n, s) = self.vrt.shape();
         assert_eq!(c.len(), s, "q_transpose_vec: len {} != rows {s}", c.len());
         let mut y = c.to_vec();
+        let kern = crate::simd::kernels();
         // Qᵀ = H_{n-1} ... H_1 H_0 applied left-to-right; reflector v_j is
         // the contiguous tail of row j of vrt.
         for j in 0..n {
@@ -139,10 +143,10 @@ impl QrCompact {
                 continue;
             }
             let v_j = &self.vrt.row(j)[j + 1..s];
-            let w = y[j] + dot(v_j, &y[j + 1..s]);
+            let w = y[j] + kern.dot(v_j, &y[j + 1..s]);
             let tw = tau_j * w;
             y[j] -= tw;
-            axpy(-tw, v_j, &mut y[j + 1..s]);
+            kern.axpy(-tw, v_j, &mut y[j + 1..s]);
         }
         y.truncate(n);
         y
@@ -185,6 +189,7 @@ impl QrCompact {
         assert_eq!(z.len(), n, "q_vec: len {} != cols {n}", z.len());
         let mut y = vec![0.0; s];
         y[..n].copy_from_slice(z);
+        let kern = crate::simd::kernels();
         // Q = H_0 H_1 ... H_{n-1} applied right-to-left.
         for j in (0..n).rev() {
             let tau_j = self.tau[j];
@@ -192,10 +197,10 @@ impl QrCompact {
                 continue;
             }
             let v_j = &self.vrt.row(j)[j + 1..s];
-            let w = y[j] + dot(v_j, &y[j + 1..s]);
+            let w = y[j] + kern.dot(v_j, &y[j + 1..s]);
             let tw = tau_j * w;
             y[j] -= tw;
-            axpy(-tw, v_j, &mut y[j + 1..s]);
+            kern.axpy(-tw, v_j, &mut y[j + 1..s]);
         }
         y
     }
@@ -241,15 +246,16 @@ pub fn qr_mgs(a: &DenseMatrix) -> Result<QrFactors> {
     // Work column-major.
     let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col_copy(j)).collect();
     let mut r = DenseMatrix::zeros(n, n);
+    let kern = crate::simd::kernels();
     for j in 0..n {
         // Re-orthogonalize once ("twice is enough", Giraud et al.) for
         // numerical robustness at high condition numbers.
         for _pass in 0..2 {
             for i in 0..j {
                 let (head, tail) = cols.split_at_mut(j);
-                let rij = dot(&head[i], &tail[0]);
+                let rij = kern.dot(&head[i], &tail[0]);
                 r[(i, j)] += rij;
-                axpy(-rij, &head[i], &mut tail[0]);
+                kern.axpy(-rij, &head[i], &mut tail[0]);
             }
         }
         let norm = super::norms::nrm2(&cols[j]);

@@ -170,14 +170,15 @@ impl CsrMatrix {
     }
 
     /// `y = Aᵀ x` into a caller buffer.
+    ///
+    /// Zero coefficients are **not** skipped: `0 · NaN`/`0 · Inf` stored in
+    /// A must reach y (same IEEE contract as the dense `matvec_t`), so
+    /// non-finite propagation does not depend on the sparsity of x.
     pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(y.len(), self.cols);
         y.fill(0.0);
         for i in 0..self.rows {
             let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
             let lo = self.indptr[i] as usize;
             let hi = self.indptr[i + 1] as usize;
             for k in lo..hi {

@@ -42,6 +42,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7447)" },
         FlagSpec { name: "workers", takes_value: true, help: "serve: worker threads (default 2)" },
         FlagSpec { name: "threads", takes_value: true, help: "kernel pool size for GEMM/FWHT/sketch (0 = auto)" },
+        FlagSpec { name: "simd", takes_value: true, help: "kernel SIMD backend: auto|scalar|avx2|neon" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -59,11 +60,23 @@ fn main() {
         }
     };
     match args.flag_usize("threads") {
-        Ok(Some(t)) => snsolve::config::SolveConfig { threads: t }.install(),
+        Ok(Some(t)) => snsolve::parallel::set_threads(t),
         Ok(None) => {}
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
             std::process::exit(2);
+        }
+    }
+    if let Some(s) = args.flag("simd") {
+        match snsolve::simd::SimdChoice::parse(s) {
+            Some(c) => snsolve::simd::set_choice(c),
+            None => {
+                eprintln!(
+                    "error: invalid value for --simd: {s} (expected auto|scalar|avx2|neon)\n\n{}",
+                    usage("snsolve", SUBCOMMANDS, &specs)
+                );
+                std::process::exit(2);
+            }
         }
     }
     let code = match args.subcommand.as_deref() {
@@ -149,7 +162,26 @@ fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
 fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
     let mut cfg = if let Some(path) = args.flag("config") {
         match snsolve::config::Config::load(std::path::Path::new(path)) {
-            Ok(c) => c.service_config(),
+            Ok(c) => {
+                // A present-but-unparseable simd key is a config error,
+                // matching the --simd flag (absence stays ambient).
+                if let Some(raw) = c.get_str("parallel", "simd") {
+                    if snsolve::simd::SimdChoice::parse(raw).is_none() {
+                        eprintln!(
+                            "config error: invalid [parallel] simd value {raw:?} \
+                             (expected auto|scalar|avx2|neon)"
+                        );
+                        return 2;
+                    }
+                }
+                // `[parallel] simd` applies unless the --simd flag (already
+                // installed in main, higher precedence) was given; an
+                // absent key leaves SNSOLVE_SIMD / auto-detection alone.
+                if let (None, Some(choice)) = (args.flag("simd"), c.solve_config().simd) {
+                    snsolve::simd::set_choice(choice);
+                }
+                c.service_config()
+            }
             Err(e) => {
                 eprintln!("config error: {e}");
                 return 2;

@@ -1,0 +1,426 @@
+//! Runtime-dispatched SIMD microkernels for the dense hot paths.
+//!
+//! Murray et al. (2023) single out hardware-tuned kernel backends as the
+//! gap between RandNLA theory and usable software; this module closes it
+//! for the CPU layer. A small kernel trait ([`SimdKernels`]: fused GEMM
+//! register tile, `dot`, `axpy`, `scal`, FWHT butterfly pass) has three
+//! backends:
+//!
+//! * **scalar** — the portable unrolled reference (the seed kernels, kept
+//!   bit-for-bit as the cross-check oracle);
+//! * **avx2** — x86_64 AVX2+FMA via `std::arch`, 4x12 register tile;
+//! * **neon** — aarch64 NEON via `std::arch`, 4x8 register tile.
+//!
+//! Selection resolves per call through one atomic load, highest precedence
+//! first: [`set_choice`] (wired from [`crate::config::SolveConfig`], the
+//! `--simd` CLI/bench flags, and the `[parallel] simd` config key) →
+//! `SNSOLVE_SIMD` env var (`auto|scalar|avx2|neon`) → auto-detection
+//! (`is_x86_feature_detected!` at runtime on x86_64, compile-time cfg on
+//! aarch64). A forced backend the host cannot run resolves to scalar, so
+//! unsupported hosts never execute a SIMD instruction.
+//!
+//! **Determinism contract.** For a fixed backend every kernel is a pure
+//! per-element/per-tile function, so kernel results are bitwise identical
+//! across thread counts (the GEMM row panels stay [`SimdKernels::mr`]-
+//! aligned). Across backends agreement is ≤ 1e-12 relative: FMA contraction
+//! and wider accumulators re-round, but nothing re-associates across the
+//! GEMM depth loop, and the FWHT butterfly (adds/subs only) is bitwise
+//! identical on every backend. Asserted by `tests/parallel_determinism.rs`
+//! and the `micro_linalg`/`sketch_ablation` bench cross-checks.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A resolved kernel backend (what actually executes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// The [`SimdChoice`] that forces this backend.
+    pub fn as_choice(self) -> SimdChoice {
+        match self {
+            Backend::Scalar => SimdChoice::Scalar,
+            Backend::Avx2 => SimdChoice::Avx2,
+            Backend::Neon => SimdChoice::Neon,
+        }
+    }
+}
+
+/// A requested backend — the value `--simd`, `SNSOLVE_SIMD` and the
+/// `[parallel] simd` config key accept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdChoice {
+    /// Best available: avx2 → neon → scalar.
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdChoice {
+    /// Parse `auto|scalar|avx2|neon` (case-insensitive, trimmed).
+    pub fn parse(s: &str) -> Option<SimdChoice> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(SimdChoice::Auto),
+            "scalar" => Some(SimdChoice::Scalar),
+            "avx2" => Some(SimdChoice::Avx2),
+            "neon" => Some(SimdChoice::Neon),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::Scalar => "scalar",
+            SimdChoice::Avx2 => "avx2",
+            SimdChoice::Neon => "neon",
+        }
+    }
+}
+
+/// The kernel set every backend implements. All slice arguments follow the
+/// seed scalar kernels' conventions (`gemm_tile` mirrors the old
+/// `micro_4x8`); implementations must not skip zero operands — `0·NaN` and
+/// `0·Inf` reach the output exactly as IEEE 754 prescribes, independent of
+/// which tile an element lands in.
+pub trait SimdKernels: Sync {
+    fn backend(&self) -> Backend;
+
+    /// GEMM register-tile rows. Row-panel boundaries must align to this so
+    /// the tile layout (and hence every rounding) is identical at any
+    /// thread count.
+    fn mr(&self) -> usize;
+
+    /// GEMM register-tile columns.
+    fn nr(&self) -> usize;
+
+    /// Fused register-tile multiply: `C[i0..i0+MR, j0..j0+NR] += A-panel ·
+    /// B-panel` over `kc` depth steps, where `a` is an (m×k) row-major
+    /// panel, `b` is k×n row-major, and `c` is m×n row-major. Accumulates
+    /// in ascending `p` order per element (no cross-depth re-association),
+    /// so backends differ from scalar only by FMA/vector-lane rounding.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        k: usize,
+        n: usize,
+        i0: usize,
+        j0: usize,
+        pc: usize,
+        kc: usize,
+    );
+
+    /// Unrolled dot product.
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// `y += alpha · x`.
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+
+    /// `x *= alpha`. Bitwise identical on every backend (one rounding per
+    /// element).
+    fn scal(&self, alpha: f64, x: &mut [f64]);
+
+    /// FWHT butterfly pass: `(a[i], b[i]) ← (a[i]+b[i], a[i]−b[i])`.
+    /// Bitwise identical on every backend (adds/subs only).
+    fn butterfly(&self, a: &mut [f64], b: &mut [f64]);
+}
+
+/// Sentinel: no programmatic choice installed (fall through to the env).
+const CHOICE_UNSET: u8 = u8::MAX;
+
+/// Process-wide configured choice (see [`set_choice`]).
+static CONFIGURED: AtomicU8 = AtomicU8::new(CHOICE_UNSET);
+
+fn encode(c: SimdChoice) -> u8 {
+    match c {
+        SimdChoice::Auto => 0,
+        SimdChoice::Scalar => 1,
+        SimdChoice::Avx2 => 2,
+        SimdChoice::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<SimdChoice> {
+    match v {
+        0 => Some(SimdChoice::Auto),
+        1 => Some(SimdChoice::Scalar),
+        2 => Some(SimdChoice::Avx2),
+        3 => Some(SimdChoice::Neon),
+        _ => None,
+    }
+}
+
+/// Configure the backend for this process. Overrides `SNSOLVE_SIMD`.
+pub fn set_choice(c: SimdChoice) {
+    CONFIGURED.store(encode(c), Ordering::SeqCst);
+}
+
+/// Drop the programmatic choice — resolution falls back to the
+/// `SNSOLVE_SIMD` env var (then auto-detection). Used by tests and bench
+/// sweeps to restore the ambient configuration.
+pub fn clear_choice() {
+    CONFIGURED.store(CHOICE_UNSET, Ordering::SeqCst);
+}
+
+fn env_choice() -> SimdChoice {
+    static ENV: OnceLock<SimdChoice> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SNSOLVE_SIMD")
+            .ok()
+            .and_then(|s| SimdChoice::parse(&s))
+            .unwrap_or(SimdChoice::Auto)
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// NEON is architecturally mandatory on aarch64, so compile-time cfg is the
+/// detection.
+fn neon_available() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+/// Resolve a requested choice to a backend the host can actually run.
+/// Unsupported forced backends degrade to scalar (never to a different
+/// SIMD set), so `SNSOLVE_SIMD=avx2` on a non-AVX2 host is safe.
+pub fn resolve(choice: SimdChoice) -> Backend {
+    match choice {
+        SimdChoice::Auto => {
+            if avx2_available() {
+                Backend::Avx2
+            } else if neon_available() {
+                Backend::Neon
+            } else {
+                Backend::Scalar
+            }
+        }
+        SimdChoice::Scalar => Backend::Scalar,
+        SimdChoice::Avx2 => {
+            if avx2_available() {
+                Backend::Avx2
+            } else {
+                Backend::Scalar
+            }
+        }
+        SimdChoice::Neon => {
+            if neon_available() {
+                Backend::Neon
+            } else {
+                Backend::Scalar
+            }
+        }
+    }
+}
+
+/// The backend the kernels will use right now: configured → env → auto.
+pub fn active() -> Backend {
+    let configured = decode(CONFIGURED.load(Ordering::SeqCst));
+    resolve(configured.unwrap_or_else(env_choice))
+}
+
+/// Every backend this host can execute (scalar always; in backend-sweep
+/// order for the tests and benches).
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    if avx2_available() {
+        v.push(Backend::Avx2);
+    }
+    if neon_available() {
+        v.push(Backend::Neon);
+    }
+    v
+}
+
+/// The kernels for the active backend (one atomic load — callers may hoist
+/// this once per operation, but per-call dispatch is also fine).
+pub fn kernels() -> &'static dyn SimdKernels {
+    backend_kernels(active())
+}
+
+/// The kernels for a specific backend. Requests for a backend the host
+/// cannot run return the scalar kernels — this is what makes handing out
+/// `&Avx2Kernels` sound: it only ever escapes after feature detection.
+pub fn backend_kernels(b: Backend) -> &'static dyn SimdKernels {
+    match b {
+        Backend::Scalar => &scalar::ScalarKernels,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if avx2_available() => &avx2::Avx2Kernels,
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => &neon::NeonKernels,
+        _ => &scalar::ScalarKernels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256pp};
+
+    // NOTE: no test here calls `set_choice` — the configured choice is
+    // process-global and unit tests run concurrently; flipping it mid-run
+    // would race the bitwise-equality assertions elsewhere in the crate.
+    // The global-dispatch path is exercised (single-threadedly) by
+    // `tests/parallel_determinism.rs`.
+
+    #[test]
+    fn parse_choices() {
+        assert_eq!(SimdChoice::parse("auto"), Some(SimdChoice::Auto));
+        assert_eq!(SimdChoice::parse(" Scalar "), Some(SimdChoice::Scalar));
+        assert_eq!(SimdChoice::parse("AVX2"), Some(SimdChoice::Avx2));
+        assert_eq!(SimdChoice::parse("neon"), Some(SimdChoice::Neon));
+        assert_eq!(SimdChoice::parse("sse9"), None);
+        assert_eq!(SimdChoice::parse(""), None);
+        for c in [SimdChoice::Auto, SimdChoice::Scalar, SimdChoice::Avx2, SimdChoice::Neon] {
+            assert_eq!(SimdChoice::parse(c.name()), Some(c));
+            assert_eq!(decode(encode(c)), Some(c));
+        }
+        assert_eq!(decode(CHOICE_UNSET), None);
+    }
+
+    #[test]
+    fn scalar_always_available_and_resolution_is_safe() {
+        let av = available();
+        assert_eq!(av[0], Backend::Scalar);
+        // resolve() never hands out a backend the host cannot run.
+        for c in [SimdChoice::Auto, SimdChoice::Scalar, SimdChoice::Avx2, SimdChoice::Neon] {
+            assert!(av.contains(&resolve(c)), "{:?}", c);
+        }
+        assert_eq!(resolve(SimdChoice::Scalar), Backend::Scalar);
+        assert!(av.contains(&active()));
+    }
+
+    #[test]
+    fn forced_unsupported_backend_falls_back_to_scalar() {
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(resolve(SimdChoice::Avx2), Backend::Scalar);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(resolve(SimdChoice::Neon), Backend::Scalar);
+        // And backend_kernels never returns SIMD kernels for them either.
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(backend_kernels(Backend::Neon).backend(), Backend::Scalar);
+    }
+
+    #[test]
+    fn tile_shapes_sane() {
+        for b in available() {
+            let k = backend_kernels(b);
+            assert_eq!(k.backend(), b);
+            // All backends share MR=4 so the thread-panel partitioning is
+            // backend-independent; NR varies with register width.
+            assert_eq!(k.mr(), 4, "{}", b.name());
+            assert!(k.nr() >= 4, "{}", b.name());
+        }
+    }
+
+    /// Every available backend agrees with scalar: dot/axpy within 1e-12,
+    /// scal and butterfly bitwise.
+    #[test]
+    fn vector_kernels_agree_with_scalar() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(901));
+        let scalar = backend_kernels(Backend::Scalar);
+        for n in [0usize, 1, 3, 7, 16, 33, 100, 1003] {
+            let a = g.gaussian_vec(n);
+            let b = g.gaussian_vec(n);
+            let d_ref = scalar.dot(&a, &b);
+            let mut axpy_ref = b.clone();
+            scalar.axpy(0.37, &a, &mut axpy_ref);
+            let mut scal_ref = a.clone();
+            scalar.scal(-1.25, &mut scal_ref);
+            let (mut bf_a_ref, mut bf_b_ref) = (a.clone(), b.clone());
+            scalar.butterfly(&mut bf_a_ref, &mut bf_b_ref);
+
+            for bk in available() {
+                let kern = backend_kernels(bk);
+                let d = kern.dot(&a, &b);
+                // Relative to Σ|aᵢbᵢ| — the scale rounding actually acts on.
+                let scale: f64 = a.iter().zip(b.iter()).map(|(x, y)| (x * y).abs()).sum();
+                let tol = 1e-12 * scale.max(1.0);
+                assert!((d - d_ref).abs() <= tol, "{} dot n={n}: {d} vs {d_ref}", bk.name());
+                let mut y = b.clone();
+                kern.axpy(0.37, &a, &mut y);
+                for (u, v) in y.iter().zip(axpy_ref.iter()) {
+                    assert!((u - v).abs() <= 1e-12, "{} axpy n={n}", bk.name());
+                }
+                let mut x = a.clone();
+                kern.scal(-1.25, &mut x);
+                assert_eq!(x, scal_ref, "{} scal n={n}", bk.name());
+                let (mut ba, mut bb) = (a.clone(), b.clone());
+                kern.butterfly(&mut ba, &mut bb);
+                assert_eq!(ba, bf_a_ref, "{} butterfly(+) n={n}", bk.name());
+                assert_eq!(bb, bf_b_ref, "{} butterfly(-) n={n}", bk.name());
+            }
+        }
+    }
+
+    /// `gemm_tile` of every backend matches a naive per-element reference
+    /// within 1e-12, including NaN/Inf propagation from zero operands.
+    #[test]
+    fn gemm_tile_matches_naive_reference() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(902));
+        for bk in available() {
+            let kern = backend_kernels(bk);
+            let (mr, nr) = (kern.mr(), kern.nr());
+            let k = 37usize;
+            let a = g.gaussian_vec(mr * k);
+            let b = g.gaussian_vec(k * nr);
+            let mut c = vec![0.0; mr * nr];
+            kern.gemm_tile(&a, &b, &mut c, k, nr, 0, 0, 0, k);
+            for i in 0..mr {
+                for j in 0..nr {
+                    let mut s = 0.0;
+                    for p in 0..k {
+                        s += a[i * k + p] * b[p * nr + j];
+                    }
+                    let got = c[i * nr + j];
+                    assert!((got - s).abs() <= 1e-12, "{} tile ({i},{j})", bk.name());
+                }
+            }
+            // 0 · NaN / 0 · Inf must poison the tile output.
+            let az = vec![0.0; mr * k];
+            let mut bnf = vec![1.0; k * nr];
+            bnf[0] = f64::NAN; // column 0
+            bnf[nr + 1] = f64::INFINITY; // column 1
+            let mut cz = vec![0.0; mr * nr];
+            kern.gemm_tile(&az, &bnf, &mut cz, k, nr, 0, 0, 0, k);
+            for i in 0..mr {
+                assert!(cz[i * nr].is_nan(), "{} 0*NaN row {i}", bk.name());
+                assert!(cz[i * nr + 1].is_nan(), "{} 0*Inf row {i}", bk.name());
+                assert_eq!(cz[i * nr + 2], 0.0, "{} clean col row {i}", bk.name());
+            }
+        }
+    }
+}

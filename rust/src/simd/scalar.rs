@@ -1,0 +1,116 @@
+//! Portable scalar reference kernels.
+//!
+//! These are the seed implementations (the pre-SIMD `gemm.rs` microkernel
+//! and unrolled BLAS-1 loops), kept as the IEEE ground truth the SIMD
+//! backends are cross-checked against and as the fallback on hosts without
+//! AVX2/NEON (or under `SNSOLVE_SIMD=scalar`).
+
+use super::{Backend, SimdKernels};
+
+const MR: usize = 4;
+const NR: usize = 8;
+
+pub struct ScalarKernels;
+
+impl SimdKernels for ScalarKernels {
+    fn backend(&self) -> Backend {
+        Backend::Scalar
+    }
+
+    fn mr(&self) -> usize {
+        MR
+    }
+
+    fn nr(&self) -> usize {
+        NR
+    }
+
+    /// Full 4x8 register-tile microkernel; the compiler maps the 32 live
+    /// accumulators onto vector registers on its own.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        k: usize,
+        n: usize,
+        i0: usize,
+        j0: usize,
+        pc: usize,
+        kc: usize,
+    ) {
+        let mut acc = [[0.0f64; NR]; MR];
+        let a0 = i0 * k + pc;
+        let a1 = (i0 + 1) * k + pc;
+        let a2 = (i0 + 2) * k + pc;
+        let a3 = (i0 + 3) * k + pc;
+        for p in 0..kc {
+            let bp = (pc + p) * n + j0;
+            let brow = &b[bp..bp + NR];
+            let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
+            for (r, &ar) in av.iter().enumerate() {
+                for (s, &bv) in brow.iter().enumerate() {
+                    acc[r][s] += ar * bv;
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            let cp = (i0 + r) * n + j0;
+            for (s, &v) in row.iter().enumerate() {
+                c[cp + s] += v;
+            }
+        }
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in chunks * 4..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            y[i] += alpha * x[i];
+            y[i + 1] += alpha * x[i + 1];
+            y[i + 2] += alpha * x[i + 2];
+            y[i + 3] += alpha * x[i + 3];
+        }
+        for i in chunks * 4..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    fn scal(&self, alpha: f64, x: &mut [f64]) {
+        for v in x.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    fn butterfly(&self, a: &mut [f64], b: &mut [f64]) {
+        debug_assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+            let u = *x;
+            let v = *y;
+            *x = u + v;
+            *y = u - v;
+        }
+    }
+}

@@ -85,7 +85,10 @@ impl SketchOperator for GaussianSketch {
         let mut parts = partials.into_iter();
         let mut b = parts.next().unwrap_or_else(|| DenseMatrix::zeros(self.s, n));
         for p in parts {
-            b.axpy(1.0, &p).expect("partials share the sketch shape");
+            // Fixed-order merge through the dispatched SIMD axpy; alpha = 1
+            // keeps each element a single add, so the merge is bitwise
+            // stable across backends too.
+            gemm::axpy(1.0, p.data(), b.data_mut());
         }
         b
     }

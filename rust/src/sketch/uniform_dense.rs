@@ -73,7 +73,9 @@ impl SketchOperator for UniformDenseSketch {
         let mut parts = partials.into_iter();
         let mut b = parts.next().unwrap_or_else(|| DenseMatrix::zeros(self.s, n));
         for p in parts {
-            b.axpy(1.0, &p).expect("partials share the sketch shape");
+            // Fixed-order merge through the dispatched SIMD axpy (see
+            // gaussian.rs for the bitwise-stability note).
+            gemm::axpy(1.0, p.data(), b.data_mut());
         }
         b
     }

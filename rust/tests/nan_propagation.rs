@@ -1,0 +1,144 @@
+//! NaN/Inf propagation contract for the kernel layer (the satellite
+//! bugfixes of the SIMD PR):
+//!
+//! * GEMM must not skip zero operands, so `0·NaN = 0·Inf = NaN` reaches C
+//!   identically whether the element lands in a full register tile or a
+//!   ragged edge tile — C's non-finite propagation must not depend on the
+//!   matrix shape (the old `micro_edge` dropped `av == 0.0` terms).
+//! * `matvec_t` (dense and CSR) and the blocked `apply_transpose_mat` must
+//!   not skip zero coefficients for the same reason.
+//! * `norm_inf` must propagate NaN (`f64::max` swallows it — a vector of
+//!   NaNs reported ∞-norm 0.0, so a diverged solve could be reported as
+//!   converged), and `nrm2`'s zero-skip must not swallow NaN/Inf either.
+//!
+//! Everything here must hold on every SIMD backend; the suite runs under
+//! the ambient backend (CI covers `SNSOLVE_SIMD=scalar` explicitly).
+
+use snsolve::linalg::sparse::CooBuilder;
+use snsolve::linalg::{gemm, norms, DenseMatrix, LinearOperator};
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+
+/// Both-NaN or bitwise-equal — `assert_eq!` alone can't compare NaNs.
+fn same_value(u: f64, v: f64) -> bool {
+    u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan())
+}
+
+/// `0 · NaN` and `0 · Inf` in B poison the matching C columns for every
+/// tile the element can land in. A is all-zero, so the old edge-kernel
+/// `av == 0.0` skip made exactly the edge-tile entries (shape-dependent!)
+/// come out 0.0 instead of NaN.
+#[test]
+fn gemm_zero_times_nonfinite_poisons_full_and_edge_tiles() {
+    // 9 rows: two full MR=4 tiles + 1 edge row. 13 cols: a full register
+    // tile plus a ragged remainder for both the scalar/NEON (NR=8) and
+    // AVX2 (NR=12) tile widths. Column 0 is always in a full tile, column
+    // 12 always in an edge tile.
+    let (m, k, n) = (9usize, 5usize, 13usize);
+    let a = DenseMatrix::zeros(m, k);
+    let mut b = DenseMatrix::zeros(k, n);
+    b[(2, 0)] = f64::NAN;
+    b[(3, 5)] = f64::INFINITY;
+    b[(4, n - 1)] = f64::NAN;
+    let c = gemm::matmul(&a, &b).unwrap();
+    for i in 0..m {
+        assert!(c[(i, 0)].is_nan(), "0*NaN lost in full tile, row {i}");
+        assert!(c[(i, 5)].is_nan(), "0*Inf lost, row {i}");
+        assert!(c[(i, n - 1)].is_nan(), "0*NaN lost in edge tile, row {i}");
+        assert_eq!(c[(i, 1)], 0.0, "clean column polluted, row {i}");
+    }
+}
+
+/// NaN in A poisons the matching C rows — full-height and edge-height
+/// tiles alike.
+#[test]
+fn gemm_nan_in_a_poisons_rows() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(71));
+    let (m, k, n) = (10usize, 7usize, 9usize);
+    let mut a = DenseMatrix::gaussian(m, k, &mut g);
+    a[(0, 3)] = f64::NAN; // full-tile row
+    a[(m - 1, 2)] = f64::NAN; // edge-tile row
+    let b = DenseMatrix::gaussian(k, n, &mut g);
+    let c = gemm::matmul(&a, &b).unwrap();
+    for j in 0..n {
+        assert!(c[(0, j)].is_nan(), "NaN lost in full-tile row, col {j}");
+        assert!(c[(m - 1, j)].is_nan(), "NaN lost in edge-tile row, col {j}");
+        assert!(c[(1, j)].is_finite(), "clean row polluted, col {j}");
+    }
+}
+
+#[test]
+fn matvec_propagates_nonfinite_x() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(72));
+    let a = DenseMatrix::gaussian(6, 4, &mut g);
+    let mut x = vec![1.0; 4];
+    x[2] = f64::NAN;
+    for yi in a.matvec(&x) {
+        assert!(yi.is_nan());
+    }
+    // Inf against a column with a zero entry → 0·Inf = NaN in that row.
+    let mut az = DenseMatrix::gaussian(3, 2, &mut g);
+    az[(1, 0)] = 0.0;
+    let y = az.matvec(&[f64::INFINITY, 1.0]);
+    assert!(y[1].is_nan());
+}
+
+/// `matvec_t` must not skip zero coefficients: `x[i] == 0` against a row
+/// of A holding NaN/Inf still contributes `0·NaN = NaN`.
+#[test]
+fn matvec_t_zero_coefficient_propagates_nonfinite_rows() {
+    let mut a = DenseMatrix::zeros(4, 3);
+    a[(1, 0)] = f64::NAN;
+    a[(2, 1)] = f64::INFINITY;
+    let x = vec![1.0, 0.0, 0.0, 1.0]; // zero weight on the NaN/Inf rows
+    let y = a.matvec_t(&x);
+    assert!(y[0].is_nan(), "0·NaN dropped");
+    assert!(y[1].is_nan(), "0·Inf dropped");
+    assert_eq!(y[2], 0.0);
+}
+
+#[test]
+fn csr_matvec_t_zero_coefficient_propagates_nonfinite_rows() {
+    let mut bld = CooBuilder::new(3, 2);
+    bld.push(0, 0, 1.0);
+    bld.push(1, 1, f64::NAN);
+    bld.push(2, 1, f64::INFINITY);
+    let s = bld.build();
+    let y = s.matvec_t(&[2.0, 0.0, 0.0]);
+    assert_eq!(y[0], 2.0);
+    assert!(y[1].is_nan(), "CSR 0·NaN / 0·Inf dropped");
+}
+
+/// The blocked transpose apply keeps the same IEEE contract as the vector
+/// kernel — rows match `matvec_t` even when the coefficients are zero and
+/// A holds non-finite entries.
+#[test]
+fn apply_transpose_mat_matches_matvec_t_under_nonfinite() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(73));
+    let (m, n, k) = (12usize, 5usize, 3usize);
+    let mut a = DenseMatrix::gaussian(m, n, &mut g);
+    a[(4, 1)] = f64::NAN;
+    a[(7, 3)] = f64::INFINITY;
+    let mut x = DenseMatrix::gaussian(k, m, &mut g);
+    x[(0, 4)] = 0.0; // zero weight on the NaN row
+    x[(1, 7)] = 0.0; // zero weight on the Inf row
+    let mut y = DenseMatrix::zeros(k, n);
+    a.apply_transpose_mat(&x, &mut y);
+    for r in 0..k {
+        let expect = a.matvec_t(x.row(r));
+        for (j, (&u, &v)) in y.row(r).iter().zip(expect.iter()).enumerate() {
+            assert!(same_value(u, v), "row {r} col {j}: blocked {u} vs vector {v}");
+        }
+        assert!(expect[1].is_nan(), "row {r}: NaN row of A never reached y");
+    }
+}
+
+#[test]
+fn norms_propagate_nonfinite() {
+    assert!(norms::norm_inf(&[f64::NAN; 3]).is_nan());
+    assert!(norms::norm_inf(&[5.0, f64::NAN]).is_nan());
+    assert_eq!(norms::norm_inf(&[-3.0, 1.0]), 3.0);
+    assert_eq!(norms::norm_inf(&[f64::NEG_INFINITY, 1.0]), f64::INFINITY);
+    assert!(norms::nrm2(&[0.0, f64::NAN]).is_nan());
+    assert!(norms::nrm2(&[3.0, f64::NAN, 4.0]).is_nan());
+    assert_eq!(norms::nrm2(&[f64::INFINITY, 1.0]), f64::INFINITY);
+}

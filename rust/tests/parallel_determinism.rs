@@ -12,9 +12,16 @@
 //! (c) every sketch operator preserves norms in expectation,
 //!     `E[‖Sx‖²] ≈ ‖x‖²`, checked through the in-tree property harness.
 //!
-//! The thread-count sweep lives in ONE test function: the pool size is a
-//! process-wide setting, and keeping the sweep single-threaded at the test
-//! level makes the `set_threads` transitions race-free.
+//! (d) at every SIMD backend the host supports, the parallel kernels stay
+//!     **bitwise identical** across thread counts (panel boundaries are
+//!     MR-aligned per backend), SIMD-vs-scalar agreement is ≤ 1e-12
+//!     relative, and the FWHT butterfly (adds/subs only) is bitwise
+//!     identical to scalar on every backend.
+//!
+//! The thread-count and SIMD-backend sweeps live in ONE test function: the
+//! pool size and the kernel backend are process-wide settings, and keeping
+//! the sweeps single-threaded at the test level makes the
+//! `set_threads`/`set_choice` transitions race-free.
 
 use snsolve::bench_harness::max_abs_dev;
 use snsolve::linalg::qr::qr_compact;
@@ -187,8 +194,77 @@ fn parallel_paths_match_serial_across_thread_counts() {
         );
     }
 
+    // --- SIMD backend sweep (d) -----------------------------------------
+    // Scalar references at 1 thread; the vectors reuse the GEMM/FWHT
+    // fixtures above plus dot/axpy-shaped matvec inputs.
+    let xv = g.gaussian_vec(gk);
+    let uv = g.gaussian_vec(gm);
+    snsolve::simd::set_choice(snsolve::simd::SimdChoice::Scalar);
+    snsolve::parallel::set_threads(1);
+    let gemm_scalar = gemm::matmul(&ga, &gb).unwrap();
+    let gemm_scale = gemm_scalar.max_abs().max(1e-300);
+    let fwht_scalar = {
+        let mut d = fdata.clone();
+        hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
+        d
+    };
+    let mv_scalar = ga.matvec(&xv);
+    let mvt_scalar = ga.matvec_t(&uv);
+
+    for backend in snsolve::simd::available() {
+        snsolve::simd::set_choice(backend.as_choice());
+        assert_eq!(snsolve::simd::active(), backend, "backend failed to activate");
+        let name = backend.name();
+
+        // Within the backend: bitwise identical across the thread sweep.
+        snsolve::parallel::set_threads(1);
+        let c1 = gemm::matmul(&ga, &gb).unwrap();
+        let f1 = {
+            let mut d = fdata.clone();
+            hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
+            d
+        };
+        for &t in &SWEEP {
+            snsolve::parallel::set_threads(t);
+            let ct = gemm::matmul(&ga, &gb).unwrap();
+            assert_eq!(ct, c1, "{name}: gemm not bitwise across threads at {t}");
+            let mut dt = fdata.clone();
+            hadamard::fwht_columns_inplace(&mut dt, frows, fcols).unwrap();
+            assert_eq!(dt, f1, "{name}: fwht not bitwise across threads at {t}");
+        }
+        snsolve::parallel::set_threads(1);
+
+        // Across backends: ≤ 1e-12 relative vs the scalar reference.
+        let dev = max_abs_dev(c1.data(), gemm_scalar.data()) / gemm_scale;
+        assert!(dev <= TOL, "{name}: gemm vs scalar rel dev {dev}");
+        let mv = ga.matvec(&xv);
+        let dev = max_abs_dev(&mv, &mv_scalar);
+        assert!(dev <= TOL, "{name}: matvec vs scalar dev {dev}");
+        let mvt = ga.matvec_t(&uv);
+        let dev = max_abs_dev(&mvt, &mvt_scalar);
+        assert!(dev <= TOL, "{name}: matvec_t vs scalar dev {dev}");
+
+        // The FWHT butterfly is adds/subs only — bitwise on every backend.
+        assert_eq!(f1, fwht_scalar, "{name}: fwht not bitwise vs scalar");
+
+        // Blocked multi-RHS stays bitwise-per-row under this backend too.
+        let mut y = DenseMatrix::zeros(k_rhs, gm);
+        ga.apply_mat(&x_blk, &mut y);
+        let mut v_out = DenseMatrix::zeros(k_rhs, gk);
+        ga.apply_transpose_mat(&u_blk, &mut v_out);
+        for r in 0..k_rhs {
+            assert_eq!(y.row(r), &ga.apply_vec(x_blk.row(r))[..], "{name}: apply row {r}");
+            assert_eq!(
+                v_out.row(r),
+                &ga.apply_transpose_vec(u_blk.row(r))[..],
+                "{name}: transpose row {r}"
+            );
+        }
+    }
+
     // Restore the ambient (auto) configuration for other tests.
     snsolve::parallel::set_threads(0);
+    snsolve::simd::clear_choice();
 }
 
 /// (c) `E[‖Sx‖²] ≈ ‖x‖²` for every operator family — the approximate
