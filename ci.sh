@@ -15,10 +15,22 @@ echo "== cargo test -q --release =="
 cargo test -q --release
 
 # Forced-scalar run: keeps the portable reference path covered on
-# SIMD-capable runners (the default run above dispatches to AVX2/NEON
-# when the host supports it).
+# SIMD-capable runners (the default run above dispatches to
+# AVX-512/AVX2/NEON when the host supports it).
 echo "== cargo test -q (SNSOLVE_SIMD=scalar) =="
 SNSOLVE_SIMD=scalar cargo test -q
+
+# Forced-avx512 run: exercises the 8x8 zmm backend on hosts reporting
+# avx512f. The step is skipped entirely when the host lacks the feature —
+# a forced avx512 would just degrade to scalar there, duplicating the
+# forced-scalar run above. (The in-process fallback still guarantees the
+# knob is safe anywhere.)
+if grep -q avx512f /proc/cpuinfo 2>/dev/null; then
+  echo "== cargo test -q (SNSOLVE_SIMD=avx512) =="
+  SNSOLVE_SIMD=avx512 cargo test -q
+else
+  echo "== skipping SNSOLVE_SIMD=avx512 run (host reports no avx512f) =="
+fi
 
 echo "== cargo fmt --check =="
 cargo fmt --check

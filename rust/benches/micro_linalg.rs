@@ -8,10 +8,15 @@
 //! wall-clock speedup over the 1-thread baseline and the max deviation from
 //! the serial result (must stay ≤ 1e-12).
 //!
-//! `--simd scalar|avx2|neon|auto` forces the kernel backend for the main
-//! table; the per-backend sweep at the end always times every backend the
-//! host supports (GEMM/dot/axpy/FWHT GFLOP/s per backend) and cross-checks
-//! each against the scalar reference (≤ 1e-12 relative; FWHT bitwise).
+//! `--simd scalar|avx2|avx512|neon|auto` forces the kernel backend for the
+//! main table; the per-backend sweep at the end always times every backend
+//! the host supports (GEMM/dot/axpy/FWHT GFLOP/s per backend) and
+//! cross-checks each against the scalar reference (≤ 1e-12 relative; FWHT
+//! bitwise).
+//!
+//! The final sweep times packed vs unpacked GEMM and blocked vs unblocked
+//! Householder QR (the PR-4 tentpole) and saves the record as
+//! `BENCH_micro_linalg.{json,csv}`.
 
 use snsolve::bench_harness::report::Table;
 use snsolve::bench_harness::{
@@ -168,9 +173,96 @@ fn main() {
     let simd_table = run_simd_sweep();
     println!("{}", simd_table.render());
     let _ = simd_table.save("micro_linalg_simd");
-    // Restore the ambient thread/backend configuration.
+
+    // ---- packed vs unpacked GEMM + blocked vs unblocked QR --------------
+    // The PR-4 perf record: saved as BENCH_micro_linalg.{json,csv} so the
+    // trajectory (GFLOP/s packed vs unpacked at 2048³, blocked vs
+    // unblocked QR at Figure-3 scale) is captured run over run.
+    let tent_table = run_packed_blocked_sweep();
+    println!("{}", tent_table.render());
+    let _ = tent_table.save("BENCH_micro_linalg");
+
+    // Restore the ambient thread/backend/packing configuration.
     snsolve::parallel::set_threads(0);
     snsolve::simd::clear_choice();
+    snsolve::linalg::gemm::set_packing(None);
+}
+
+/// GEMM with and without BLIS-style packing (acceptance: packed ≥ 1.5x
+/// unpacked GFLOP/s at 2048³) and Householder QR blocked vs unblocked
+/// (acceptance: blocked ≥ 2x faster at Figure-3 scale, s=4000 n=1000),
+/// at the ambient thread count and backend, with agreement cross-checks.
+fn run_packed_blocked_sweep() -> Table {
+    let mut table = Table::new(
+        "packed panels & blocked QR — PR-4 tentpole record",
+        &["kernel", "shape", "threads", "simd", "median_s", "gflops", "speedup", "max_rel_dev"],
+    );
+    let cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(41));
+    let threads_now = threads_in_use().to_string();
+    let simd_now = simd_in_use().to_string();
+
+    // GEMM: packed vs unpacked, 2048³ is the acceptance point.
+    for n in [512usize, 1024, 2048] {
+        let a = DenseMatrix::gaussian(n, n, &mut g);
+        let b = DenseMatrix::gaussian(n, n, &mut g);
+        let flops = 2.0 * (n as f64).powi(3);
+        snsolve::linalg::gemm::set_packing(Some(false));
+        let c_unpacked = gemm::matmul(&a, &b).unwrap();
+        let st_u = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+        snsolve::linalg::gemm::set_packing(Some(true));
+        let c_packed = gemm::matmul(&a, &b).unwrap();
+        let st_p = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+        snsolve::linalg::gemm::set_packing(None);
+        let dev = max_abs_dev(c_packed.data(), c_unpacked.data())
+            / c_unpacked.max_abs().max(1e-300);
+        assert!(dev <= 1e-12, "packed vs unpacked rel dev {dev} at {n}");
+        for (label, st, speedup) in [
+            ("gemm_unpacked", &st_u, 1.0),
+            ("gemm_packed", &st_p, st_u.median / st_p.median),
+        ] {
+            table.row(vec![
+                label.into(),
+                format!("{n}x{n}x{n}"),
+                threads_now.clone(),
+                simd_now.clone(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", flops / st.median / 1e9),
+                format!("{speedup:.2}"),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+
+    // QR: blocked (NB=32) vs unblocked, up to Figure-3 scale.
+    for (s, n) in [(1024usize, 256usize), (4000, 1000)] {
+        let a = DenseMatrix::gaussian(s, n, &mut g);
+        let fl = 2.0 * s as f64 * (n as f64).powi(2) - 2.0 / 3.0 * (n as f64).powi(3);
+        let unblocked = qr::qr_compact_unblocked(&a).unwrap();
+        let st_u = bench(&cfg, || qr::qr_compact_unblocked(&a).unwrap());
+        let blocked = qr::qr_compact_blocked(&a, 32).unwrap();
+        let st_b = bench(&cfg, || qr::qr_compact_blocked(&a, 32).unwrap());
+        let ru = unblocked.r();
+        let rb = blocked.r();
+        let dev = max_abs_dev(rb.data(), ru.data()) / ru.max_abs().max(1e-300);
+        assert!(dev <= 1e-11, "blocked vs unblocked R rel dev {dev} at {s}x{n}");
+        for (label, st, speedup) in [
+            ("hhqr_unblocked", &st_u, 1.0),
+            ("hhqr_blocked_nb32", &st_b, st_u.median / st_b.median),
+        ] {
+            table.row(vec![
+                label.into(),
+                format!("{s}x{n}"),
+                threads_now.clone(),
+                simd_now.clone(),
+                format!("{:.6}", st.median),
+                format!("{:.2}", fl / st.median / 1e9),
+                format!("{speedup:.2}"),
+                format!("{dev:.2e}"),
+            ]);
+        }
+    }
+    table
 }
 
 /// Time GEMM (m = 4096) and SRHT apply (m = 16384) at each pool size,

@@ -4,7 +4,7 @@
 //!
 //! `--threads 1,2,4` (default {1, 2, 4}) additionally sweeps the sketch
 //! *apply* kernels over pool sizes, asserting the parallel outputs match
-//! the serial path within 1e-12; `--simd scalar|avx2|neon|auto` forces the
+//! the serial path within 1e-12; `--simd scalar|avx2|avx512|neon|auto` forces the
 //! kernel backend for the main tables, and a final per-backend sweep times
 //! every operator's apply on each backend the host supports with a scalar
 //! cross-check line (GFLOP/s + relative deviation ≤ 1e-12).

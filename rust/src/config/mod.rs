@@ -134,11 +134,21 @@ impl Config {
         self.values.is_empty()
     }
 
-    /// Build a [`SolveConfig`] from the `[parallel]` section.
+    /// Build a [`SolveConfig`] from the `[parallel]` section. Invalid
+    /// values resolve to the ambient defaults here (a negative `qr_nb`
+    /// becomes 0/auto rather than wrapping to a huge width); `cmd_serve`
+    /// additionally hard-errors on present-but-invalid keys, mirroring the
+    /// `simd` key's validation.
     pub fn solve_config(&self) -> SolveConfig {
         SolveConfig {
             threads: self.get_usize("parallel", "threads").unwrap_or(0),
             simd: self.get_str("parallel", "simd").and_then(crate::simd::SimdChoice::parse),
+            pack: self.get_bool("parallel", "pack"),
+            qr_nb: self
+                .get("parallel", "qr_nb")
+                .and_then(Value::as_i64)
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(0),
         }
     }
 
@@ -187,8 +197,10 @@ impl Config {
 
 /// Process-wide solve/kernel execution settings: the thread budget the
 /// parallel GEMM/FWHT/sketch kernels draw from (`[parallel] threads`,
-/// 0 = auto-detect) and the SIMD backend they dispatch to
-/// (`[parallel] simd = "auto"|"scalar"|"avx2"|"neon"`).
+/// 0 = auto-detect), the SIMD backend they dispatch to (`[parallel] simd
+/// = "auto"|"scalar"|"avx2"|"avx512"|"neon"`), the packed-panel GEMM
+/// toggle (`[parallel] pack`) and the blocked-QR panel width
+/// (`[parallel] qr_nb`, 0 = auto).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
@@ -200,15 +212,30 @@ pub struct SolveConfig {
     /// `Auto` overrides the env; an unsupported forced backend falls back
     /// to scalar.
     pub simd: Option<crate::simd::SimdChoice>,
+    /// Packed-panel GEMM toggle. `None` (key absent) leaves the ambient
+    /// resolution alone (`SNSOLVE_GEMM_PACK`, then on).
+    pub pack: Option<bool>,
+    /// Blocked-QR panel width; 0 resolves to the ambient width
+    /// (`SNSOLVE_QR_NB`, then 32).
+    pub qr_nb: usize,
 }
 
 impl SolveConfig {
     /// Install these settings process-wide (the kernels read them through
-    /// [`crate::parallel`] and [`crate::simd`]).
+    /// [`crate::parallel`], [`crate::simd`] and [`crate::linalg`]).
     pub fn install(self) {
         crate::parallel::set_threads(self.threads);
         if let Some(c) = self.simd {
             crate::simd::set_choice(c);
+        }
+        if let Some(p) = self.pack {
+            crate::linalg::gemm::set_packing(Some(p));
+        }
+        // 0 means "key absent" — leave a previously configured width (e.g.
+        // from a CLI flag) alone, matching the Option-guarded simd/pack
+        // fields above.
+        if self.qr_nb != 0 {
+            crate::linalg::qr::set_panel_nb(self.qr_nb);
         }
     }
 
@@ -285,6 +312,8 @@ enable_pjrt = false
 [parallel]
 threads = 3
 simd = "scalar"
+pack = true
+qr_nb = 16
 "#;
 
     #[test]
@@ -321,6 +350,8 @@ simd = "scalar"
         assert_eq!(s.effective_threads(), 3);
         assert_eq!(s.simd, Some(crate::simd::SimdChoice::Scalar));
         assert_eq!(s.effective_simd(), crate::simd::Backend::Scalar);
+        assert_eq!(s.pack, Some(true));
+        assert_eq!(s.qr_nb, 16);
         // absent key → ambient (and an unparseable simd value → ambient),
         // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
@@ -328,8 +359,14 @@ simd = "scalar"
         assert!(d.effective_threads() >= 1);
         assert_eq!(d.simd, None);
         assert_eq!(d.effective_simd(), crate::simd::active());
+        assert_eq!(d.pack, None);
+        assert_eq!(d.qr_nb, 0);
         let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
         assert_eq!(bad.simd, None);
+        // A negative qr_nb clamps to auto instead of wrapping to a huge
+        // panel width through the usize cast.
+        let neg = Config::parse("[parallel]\nqr_nb = -8").unwrap().solve_config();
+        assert_eq!(neg.qr_nb, 0);
     }
 
     #[test]

@@ -1,15 +1,30 @@
 //! Blocked dense GEMM / GEMV kernels.
 //!
-//! Row-major `C = A·B` with L1/L2-aware blocking and a register-tile
-//! microkernel dispatched through [`crate::simd`] (scalar / AVX2+FMA /
-//! NEON, selected at runtime). This is the CPU stand-in for the MXU-tiled
-//! Pallas kernel at Layer 1 — same tiling idea (stream panels of B through
-//! a register-resident accumulator), different hardware target.
+//! Row-major `C = A·B` with BLIS-style packed-panel blocking and a
+//! register-tile microkernel dispatched through [`crate::simd`] (scalar /
+//! AVX2+FMA / AVX-512 / NEON, selected at runtime). This is the CPU
+//! stand-in for the MXU-tiled Pallas kernel at Layer 1 — same tiling idea
+//! (stream panels of B through a register-resident accumulator), different
+//! hardware target.
+//!
+//! **Packing.** The interior loop no longer reads A/B straight out of the
+//! row-major buffers: each (jc, pc) iteration packs the B block into
+//! NR-column panels (once — shared read-only across the row-panel
+//! workers) and each (ic, pc) iteration packs the A block into MR-row
+//! strips (per-worker, cache-line-aligned scratch), so the microkernel
+//! streams contiguous, zero-padded operands — edge tiles are padded in
+//! the pack and the ragged scalar kernel disappears from the packed
+//! interior. `SNSOLVE_GEMM_PACK=0` / [`set_packing`] / the
+//! `[parallel] pack` config key / `--pack false` restore the direct
+//! (unpacked) nest, which the `micro_linalg` bench uses as its baseline.
 //!
 //! **IEEE contract:** no kernel on this path skips zero operands, so
 //! `0·NaN = 0·Inf = NaN` reaches C identically whether an element lands in
-//! a full register tile or a ragged edge tile (see
-//! `tests/nan_propagation.rs`).
+//! a full register tile, a zero-padded packed edge tile, or an unpacked
+//! ragged edge tile (see `tests/nan_propagation.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use super::dense::DenseMatrix;
 use super::{LinalgError, Result};
@@ -17,11 +32,83 @@ use crate::simd::{self, SimdKernels};
 
 // Cache blocking parameters. MC*KC*8B ≈ 512 KB fits comfortably in L2;
 // KC*NC panels of B stream through L3/memory; the MR x NR register tile
-// (backend-dependent: 4x8 scalar/NEON, 4x12 AVX2+FMA) keeps the
-// accumulators live in vector registers.
+// (backend-dependent: 4x8 scalar/NEON, 4x12 AVX2+FMA, 8x8 AVX-512) keeps
+// the accumulators live in vector registers.
 const MC: usize = 256;
 const KC: usize = 256;
 const NC: usize = 1024;
+
+/// Below this many MACs the pack copies cost more than they save (tiny
+/// service matmuls, the blocked-QR T products); the nest reads the
+/// row-major buffers directly instead. Decided once per `matmul_into` on
+/// the **full** problem shape, so serial and row-sharded runs always take
+/// the same path (a per-panel decision would break the bitwise
+/// thread-count contract at the edge tiles, where the two paths round
+/// differently).
+const PACK_MIN_FLOPS: usize = 1 << 15;
+
+/// Packing knob tri-state (process-wide).
+const PACK_UNSET: u8 = 0;
+const PACK_ON: u8 = 1;
+const PACK_OFF: u8 = 2;
+
+static PACK_CONFIGURED: AtomicU8 = AtomicU8::new(PACK_UNSET);
+
+/// Force the packed-panel GEMM path on/off for this process (`None`
+/// restores the ambient resolution: `SNSOLVE_GEMM_PACK` env var, then the
+/// default **on**). Wired from [`crate::config::SolveConfig`], the
+/// `--pack` CLI flag and the `[parallel] pack` config key; benches flip it
+/// to measure packed vs unpacked throughput.
+pub fn set_packing(on: Option<bool>) {
+    let v = match on {
+        None => PACK_UNSET,
+        Some(true) => PACK_ON,
+        Some(false) => PACK_OFF,
+    };
+    PACK_CONFIGURED.store(v, Ordering::SeqCst);
+}
+
+fn env_packing() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        // Case-insensitive like SNSOLVE_SIMD, so OFF/False/0 all disable.
+        let v = std::env::var("SNSOLVE_GEMM_PACK")
+            .map(|s| s.trim().to_ascii_lowercase())
+            .unwrap_or_default();
+        !matches!(v.as_str(), "0" | "false" | "off")
+    })
+}
+
+/// Whether large GEMMs currently take the packed-panel path:
+/// [`set_packing`] → `SNSOLVE_GEMM_PACK` → on.
+pub fn packing_enabled() -> bool {
+    match PACK_CONFIGURED.load(Ordering::SeqCst) {
+        PACK_ON => true,
+        PACK_OFF => false,
+        _ => env_packing(),
+    }
+}
+
+/// Heap scratch for the pack buffers, nudged to a 64-byte (cache-line /
+/// zmm) boundary. Alignment is a throughput nicety, not a correctness
+/// requirement — the microkernels use unaligned loads — so the clamp on
+/// `align_offset`'s escape value is harmless.
+struct PackBuf {
+    raw: Vec<f64>,
+    off: usize,
+}
+
+impl PackBuf {
+    fn new(len: usize) -> PackBuf {
+        let raw = vec![0.0f64; len + 7];
+        let off = raw.as_ptr().align_offset(64).min(7);
+        PackBuf { raw, off }
+    }
+
+    fn buf_mut(&mut self) -> &mut [f64] {
+        &mut self.raw[self.off..]
+    }
+}
 
 /// `C = A · B`.
 pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
@@ -62,31 +149,151 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Res
     let kern = simd::kernels();
 
     let flops = m.saturating_mul(k).saturating_mul(n);
+    // Path and thread decisions are made on the FULL shape, never per
+    // panel: packed and unpacked edge tiles round differently, so a
+    // per-panel choice would break bitwise identity across thread counts.
+    let packed = packing_enabled() && flops >= PACK_MIN_FLOPS;
     let threads = if flops < 4 * crate::parallel::PAR_MIN_ELEMS {
         1
     } else {
         crate::parallel::threads_for(m, kern.mr())
     };
     if threads <= 1 {
-        gemm_nest(adata, bdata, cdata, m, k, n, kern);
+        gemm_nest(adata, bdata, cdata, m, k, n, kern, packed);
+    } else if packed {
+        gemm_packed_nest(adata, bdata, cdata, m, k, n, kern, threads);
     } else {
         // MR-aligned panel boundaries keep the register-tile layout (and
         // hence every rounding) identical to the serial nest.
         let panels = crate::parallel::partition_aligned(m, threads, kern.mr());
         crate::parallel::for_each_row_range(cdata, n, &panels, |_, rows, cblock| {
             let ablock = &adata[rows.start * k..rows.end * k];
-            gemm_nest(ablock, bdata, cblock, rows.len(), k, n, kern);
+            gemm_nest(ablock, bdata, cblock, rows.len(), k, n, kern, packed);
         });
     }
     Ok(())
 }
 
-/// The serial blocked loop nest over an `m`-row panel of A/C.
+/// The packed nest, serial and threaded alike (`threads = 1` runs the
+/// whole matrix as one panel on the calling thread): B is packed **once**
+/// per (jc, pc) block on the calling thread and shared read-only across
+/// the row-panel workers (a per-worker B pack would multiply the copy
+/// bandwidth on the shared operand by the thread count); each worker packs
+/// only its own A rows. Row-panel boundaries stay MR-aligned and every C
+/// element accumulates in the exact same order at every panel split
+/// (ascending `pc`, one packed tile per block), so the result is bitwise
+/// identical at any thread count — one copy of this loop nest serves both
+/// paths precisely so that contract can't drift.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_nest(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    kern: &dyn SimdKernels,
+    threads: usize,
+) {
+    let tnr = kern.nr();
+    let panels = crate::parallel::partition_aligned(m, threads, kern.mr());
+    let nc_step = (NC - NC % tnr).max(tnr);
+    let mut bpack = PackBuf::new(KC * nc_step.min(n).div_ceil(tnr) * tnr);
+    for jc in (0..n).step_by(nc_step) {
+        let nc = nc_step.min(n - jc);
+        let npanels = nc.div_ceil(tnr);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            let bbuf = &mut bpack.buf_mut()[..npanels * tnr * kc];
+            kern.pack_b(b, n, pc, jc, kc, nc, bbuf);
+            let bbuf: &[f64] = bbuf;
+            crate::parallel::for_each_row_range(c, n, &panels, |_, rows, cblock| {
+                let ablock = &a[rows.start * k..rows.end * k];
+                packed_block_rows(ablock, bbuf, cblock, rows.len(), k, n, jc, pc, kc, nc, kern);
+            });
+        }
+    }
+}
+
+/// The blocked loop nest over an `m`-row panel of A/C, on the calling
+/// thread.
 ///
-/// Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A)
-/// -> microkernel over MR x NR register tiles.
+/// Loop nest: jc (NC cols of B) -> pc (KC depth) -> ic (MC rows of A) ->
+/// microkernel over MR x NR register tiles. `packed` selects between the
+/// packed-panel path (a one-panel [`gemm_packed_nest`]) and the direct
+/// (seed) nest; it must be decided by the caller on the full problem
+/// shape.
 #[allow(clippy::too_many_arguments)]
 fn gemm_nest(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    kern: &dyn SimdKernels,
+    packed: bool,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    if packed {
+        gemm_packed_nest(a, b, c, m, k, n, kern, 1);
+    } else {
+        gemm_nest_unpacked(a, b, c, m, k, n, kern);
+    }
+}
+
+/// One (jc, pc) block over an `m`-row panel of A/C against an
+/// already-packed B block: pack A per MC sub-block (into this worker's own
+/// scratch) and run the packed microkernel over every strip × panel tile —
+/// every interior AND edge tile goes through the branch-free packed
+/// microkernel (edges are zero-padded in the pack; the pad rows/columns
+/// are computed but masked out of the write-back).
+///
+/// The A scratch is allocated per call: the scoped pool spawns fresh OS
+/// threads per fan-out anyway, so a worker-persistent buffer has nowhere
+/// to live, and the ≤ 512 KB allocation is the same order as the thread
+/// spawn it accompanies.
+#[allow(clippy::too_many_arguments)]
+fn packed_block_rows(
+    a: &[f64],
+    bbuf: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    jc: usize,
+    pc: usize,
+    kc: usize,
+    nc: usize,
+    kern: &dyn SimdKernels,
+) {
+    let (tmr, tnr) = (kern.mr(), kern.nr());
+    let npanels = nc.div_ceil(tnr);
+    let mut apack = PackBuf::new(MC.min(m).div_ceil(tmr) * tmr * kc);
+    for ic in (0..m).step_by(MC) {
+        let mc = MC.min(m - ic);
+        let nstrips = mc.div_ceil(tmr);
+        let abuf = &mut apack.buf_mut()[..nstrips * tmr * kc];
+        kern.pack_a(a, k, ic, pc, mc, kc, abuf);
+        for si in 0..nstrips {
+            let ir = si * tmr;
+            let mr = tmr.min(mc - ir);
+            let astrip = &abuf[si * tmr * kc..(si + 1) * tmr * kc];
+            for pj in 0..npanels {
+                let jr = pj * tnr;
+                let nr = tnr.min(nc - jr);
+                let bpanel = &bbuf[pj * tnr * kc..(pj + 1) * tnr * kc];
+                kern.gemm_tile_packed(astrip, bpanel, c, n, ic + ir, jc + jr, kc, mr, nr);
+            }
+        }
+    }
+}
+
+/// Direct (unpacked) nest — the pre-packing seed path, kept as the bench
+/// baseline and for small problems where packing doesn't pay.
+fn gemm_nest_unpacked(
     a: &[f64],
     b: &[f64],
     c: &mut [f64],
@@ -196,21 +403,61 @@ pub fn matvec(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
 }
 
 /// `y = beta*y + A x`.
+///
+/// Parallel: y's entries (= A's rows) shard into contiguous blocks across
+/// the worker pool behind the usual [`crate::parallel::PAR_MIN_ELEMS`]
+/// gate. Each entry is one full-row `dot`, so every entry is **bitwise
+/// identical** to the serial loop at any thread count (same per-row
+/// contract as the blocked `apply_mat` paths).
 pub fn matvec_into(a: &DenseMatrix, x: &[f64], y: &mut [f64], beta: f64) {
-    let n = a.cols();
+    let (m, n) = a.shape();
+    debug_assert_eq!(y.len(), m);
     let kern = simd::kernels();
-    for (i, yi) in y.iter_mut().enumerate() {
-        let row = &a.data()[i * n..(i + 1) * n];
-        *yi = beta * *yi + kern.dot(row, x);
+    let adata = a.data();
+    let work = m.saturating_mul(n);
+    let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(m, 8)
+    };
+    if threads <= 1 {
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &adata[i * n..(i + 1) * n];
+            *yi = beta * *yi + kern.dot(row, x);
+        }
+    } else {
+        crate::parallel::for_each_row_block(y, m, 1, threads, |_, rows, yblock| {
+            for (local, i) in rows.enumerate() {
+                let row = &adata[i * n..(i + 1) * n];
+                yblock[local] = beta * yblock[local] + kern.dot(row, x);
+            }
+        });
     }
 }
+
+/// Column-stripe alignment for the parallel [`matvec_t`]: stripe
+/// boundaries must be a multiple of every backend's `axpy` vector-body
+/// chunk (scalar 4, NEON 4, AVX2 8, AVX-512 16) so that element `j` takes
+/// the same code path (vector body vs scalar tail — which round
+/// differently under FMA) inside a stripe as in the full-row serial call.
+/// That positional invariance is what keeps the sharded result bitwise
+/// identical to the serial accumulation chain; `gemm::tests::
+/// axpy_stripes_match_full_row_bitwise` pins it per backend.
+const MATVEC_T_COL_ALIGN: usize = 16;
 
 /// `y = Aᵀ x` — accumulate x[i]-scaled rows; streams A once, writes y
 /// repeatedly (y is short: n entries, cache-resident).
 ///
+/// Parallel: y shards into contiguous **column stripes** (each worker
+/// streams all of A but only its column range), because sharding A's rows
+/// would turn the sum into a thread-count-dependent reduction. Stripe
+/// boundaries are [`MATVEC_T_COL_ALIGN`]-aligned, so each y entry
+/// accumulates in exactly the serial order and the result is **bitwise
+/// identical** at any thread count — the same per-element contract the
+/// blocked `apply_transpose_mat` relies on.
+///
 /// Zero coefficients are **not** skipped: `0 · row` must still propagate
-/// NaN/Inf from A into y (same IEEE contract as the GEMM tiles), and the
-/// blocked `apply_transpose_mat` path stays bitwise identical per row.
+/// NaN/Inf from A into y (same IEEE contract as the GEMM tiles).
 pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(
         a.rows(),
@@ -220,13 +467,23 @@ pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
         a.cols(),
         x.len()
     );
-    let n = a.cols();
+    let (m, n) = a.shape();
     let mut y = vec![0.0; n];
     let kern = simd::kernels();
-    for (i, &xi) in x.iter().enumerate() {
-        let row = &a.data()[i * n..(i + 1) * n];
-        kern.axpy(xi, row, &mut y);
-    }
+    let adata = a.data();
+    let work = m.saturating_mul(n);
+    let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+        1
+    } else {
+        crate::parallel::threads_for(n.div_ceil(MATVEC_T_COL_ALIGN), 1)
+    };
+    let stripes = crate::parallel::partition_aligned(n, threads, MATVEC_T_COL_ALIGN);
+    crate::parallel::for_each_row_range(&mut y, 1, &stripes, |_, cols, yblock| {
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &adata[i * n + cols.start..i * n + cols.end];
+            kern.axpy(xi, row, yblock);
+        }
+    });
     y
 }
 
@@ -365,5 +622,92 @@ mod tests {
         matmul_into(&a, &b, &mut c).unwrap();
         assert_eq!(c[(0, 0)], 2.0);
         assert_eq!(c[(1, 1)], 8.0);
+    }
+
+    /// One test (not several) because the packing knob is process-global
+    /// and unit tests run concurrently: the knob flips and the comparison
+    /// happen back-to-back here, and every *other* test's matmul assertion
+    /// is tolerance-based, so a mid-flight flip elsewhere is harmless.
+    #[test]
+    fn packing_knob_and_packed_vs_unpacked_agree() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(7));
+        // Ragged in every dimension for all tile shapes, above
+        // PACK_MIN_FLOPS so the packed path actually engages.
+        let (m, k, n) = (37usize, 41, 33);
+        assert!(m * k * n >= PACK_MIN_FLOPS);
+        let a = DenseMatrix::gaussian(m, k, &mut g);
+        let b = DenseMatrix::gaussian(k, n, &mut g);
+        set_packing(Some(false));
+        assert!(!packing_enabled());
+        let unpacked = matmul(&a, &b).unwrap();
+        set_packing(Some(true));
+        assert!(packing_enabled());
+        let packed = matmul(&a, &b).unwrap();
+        set_packing(None);
+        let scale = unpacked.max_abs().max(1.0);
+        for (u, p) in unpacked.data().iter().zip(packed.data().iter()) {
+            assert!((u - p).abs() <= 1e-12 * scale, "packed {p} vs unpacked {u}");
+        }
+    }
+
+    /// The alignment contract behind the parallel `matvec_t`: an axpy run
+    /// over [`MATVEC_T_COL_ALIGN`]-aligned stripes is bitwise identical to
+    /// the full-slice call on every backend (element `j` keeps its
+    /// vector-body vs scalar-tail role across the split).
+    #[test]
+    fn axpy_stripes_match_full_row_bitwise() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(8));
+        for backend in crate::simd::available() {
+            let kern = crate::simd::backend_kernels(backend);
+            for n in [16usize, 23, 48, 67, 100] {
+                let x = g.gaussian_vec(n);
+                let mut full = g.gaussian_vec(n);
+                let mut striped = full.clone();
+                kern.axpy(0.73, &x, &mut full);
+                let mut j0 = 0;
+                while j0 < n {
+                    let j1 = (j0 + MATVEC_T_COL_ALIGN).min(n);
+                    kern.axpy(0.73, &x[j0..j1], &mut striped[j0..j1]);
+                    j0 = j1;
+                }
+                assert_eq!(striped, full, "{} n={n}", backend.name());
+            }
+        }
+    }
+
+    /// Parallel matvec/matvec_t (sizes above the pool gate, ambient thread
+    /// count) are bitwise identical to the serial accumulation chain.
+    #[test]
+    fn parallel_matvec_paths_match_serial_chain_bitwise() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(9));
+        let (m, n) = (600usize, 130usize); // m·n ≥ PAR_MIN_ELEMS
+        assert!(m * n >= crate::parallel::PAR_MIN_ELEMS);
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let x = g.gaussian_vec(n);
+        let u = g.gaussian_vec(m);
+        let kern = simd::kernels();
+
+        let y = matvec(&a, &x);
+        let mut y_ref = vec![0.0; m];
+        for (i, yi) in y_ref.iter_mut().enumerate() {
+            *yi = kern.dot(a.row(i), &x);
+        }
+        assert_eq!(y, y_ref, "matvec");
+
+        let z = matvec_t(&a, &u);
+        let mut z_ref = vec![0.0; n];
+        for (i, &ui) in u.iter().enumerate() {
+            kern.axpy(ui, a.row(i), &mut z_ref);
+        }
+        assert_eq!(z, z_ref, "matvec_t");
+
+        // beta path too.
+        let mut yb = u.clone();
+        matvec_into(&a, &x, &mut yb, 0.5);
+        let mut yb_ref = u.clone();
+        for (i, yi) in yb_ref.iter_mut().enumerate() {
+            *yi = 0.5 * *yi + kern.dot(a.row(i), &x);
+        }
+        assert_eq!(yb, yb_ref, "matvec_into beta");
     }
 }

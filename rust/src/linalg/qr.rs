@@ -1,13 +1,69 @@
 //! Householder QR factorization (HHQR — Algorithm 1 step 3).
 //!
-//! Tall-thin economy QR: `B (s×n) = Q (s×n) · R (n×n)`, s ≥ n. This runs on
-//! the *sketched* matrix, so s is a small multiple of n and an unblocked
-//! column-at-a-time Householder sweep is already BLAS-2-bound on matrices
-//! that fit in cache; the inner streams run on the dispatched SIMD
-//! `dot`/`axpy` kernels (hoisted once per sweep — see [`crate::simd`]).
+//! Tall-thin economy QR: `B (s×n) = Q (s×n) · R (n×n)`, s ≥ n. This runs
+//! on the *sketched* matrix, so s is a small multiple of n — exactly the
+//! regime where Murray et al. (2023) observe RandNLA speedups are realized
+//! or lost in the BLAS-3 fraction. The factorization is therefore
+//! **blocked compact-WY**: NB-column panels are factored with the BLAS-2
+//! reflector sweep (dispatched SIMD `dot`/`axpy`, hoisted once per sweep —
+//! see [`crate::simd`]), the triangular T factor of `Q_panel = I − V·T·Vᵀ`
+//! is accumulated LAPACK-`larft` style, and the trailing update
+//! `A ← A − V·Tᵀ·(Vᵀ·A)` runs as two packed GEMMs through
+//! [`super::gemm::matmul_into`] — sharded across the worker pool with the
+//! same MR-aligned bitwise-thread-determinism contract GEMM already
+//! honors. Panel width: [`set_panel_nb`] → `SNSOLVE_QR_NB` → 32;
+//! [`qr_compact_unblocked`] (the seed sweep, identical to a single
+//! full-width panel) is kept as the reference/baseline path.
+//!
+//! Reflector norms are computed with LAPACK-style scaling (`dlassq`
+//! spirit): columns with entries beyond ~1e±140 are rescaled by their max
+//! before the dispatched `dot`, so ill-scaled columns factor accurately
+//! instead of overflowing to `inf`/underflowing to a spurious zero
+//! reflector (Epperly's forward-stability bar, arXiv 2311.04362).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use super::dense::DenseMatrix;
 use super::{LinalgError, Result};
+use crate::simd::SimdKernels;
+
+/// Default compact-WY panel width: wide enough that the trailing GEMMs
+/// dominate, narrow enough that a panel of reflectors stays cache-resident
+/// during the BLAS-2 sweep.
+const DEFAULT_NB: usize = 32;
+
+/// Configured panel width (0 = unset → env → default).
+static NB_CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Configure the blocked-QR panel width for this process. `0` restores the
+/// ambient resolution (`SNSOLVE_QR_NB` env var, then 32). Wired from
+/// [`crate::config::SolveConfig`], the `--qr-nb` CLI flag and the
+/// `[parallel] qr_nb` config key.
+pub fn set_panel_nb(nb: usize) {
+    NB_CONFIGURED.store(nb, Ordering::SeqCst);
+}
+
+fn env_nb() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SNSOLVE_QR_NB")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// The panel width [`qr_compact`] uses right now: configured → env → 32.
+pub fn panel_nb() -> usize {
+    let c = NB_CONFIGURED.load(Ordering::SeqCst);
+    let c = if c == 0 { env_nb() } else { c };
+    if c == 0 {
+        DEFAULT_NB
+    } else {
+        c
+    }
+}
 
 /// Economy QR factorization `A = Q R`.
 #[derive(Debug, Clone)]
@@ -26,7 +82,7 @@ pub struct QrFactors {
 /// Storage is the **transpose** of the LAPACK layout: `vrt` is n×s
 /// row-major, so row j holds reflector v_j (contiguous!) past the diagonal
 /// and R's row... — see `qr_compact` for why.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QrCompact {
     /// n×s; row j holds R[j, ..] in positions ≤ j transposed — precisely:
     /// `vrt[(j, i)]` = element (i, j) of the classic compact factor, i.e.
@@ -36,53 +92,99 @@ pub struct QrCompact {
     tau: Vec<f64>,
 }
 
-/// Factor `a` (s×n, s ≥ n) by Householder reflections, in compact form.
+/// Factor `a` (s×n, s ≥ n) by Householder reflections, in compact form —
+/// blocked compact-WY with the configured panel width ([`panel_nb`]).
 ///
 /// §Perf-L3 (EXPERIMENTS.md): the textbook in-place sweep walks *columns*
 /// of a row-major buffer — every access strided by n, ~0.1 GFLOP/s at
 /// n = 1000 (109 s on Figure 3's sketched QR). Factoring the transpose
 /// turns both inner loops (w = vᵀa_k and a_k ← a_k − τw·v) into contiguous
-/// `dot`/`axpy` over rows — the whole factorization is two BLAS-1 streams
-/// per (j, k) pair. 30–40× faster at Figure-3 scale.
+/// `dot`/`axpy` over rows; blocking then moves the O(s·n²) trailing bulk
+/// from those BLAS-1 streams into packed BLAS-3 GEMMs.
 pub fn qr_compact(a: &DenseMatrix) -> Result<QrCompact> {
+    qr_compact_blocked(a, panel_nb())
+}
+
+/// The seed unblocked sweep — identical to a single full-width panel (the
+/// trailing update never runs), kept as the reference/baseline path for
+/// the equivalence tests and the `micro_linalg` bench.
+pub fn qr_compact_unblocked(a: &DenseMatrix) -> Result<QrCompact> {
+    qr_compact_blocked(a, a.cols().max(1))
+}
+
+/// Blocked compact-WY factorization with an explicit panel width `nb`
+/// (clamped to ≥ 1). `nb ≥ n` degenerates to the unblocked sweep bit for
+/// bit; any `nb` agrees with any other within ~1e-12 (the trailing GEMM
+/// re-rounds but never re-associates a single reflector application).
+pub fn qr_compact_blocked(a: &DenseMatrix, nb: usize) -> Result<QrCompact> {
     let (s, n) = a.shape();
     if s < n {
         return Err(LinalgError::InvalidArgument(format!(
             "qr: need rows >= cols, got {s}x{n}"
         )));
     }
+    let nb = nb.max(1);
     // at[(k, i)] = a[(i, k)]: row k of `at` is column k of A, contiguous.
     let mut at = a.transpose();
     let mut tau = vec![0.0; n];
-    // Hoisted: dot/axpy run O(n^2) times below; per-call dispatch would sit
-    // in the inner loop.
+    // Hoisted: dot/axpy run O(n·nb) times per panel; per-call dispatch
+    // would sit in the inner loop.
     let kern = crate::simd::kernels();
-    for j in 0..n {
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + nb).min(n);
+        factor_panel(&mut at, &mut tau, s, j0, j1, kern);
+        if j1 < n {
+            apply_panel_to_trailing(&mut at, &tau, s, j0, j1, n, kern)?;
+        }
+        j0 = j1;
+    }
+    Ok(QrCompact { vrt: at, tau })
+}
+
+/// BLAS-2 Householder sweep over panel columns `[j0, j1)` of `at`,
+/// applying each reflector to the remaining columns **within the panel**
+/// only (the trailing columns get the blocked WY update afterwards).
+fn factor_panel(
+    at: &mut DenseMatrix,
+    tau: &mut [f64],
+    s: usize,
+    j0: usize,
+    j1: usize,
+    kern: &'static dyn SimdKernels,
+) {
+    for j in j0..j1 {
         // Reflector from column j (= row j of at), entries j..s.
         let row_j = at.row(j);
         let alpha = row_j[j];
-        let xnorm2: f64 = row_j[j + 1..s].iter().map(|&x| x * x).sum();
-        if xnorm2 == 0.0 && alpha >= 0.0 {
+        let xnorm = tail_norm_scaled(kern, &row_j[j + 1..s]);
+        if xnorm == 0.0 && alpha >= 0.0 {
             tau[j] = 0.0;
             continue;
         }
-        let beta = -(alpha.signum_nonzero()) * (alpha * alpha + xnorm2).sqrt();
+        // hypot never overflows alpha² + xnorm² the way the naive square
+        // sum did for entries beyond ~1e154.
+        let beta = -(alpha.signum_nonzero()) * alpha.hypot(xnorm);
         let tau_j = (beta - alpha) / beta;
-        let scale = 1.0 / (alpha - beta);
+        // Divide by (alpha − beta) rather than multiplying by its
+        // reciprocal: for subnormal columns the reciprocal overflows to
+        // Inf while the per-element quotient is well-scaled (|v| ≤
+        // |alpha − beta| here).
+        let denom = alpha - beta;
         {
             let row_j = at.row_mut(j);
             for v in row_j[j + 1..s].iter_mut() {
-                *v *= scale;
+                *v /= denom;
             }
             row_j[j] = beta; // R diagonal
         }
         tau[j] = tau_j;
-        // Apply H_j to trailing columns (rows k > j of `at`):
+        // Apply H_j to the rest of the panel (rows j < k < j1 of `at`):
         //   w = a_k[j] + v·a_k[j+1..]; a_k[j] -= τw; a_k[j+1..] -= τw·v.
         // Split borrows: row j (the reflector) vs rows k > j.
         let (head, tail) = at.data_mut().split_at_mut((j + 1) * s);
         let v_j = &head[j * s + j + 1..j * s + s];
-        for k in j + 1..n {
+        for k in j + 1..j1 {
             let row_k = &mut tail[(k - j - 1) * s..(k - j - 1) * s + s];
             let w = row_k[j] + kern.dot(v_j, &row_k[j + 1..s]);
             let tw = tau_j * w;
@@ -90,7 +192,115 @@ pub fn qr_compact(a: &DenseMatrix) -> Result<QrCompact> {
             kern.axpy(-tw, v_j, &mut row_k[j + 1..s]);
         }
     }
-    Ok(QrCompact { vrt: at, tau })
+}
+
+/// `‖x‖₂` via the dispatched `dot` kernel with LAPACK-style scaling: in
+/// the wide safe band the plain square sum is exact enough; outside it the
+/// tail is rescaled by its max first, so entries at 1e±160 neither
+/// overflow to `inf` nor underflow to a spurious zero norm. NaN/Inf
+/// entries propagate (max tracking keeps NaN sticky).
+fn tail_norm_scaled(kern: &dyn SimdKernels, x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut amax = 0.0f64;
+    for &v in x {
+        let a = v.abs();
+        if a > amax || a.is_nan() {
+            amax = a;
+        }
+    }
+    if amax == 0.0 {
+        return 0.0;
+    }
+    if !amax.is_finite() {
+        return amax; // Inf → Inf, NaN → NaN
+    }
+    if (1e-140..=1e140).contains(&amax) {
+        kern.dot(x, x).sqrt()
+    } else {
+        // Divide rather than multiply by the reciprocal: 1.0/amax
+        // overflows to Inf for subnormal amax, which would poison the
+        // factorization this branch exists to protect.
+        let scaled: Vec<f64> = x.iter().map(|&v| v / amax).collect();
+        amax * kern.dot(&scaled, &scaled).sqrt()
+    }
+}
+
+/// Apply the compact-WY form of panel `[j0, j1)` to the trailing columns
+/// `[j1, n)`: with `V` the unit-lower-trapezoidal reflector block and `T`
+/// the LAPACK-`larft` triangular factor of `Q_panel = H_{j0}···H_{j1-1} =
+/// I − V·T·Vᵀ`, the update is `A_trail ← Q_panelᵀ A_trail = A_trail −
+/// V·Tᵀ·(Vᵀ·A_trail)`. In the transposed storage (`at` rows are columns of
+/// A) that is `Ct ← Ct − (Ct·V)·T·Vᵀ` — two rectangular GEMMs over the
+/// packed-panel path, row-sharded across the worker pool with GEMM's
+/// MR-aligned bitwise thread-determinism contract.
+#[allow(clippy::too_many_arguments)]
+fn apply_panel_to_trailing(
+    at: &mut DenseMatrix,
+    tau: &[f64],
+    s: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    kern: &'static dyn SimdKernels,
+) -> Result<()> {
+    let pnb = j1 - j0;
+    let l = s - j0;
+    let m2 = n - j1;
+    // V restricted to rows j0..s, as pnb×l row-major: row i = v_{j0+i}
+    // (zeros before position i, implicit 1 on it, stored tail after).
+    let mut vmat = DenseMatrix::zeros(pnb, l);
+    for i in 0..pnb {
+        let src = at.row(j0 + i);
+        let dst = vmat.row_mut(i);
+        dst[i] = 1.0;
+        dst[i + 1..].copy_from_slice(&src[j0 + i + 1..s]);
+    }
+    // T (pnb×pnb upper triangular), forward columnwise accumulation:
+    // T[i,i] = τ_i, T[0..i, i] = −τ_i · T[0..i, 0..i] · (V[:, 0..i]ᵀ v_i).
+    // v_p ᵀ v_i only overlaps from position i on, where v_p is the stored
+    // tail and v_i is (1, tail) — exactly rows p and i of vmat from
+    // column i.
+    let mut t = DenseMatrix::zeros(pnb, pnb);
+    let mut h = vec![0.0; pnb];
+    for i in 0..pnb {
+        let ti = tau[j0 + i];
+        if ti != 0.0 {
+            for p in 0..i {
+                h[p] = kern.dot(&vmat.row(p)[i..], &vmat.row(i)[i..]);
+            }
+            for p in 0..i {
+                let acc = kern.dot(&t.row(p)[p..i], &h[p..i]);
+                t[(p, i)] = -ti * acc;
+            }
+        }
+        t[(i, i)] = ti;
+    }
+    // Vᵀ as l×pnb for the first GEMM.
+    let mut vt = DenseMatrix::zeros(l, pnb);
+    for i in 0..pnb {
+        for (c, &v) in vmat.row(i).iter().enumerate().skip(i) {
+            vt[(c, i)] = v;
+        }
+    }
+    // Trailing block in transposed storage: ctrail row r = column j1+r of
+    // A restricted to rows j0..s (contiguous copies both ways — the GEMMs
+    // then run on plain full-width row-major operands).
+    let mut ctrail = DenseMatrix::zeros(m2, l);
+    for r in 0..m2 {
+        ctrail.row_mut(r).copy_from_slice(&at.row(j1 + r)[j0..s]);
+    }
+    let mut wt = DenseMatrix::zeros(m2, pnb);
+    super::gemm::matmul_into(&ctrail, &vt, &mut wt)?;
+    let mut y = DenseMatrix::zeros(m2, pnb);
+    super::gemm::matmul_into(&wt, &t, &mut y)?;
+    y.scale(-1.0); // exact sign flip: Ct += (−Y)·Vᵀ is the subtraction
+    super::gemm::matmul_into(&y, &vmat, &mut ctrail)?;
+    for r in 0..m2 {
+        at.row_mut(j1 + r)[j0..s].copy_from_slice(ctrail.row(r));
+    }
+    Ok(())
 }
 
 trait SignumNonzero {
@@ -422,5 +632,77 @@ mod tests {
         let f = qr(&a).unwrap();
         let rel = f.q.matmul(&f.r).unwrap().fro_distance(&a) / a.fro_norm();
         assert!(rel < 1e-12, "rel {rel}");
+    }
+
+    /// Regression for the reflector-norm overflow/underflow: the naive
+    /// `Σ x²` is `inf` for entries beyond ~1e154 (poisoning the whole
+    /// factorization with NaN) and `0` below ~1e-162 (silently treating a
+    /// nonzero column as already triangular). The scaled norm must factor
+    /// columns at 1e±160 accurately — and a fully subnormal column
+    /// (1e-310) must survive too, which additionally requires the
+    /// reflector scaling and the norm rescale to divide rather than
+    /// multiply by a reciprocal (the reciprocal of a subnormal is Inf).
+    #[test]
+    fn extreme_column_scales_factor_accurately() {
+        let mut a = rand_matrix(60, 6, 17);
+        let scales = [1e160, 1e-160, 1.0, 1e155, 1e-155, 1e-310];
+        for (j, &sc) in scales.iter().enumerate() {
+            for i in 0..60 {
+                a[(i, j)] *= sc;
+            }
+        }
+        let compact = qr_compact(&a).unwrap();
+        let q = compact.q();
+        let r = compact.r();
+        // Q stays orthonormal...
+        let qtq = q.transpose().matmul(&q).unwrap();
+        let dev = qtq.fro_distance(&DenseMatrix::eye(6));
+        assert!(dev < 1e-12, "QtQ dev {dev}");
+        // ...and every column reconstructs at its own scale. The squares
+        // are taken in units of the column scale — the raw squares
+        // over/underflow by design here.
+        let qr_prod = q.matmul(&r).unwrap();
+        for (j, &sc) in scales.iter().enumerate() {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for i in 0..60 {
+                let d = (qr_prod[(i, j)] - a[(i, j)]) / sc;
+                let v = a[(i, j)] / sc;
+                num += d * d;
+                den += v * v;
+            }
+            // 1e-11 (not 1e-12): the 1e-310 column's entries are stored
+            // subnormal, so the data itself carries ~1e-14 representation
+            // error before the factorization sees it.
+            let rel = num.sqrt() / den.sqrt().max(1e-300);
+            assert!(rel.is_finite() && rel < 1e-11, "col {j}: rel {rel}");
+        }
+        // The unblocked sweep shares the scaled norm. The `.max(1e-300)`
+        // keeps the tolerance representable for the subnormal diagonal
+        // (1e-12 of 1e-310 would sit below the subnormal ulp).
+        let unb = qr_compact_unblocked(&a).unwrap();
+        for j in 0..scales.len() {
+            let d = (unb.r()[(j, j)].abs() - r[(j, j)].abs()).abs();
+            assert!(
+                d <= (1e-11 * r[(j, j)].abs()).max(1e-320),
+                "diag {j}: {} vs {}",
+                unb.r()[(j, j)],
+                r[(j, j)]
+            );
+        }
+    }
+
+    /// The `set_panel_nb` knob rebinds the default `qr_compact` to an
+    /// explicit panel width, and `nb ≥ n` is bit-for-bit the unblocked
+    /// sweep.
+    #[test]
+    fn panel_nb_knob_and_full_panel_degeneracy() {
+        let a = rand_matrix(70, 20, 18);
+        set_panel_nb(8);
+        let via_knob = qr_compact(&a).unwrap();
+        set_panel_nb(0);
+        assert_eq!(via_knob, qr_compact_blocked(&a, 8).unwrap());
+        assert_eq!(qr_compact_blocked(&a, 20).unwrap(), qr_compact_unblocked(&a).unwrap());
+        assert_eq!(qr_compact_blocked(&a, 99).unwrap(), qr_compact_unblocked(&a).unwrap());
+        assert!(panel_nb() >= 1);
     }
 }

@@ -42,7 +42,9 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7447)" },
         FlagSpec { name: "workers", takes_value: true, help: "serve: worker threads (default 2)" },
         FlagSpec { name: "threads", takes_value: true, help: "kernel pool size for GEMM/FWHT/sketch (0 = auto)" },
-        FlagSpec { name: "simd", takes_value: true, help: "kernel SIMD backend: auto|scalar|avx2|neon" },
+        FlagSpec { name: "simd", takes_value: true, help: "kernel SIMD backend: auto|scalar|avx2|avx512|neon" },
+        FlagSpec { name: "pack", takes_value: true, help: "packed-panel GEMM: true|false (default true)" },
+        FlagSpec { name: "qr-nb", takes_value: true, help: "blocked-QR panel width (0 = auto, default 32)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -72,11 +74,33 @@ fn main() {
             Some(c) => snsolve::simd::set_choice(c),
             None => {
                 eprintln!(
-                    "error: invalid value for --simd: {s} (expected auto|scalar|avx2|neon)\n\n{}",
+                    "error: invalid value for --simd: {s} \
+                     (expected auto|scalar|avx2|avx512|neon)\n\n{}",
                     usage("snsolve", SUBCOMMANDS, &specs)
                 );
                 std::process::exit(2);
             }
+        }
+    }
+    if let Some(s) = args.flag("pack") {
+        match s {
+            "true" | "1" | "on" => snsolve::linalg::gemm::set_packing(Some(true)),
+            "false" | "0" | "off" => snsolve::linalg::gemm::set_packing(Some(false)),
+            _ => {
+                eprintln!(
+                    "error: invalid value for --pack: {s} (expected true|false)\n\n{}",
+                    usage("snsolve", SUBCOMMANDS, &specs)
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    match args.flag_usize("qr-nb") {
+        Ok(Some(nb)) => snsolve::linalg::qr::set_panel_nb(nb),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
+            std::process::exit(2);
         }
     }
     let code = match args.subcommand.as_deref() {
@@ -169,16 +193,42 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                     if snsolve::simd::SimdChoice::parse(raw).is_none() {
                         eprintln!(
                             "config error: invalid [parallel] simd value {raw:?} \
-                             (expected auto|scalar|avx2|neon)"
+                             (expected auto|scalar|avx2|avx512|neon)"
                         );
                         return 2;
                     }
                 }
-                // `[parallel] simd` applies unless the --simd flag (already
-                // installed in main, higher precedence) was given; an
-                // absent key leaves SNSOLVE_SIMD / auto-detection alone.
-                if let (None, Some(choice)) = (args.flag("simd"), c.solve_config().simd) {
+                // Same hard-error treatment for the other kernel knobs: a
+                // present-but-wrong-typed key must not be silently ignored.
+                let pack_present = c.get("parallel", "pack").is_some();
+                if pack_present && c.get_bool("parallel", "pack").is_none() {
+                    eprintln!("config error: [parallel] pack must be true or false (unquoted)");
+                    return 2;
+                }
+                if let Some(v) = c.get("parallel", "qr_nb") {
+                    match v.as_i64() {
+                        Some(nb) if nb >= 0 => {}
+                        _ => {
+                            eprintln!(
+                                "config error: [parallel] qr_nb must be a non-negative \
+                                 integer (0 = auto)"
+                            );
+                            return 2;
+                        }
+                    }
+                }
+                // `[parallel]` kernel keys apply unless the matching CLI
+                // flag (already installed in main, higher precedence) was
+                // given; absent keys leave the env vars / defaults alone.
+                let sc = c.solve_config();
+                if let (None, Some(choice)) = (args.flag("simd"), sc.simd) {
                     snsolve::simd::set_choice(choice);
+                }
+                if let (None, Some(p)) = (args.flag("pack"), sc.pack) {
+                    snsolve::linalg::gemm::set_packing(Some(p));
+                }
+                if args.flag("qr-nb").is_none() && sc.qr_nb != 0 {
+                    snsolve::linalg::qr::set_panel_nb(sc.qr_nb);
                 }
                 c.service_config()
             }

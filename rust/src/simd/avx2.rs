@@ -59,6 +59,24 @@ impl SimdKernels for Avx2Kernels {
         unsafe { gemm_tile_avx2(a, b, c, k, n, i0, j0, pc, kc) }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile_packed(
+        &self,
+        ap: &[f64],
+        bp: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        i0: usize,
+        j0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        // SAFETY: AVX2+FMA verified at dispatch time (see module docs);
+        // bounds are checked inside (safe panic, never OOB).
+        unsafe { gemm_tile_packed_avx2(ap, bp, c, ldc, i0, j0, kc, mr, nr) }
+    }
+
     fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
         assert_eq!(a.len(), b.len());
         // SAFETY: AVX2+FMA verified at dispatch time.
@@ -122,6 +140,69 @@ unsafe fn gemm_tile_avx2(
         for (s, &v) in row.iter().enumerate() {
             let cp = crow.add(4 * s);
             _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), v));
+        }
+    }
+}
+
+/// Packed 4x12 tile: identical FMA sequence to `gemm_tile_avx2` (ascending
+/// depth, three ymm columns per row), reading the contiguous pack strip /
+/// panel instead of strided rows — full tiles are bitwise identical to the
+/// direct tile. Ragged tiles (`mr < 4` or `nr < 12`, zero-padded in the
+/// pack) spill the accumulators and mask the write-back.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_tile_packed_avx2(
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    assert!(kc > 0 && mr <= MR && nr <= NR);
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
+    let app = ap.as_ptr();
+    let bpp = bp.as_ptr();
+    let zero = _mm256_setzero_pd();
+    let mut acc = [[zero; 3]; MR];
+    for p in 0..kc {
+        let brow = bpp.add(p * NR);
+        let b0 = _mm256_loadu_pd(brow);
+        let b1 = _mm256_loadu_pd(brow.add(4));
+        let b2 = _mm256_loadu_pd(brow.add(8));
+        let arow = app.add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = _mm256_set1_pd(*arow.add(r));
+            accr[0] = _mm256_fmadd_pd(ar, b0, accr[0]);
+            accr[1] = _mm256_fmadd_pd(ar, b1, accr[1]);
+            accr[2] = _mm256_fmadd_pd(ar, b2, accr[2]);
+        }
+    }
+    if mr == MR && nr == NR {
+        for (r, row) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i0 + r) * ldc + j0);
+            for (s, &v) in row.iter().enumerate() {
+                let cp = crow.add(4 * s);
+                _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), v));
+            }
+        }
+    } else {
+        // Spill and mask: the padded accumulator rows/columns never reach C.
+        let mut spill = [0.0f64; MR * NR];
+        for (r, row) in acc.iter().enumerate() {
+            for (s, &v) in row.iter().enumerate() {
+                _mm256_storeu_pd(spill.as_mut_ptr().add(r * NR + 4 * s), v);
+            }
+        }
+        for r in 0..mr {
+            let crow = (i0 + r) * ldc + j0;
+            for s in 0..nr {
+                c[crow + s] += spill[r * NR + s];
+            }
         }
     }
 }

@@ -3,33 +3,41 @@
 //! Murray et al. (2023) single out hardware-tuned kernel backends as the
 //! gap between RandNLA theory and usable software; this module closes it
 //! for the CPU layer. A small kernel trait ([`SimdKernels`]: fused GEMM
-//! register tile, `dot`, `axpy`, `scal`, FWHT butterfly pass) has three
-//! backends:
+//! register tile, BLIS-style pack + packed-tile kernels, `dot`, `axpy`,
+//! `scal`, FWHT butterfly pass) has four backends:
 //!
 //! * **scalar** — the portable unrolled reference (the seed kernels, kept
 //!   bit-for-bit as the cross-check oracle);
 //! * **avx2** — x86_64 AVX2+FMA via `std::arch`, 4x12 register tile;
+//! * **avx512** — x86_64 AVX-512F via `std::arch`, 8x8 zmm register tile;
 //! * **neon** — aarch64 NEON via `std::arch`, 4x8 register tile.
 //!
 //! Selection resolves per call through one atomic load, highest precedence
 //! first: [`set_choice`] (wired from [`crate::config::SolveConfig`], the
 //! `--simd` CLI/bench flags, and the `[parallel] simd` config key) →
-//! `SNSOLVE_SIMD` env var (`auto|scalar|avx2|neon`) → auto-detection
-//! (`is_x86_feature_detected!` at runtime on x86_64, compile-time cfg on
-//! aarch64). A forced backend the host cannot run resolves to scalar, so
-//! unsupported hosts never execute a SIMD instruction.
+//! `SNSOLVE_SIMD` env var (`auto|scalar|avx2|avx512|neon`) →
+//! auto-detection (`is_x86_feature_detected!` at runtime on x86_64,
+//! compile-time cfg on aarch64). A forced backend the host cannot run
+//! resolves to scalar, so unsupported hosts never execute a SIMD
+//! instruction.
 //!
 //! **Determinism contract.** For a fixed backend every kernel is a pure
 //! per-element/per-tile function, so kernel results are bitwise identical
 //! across thread counts (the GEMM row panels stay [`SimdKernels::mr`]-
-//! aligned). Across backends agreement is ≤ 1e-12 relative: FMA contraction
-//! and wider accumulators re-round, but nothing re-associates across the
-//! GEMM depth loop, and the FWHT butterfly (adds/subs only) is bitwise
-//! identical on every backend. Asserted by `tests/parallel_determinism.rs`
-//! and the `micro_linalg`/`sketch_ablation` bench cross-checks.
+//! aligned). The packed-tile kernel accumulates in the exact element order
+//! of the direct tile kernel — packing relocates operands, it never
+//! re-associates — so full tiles are bitwise identical between the packed
+//! and unpacked GEMM paths too. Across backends agreement is ≤ 1e-12
+//! relative: FMA contraction and wider accumulators re-round, but nothing
+//! re-associates across the GEMM depth loop, and the FWHT butterfly
+//! (adds/subs only) is bitwise identical on every backend. Asserted by
+//! `tests/parallel_determinism.rs` and the `micro_linalg`/
+//! `sketch_ablation` bench cross-checks.
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 mod scalar;
@@ -42,6 +50,7 @@ use std::sync::OnceLock;
 pub enum Backend {
     Scalar,
     Avx2,
+    Avx512,
     Neon,
 }
 
@@ -50,6 +59,7 @@ impl Backend {
         match self {
             Backend::Scalar => "scalar",
             Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
             Backend::Neon => "neon",
         }
     }
@@ -59,6 +69,7 @@ impl Backend {
         match self {
             Backend::Scalar => SimdChoice::Scalar,
             Backend::Avx2 => SimdChoice::Avx2,
+            Backend::Avx512 => SimdChoice::Avx512,
             Backend::Neon => SimdChoice::Neon,
         }
     }
@@ -68,21 +79,23 @@ impl Backend {
 /// `[parallel] simd` config key accept.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SimdChoice {
-    /// Best available: avx2 → neon → scalar.
+    /// Best available: avx512 → avx2 → neon → scalar.
     #[default]
     Auto,
     Scalar,
     Avx2,
+    Avx512,
     Neon,
 }
 
 impl SimdChoice {
-    /// Parse `auto|scalar|avx2|neon` (case-insensitive, trimmed).
+    /// Parse `auto|scalar|avx2|avx512|neon` (case-insensitive, trimmed).
     pub fn parse(s: &str) -> Option<SimdChoice> {
         match s.trim().to_ascii_lowercase().as_str() {
             "auto" => Some(SimdChoice::Auto),
             "scalar" => Some(SimdChoice::Scalar),
             "avx2" => Some(SimdChoice::Avx2),
+            "avx512" => Some(SimdChoice::Avx512),
             "neon" => Some(SimdChoice::Neon),
             _ => None,
         }
@@ -93,6 +106,7 @@ impl SimdChoice {
             SimdChoice::Auto => "auto",
             SimdChoice::Scalar => "scalar",
             SimdChoice::Avx2 => "avx2",
+            SimdChoice::Avx512 => "avx512",
             SimdChoice::Neon => "neon",
         }
     }
@@ -133,6 +147,106 @@ pub trait SimdKernels: Sync {
         kc: usize,
     );
 
+    /// Pack an `mc × kc` block of row-major `a` (row stride `lda`, origin
+    /// `(i0, pc)`) into [`SimdKernels::mr`]-row strips for the packed GEMM
+    /// path. Strip `si` occupies `buf[si·MR·kc .. (si+1)·MR·kc]` in
+    /// depth-major order (`buf[si·MR·kc + p·MR + r]` = `A[i0+si·MR+r,
+    /// pc+p]`), so the microkernel reads MR consecutive values per depth
+    /// step. Rows past `mc` are **zero-filled** — the padded accumulator
+    /// rows are computed but never written back, which is what removes the
+    /// ragged edge kernel from the packed interior. `buf` must hold
+    /// `mc.div_ceil(MR)·MR·kc` elements.
+    #[allow(clippy::too_many_arguments)]
+    fn pack_a(
+        &self,
+        a: &[f64],
+        lda: usize,
+        i0: usize,
+        pc: usize,
+        mc: usize,
+        kc: usize,
+        buf: &mut [f64],
+    ) {
+        let mr = self.mr();
+        let strips = mc.div_ceil(mr);
+        debug_assert!(buf.len() >= strips * mr * kc, "pack_a: buffer too small");
+        for si in 0..strips {
+            let base = si * mr * kc;
+            for r in 0..mr {
+                let row = si * mr + r;
+                if row < mc {
+                    let src = (i0 + row) * lda + pc;
+                    for p in 0..kc {
+                        buf[base + p * mr + r] = a[src + p];
+                    }
+                } else {
+                    for p in 0..kc {
+                        buf[base + p * mr + r] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pack a `kc × nc` block of row-major `b` (row stride `ldb`, origin
+    /// `(pc, j0)`) into [`SimdKernels::nr`]-column panels. Panel `t`
+    /// occupies `buf[t·NR·kc .. (t+1)·NR·kc]` in depth-major order
+    /// (`buf[t·NR·kc + p·NR + s]` = `B[pc+p, j0+t·NR+s]`); columns past
+    /// `nc` are **zero-filled** (same padded-edge contract as
+    /// [`SimdKernels::pack_a`]). `buf` must hold `nc.div_ceil(NR)·NR·kc`
+    /// elements.
+    #[allow(clippy::too_many_arguments)]
+    fn pack_b(
+        &self,
+        b: &[f64],
+        ldb: usize,
+        pc: usize,
+        j0: usize,
+        kc: usize,
+        nc: usize,
+        buf: &mut [f64],
+    ) {
+        let nr = self.nr();
+        let panels = nc.div_ceil(nr);
+        debug_assert!(buf.len() >= panels * nr * kc, "pack_b: buffer too small");
+        for t in 0..panels {
+            let base = t * nr * kc;
+            let jt = t * nr;
+            let w = nr.min(nc - jt);
+            for p in 0..kc {
+                let src = (pc + p) * ldb + j0 + jt;
+                let dst = base + p * nr;
+                buf[dst..dst + w].copy_from_slice(&b[src..src + w]);
+                for v in buf[dst + w..dst + nr].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Packed register-tile multiply: `C[i0..i0+mr, j0..j0+nr] +=
+    /// strip · panel` over `kc` depth steps, where `ap` is one
+    /// [`SimdKernels::pack_a`] strip (`kc·MR`), `bp` one
+    /// [`SimdKernels::pack_b`] panel (`kc·NR`) and `c` is row-major with
+    /// row stride `ldc`. `mr ≤ MR` / `nr ≤ NR` mask the write-back for
+    /// tiles whose zero-padded rows/columns fall outside C; the interior
+    /// accumulation is branch-free and **element-order identical** to
+    /// [`SimdKernels::gemm_tile`], so full tiles are bitwise equal between
+    /// the packed and unpacked paths on every backend.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile_packed(
+        &self,
+        ap: &[f64],
+        bp: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        i0: usize,
+        j0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    );
+
     /// Unrolled dot product.
     fn dot(&self, a: &[f64], b: &[f64]) -> f64;
 
@@ -160,6 +274,7 @@ fn encode(c: SimdChoice) -> u8 {
         SimdChoice::Scalar => 1,
         SimdChoice::Avx2 => 2,
         SimdChoice::Neon => 3,
+        SimdChoice::Avx512 => 4,
     }
 }
 
@@ -169,6 +284,7 @@ fn decode(v: u8) -> Option<SimdChoice> {
         1 => Some(SimdChoice::Scalar),
         2 => Some(SimdChoice::Avx2),
         3 => Some(SimdChoice::Neon),
+        4 => Some(SimdChoice::Avx512),
         _ => None,
     }
 }
@@ -208,6 +324,17 @@ fn avx2_available() -> bool {
     false
 }
 
+#[cfg(target_arch = "x86_64")]
+fn avx512_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| std::arch::is_x86_feature_detected!("avx512f"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx512_available() -> bool {
+    false
+}
+
 /// NEON is architecturally mandatory on aarch64, so compile-time cfg is the
 /// detection.
 fn neon_available() -> bool {
@@ -216,11 +343,13 @@ fn neon_available() -> bool {
 
 /// Resolve a requested choice to a backend the host can actually run.
 /// Unsupported forced backends degrade to scalar (never to a different
-/// SIMD set), so `SNSOLVE_SIMD=avx2` on a non-AVX2 host is safe.
+/// SIMD set), so `SNSOLVE_SIMD=avx512` on a non-AVX-512 host is safe.
 pub fn resolve(choice: SimdChoice) -> Backend {
     match choice {
         SimdChoice::Auto => {
-            if avx2_available() {
+            if avx512_available() {
+                Backend::Avx512
+            } else if avx2_available() {
                 Backend::Avx2
             } else if neon_available() {
                 Backend::Neon
@@ -232,6 +361,13 @@ pub fn resolve(choice: SimdChoice) -> Backend {
         SimdChoice::Avx2 => {
             if avx2_available() {
                 Backend::Avx2
+            } else {
+                Backend::Scalar
+            }
+        }
+        SimdChoice::Avx512 => {
+            if avx512_available() {
+                Backend::Avx512
             } else {
                 Backend::Scalar
             }
@@ -259,6 +395,9 @@ pub fn available() -> Vec<Backend> {
     if avx2_available() {
         v.push(Backend::Avx2);
     }
+    if avx512_available() {
+        v.push(Backend::Avx512);
+    }
     if neon_available() {
         v.push(Backend::Neon);
     }
@@ -279,6 +418,8 @@ pub fn backend_kernels(b: Backend) -> &'static dyn SimdKernels {
         Backend::Scalar => &scalar::ScalarKernels,
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 if avx2_available() => &avx2::Avx2Kernels,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 if avx512_available() => &avx512::Avx512Kernels,
         #[cfg(target_arch = "aarch64")]
         Backend::Neon => &neon::NeonKernels,
         _ => &scalar::ScalarKernels,
@@ -296,15 +437,24 @@ mod tests {
     // The global-dispatch path is exercised (single-threadedly) by
     // `tests/parallel_determinism.rs`.
 
+    const ALL_CHOICES: [SimdChoice; 5] = [
+        SimdChoice::Auto,
+        SimdChoice::Scalar,
+        SimdChoice::Avx2,
+        SimdChoice::Avx512,
+        SimdChoice::Neon,
+    ];
+
     #[test]
     fn parse_choices() {
         assert_eq!(SimdChoice::parse("auto"), Some(SimdChoice::Auto));
         assert_eq!(SimdChoice::parse(" Scalar "), Some(SimdChoice::Scalar));
         assert_eq!(SimdChoice::parse("AVX2"), Some(SimdChoice::Avx2));
+        assert_eq!(SimdChoice::parse("AVX512"), Some(SimdChoice::Avx512));
         assert_eq!(SimdChoice::parse("neon"), Some(SimdChoice::Neon));
         assert_eq!(SimdChoice::parse("sse9"), None);
         assert_eq!(SimdChoice::parse(""), None);
-        for c in [SimdChoice::Auto, SimdChoice::Scalar, SimdChoice::Avx2, SimdChoice::Neon] {
+        for c in ALL_CHOICES {
             assert_eq!(SimdChoice::parse(c.name()), Some(c));
             assert_eq!(decode(encode(c)), Some(c));
         }
@@ -316,7 +466,7 @@ mod tests {
         let av = available();
         assert_eq!(av[0], Backend::Scalar);
         // resolve() never hands out a backend the host cannot run.
-        for c in [SimdChoice::Auto, SimdChoice::Scalar, SimdChoice::Avx2, SimdChoice::Neon] {
+        for c in ALL_CHOICES {
             assert!(av.contains(&resolve(c)), "{:?}", c);
         }
         assert_eq!(resolve(SimdChoice::Scalar), Backend::Scalar);
@@ -326,7 +476,11 @@ mod tests {
     #[test]
     fn forced_unsupported_backend_falls_back_to_scalar() {
         #[cfg(not(target_arch = "x86_64"))]
-        assert_eq!(resolve(SimdChoice::Avx2), Backend::Scalar);
+        {
+            assert_eq!(resolve(SimdChoice::Avx2), Backend::Scalar);
+            assert_eq!(resolve(SimdChoice::Avx512), Backend::Scalar);
+            assert_eq!(backend_kernels(Backend::Avx512).backend(), Backend::Scalar);
+        }
         #[cfg(not(target_arch = "aarch64"))]
         assert_eq!(resolve(SimdChoice::Neon), Backend::Scalar);
         // And backend_kernels never returns SIMD kernels for them either.
@@ -339,9 +493,10 @@ mod tests {
         for b in available() {
             let k = backend_kernels(b);
             assert_eq!(k.backend(), b);
-            // All backends share MR=4 so the thread-panel partitioning is
-            // backend-independent; NR varies with register width.
-            assert_eq!(k.mr(), 4, "{}", b.name());
+            // MR is 4 everywhere except the avx512 zmm tile (8); it must
+            // stay a multiple of 4 so every backend's thread-panel
+            // alignment also aligns the narrower tiles.
+            assert!(k.mr() == 4 || k.mr() == 8, "{}", b.name());
             assert!(k.nr() >= 4, "{}", b.name());
         }
     }
@@ -420,6 +575,108 @@ mod tests {
                 assert!(cz[i * nr].is_nan(), "{} 0*NaN row {i}", bk.name());
                 assert!(cz[i * nr + 1].is_nan(), "{} 0*Inf row {i}", bk.name());
                 assert_eq!(cz[i * nr + 2], 0.0, "{} clean col row {i}", bk.name());
+            }
+        }
+    }
+
+    /// Pack layout invariants: strip/panel contents match the source block
+    /// in the documented depth-major order, and rows/columns past the block
+    /// edge are exactly zero.
+    #[test]
+    fn pack_layouts_and_zero_padding() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(903));
+        for bk in available() {
+            let kern = backend_kernels(bk);
+            let (mr, nr) = (kern.mr(), kern.nr());
+            let (m, k, n) = (3 * mr + 1, 23usize, 2 * nr + 3);
+            let a = g.gaussian_vec(m * k);
+            let b = g.gaussian_vec(k * n);
+            let (i0, pc, mc, kc) = (mr, 3usize, m - mr, k - 5);
+            let strips = mc.div_ceil(mr);
+            let mut abuf = vec![f64::NAN; strips * mr * kc];
+            kern.pack_a(&a, k, i0, pc, mc, kc, &mut abuf);
+            for si in 0..strips {
+                for p in 0..kc {
+                    for r in 0..mr {
+                        let got = abuf[si * mr * kc + p * mr + r];
+                        let row = si * mr + r;
+                        if row < mc {
+                            assert_eq!(got, a[(i0 + row) * k + pc + p], "{} a", bk.name());
+                        } else {
+                            assert_eq!(got, 0.0, "{} a pad", bk.name());
+                        }
+                    }
+                }
+            }
+            let (j0, nc) = (nr, n - nr);
+            let panels = nc.div_ceil(nr);
+            let mut bbuf = vec![f64::NAN; panels * nr * kc];
+            kern.pack_b(&b, n, pc, j0, kc, nc, &mut bbuf);
+            for t in 0..panels {
+                for p in 0..kc {
+                    for s in 0..nr {
+                        let got = bbuf[t * nr * kc + p * nr + s];
+                        let col = t * nr + s;
+                        if col < nc {
+                            assert_eq!(got, b[(pc + p) * n + j0 + col], "{} b", bk.name());
+                        } else {
+                            assert_eq!(got, 0.0, "{} b pad", bk.name());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The packed tile is bitwise identical to the direct tile on full
+    /// tiles (same element accumulation order), masks its write-back on
+    /// ragged tiles, and matches the naive reference within 1e-12.
+    #[test]
+    fn gemm_tile_packed_matches_direct_and_masks_writeback() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(904));
+        for bk in available() {
+            let kern = backend_kernels(bk);
+            let (mr, nr) = (kern.mr(), kern.nr());
+            let k = 31usize;
+            let a = g.gaussian_vec(mr * k);
+            let b = g.gaussian_vec(k * nr);
+            let mut ap = vec![0.0; mr * k];
+            let mut bp = vec![0.0; nr * k];
+            kern.pack_a(&a, k, 0, 0, mr, k, &mut ap);
+            kern.pack_b(&b, nr, 0, 0, k, nr, &mut bp);
+            let mut c_direct = vec![0.25; mr * nr];
+            kern.gemm_tile(&a, &b, &mut c_direct, k, nr, 0, 0, 0, k);
+            let mut c_packed = vec![0.25; mr * nr];
+            kern.gemm_tile_packed(&ap, &bp, &mut c_packed, nr, 0, 0, k, mr, nr);
+            assert_eq!(c_packed, c_direct, "{}: full packed tile not bitwise", bk.name());
+
+            // Ragged tile: pack a (mr-1) x (nr-1) block with padding; the
+            // masked write-back must leave the sentinel border untouched.
+            let (mre, nre) = (mr - 1, nr - 1);
+            let mut ape = vec![0.0; mr * k];
+            let mut bpe = vec![0.0; nr * k];
+            kern.pack_a(&a, k, 0, 0, mre, k, &mut ape);
+            kern.pack_b(&b, nr, 0, 0, k, nre, &mut bpe);
+            let sentinel = -7.5;
+            let mut ce = vec![sentinel; mr * nr];
+            kern.gemm_tile_packed(&ape, &bpe, &mut ce, nr, 0, 0, k, mre, nre);
+            for i in 0..mr {
+                for j in 0..nr {
+                    let got = ce[i * nr + j];
+                    if i < mre && j < nre {
+                        let mut want = sentinel;
+                        for p in 0..k {
+                            want += a[i * k + p] * b[p * nr + j];
+                        }
+                        assert!(
+                            (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                            "{} edge ({i},{j}): {got} vs {want}",
+                            bk.name()
+                        );
+                    } else {
+                        assert_eq!(got, sentinel, "{} write-back leak ({i},{j})", bk.name());
+                    }
+                }
             }
         }
     }

@@ -53,6 +53,24 @@ impl SimdKernels for NeonKernels {
         unsafe { gemm_tile_neon(a, b, c, k, n, i0, j0, pc, kc) }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile_packed(
+        &self,
+        ap: &[f64],
+        bp: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        i0: usize,
+        j0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        // SAFETY: NEON is always present on aarch64; bounds are checked
+        // inside (safe panic, never OOB).
+        unsafe { gemm_tile_packed_neon(ap, bp, c, ldc, i0, j0, kc, mr, nr) }
+    }
+
     fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
         assert_eq!(a.len(), b.len());
         // SAFETY: NEON is always present on aarch64.
@@ -118,6 +136,70 @@ unsafe fn gemm_tile_neon(
         for (s, &v) in row.iter().enumerate() {
             let cp = crow.add(2 * s);
             vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+        }
+    }
+}
+
+/// Packed 4x8 tile: identical FMA sequence to `gemm_tile_neon` (ascending
+/// depth, four q-register columns per row), reading the contiguous pack
+/// strip / panel — full tiles are bitwise identical to the direct tile.
+/// Ragged tiles (zero-padded in the pack) spill and mask the write-back.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn gemm_tile_packed_neon(
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    assert!(kc > 0 && mr <= MR && nr <= NR);
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
+    let app = ap.as_ptr();
+    let bpp = bp.as_ptr();
+    let zero: float64x2_t = vdupq_n_f64(0.0);
+    let mut acc = [[zero; 4]; MR];
+    for p in 0..kc {
+        let brow = bpp.add(p * NR);
+        let b0 = vld1q_f64(brow);
+        let b1 = vld1q_f64(brow.add(2));
+        let b2 = vld1q_f64(brow.add(4));
+        let b3 = vld1q_f64(brow.add(6));
+        let arow = app.add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = vdupq_n_f64(*arow.add(r));
+            accr[0] = vfmaq_f64(accr[0], ar, b0);
+            accr[1] = vfmaq_f64(accr[1], ar, b1);
+            accr[2] = vfmaq_f64(accr[2], ar, b2);
+            accr[3] = vfmaq_f64(accr[3], ar, b3);
+        }
+    }
+    if mr == MR && nr == NR {
+        for (r, row) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i0 + r) * ldc + j0);
+            for (s, &v) in row.iter().enumerate() {
+                let cp = crow.add(2 * s);
+                vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+            }
+        }
+    } else {
+        // Spill and mask: the padded accumulator rows/columns never reach C.
+        let mut spill = [0.0f64; MR * NR];
+        for (r, row) in acc.iter().enumerate() {
+            for (s, &v) in row.iter().enumerate() {
+                vst1q_f64(spill.as_mut_ptr().add(r * NR + 2 * s), v);
+            }
+        }
+        for r in 0..mr {
+            let crow = (i0 + r) * ldc + j0;
+            for s in 0..nr {
+                c[crow + s] += spill[r * NR + s];
+            }
         }
     }
 }

@@ -63,6 +63,42 @@ impl SimdKernels for ScalarKernels {
         }
     }
 
+    /// Packed 4x8 tile: same 32 live accumulators and the same ascending-p
+    /// element order as `gemm_tile` — only the operand addressing changes
+    /// (contiguous strip/panel instead of strided rows), so full tiles are
+    /// bitwise identical to the direct tile.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_tile_packed(
+        &self,
+        ap: &[f64],
+        bp: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        i0: usize,
+        j0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        let mut acc = [[0.0f64; NR]; MR];
+        for p in 0..kc {
+            let av = &ap[p * MR..p * MR + MR];
+            let bv = &bp[p * NR..p * NR + NR];
+            for (r, &ar) in av.iter().enumerate() {
+                for (s, &bs) in bv.iter().enumerate() {
+                    acc[r][s] += ar * bs;
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate().take(mr) {
+            let cp = (i0 + r) * ldc + j0;
+            for (s, &v) in row.iter().enumerate().take(nr) {
+                c[cp + s] += v;
+            }
+        }
+    }
+
     fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
         let n = a.len();

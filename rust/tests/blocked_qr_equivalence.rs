@@ -1,0 +1,162 @@
+//! Blocked compact-WY QR equivalence suite (the PR-4 tentpole contract):
+//!
+//! (a) blocked and unblocked `qr_compact` agree within 1e-12 (in units of
+//!     the matrix/column scale) on R and on `q_transpose_vec`/`q_vec`
+//!     outputs, across NB ∈ {1, 8, 32, full} and shapes that cross panel
+//!     boundaries;
+//! (b) the agreement survives the ill-conditioned column scalings the
+//!     `qr.rs` unit suite uses;
+//! (c) `nb ≥ n` is bit-for-bit the unblocked sweep, and every NB yields a
+//!     factorization whose materialized Q/R satisfy the QR invariants;
+//! (d) the blocked appliers stay per-row bitwise against the single-vector
+//!     path (the contract the batched serving layer leans on).
+
+use snsolve::linalg::qr::{qr_compact_blocked, qr_compact_unblocked, QrCompact};
+use snsolve::linalg::DenseMatrix;
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+
+const TOL: f64 = 1e-12;
+
+/// NBs the acceptance criteria call out; `usize::MAX` stands in for
+/// "full" (clamped by the factorization to one panel).
+const NBS: [usize; 4] = [1, 8, 32, usize::MAX];
+
+fn rand_matrix(s: usize, n: usize, seed: u64) -> DenseMatrix {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+    DenseMatrix::gaussian(s, n, &mut g)
+}
+
+/// Column norms of `a` — the scale R's column j lives at.
+fn col_norms(a: &DenseMatrix) -> Vec<f64> {
+    let (s, n) = a.shape();
+    let mut out = vec![0.0; n];
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for i in 0..s {
+            acc += a[(i, j)] * a[(i, j)];
+        }
+        *o = acc.sqrt().max(1e-300);
+    }
+    out
+}
+
+fn assert_r_close(blocked: &QrCompact, reference: &QrCompact, scales: &[f64], label: &str) {
+    let rb = blocked.r();
+    let ru = reference.r();
+    let n = scales.len();
+    for i in 0..n {
+        for j in i..n {
+            let d = (rb[(i, j)] - ru[(i, j)]).abs();
+            assert!(
+                d <= TOL * scales[j],
+                "{label}: R[{i},{j}] {} vs {} (col scale {})",
+                rb[(i, j)],
+                ru[(i, j)],
+                scales[j]
+            );
+        }
+    }
+}
+
+fn assert_vec_close(a: &[f64], b: &[f64], scale: f64, label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (i, (u, v)) in a.iter().zip(b.iter()).enumerate() {
+        assert!((u - v).abs() <= TOL * scale, "{label}[{i}]: {u} vs {v}");
+    }
+}
+
+/// (a) + (c): blocked-vs-unblocked agreement over the NB sweep, shapes
+/// chosen to cross panel boundaries (n not a multiple of NB, n == NB,
+/// n < NB, square).
+#[test]
+fn blocked_matches_unblocked_across_nb_and_shapes() {
+    let shapes = [
+        (40usize, 10usize, 1u64),
+        (100, 33, 2),
+        (200, 64, 3),
+        (129, 65, 4),
+        (64, 64, 5),
+        (260, 96, 6),
+    ];
+    for (s, n, seed) in shapes {
+        let a = rand_matrix(s, n, seed);
+        let scales = col_norms(&a);
+        let reference = qr_compact_unblocked(&a).unwrap();
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed + 100));
+        let c = g.gaussian_vec(s);
+        let z = g.gaussian_vec(n);
+        let c_norm = c.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0);
+        let z_ref = reference.q_transpose_vec(&c);
+        // Q has orthonormal columns, so ‖Qz‖ = ‖z‖ is the output scale.
+        let z_scale = z.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0);
+        let y_ref = reference.q_vec(&z);
+        for nb in NBS {
+            let blocked = qr_compact_blocked(&a, nb).unwrap();
+            let label = format!("{s}x{n} nb={nb}");
+            assert_r_close(&blocked, &reference, &scales, &label);
+            assert_vec_close(&blocked.q_transpose_vec(&c), &z_ref, c_norm, &label);
+            assert_vec_close(&blocked.q_vec(&z), &y_ref, z_scale, &label);
+            if nb >= n {
+                // Full-width panel IS the unblocked sweep, bit for bit.
+                assert_eq!(blocked, reference, "{label}: full panel not bitwise");
+            }
+        }
+    }
+}
+
+/// Every NB yields a valid factorization on its own terms: R triangular,
+/// QᵀQ = I, QR = A.
+#[test]
+fn every_nb_satisfies_qr_invariants() {
+    let a = rand_matrix(150, 47, 7);
+    for nb in NBS {
+        let f = qr_compact_blocked(&a, nb).unwrap();
+        let q = f.q();
+        let r = f.r();
+        for i in 0..47 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0, "nb={nb}: R not triangular at ({i},{j})");
+            }
+        }
+        let qtq = q.transpose().matmul(&q).unwrap();
+        let dev = qtq.fro_distance(&DenseMatrix::eye(47));
+        assert!(dev < 1e-11, "nb={nb}: QtQ dev {dev}");
+        let rel = q.matmul(&r).unwrap().fro_distance(&a) / a.fro_norm();
+        assert!(rel < TOL, "nb={nb}: QR != A rel {rel}");
+    }
+}
+
+/// (b) the ill-conditioned column scalings from the `qr.rs` unit suite:
+/// blocked and unblocked must still agree column-by-column at each
+/// column's own scale.
+#[test]
+fn blocked_matches_unblocked_on_illconditioned_columns() {
+    let mut a = rand_matrix(80, 12, 8);
+    for j in 0..12 {
+        let scale = 10f64.powi(-(2 * j as i32 % 15));
+        for i in 0..80 {
+            a[(i, j)] *= scale;
+        }
+    }
+    let scales = col_norms(&a);
+    let reference = qr_compact_unblocked(&a).unwrap();
+    for nb in [1usize, 8, 32] {
+        let blocked = qr_compact_blocked(&a, nb).unwrap();
+        assert_r_close(&blocked, &reference, &scales, &format!("illcond nb={nb}"));
+    }
+}
+
+/// (d) the blocked factorization's `q_transpose_mat` keeps the per-row
+/// bitwise contract against `q_transpose_vec` — the batched serving
+/// equivalence, now on blocked reflectors.
+#[test]
+fn blocked_q_transpose_mat_matches_per_row_bitwise() {
+    let a = rand_matrix(96, 30, 9);
+    let f = qr_compact_blocked(&a, 8).unwrap();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(10));
+    let c = DenseMatrix::gaussian(6, 96, &mut g);
+    let z = f.q_transpose_mat(&c);
+    for r in 0..6 {
+        assert_eq!(z.row(r), &f.q_transpose_vec(c.row(r))[..], "row {r}");
+    }
+}

@@ -132,6 +132,74 @@ fn apply_transpose_mat_matches_matvec_t_under_nonfinite() {
     }
 }
 
+/// Packed-panel GEMM (PR 4): the pack zero-pads ragged edge strips/panels
+/// and masks their write-back. The padding must never swallow `0·NaN` /
+/// `0·Inf` arising from **real** data, and it must never leak into clean
+/// outputs. Shapes chosen above the packed-path floor (`PACK_MIN_FLOPS`)
+/// and ragged in every dimension for every backend tile (MR ∈ {4, 8},
+/// NR ∈ {8, 12}).
+///
+/// ONE test (not several): the packing knob is process-global and the
+/// tests in this binary run concurrently — a second knob-flipping test
+/// could silently route this test's "unpacked" baseline through the
+/// packed path between the flip and the matmul, making the comparison
+/// vacuous (same reason the gemm.rs unit suite keeps a single knob test).
+#[test]
+fn packed_gemm_zero_padding_preserves_nonfinite_and_stays_clean() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(74));
+    let (m, k, n) = (41usize, 48, 37);
+    let mut a = DenseMatrix::gaussian(m, k, &mut g);
+    let mut b = DenseMatrix::gaussian(k, n, &mut g);
+    a[(m - 1, 3)] = f64::NAN; // last row: always an edge strip row
+    b[(2, 0)] = f64::NAN; // first column: always a full-panel column
+    b[(5, n - 1)] = f64::INFINITY; // last column: always an edge panel column
+    snsolve::linalg::gemm::set_packing(Some(true));
+    let cp = gemm::matmul(&a, &b).unwrap();
+    snsolve::linalg::gemm::set_packing(Some(false));
+    let cu = gemm::matmul(&a, &b).unwrap();
+    snsolve::linalg::gemm::set_packing(None);
+    for j in 0..n {
+        assert!(cp[(m - 1, j)].is_nan(), "NaN row lost in packed edge strip, col {j}");
+    }
+    for i in 0..m - 1 {
+        assert!(cp[(i, 0)].is_nan(), "NaN column lost in packed full panel, row {i}");
+        assert!(!cp[(i, n - 1)].is_finite(), "Inf col finite in packed edge panel, row {i}");
+        assert!(cp[(i, 1)].is_finite(), "clean column polluted by pack padding, row {i}");
+    }
+    // Elementwise: packed and unpacked agree on non-finite placement
+    // exactly, and on finite values within rounding (edge tiles round
+    // differently between the two paths).
+    let scale = 1e-12
+        * cu.data().iter().filter(|v| v.is_finite()).fold(1.0f64, |acc, &v| acc.max(v.abs()));
+    for (i, (u, p)) in cu.data().iter().zip(cp.data().iter()).enumerate() {
+        if u.is_nan() || p.is_nan() {
+            assert!(u.is_nan() && p.is_nan(), "NaN placement differs at flat index {i}");
+        } else if !u.is_finite() || !p.is_finite() {
+            assert_eq!(u, p, "Inf placement differs at flat index {i}");
+        } else {
+            assert!((u - p).abs() <= scale, "finite divergence at flat index {i}: {u} vs {p}");
+        }
+    }
+
+    // All-zero A against non-finite B through the packed path — the
+    // padded accumulator rows compute `0·NaN` too, but only the masked
+    // write-back decides what reaches C: real rows get NaN, the clean
+    // column stays 0.
+    let (m, k, n) = (33usize, 64, 29); // ≥ PACK_MIN_FLOPS, ragged everywhere
+    let az = DenseMatrix::zeros(m, k);
+    let mut bz = DenseMatrix::zeros(k, n);
+    bz[(1, 0)] = f64::NAN;
+    bz[(k - 1, n - 1)] = f64::INFINITY;
+    snsolve::linalg::gemm::set_packing(Some(true));
+    let cz = gemm::matmul(&az, &bz).unwrap();
+    snsolve::linalg::gemm::set_packing(None);
+    for i in 0..m {
+        assert!(cz[(i, 0)].is_nan(), "packed 0·NaN lost, row {i}");
+        assert!(cz[(i, n - 1)].is_nan(), "packed 0·Inf lost in edge panel, row {i}");
+        assert_eq!(cz[(i, 1)], 0.0, "clean column polluted, row {i}");
+    }
+}
+
 #[test]
 fn norms_propagate_nonfinite() {
     assert!(norms::norm_inf(&[f64::NAN; 3]).is_nan());

@@ -12,11 +12,17 @@
 //! (c) every sketch operator preserves norms in expectation,
 //!     `E[‖Sx‖²] ≈ ‖x‖²`, checked through the in-tree property harness.
 //!
-//! (d) at every SIMD backend the host supports, the parallel kernels stay
+//! (d) at every SIMD backend the host supports — including avx512 where
+//!     the host reports `avx512f`; elsewhere the forced choice degrades to
+//!     scalar so the sweep skips it gracefully — the parallel kernels stay
 //!     **bitwise identical** across thread counts (panel boundaries are
 //!     MR-aligned per backend), SIMD-vs-scalar agreement is ≤ 1e-12
 //!     relative, and the FWHT butterfly (adds/subs only) is bitwise
 //!     identical to scalar on every backend.
+//!
+//! (e) the parallel `matvec`/`matvec_t` (row shards / aligned column
+//!     stripes, PR 4) are **bitwise identical** to the serial chains at
+//!     every thread count and on every backend.
 //!
 //! The thread-count and SIMD-backend sweeps live in ONE test function: the
 //! pool size and the kernel backend are process-wide settings, and keeping
@@ -56,6 +62,13 @@ fn parallel_paths_match_serial_across_thread_counts() {
     // --- FWHT columns ---------------------------------------------------
     let (frows, fcols) = (256usize, 300usize);
     let fdata: Vec<f64> = g.gaussian_vec(frows * fcols);
+
+    // --- parallel matvec fixtures (m·n above PAR_MIN_ELEMS so the row
+    // shards / column stripes actually engage) --------------------------
+    let (mvm, mvn) = (600usize, 130usize);
+    let mva = DenseMatrix::gaussian(mvm, mvn, &mut g);
+    let mvx = g.gaussian_vec(mvn);
+    let mvu = g.gaussian_vec(mvm);
 
     // --- sketch inputs --------------------------------------------------
     let (sm, sn, ss) = (4096usize, 24usize, 96usize);
@@ -98,6 +111,8 @@ fn parallel_paths_match_serial_across_thread_counts() {
     // Serial references at 1 thread.
     snsolve::parallel::set_threads(1);
     let gemm_ref = gemm::matmul(&ga, &gb).unwrap();
+    let mv_ref = mva.matvec(&mvx);
+    let mvt_ref = mva.matvec_t(&mvu);
     let fwht_ref = {
         let mut d = fdata.clone();
         hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
@@ -137,6 +152,11 @@ fn parallel_paths_match_serial_across_thread_counts() {
         assert_eq!(c1, c2, "gemm not deterministic at {t} threads");
         let dev = max_abs_dev(c1.data(), gemm_ref.data());
         assert!(dev <= TOL, "gemm dev {dev} at {t} threads");
+
+        // matvec (row shards) and matvec_t (aligned column stripes):
+        // bitwise identical to the serial chains at every thread count.
+        assert_eq!(mva.matvec(&mvx), mv_ref, "matvec differs at {t} threads");
+        assert_eq!(mva.matvec_t(&mvu), mvt_ref, "matvec_t differs at {t} threads");
 
         // FWHT: disjoint column bands.
         let mut d1 = fdata.clone();
@@ -211,6 +231,12 @@ fn parallel_paths_match_serial_across_thread_counts() {
     let mv_scalar = ga.matvec(&xv);
     let mvt_scalar = ga.matvec_t(&uv);
 
+    // The sweep covers every backend the host actually supports — on an
+    // avx512f host `available()` includes the 8x8 zmm backend and the loop
+    // below runs the full bitwise/1e-12 battery on it; elsewhere a forced
+    // avx512 resolves to scalar (pinned by the simd unit tests), so the
+    // entry is skipped gracefully rather than silently testing the wrong
+    // kernels.
     for backend in snsolve::simd::available() {
         snsolve::simd::set_choice(backend.as_choice());
         assert_eq!(snsolve::simd::active(), backend, "backend failed to activate");
@@ -224,6 +250,8 @@ fn parallel_paths_match_serial_across_thread_counts() {
             hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
             d
         };
+        let mv1 = mva.matvec(&mvx);
+        let mvt1 = mva.matvec_t(&mvu);
         for &t in &SWEEP {
             snsolve::parallel::set_threads(t);
             let ct = gemm::matmul(&ga, &gb).unwrap();
@@ -231,6 +259,8 @@ fn parallel_paths_match_serial_across_thread_counts() {
             let mut dt = fdata.clone();
             hadamard::fwht_columns_inplace(&mut dt, frows, fcols).unwrap();
             assert_eq!(dt, f1, "{name}: fwht not bitwise across threads at {t}");
+            assert_eq!(mva.matvec(&mvx), mv1, "{name}: matvec not bitwise at {t}");
+            assert_eq!(mva.matvec_t(&mvu), mvt1, "{name}: matvec_t not bitwise at {t}");
         }
         snsolve::parallel::set_threads(1);
 
