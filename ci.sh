@@ -6,6 +6,10 @@ cd "$(dirname "$0")/rust"
 echo "== cargo build --release =="
 cargo build --release
 
+# Benches only compiled when run by hand before this; keep them building.
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
 echo "== cargo test -q =="
 cargo test -q
 
@@ -31,6 +35,17 @@ if grep -q avx512f /proc/cpuinfo 2>/dev/null; then
 else
   echo "== skipping SNSOLVE_SIMD=avx512 run (host reports no avx512f) =="
 fi
+
+# Sketch-engine equivalence (blocked/fused FWHT, inverted scatter,
+# workspaces) pinned explicitly under BOTH the portable reference backend
+# and the detected-best backend (auto dispatch) — the full-suite runs
+# above cover these too; the explicit runs keep the engine's bitwise
+# contract loud in the CI log.
+echo "== sketch engine equivalence (SNSOLVE_SIMD=scalar) =="
+SNSOLVE_SIMD=scalar cargo test -q --test sketch_engine_equivalence --test workspace_reuse
+
+echo "== sketch engine equivalence (detected-best backend) =="
+cargo test -q --test sketch_engine_equivalence --test workspace_reuse
 
 echo "== cargo fmt --check =="
 cargo fmt --check

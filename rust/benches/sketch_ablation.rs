@@ -9,9 +9,17 @@
 //! every operator's apply on each backend the host supports with a scalar
 //! cross-check line (GFLOP/s + relative deviation ≤ 1e-12).
 //!
+//! The **sketch-engine sweep** (the PR-5 tentpole record) times every
+//! operator's apply with effective GB/s alongside GFLOP/s, the stage-fused
+//! blocked FWHT (radix 2/4/8) against the stage-per-pass baseline at
+//! m̃ ∈ {2¹⁶, 2¹⁸, 2²⁰}, and the inverted-hash scatter against the
+//! band-rescan baseline at 1/4 threads — every comparison **bitwise**
+//! cross-checked — and saves `BENCH_sketch_apply.{json,csv}` so the
+//! sketch-stage perf trajectory is tracked like `BENCH_micro_linalg`.
+//!
 //! Output: console tables + target/bench-reports/
 //! {sketch_operator_ablation, sketch_size_ablation, sketch_apply_threads,
-//! sketch_apply_simd}.{csv,json}.
+//! sketch_apply_simd, BENCH_sketch_apply}.{csv,json}.
 
 use snsolve::bench_harness::figures::{
     run_sketch_ablation, run_sketch_size_ablation, AblationConfig,
@@ -19,9 +27,9 @@ use snsolve::bench_harness::figures::{
 use snsolve::bench_harness::report::Table;
 use snsolve::bench_harness::{
     bench, max_abs_dev, parse_simd_arg, parse_threads_arg, simd_in_use, threads_in_use,
-    BenchConfig,
+    BenchConfig, Stats,
 };
-use snsolve::linalg::DenseMatrix;
+use snsolve::linalg::{hadamard, DenseMatrix};
 use snsolve::rng::{GaussianSource, Xoshiro256pp};
 use snsolve::sketch::{self, SketchKind, SketchOperator};
 
@@ -61,8 +69,171 @@ fn main() {
     let t4 = run_apply_simd_sweep(&cfg);
     println!("{}", t4.render());
     let _ = t4.save("sketch_apply_simd");
+
+    // ---- sketch-engine sweep (PR-5 tentpole record) ---------------------
+    // Reset to the ambient pool size / dispatched backend first so the
+    // record reflects the default engine configuration.
     snsolve::parallel::set_threads(0);
     snsolve::simd::clear_choice();
+    if let Some(choice) = parse_simd_arg(&argv) {
+        snsolve::simd::set_choice(choice);
+    }
+    let t5 = run_sketch_engine_sweep(&cfg, quick);
+    println!("{}", t5.render());
+    let _ = t5.save("BENCH_sketch_apply");
+
+    snsolve::parallel::set_threads(0);
+    snsolve::simd::clear_choice();
+    snsolve::linalg::hadamard::set_fwht_radix(None);
+    snsolve::sketch::set_inverted_scatter(None);
+}
+
+/// The sketch-engine perf record: (a) every operator's `apply_dense` with
+/// effective GB/s (bytes moved / wall time — input + output traffic)
+/// alongside GFLOP/s; (b) the stage-fused blocked FWHT at radix 2/4/8 vs
+/// the stage-per-pass baseline (acceptance: fused beats baseline at
+/// m̃ ≥ 2¹⁸); (c) the inverted-hash scatter vs the band-rescan baseline
+/// for the three sparse operators at 1 and 4 threads (acceptance:
+/// inverted wins at ≥ 4 threads). Every compared pair is asserted
+/// **bitwise identical** — the engine's structural guarantee.
+fn run_sketch_engine_sweep(cfg: &AblationConfig, quick: bool) -> Table {
+    let mut table = Table::new(
+        "T-engine — sketch engine: fused FWHT, inverted scatter, GB/s",
+        &["kernel", "shape", "threads", "variant", "median_s", "gflops", "gbs", "speedup_vs_baseline", "bitwise"],
+    );
+    let bench_cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5E11));
+
+    // (a) per-operator apply with GB/s next to GFLOP/s (ambient threads).
+    let a = DenseMatrix::gaussian(cfg.m, cfg.n, &mut g);
+    let s_rows = 4 * cfg.n;
+    let threads_now = threads_in_use().to_string();
+    for kind in SketchKind::ALL {
+        let op = sketch::build(kind, s_rows, cfg.m, cfg.seed ^ 0xAB);
+        let st = bench(&bench_cfg, || op.apply_dense(&a));
+        let flops = op.flops_estimate(cfg.n, cfg.m * cfg.n);
+        let bytes = ((cfg.m + s_rows) * cfg.n * 8) as f64;
+        table.row(vec![
+            format!("apply_{}", kind.name()),
+            format!("{}x{}", cfg.m, cfg.n),
+            threads_now.clone(),
+            "engine".into(),
+            format!("{:.6}", st.median),
+            format!("{:.2}", flops / st.median / 1e9),
+            format!("{:.2}", bytes / st.median / 1e9),
+            "1.00".into(),
+            "-".into(),
+        ]);
+    }
+
+    // (b) stage-fused blocked FWHT vs the stage-per-pass baseline.
+    let fwht_logs: &[usize] = if quick { &[14, 16] } else { &[16, 18, 20] };
+    let fwht_cols = 32usize;
+    for &logm in fwht_logs {
+        let rows = 1usize << logm;
+        let data = g.gaussian_vec(rows * fwht_cols);
+        let mut base_out = data.clone();
+        hadamard::fwht_columns_with_radix(&mut base_out, rows, fwht_cols, 1).unwrap();
+        let st_base = bench(&bench_cfg, || {
+            let mut d = data.clone();
+            hadamard::fwht_columns_with_radix(&mut d, rows, fwht_cols, 1).unwrap();
+            d
+        });
+        // clone cost is shared by every variant; report the ops rate over
+        // the butterfly work m̃·n·log₂ m̃.
+        let ops = (rows * fwht_cols * logm) as f64;
+        let bytes = (rows * fwht_cols * 8) as f64 * logm as f64 * 2.0;
+        table.row(vec![
+            "fwht_columns".into(),
+            format!("2^{logm}x{fwht_cols}"),
+            threads_now.clone(),
+            "stagewise(r1)".into(),
+            format!("{:.6}", st_base.median),
+            format!("{:.2}", ops / st_base.median / 1e9),
+            format!("{:.2}", bytes / st_base.median / 1e9),
+            "1.00".into(),
+            "ref".into(),
+        ]);
+        for radix in [2usize, 4, 8] {
+            let mut out = data.clone();
+            hadamard::fwht_columns_with_radix(&mut out, rows, fwht_cols, radix).unwrap();
+            assert_eq!(out, base_out, "fused radix-{radix} FWHT not bitwise at 2^{logm}");
+            let st = bench(&bench_cfg, || {
+                let mut d = data.clone();
+                hadamard::fwht_columns_with_radix(&mut d, rows, fwht_cols, radix).unwrap();
+                d
+            });
+            // Fused passes touch the buffer fewer times; keep the
+            // baseline's byte model so the column stays comparable.
+            table.row(vec![
+                "fwht_columns".into(),
+                format!("2^{logm}x{fwht_cols}"),
+                threads_now.clone(),
+                format!("fused(r{radix})"),
+                format!("{:.6}", st.median),
+                format!("{:.2}", ops / st.median / 1e9),
+                format!("{:.2}", bytes / st.median / 1e9),
+                format!("{:.2}", st_base.median / st.median),
+                "bitwise".into(),
+            ]);
+        }
+    }
+
+    // (c) inverted-hash scatter vs band-rescan, sparse operators only. At
+    // 1 thread the serial streaming pass never consults the layout flag,
+    // so it is recorded once as the `serial` baseline; the rescan and
+    // inverted variants are measured where they actually diverge (4
+    // threads). `speedup_vs_baseline` is vs serial for the rescan row and
+    // vs rescan for the inverted row (the acceptance comparison).
+    let sparse_kinds =
+        [SketchKind::CountSketch, SketchKind::SparseSign, SketchKind::UniformSparse];
+    for kind in sparse_kinds {
+        let op = sketch::build(kind, s_rows, cfg.m, cfg.seed ^ 0xAB);
+        let flops = op.flops_estimate(cfg.n, cfg.m * cfg.n);
+        let bytes = ((cfg.m + s_rows) * cfg.n * 8) as f64;
+        let mut scatter_row = |threads: usize, variant: String, st: &Stats, speedup: f64| {
+            table.row(vec![
+                format!("scatter_{}", kind.name()),
+                format!("{}x{}", cfg.m, cfg.n),
+                threads.to_string(),
+                variant,
+                format!("{:.6}", st.median),
+                format!("{:.2}", flops / st.median / 1e9),
+                format!("{:.2}", bytes / st.median / 1e9),
+                format!("{speedup:.2}"),
+                "bitwise".into(),
+            ]);
+        };
+        snsolve::parallel::set_threads(1);
+        let serial_out = op.apply_dense(&a);
+        let st_serial = bench(&bench_cfg, || op.apply_dense(&a));
+        scatter_row(1, "serial".into(), &st_serial, 1.0);
+
+        snsolve::parallel::set_threads(4);
+        snsolve::sketch::set_inverted_scatter(Some(false));
+        let rescan_out = op.apply_dense(&a);
+        let st_rescan = bench(&bench_cfg, || op.apply_dense(&a));
+        snsolve::sketch::set_inverted_scatter(Some(true));
+        let inv_out = op.apply_dense(&a);
+        let st_inv = bench(&bench_cfg, || op.apply_dense(&a));
+        snsolve::sketch::set_inverted_scatter(None);
+        assert_eq!(
+            rescan_out.data(),
+            serial_out.data(),
+            "{}: rescan not bitwise vs serial at 4 threads",
+            kind.name()
+        );
+        assert_eq!(
+            inv_out.data(),
+            rescan_out.data(),
+            "{}: inverted scatter not bitwise at 4 threads",
+            kind.name()
+        );
+        scatter_row(4, "rescan".into(), &st_rescan, st_serial.median / st_rescan.median);
+        scatter_row(4, "inverted".into(), &st_inv, st_rescan.median / st_inv.median);
+    }
+    snsolve::parallel::set_threads(0);
+    table
 }
 
 /// Time every operator's `apply_dense` at 1 thread on each backend this

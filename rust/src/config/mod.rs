@@ -149,6 +149,12 @@ impl Config {
                 .and_then(Value::as_i64)
                 .map(|v| v.max(0) as usize)
                 .unwrap_or(0),
+            fwht_radix: self
+                .get("parallel", "fwht_radix")
+                .and_then(Value::as_i64)
+                .map(|v| v.max(0) as usize)
+                .filter(|&r| crate::linalg::hadamard::is_valid_fwht_radix(r))
+                .unwrap_or(0),
         }
     }
 
@@ -199,8 +205,9 @@ impl Config {
 /// parallel GEMM/FWHT/sketch kernels draw from (`[parallel] threads`,
 /// 0 = auto-detect), the SIMD backend they dispatch to (`[parallel] simd
 /// = "auto"|"scalar"|"avx2"|"avx512"|"neon"`), the packed-panel GEMM
-/// toggle (`[parallel] pack`) and the blocked-QR panel width
-/// (`[parallel] qr_nb`, 0 = auto).
+/// toggle (`[parallel] pack`), the blocked-QR panel width
+/// (`[parallel] qr_nb`, 0 = auto) and the FWHT engine radix
+/// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
@@ -218,6 +225,10 @@ pub struct SolveConfig {
     /// Blocked-QR panel width; 0 resolves to the ambient width
     /// (`SNSOLVE_QR_NB`, then 32).
     pub qr_nb: usize,
+    /// FWHT engine radix: 1 = stage-per-pass baseline, 2/4/8 = blocked
+    /// engine with that max fused radix; 0 resolves to the ambient radix
+    /// (`SNSOLVE_FWHT_RADIX`, then 8).
+    pub fwht_radix: usize,
 }
 
 impl SolveConfig {
@@ -236,6 +247,9 @@ impl SolveConfig {
         // fields above.
         if self.qr_nb != 0 {
             crate::linalg::qr::set_panel_nb(self.qr_nb);
+        }
+        if self.fwht_radix != 0 {
+            crate::linalg::hadamard::set_fwht_radix(Some(self.fwht_radix));
         }
     }
 
@@ -314,6 +328,7 @@ threads = 3
 simd = "scalar"
 pack = true
 qr_nb = 16
+fwht_radix = 4
 "#;
 
     #[test]
@@ -352,6 +367,7 @@ qr_nb = 16
         assert_eq!(s.effective_simd(), crate::simd::Backend::Scalar);
         assert_eq!(s.pack, Some(true));
         assert_eq!(s.qr_nb, 16);
+        assert_eq!(s.fwht_radix, 4);
         // absent key → ambient (and an unparseable simd value → ambient),
         // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
@@ -361,12 +377,19 @@ qr_nb = 16
         assert_eq!(d.effective_simd(), crate::simd::active());
         assert_eq!(d.pack, None);
         assert_eq!(d.qr_nb, 0);
+        assert_eq!(d.fwht_radix, 0);
         let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
         assert_eq!(bad.simd, None);
         // A negative qr_nb clamps to auto instead of wrapping to a huge
         // panel width through the usize cast.
         let neg = Config::parse("[parallel]\nqr_nb = -8").unwrap().solve_config();
         assert_eq!(neg.qr_nb, 0);
+        // A radix outside {1, 2, 4, 8} (or negative) resolves to 0/auto
+        // here; `cmd_serve` hard-errors on present-but-invalid values.
+        let badr = Config::parse("[parallel]\nfwht_radix = 3").unwrap().solve_config();
+        assert_eq!(badr.fwht_radix, 0);
+        let negr = Config::parse("[parallel]\nfwht_radix = -4").unwrap().solve_config();
+        assert_eq!(negr.fwht_radix, 0);
     }
 
     #[test]

@@ -14,8 +14,8 @@ use crate::linalg::operator::PreconditionedOperator;
 use crate::linalg::qr::{qr_compact, QrCompact};
 use crate::linalg::{norms, triangular, DenseMatrix, LinearOperator, Matrix};
 use crate::runtime::{Engine, Tensor};
-use crate::sketch::{CountSketch, SketchOperator};
-use crate::solvers::lsqr::{lsqr_block, LsqrConfig};
+use crate::sketch::{CountSketch, SketchOperator, SketchWorkspace};
+use crate::solvers::lsqr::{lsqr_block_ws, LsqrConfig, SolveWorkspace};
 use crate::solvers::saa::SaaSolver;
 use crate::solvers::{Solution, Solver};
 
@@ -94,6 +94,13 @@ pub struct WorkerContext {
     metrics: Arc<Metrics>,
     cache: HashMap<MatrixId, FactorEntry>,
     cache_order: Vec<MatrixId>,
+    /// Reusable sketch scratch (SRHT pads, blocked-RHS rows): the
+    /// steady-state serving loop re-zeroes and reuses these instead of
+    /// allocating per request. Reuse is bitwise identical to fresh buffers.
+    sketch_ws: SketchWorkspace,
+    /// Reusable LSQR scratch (u/v/w, apply scratch, per-iteration
+    /// active-column blocks).
+    solve_ws: SolveWorkspace,
 }
 
 impl WorkerContext {
@@ -117,7 +124,16 @@ impl WorkerContext {
                 None
             }
         });
-        Self { config, engine, registry, metrics, cache: HashMap::new(), cache_order: Vec::new() }
+        Self {
+            config,
+            engine,
+            registry,
+            metrics,
+            cache: HashMap::new(),
+            cache_order: Vec::new(),
+            sketch_ws: SketchWorkspace::new(),
+            solve_ws: SolveWorkspace::new(),
+        }
     }
 
     pub fn has_engine(&self) -> bool {
@@ -270,7 +286,7 @@ impl WorkerContext {
             .max(n + 1)
             .min(m);
         let sketch = CountSketch::new(s_rows, m, self.config.seed);
-        let b_sk = sketch.apply_matrix(a);
+        let b_sk = sketch.apply_matrix_ws(a, &mut self.sketch_ws);
         let qr = qr_compact(&b_sk).map_err(|e| ServiceError::Solver(e.to_string()))?;
         let r = qr.r();
         let y = match a {
@@ -332,7 +348,7 @@ impl WorkerContext {
         match solver {
             SolverChoice::Lsqr => {
                 let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
-                lsqr_block(a.as_operator(), &rhs_block, None, &cfg)
+                lsqr_block_ws(a.as_operator(), &rhs_block, None, &cfg, &mut self.solve_ws)
                     .into_iter()
                     .map(|res| {
                         Ok(Solution {
@@ -353,8 +369,9 @@ impl WorkerContext {
                 }
                 let entry = self.cache.get(&id).expect("just inserted");
                 // b-dependent part only, blocked: C = S·B, Z₀ = Qᵀ·C —
-                // one parallel pass each for the whole batch.
-                let c_block = entry.sketch.apply_mat(&rhs_block);
+                // one parallel pass each for the whole batch, through the
+                // worker's reusable sketch workspace.
+                let c_block = entry.sketch.apply_mat_ws(&rhs_block, &mut self.sketch_ws);
                 let z0_block = entry.qr.q_transpose_mat(&c_block);
                 if solver == SolverChoice::SketchOnly {
                     let x_block = match triangular::solve_upper_block(&entry.r, &z0_block) {
@@ -388,14 +405,16 @@ impl WorkerContext {
                 }
                 let cfg = LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() };
                 let results = match (&entry.y, a) {
-                    (Some(y), _) => lsqr_block(y, &rhs_block, Some(&z0_block), &cfg),
+                    (Some(y), _) => {
+                        lsqr_block_ws(y, &rhs_block, Some(&z0_block), &cfg, &mut self.solve_ws)
+                    }
                     (None, Matrix::Csr(ac)) => {
                         let op = PreconditionedOperator::new(ac, &entry.r);
-                        lsqr_block(&op, &rhs_block, Some(&z0_block), &cfg)
+                        lsqr_block_ws(&op, &rhs_block, Some(&z0_block), &cfg, &mut self.solve_ws)
                     }
                     (None, Matrix::Dense(ad)) => {
                         let op = PreconditionedOperator::new(ad, &entry.r);
-                        lsqr_block(&op, &rhs_block, Some(&z0_block), &cfg)
+                        lsqr_block_ws(&op, &rhs_block, Some(&z0_block), &cfg, &mut self.solve_ws)
                     }
                 };
                 // One blocked back-substitution for every column; columns

@@ -37,5 +37,6 @@ pub mod simd;
 pub mod sketch;
 pub mod solvers;
 pub mod testing;
+pub mod workspace;
 
 pub use linalg::{CsrMatrix, DenseMatrix, LinearOperator};

@@ -5,35 +5,169 @@
 //! O(n log n); SRHT composes `P · H · D` with D a random sign flip and P a
 //! row subsample, normalized by 1/√n (Hadamard orthogonality) and √(n/s)
 //! (subsample variance correction).
+//!
+//! **Blocked, stage-fused engine.** The textbook FWHT makes `log₂ m̃` full
+//! passes over the buffer (one per butterfly stage), so at Figure-3 scale
+//! (m̃ = 2²⁰) it is pure DRAM traffic. The engine here instead:
+//!
+//! * **tiles** the row dimension into L2-resident blocks and runs every
+//!   stage with stride < tile inside the tile (one trip through DRAM for
+//!   all `log₂ tile` early stages), then
+//! * **fuses** the remaining cross-tile stages into radix-4/radix-8 passes
+//!   ([`crate::simd::SimdKernels::butterfly4`]/[`butterfly8`]) — three
+//!   butterfly stages per trip instead of one.
+//!
+//! Every fused radix-R kernel computes exactly the adds/subs of the
+//! cascaded radix-2 stages, in the same per-element order, and tiling only
+//! reorders *independent* (element, stage) work — so the blocked engine is
+//! **bitwise identical** to the stage-per-pass baseline at every radix, on
+//! every backend, at every thread count (pinned by
+//! `tests/sketch_engine_equivalence.rs`).
+//!
+//! The max fused radix is a knob: [`set_fwht_radix`] (wired from
+//! [`crate::config::SolveConfig`], `--fwht-radix`, `[parallel] fwht_radix`)
+//! → `SNSOLVE_FWHT_RADIX` env var → default 8. Radix **1** selects the
+//! stage-per-pass baseline path, kept as the bench reference
+//! (`sketch_ablation` → `BENCH_sketch_apply`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use super::{is_power_of_two, LinalgError, Result};
+use crate::simd::SimdKernels;
 
-/// In-place unnormalized FWHT of a power-of-two-length vector.
-///
-/// Each stage's block halves are contiguous, so the whole butterfly runs
-/// through the dispatched SIMD add/sub pass. The pass is adds/subs only —
-/// bitwise identical on every backend.
+/// Radix knob (process-wide). 0 = unset (fall through to the env var).
+static RADIX_CONFIGURED: AtomicU8 = AtomicU8::new(0);
+
+/// Valid `--fwht-radix` / `SNSOLVE_FWHT_RADIX` / `[parallel] fwht_radix`
+/// values: 1 (stage-per-pass baseline), 2, 4, 8 (blocked engine, max fused
+/// radix).
+pub fn is_valid_fwht_radix(r: usize) -> bool {
+    matches!(r, 1 | 2 | 4 | 8)
+}
+
+/// Configure the FWHT engine radix for this process (`None` restores the
+/// ambient resolution: `SNSOLVE_FWHT_RADIX`, then 8). Panics on values
+/// outside {1, 2, 4, 8}; the CLI/config layers validate before calling.
+pub fn set_fwht_radix(radix: Option<usize>) {
+    let v = match radix {
+        None => 0u8,
+        Some(r) => {
+            assert!(is_valid_fwht_radix(r), "fwht radix must be 1, 2, 4 or 8 (got {r})");
+            r as u8
+        }
+    };
+    RADIX_CONFIGURED.store(v, Ordering::SeqCst);
+}
+
+fn env_radix() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SNSOLVE_FWHT_RADIX")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&r| is_valid_fwht_radix(r))
+            .unwrap_or(8)
+    })
+}
+
+/// The radix the FWHT engine resolves to right now:
+/// [`set_fwht_radix`] → `SNSOLVE_FWHT_RADIX` → 8.
+pub fn fwht_radix_in_use() -> usize {
+    match RADIX_CONFIGURED.load(Ordering::SeqCst) {
+        0 => env_radix(),
+        v => v as usize,
+    }
+}
+
+/// ~256 KB of f64 per L2-resident row tile.
+const TILE_ELEMS: usize = 32 * 1024;
+
+/// Largest power-of-two row tile with `tile · width ≤ TILE_ELEMS` (clamped
+/// to `[1, rows]`). The tile size only affects *which order* independent
+/// (element, stage) updates run in — never the arithmetic — so it is free
+/// to depend on the band width without breaking bitwise determinism.
+fn tile_rows(rows: usize, width: usize) -> usize {
+    let w = width.max(1);
+    let mut t = 1usize;
+    while t < rows && 2 * t * w <= TILE_ELEMS {
+        t *= 2;
+    }
+    t
+}
+
+/// Next fused radix for a pass at stride `h` when `h_end / h` stages remain
+/// (both powers of two): the largest of {8, 4, 2} allowed by the knob that
+/// still divides the remaining span.
+fn next_radix(h: usize, h_end: usize, radix: usize) -> usize {
+    let rem = h_end / h;
+    if radix >= 8 && rem >= 8 {
+        8
+    } else if radix >= 4 && rem >= 4 {
+        4
+    } else {
+        2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector engine (contiguous layout)
+// ---------------------------------------------------------------------------
+
+/// In-place unnormalized FWHT of a power-of-two-length vector, through the
+/// blocked stage-fused engine at the ambient radix ([`fwht_radix_in_use`]).
+/// Bitwise identical to the stage-per-pass baseline at every radix.
 pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
+    fwht_with_radix(x, fwht_radix_in_use())
+}
+
+/// [`fwht_inplace`] with an explicit radix (1 = stage-per-pass baseline;
+/// 2/4/8 = blocked engine with that max fused radix). Exposed for the
+/// equivalence tests and the bench baseline.
+pub fn fwht_with_radix(x: &mut [f64], radix: usize) -> Result<()> {
     let n = x.len();
     if !is_power_of_two(n) {
         return Err(LinalgError::InvalidArgument(format!(
             "fwht: length {n} is not a power of two"
         )));
     }
+    if !is_valid_fwht_radix(radix) {
+        return Err(LinalgError::InvalidArgument(format!(
+            "fwht: radix {radix} not in {{1, 2, 4, 8}}"
+        )));
+    }
+    if n <= 1 {
+        return Ok(());
+    }
+    if radix == 1 {
+        fwht_vec_stagewise(x);
+        return Ok(());
+    }
+    let tile = tile_rows(n, 1);
+    if tile > 1 {
+        for t0 in (0..n).step_by(tile) {
+            fused_stages_vec(x, t0, t0 + tile, 1, tile, radix);
+        }
+    }
+    fused_stages_vec(x, 0, n, tile, n, radix);
+    Ok(())
+}
+
+/// Stage-per-pass baseline on a contiguous vector (the seed
+/// implementation, kept as the bench/equivalence reference).
+fn fwht_vec_stagewise(x: &mut [f64]) {
+    let n = x.len();
     let kern = crate::simd::kernels();
     let mut h = 1;
     while h < n {
-        // Butterfly stage at stride h; blocks of 2h. The early stages
-        // (h < 8) stay inline: one dispatched call per 1-4-element half
-        // would cost more than the adds it performs, and the inline loop
-        // is bitwise identical to every backend's butterfly anyway.
+        // The early stages (h < 8) stay inline: one dispatched call per
+        // 1-4-element half would cost more than the adds it performs, and
+        // the inline loop is bitwise identical to every backend's
+        // butterfly anyway.
         if h < 8 {
             for block in (0..n).step_by(2 * h) {
                 for i in block..block + h {
-                    let a = x[i];
-                    let b = x[i + h];
-                    x[i] = a + b;
-                    x[i + h] = a - b;
+                    bf2_scalar(x, i, h);
                 }
             }
         } else {
@@ -44,23 +178,149 @@ pub fn fwht_inplace(x: &mut [f64]) -> Result<()> {
         }
         h *= 2;
     }
-    Ok(())
 }
 
+/// All butterfly stages with strides in `[h0, h_end)` over elements
+/// `[r0, r1)` of a contiguous vector, fused into radix passes. `r1 − r0`
+/// must be a multiple of `h_end`, and `h0`/`h_end` powers of two.
+fn fused_stages_vec(x: &mut [f64], r0: usize, r1: usize, h0: usize, h_end: usize, radix: usize) {
+    let kern = crate::simd::kernels();
+    let mut h = h0;
+    while h < h_end {
+        let r = next_radix(h, h_end, radix);
+        fused_pass_vec(kern, x, r0, r1, h, r);
+        h *= r;
+    }
+}
+
+/// One fused radix-`r` pass at stride `h` over `[r0, r1)` (contiguous
+/// layout: the stride-`h` row slices are `h`-element chunks). Small-`h`
+/// passes stay inline-scalar (bitwise identical to the kernels).
+fn fused_pass_vec(
+    kern: &'static dyn SimdKernels,
+    x: &mut [f64],
+    r0: usize,
+    r1: usize,
+    h: usize,
+    r: usize,
+) {
+    match r {
+        8 => {
+            for block in (r0..r1).step_by(8 * h) {
+                if h < 8 {
+                    for i in block..block + h {
+                        bf8_scalar(x, i, h);
+                    }
+                } else {
+                    let (s0, rest) = x[block..block + 8 * h].split_at_mut(h);
+                    let (s1, rest) = rest.split_at_mut(h);
+                    let (s2, rest) = rest.split_at_mut(h);
+                    let (s3, rest) = rest.split_at_mut(h);
+                    let (s4, rest) = rest.split_at_mut(h);
+                    let (s5, rest) = rest.split_at_mut(h);
+                    let (s6, s7) = rest.split_at_mut(h);
+                    kern.butterfly8([s0, s1, s2, s3, s4, s5, s6, s7]);
+                }
+            }
+        }
+        4 => {
+            for block in (r0..r1).step_by(4 * h) {
+                if h < 8 {
+                    for i in block..block + h {
+                        bf4_scalar(x, i, h);
+                    }
+                } else {
+                    let (s0, rest) = x[block..block + 4 * h].split_at_mut(h);
+                    let (s1, rest) = rest.split_at_mut(h);
+                    let (s2, s3) = rest.split_at_mut(h);
+                    kern.butterfly4(s0, s1, s2, s3);
+                }
+            }
+        }
+        _ => {
+            for block in (r0..r1).step_by(2 * h) {
+                if h < 8 {
+                    for i in block..block + h {
+                        bf2_scalar(x, i, h);
+                    }
+                } else {
+                    let (lo, hi) = x[block..block + 2 * h].split_at_mut(h);
+                    kern.butterfly(lo, hi);
+                }
+            }
+        }
+    }
+}
+
+/// Inline radix-2 butterfly on elements `(i, i+h)` — the seed loop body.
+#[inline(always)]
+fn bf2_scalar(x: &mut [f64], i: usize, h: usize) {
+    let a = x[i];
+    let b = x[i + h];
+    x[i] = a + b;
+    x[i + h] = a - b;
+}
+
+/// Inline radix-4 butterfly on elements `i + {0, h, 2h, 3h}` — routed
+/// through [`crate::simd::butterfly4_lane`], the single source of the
+/// cascade every backend shares (so the inline path cannot drift from the
+/// dispatched kernels).
+#[inline(always)]
+fn bf4_scalar(x: &mut [f64], i: usize, h: usize) {
+    let (o0, o1, o2, o3) =
+        crate::simd::butterfly4_lane(x[i], x[i + h], x[i + 2 * h], x[i + 3 * h]);
+    x[i] = o0;
+    x[i + h] = o1;
+    x[i + 2 * h] = o2;
+    x[i + 3 * h] = o3;
+}
+
+/// Inline radix-8 butterfly on elements `i + {0, h, .., 7h}` — routed
+/// through [`crate::simd::butterfly8_lane`] (see [`bf4_scalar`]).
+#[inline(always)]
+fn bf8_scalar(x: &mut [f64], i: usize, h: usize) {
+    let mut v = [0.0f64; 8];
+    for (l, vl) in v.iter_mut().enumerate() {
+        *vl = x[i + l * h];
+    }
+    let o = crate::simd::butterfly8_lane(v);
+    for (l, &ol) in o.iter().enumerate() {
+        x[i + l * h] = ol;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Column engine (row-major rows × cols, transform along rows per column)
+// ---------------------------------------------------------------------------
+
 /// FWHT each *column* of a row-major (rows × cols) buffer, where `rows` is a
-/// power of two. This is the operation SRHT applies to a tall matrix: mix
-/// along the sample (row) dimension, independently per feature column.
+/// power of two, through the blocked stage-fused engine at the ambient
+/// radix. This is the operation SRHT applies to a tall matrix: mix along
+/// the sample (row) dimension, independently per feature column.
 ///
-/// Implementation note: rather than transposing, we run the butterfly with
-/// row-strided accesses but process all columns of a row pair contiguously —
-/// each stage is a pass of length-`cols` vector adds/subs, which is
-/// bandwidth-optimal for row-major data.
+/// Implementation note: rather than transposing, the butterfly runs with
+/// row-strided accesses but processes all columns of a row group
+/// contiguously — each fused pass is a sweep of length-`cols` vector
+/// adds/subs, bandwidth-optimal for row-major data — and the row dimension
+/// is tiled so the `log₂ tile` early stages complete inside L2.
 ///
 /// Parallel: columns are independent, so the buffer is split into disjoint
 /// column *bands*, one scoped worker per band. Every column runs exactly
-/// the serial butterfly, so the result is **bitwise identical** at any
-/// thread count.
+/// the serial stage cascade, so the result is **bitwise identical** at any
+/// thread count, radix, and backend.
 pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Result<()> {
+    fwht_columns_with_radix(data, rows, cols, fwht_radix_in_use())
+}
+
+/// [`fwht_columns_inplace`] with an explicit radix (1 = stage-per-pass
+/// baseline; 2/4/8 = blocked engine with that max fused radix). Exposed
+/// for the equivalence tests and the bench baseline.
+pub fn fwht_columns_with_radix(
+    data: &mut [f64],
+    rows: usize,
+    cols: usize,
+    radix: usize,
+) -> Result<()> {
     if data.len() != rows * cols {
         return Err(LinalgError::DimensionMismatch(format!(
             "fwht_columns: buffer {} != {rows}x{cols}",
@@ -72,58 +332,80 @@ pub fn fwht_columns_inplace(data: &mut [f64], rows: usize, cols: usize) -> Resul
             "fwht_columns: rows {rows} not a power of two"
         )));
     }
-    if rows <= 1 {
+    if !is_valid_fwht_radix(radix) {
+        return Err(LinalgError::InvalidArgument(format!(
+            "fwht_columns: radix {radix} not in {{1, 2, 4, 8}}"
+        )));
+    }
+    if rows <= 1 || cols == 0 {
         return Ok(());
     }
+    let kern = crate::simd::kernels();
     let threads = if rows * cols < crate::parallel::PAR_MIN_ELEMS {
         1
     } else {
         crate::parallel::threads_for(cols, 8)
     };
     if threads <= 1 {
-        fwht_columns_serial(data, rows, cols);
+        // SAFETY: exclusive access to the whole buffer via &mut.
+        unsafe { fwht_band(kern, data.as_mut_ptr(), rows, cols, 0, cols, radix) };
         return Ok(());
     }
     let ptr = crate::parallel::SendMutPtr(data.as_mut_ptr());
     crate::parallel::run_partitioned(cols, threads, |_, band| {
-        // SAFETY: bands partition the column index space, so workers write
+        // SAFETY: bands partition the column index space, so workers touch
         // disjoint elements of `data`, which outlives the scoped threads.
-        unsafe { fwht_column_band(ptr, rows, cols, band.start, band.end) };
+        unsafe { fwht_band(kern, ptr.0, rows, cols, band.start, band.end, radix) };
     });
     Ok(())
 }
 
-/// Serial full-width butterfly (all columns at once), each row pair through
-/// the dispatched SIMD add/sub pass.
-fn fwht_columns_serial(data: &mut [f64], rows: usize, cols: usize) {
-    let kern = crate::simd::kernels();
-    let mut h = 1;
-    while h < rows {
-        for block in (0..rows).step_by(2 * h) {
-            for i in block..block + h {
-                let (top, bot) = data.split_at_mut((i + h) * cols);
-                kern.butterfly(&mut top[i * cols..i * cols + cols], &mut bot[..cols]);
-            }
-        }
-        h *= 2;
-    }
-}
-
-/// Butterfly restricted to columns `[j0, j1)` of the row-major buffer.
+/// Full transform of columns `[j0, j1)`: L2 row tiles through the early
+/// stages, fused radix passes across tiles, or the stage-per-pass baseline
+/// when `radix == 1`.
 ///
 /// # Safety
-/// `ptr` must point at a live `rows × cols` buffer and no other thread may
+/// `base` must point at a live `rows × cols` buffer and no other thread may
 /// touch columns `[j0, j1)` while this runs.
-unsafe fn fwht_column_band(
-    ptr: crate::parallel::SendMutPtr,
+unsafe fn fwht_band(
+    kern: &'static dyn SimdKernels,
+    base: *mut f64,
+    rows: usize,
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    radix: usize,
+) {
+    if radix == 1 {
+        fwht_band_stagewise(kern, base, rows, cols, j0, j1);
+        return;
+    }
+    let w = j1 - j0;
+    let tile = tile_rows(rows, w);
+    if tile > 1 {
+        let mut t0 = 0;
+        while t0 < rows {
+            fused_stages_band(kern, base, cols, j0, w, t0, t0 + tile, 1, tile, radix);
+            t0 += tile;
+        }
+    }
+    fused_stages_band(kern, base, cols, j0, w, 0, rows, tile, rows, radix);
+}
+
+/// Stage-per-pass baseline restricted to columns `[j0, j1)` (the seed
+/// implementation: one full sweep per butterfly stage).
+///
+/// # Safety
+/// Same contract as [`fwht_band`].
+unsafe fn fwht_band_stagewise(
+    kern: &'static dyn SimdKernels,
+    base: *mut f64,
     rows: usize,
     cols: usize,
     j0: usize,
     j1: usize,
 ) {
-    let base = ptr.0;
     let w = j1 - j0;
-    let kern = crate::simd::kernels();
     let mut h = 1;
     while h < rows {
         for block in (0..rows).step_by(2 * h) {
@@ -134,6 +416,90 @@ unsafe fn fwht_column_band(
             }
         }
         h *= 2;
+    }
+}
+
+/// All butterfly stages with strides in `[h0, h_end)` over rows `[r0, r1)`
+/// of the column band, fused into radix passes. `r1 − r0` must be a
+/// multiple of `h_end`.
+///
+/// # Safety
+/// Same contract as [`fwht_band`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn fused_stages_band(
+    kern: &'static dyn SimdKernels,
+    base: *mut f64,
+    cols: usize,
+    j0: usize,
+    w: usize,
+    r0: usize,
+    r1: usize,
+    h0: usize,
+    h_end: usize,
+    radix: usize,
+) {
+    let mut h = h0;
+    while h < h_end {
+        let r = next_radix(h, h_end, radix);
+        fused_pass_band(kern, base, cols, j0, w, r0, r1, h, r);
+        h *= r;
+    }
+}
+
+/// One fused radix-`r` pass at row stride `h` over rows `[r0, r1)` of the
+/// column band `[j0, j0+w)`.
+///
+/// # Safety
+/// Same contract as [`fwht_band`]; the row octets/quartets/pairs handed to
+/// the fused kernels are disjoint by construction.
+#[allow(clippy::too_many_arguments)]
+unsafe fn fused_pass_band(
+    kern: &'static dyn SimdKernels,
+    base: *mut f64,
+    cols: usize,
+    j0: usize,
+    w: usize,
+    r0: usize,
+    r1: usize,
+    h: usize,
+    r: usize,
+) {
+    let row = |i: usize| {
+        // SAFETY: delegated to the function-level contract; each index maps
+        // to a distinct row of the band.
+        unsafe { std::slice::from_raw_parts_mut(base.add(i * cols + j0), w) }
+    };
+    match r {
+        8 => {
+            for block in (r0..r1).step_by(8 * h) {
+                for i in block..block + h {
+                    kern.butterfly8([
+                        row(i),
+                        row(i + h),
+                        row(i + 2 * h),
+                        row(i + 3 * h),
+                        row(i + 4 * h),
+                        row(i + 5 * h),
+                        row(i + 6 * h),
+                        row(i + 7 * h),
+                    ]);
+                }
+            }
+        }
+        4 => {
+            for block in (r0..r1).step_by(4 * h) {
+                for i in block..block + h {
+                    kern.butterfly4(row(i), row(i + h), row(i + 2 * h), row(i + 3 * h));
+                }
+            }
+        }
+        _ => {
+            for block in (r0..r1).step_by(2 * h) {
+                for i in block..block + h {
+                    kern.butterfly(row(i), row(i + h));
+                }
+            }
+        }
     }
 }
 
@@ -197,12 +563,17 @@ mod tests {
     }
 
     #[test]
-    fn fwht_rejects_non_pow2() {
+    fn fwht_rejects_non_pow2_and_bad_radix() {
         let mut x = vec![0.0; 6];
         assert!(fwht_inplace(&mut x).is_err());
         let mut d = vec![0.0; 12];
         assert!(fwht_columns_inplace(&mut d, 6, 2).is_err());
         assert!(fwht_columns_inplace(&mut d, 4, 2).is_err()); // wrong buffer size
+        let mut ok = vec![0.0; 8];
+        assert!(fwht_with_radix(&mut ok, 3).is_err());
+        assert!(fwht_with_radix(&mut ok, 16).is_err());
+        let mut okc = vec![0.0; 16];
+        assert!(fwht_columns_with_radix(&mut okc, 8, 2, 0).is_err());
     }
 
     #[test]
@@ -219,5 +590,53 @@ mod tests {
                 assert!((block[i * cols + j] - col[i]).abs() < 1e-10);
             }
         }
+    }
+
+    /// The blocked stage-fused engine is bitwise identical to the
+    /// stage-per-pass baseline at every radix — the structural guarantee
+    /// the whole sketch engine rides on (swept across backends and thread
+    /// counts in `tests/sketch_engine_equivalence.rs`).
+    #[test]
+    fn fused_radices_bitwise_match_stagewise() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(35));
+        for rows in [2usize, 8, 32, 256, 1024] {
+            // Vector engine.
+            let x = g.gaussian_vec(rows);
+            let mut base = x.clone();
+            fwht_with_radix(&mut base, 1).unwrap();
+            for radix in [2usize, 4, 8] {
+                let mut y = x.clone();
+                fwht_with_radix(&mut y, radix).unwrap();
+                assert_eq!(y, base, "vector rows={rows} radix={radix}");
+            }
+            // Column engine (odd width exercises ragged vector tails).
+            let cols = 5usize;
+            let data = g.gaussian_vec(rows * cols);
+            let mut cbase = data.clone();
+            fwht_columns_with_radix(&mut cbase, rows, cols, 1).unwrap();
+            for radix in [2usize, 4, 8] {
+                let mut d = data.clone();
+                fwht_columns_with_radix(&mut d, rows, cols, radix).unwrap();
+                assert_eq!(d, cbase, "columns rows={rows} radix={radix}");
+            }
+        }
+    }
+
+    #[test]
+    fn radix_knob_resolution() {
+        assert!(is_valid_fwht_radix(1) && is_valid_fwht_radix(8));
+        assert!(!is_valid_fwht_radix(0) && !is_valid_fwht_radix(3) && !is_valid_fwht_radix(16));
+        // NOTE: no set_fwht_radix here — the knob is process-global and
+        // unit tests run concurrently (same rule as the simd choice).
+        assert!(is_valid_fwht_radix(fwht_radix_in_use()));
+    }
+
+    #[test]
+    fn tile_rows_clamped_power_of_two() {
+        assert_eq!(tile_rows(1 << 20, 1), TILE_ELEMS);
+        assert_eq!(tile_rows(16, 1), 16);
+        assert_eq!(tile_rows(1 << 20, TILE_ELEMS), 1);
+        let t = tile_rows(1 << 20, 100);
+        assert!(is_power_of_two(t) && t * 100 <= TILE_ELEMS && 2 * t * 100 > TILE_ELEMS);
     }
 }

@@ -45,6 +45,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "simd", takes_value: true, help: "kernel SIMD backend: auto|scalar|avx2|avx512|neon" },
         FlagSpec { name: "pack", takes_value: true, help: "packed-panel GEMM: true|false (default true)" },
         FlagSpec { name: "qr-nb", takes_value: true, help: "blocked-QR panel width (0 = auto, default 32)" },
+        FlagSpec { name: "fwht-radix", takes_value: true, help: "FWHT engine radix: 1 (stage-per-pass baseline)|2|4|8 (default 8)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -97,6 +98,23 @@ fn main() {
     }
     match args.flag_usize("qr-nb") {
         Ok(Some(nb)) => snsolve::linalg::qr::set_panel_nb(nb),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
+            std::process::exit(2);
+        }
+    }
+    match args.flag_usize("fwht-radix") {
+        Ok(Some(r)) if snsolve::linalg::hadamard::is_valid_fwht_radix(r) => {
+            snsolve::linalg::hadamard::set_fwht_radix(Some(r));
+        }
+        Ok(Some(r)) => {
+            eprintln!(
+                "error: invalid value for --fwht-radix: {r} (expected 1, 2, 4 or 8)\n\n{}",
+                usage("snsolve", SUBCOMMANDS, &specs)
+            );
+            std::process::exit(2);
+        }
         Ok(None) => {}
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
@@ -217,6 +235,21 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                         }
                     }
                 }
+                if let Some(v) = c.get("parallel", "fwht_radix") {
+                    match v.as_i64() {
+                        Some(0) => {}
+                        Some(r)
+                            if r > 0
+                                && snsolve::linalg::hadamard::is_valid_fwht_radix(r as usize) => {}
+                        _ => {
+                            eprintln!(
+                                "config error: [parallel] fwht_radix must be 1, 2, 4 or 8 \
+                                 (0 = auto)"
+                            );
+                            return 2;
+                        }
+                    }
+                }
                 // `[parallel]` kernel keys apply unless the matching CLI
                 // flag (already installed in main, higher precedence) was
                 // given; absent keys leave the env vars / defaults alone.
@@ -229,6 +262,9 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 }
                 if args.flag("qr-nb").is_none() && sc.qr_nb != 0 {
                     snsolve::linalg::qr::set_panel_nb(sc.qr_nb);
+                }
+                if args.flag("fwht-radix").is_none() && sc.fwht_radix != 0 {
+                    snsolve::linalg::hadamard::set_fwht_radix(Some(sc.fwht_radix));
                 }
                 c.service_config()
             }

@@ -100,6 +100,19 @@ impl SimdKernels for Avx512Kernels {
         // SAFETY: AVX-512F verified at dispatch time.
         unsafe { butterfly_avx512(a, b) }
     }
+
+    fn butterfly4(&self, r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+        // SAFETY: AVX-512F verified at dispatch time.
+        unsafe { butterfly4_avx512(r0, r1, r2, r3) }
+    }
+
+    fn butterfly8(&self, r: [&mut [f64]; 8]) {
+        let n = r[0].len();
+        assert!(r.iter().all(|s| s.len() == n));
+        // SAFETY: AVX-512F verified at dispatch time.
+        unsafe { butterfly8_avx512(r) }
+    }
 }
 
 /// 8x8 register-tile `C += A·B` over `kc` depth steps (unpacked operands).
@@ -254,6 +267,93 @@ unsafe fn scal_avx512(alpha: f64, x: &mut [f64]) {
     }
     for i in chunks * 8..n {
         x[i] *= alpha;
+    }
+}
+
+/// Fused radix-4 butterfly — two cascaded add/sub levels per lane, bitwise
+/// identical to two stage-per-pass butterflies on every backend.
+#[target_feature(enable = "avx512f")]
+unsafe fn butterfly4_avx512(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+    let n = r0.len();
+    let p0 = r0.as_mut_ptr();
+    let p1 = r1.as_mut_ptr();
+    let p2 = r2.as_mut_ptr();
+    let p3 = r3.as_mut_ptr();
+    let chunks = n / 8;
+    for ch in 0..chunks {
+        let i = ch * 8;
+        let a = _mm512_loadu_pd(p0.add(i));
+        let b = _mm512_loadu_pd(p1.add(i));
+        let c = _mm512_loadu_pd(p2.add(i));
+        let d = _mm512_loadu_pd(p3.add(i));
+        let t0 = _mm512_add_pd(a, b);
+        let t1 = _mm512_sub_pd(a, b);
+        let t2 = _mm512_add_pd(c, d);
+        let t3 = _mm512_sub_pd(c, d);
+        _mm512_storeu_pd(p0.add(i), _mm512_add_pd(t0, t2));
+        _mm512_storeu_pd(p1.add(i), _mm512_add_pd(t1, t3));
+        _mm512_storeu_pd(p2.add(i), _mm512_sub_pd(t0, t2));
+        _mm512_storeu_pd(p3.add(i), _mm512_sub_pd(t1, t3));
+    }
+    for i in chunks * 8..n {
+        let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
+        r0[i] = o0;
+        r1[i] = o1;
+        r2[i] = o2;
+        r3[i] = o3;
+    }
+}
+
+/// Fused radix-8 butterfly — three cascaded add/sub levels per lane,
+/// bitwise identical to three stage-per-pass butterflies.
+#[target_feature(enable = "avx512f")]
+unsafe fn butterfly8_avx512(r: [&mut [f64]; 8]) {
+    let n = r[0].len();
+    let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
+    let p = [
+        r0.as_mut_ptr(),
+        r1.as_mut_ptr(),
+        r2.as_mut_ptr(),
+        r3.as_mut_ptr(),
+        r4.as_mut_ptr(),
+        r5.as_mut_ptr(),
+        r6.as_mut_ptr(),
+        r7.as_mut_ptr(),
+    ];
+    let chunks = n / 8;
+    for ch in 0..chunks {
+        let i = ch * 8;
+        let mut v = [_mm512_setzero_pd(); 8];
+        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+            *vl = _mm512_loadu_pd(pl.add(i));
+        }
+        let mut s = [_mm512_setzero_pd(); 8];
+        for l in 0..4 {
+            s[2 * l] = _mm512_add_pd(v[2 * l], v[2 * l + 1]);
+            s[2 * l + 1] = _mm512_sub_pd(v[2 * l], v[2 * l + 1]);
+        }
+        let mut t = [_mm512_setzero_pd(); 8];
+        for half in 0..2 {
+            let b = 4 * half;
+            for l in 0..2 {
+                t[b + l] = _mm512_add_pd(s[b + l], s[b + l + 2]);
+                t[b + l + 2] = _mm512_sub_pd(s[b + l], s[b + l + 2]);
+            }
+        }
+        for l in 0..4 {
+            _mm512_storeu_pd(p[l].add(i), _mm512_add_pd(t[l], t[l + 4]));
+            _mm512_storeu_pd(p[l + 4].add(i), _mm512_sub_pd(t[l], t[l + 4]));
+        }
+    }
+    for i in chunks * 8..n {
+        let mut v = [0.0f64; 8];
+        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+            *vl = *pl.add(i);
+        }
+        let o = super::butterfly8_lane(v);
+        for (l, &pl) in p.iter().enumerate() {
+            *pl.add(i) = o[l];
+        }
     }
 }
 

@@ -260,6 +260,61 @@ pub trait SimdKernels: Sync {
     /// FWHT butterfly pass: `(a[i], b[i]) ← (a[i]+b[i], a[i]−b[i])`.
     /// Bitwise identical on every backend (adds/subs only).
     fn butterfly(&self, a: &mut [f64], b: &mut [f64]);
+
+    /// Fused radix-4 FWHT butterfly: two cascaded radix-2 levels on four
+    /// equal-length row slices at stride h — level 1 pairs (r0,r1)/(r2,r3),
+    /// level 2 pairs the level-1 outputs (r0,r2)/(r1,r3). Every element
+    /// goes through exactly the adds/subs of two stage-per-pass
+    /// [`SimdKernels::butterfly`] calls, in the same order, so the fused
+    /// kernel is **bitwise identical** to the two-pass baseline on every
+    /// backend.
+    fn butterfly4(&self, r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]);
+
+    /// Fused radix-8 FWHT butterfly: three cascaded radix-2 levels on eight
+    /// equal-length row slices at stride h — level 1 pairs (0,1)(2,3)(4,5)
+    /// (6,7), level 2 pairs (0,2)(1,3)(4,6)(5,7), level 3 pairs (0,4)(1,5)
+    /// (2,6)(3,7). Bitwise identical to three stage-per-pass butterflies
+    /// (same adds/subs per element, same order) on every backend.
+    fn butterfly8(&self, r: [&mut [f64]; 8]);
+}
+
+/// One radix-4 FWHT butterfly lane — THE two-level add/sub cascade. Every
+/// implementation (the scalar kernel, the SIMD backends' tail loops, and
+/// the FWHT engine's inline small-stride paths) routes through this one
+/// function, so the cross-backend bitwise-identity contract cannot drift:
+/// an operand-order change here changes every path together.
+#[inline(always)]
+pub(crate) fn butterfly4_lane(a: f64, b: f64, c: f64, d: f64) -> (f64, f64, f64, f64) {
+    let t0 = a + b;
+    let t1 = a - b;
+    let t2 = c + d;
+    let t3 = c - d;
+    (t0 + t2, t1 + t3, t0 - t2, t1 - t3)
+}
+
+/// One radix-8 FWHT butterfly lane — THE three-level add/sub cascade (see
+/// [`butterfly4_lane`] for why this is the single source of truth).
+#[inline(always)]
+pub(crate) fn butterfly8_lane(v: [f64; 8]) -> [f64; 8] {
+    let mut s = [0.0f64; 8];
+    for l in 0..4 {
+        s[2 * l] = v[2 * l] + v[2 * l + 1];
+        s[2 * l + 1] = v[2 * l] - v[2 * l + 1];
+    }
+    let mut t = [0.0f64; 8];
+    for half in 0..2 {
+        let b = 4 * half;
+        for l in 0..2 {
+            t[b + l] = s[b + l] + s[b + l + 2];
+            t[b + l + 2] = s[b + l] - s[b + l + 2];
+        }
+    }
+    let mut out = [0.0f64; 8];
+    for l in 0..4 {
+        out[l] = t[l] + t[l + 4];
+        out[l + 4] = t[l] - t[l + 4];
+    }
+    out
 }
 
 /// Sentinel: no programmatic choice installed (fall through to the env).
@@ -537,6 +592,68 @@ mod tests {
                 kern.butterfly(&mut ba, &mut bb);
                 assert_eq!(ba, bf_a_ref, "{} butterfly(+) n={n}", bk.name());
                 assert_eq!(bb, bf_b_ref, "{} butterfly(-) n={n}", bk.name());
+            }
+        }
+    }
+
+    /// The fused radix-4/radix-8 butterflies are **bitwise identical** to
+    /// the cascaded stage-per-pass radix-2 butterflies on every backend —
+    /// the contract the blocked FWHT engine's equivalence rides on.
+    #[test]
+    fn fused_butterflies_match_cascaded_radix2_bitwise() {
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(905));
+        let scalar = backend_kernels(Backend::Scalar);
+        for n in [0usize, 1, 2, 3, 5, 8, 16, 33, 100] {
+            let rows: Vec<Vec<f64>> = (0..8).map(|_| g.gaussian_vec(n)).collect();
+            // Radix-2 cascade reference (scalar butterfly, stride order
+            // h, 2h, 4h on the 8 logical rows).
+            let mut rr: Vec<Vec<f64>> = rows.clone();
+            for stride in [1usize, 2, 4] {
+                for block in (0..8).step_by(2 * stride) {
+                    for i in block..block + stride {
+                        let (lo, hi) = rr.split_at_mut(i + stride);
+                        scalar.butterfly(&mut lo[i], &mut hi[0]);
+                    }
+                }
+            }
+            for bk in available() {
+                let kern = backend_kernels(bk);
+                // butterfly4 on rows 0..4 == two radix-2 levels.
+                let mut r4: Vec<Vec<f64>> = rows[..4].to_vec();
+                {
+                    let (a, rest) = r4.split_at_mut(1);
+                    let (b, rest) = rest.split_at_mut(1);
+                    let (c, d) = rest.split_at_mut(1);
+                    kern.butterfly4(&mut a[0], &mut b[0], &mut c[0], &mut d[0]);
+                }
+                let mut ref4: Vec<Vec<f64>> = rows[..4].to_vec();
+                for stride in [1usize, 2] {
+                    for block in (0..4).step_by(2 * stride) {
+                        for i in block..block + stride {
+                            let (lo, hi) = ref4.split_at_mut(i + stride);
+                            scalar.butterfly(&mut lo[i], &mut hi[0]);
+                        }
+                    }
+                }
+                assert_eq!(r4, ref4, "{} butterfly4 n={n}", bk.name());
+
+                // butterfly8 == three radix-2 levels.
+                let mut r8: Vec<Vec<f64>> = rows.clone();
+                {
+                    let mut it = r8.iter_mut();
+                    let arr: [&mut [f64]; 8] = [
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                        it.next().unwrap(),
+                    ];
+                    kern.butterfly8(arr);
+                }
+                assert_eq!(r8, rr, "{} butterfly8 n={n}", bk.name());
             }
         }
     }

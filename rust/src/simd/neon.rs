@@ -93,6 +93,19 @@ impl SimdKernels for NeonKernels {
         // SAFETY: NEON is always present on aarch64.
         unsafe { butterfly_neon(a, b) }
     }
+
+    fn butterfly4(&self, r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+        // SAFETY: NEON is always present on aarch64.
+        unsafe { butterfly4_neon(r0, r1, r2, r3) }
+    }
+
+    fn butterfly8(&self, r: [&mut [f64]; 8]) {
+        let n = r[0].len();
+        assert!(r.iter().all(|s| s.len() == n));
+        // SAFETY: NEON is always present on aarch64.
+        unsafe { butterfly8_neon(r) }
+    }
 }
 
 /// 4x8 register-tile `C += A·B` over `kc` depth steps.
@@ -264,6 +277,94 @@ unsafe fn scal_neon(alpha: f64, x: &mut [f64]) {
     }
     for i in chunks * 2..n {
         x[i] *= alpha;
+    }
+}
+
+/// Fused radix-4 butterfly — two cascaded add/sub levels per lane, bitwise
+/// identical to two stage-per-pass butterflies on every backend.
+#[target_feature(enable = "neon")]
+unsafe fn butterfly4_neon(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+    let n = r0.len();
+    let p0 = r0.as_mut_ptr();
+    let p1 = r1.as_mut_ptr();
+    let p2 = r2.as_mut_ptr();
+    let p3 = r3.as_mut_ptr();
+    let chunks = n / 2;
+    for ch in 0..chunks {
+        let i = ch * 2;
+        let a = vld1q_f64(p0.add(i));
+        let b = vld1q_f64(p1.add(i));
+        let c = vld1q_f64(p2.add(i));
+        let d = vld1q_f64(p3.add(i));
+        let t0 = vaddq_f64(a, b);
+        let t1 = vsubq_f64(a, b);
+        let t2 = vaddq_f64(c, d);
+        let t3 = vsubq_f64(c, d);
+        vst1q_f64(p0.add(i), vaddq_f64(t0, t2));
+        vst1q_f64(p1.add(i), vaddq_f64(t1, t3));
+        vst1q_f64(p2.add(i), vsubq_f64(t0, t2));
+        vst1q_f64(p3.add(i), vsubq_f64(t1, t3));
+    }
+    for i in chunks * 2..n {
+        let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
+        r0[i] = o0;
+        r1[i] = o1;
+        r2[i] = o2;
+        r3[i] = o3;
+    }
+}
+
+/// Fused radix-8 butterfly — three cascaded add/sub levels per lane,
+/// bitwise identical to three stage-per-pass butterflies.
+#[target_feature(enable = "neon")]
+unsafe fn butterfly8_neon(r: [&mut [f64]; 8]) {
+    let n = r[0].len();
+    let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
+    let p = [
+        r0.as_mut_ptr(),
+        r1.as_mut_ptr(),
+        r2.as_mut_ptr(),
+        r3.as_mut_ptr(),
+        r4.as_mut_ptr(),
+        r5.as_mut_ptr(),
+        r6.as_mut_ptr(),
+        r7.as_mut_ptr(),
+    ];
+    let chunks = n / 2;
+    for ch in 0..chunks {
+        let i = ch * 2;
+        let zero: float64x2_t = vdupq_n_f64(0.0);
+        let mut v = [zero; 8];
+        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+            *vl = vld1q_f64(pl.add(i));
+        }
+        let mut s = [zero; 8];
+        for l in 0..4 {
+            s[2 * l] = vaddq_f64(v[2 * l], v[2 * l + 1]);
+            s[2 * l + 1] = vsubq_f64(v[2 * l], v[2 * l + 1]);
+        }
+        let mut t = [zero; 8];
+        for half in 0..2 {
+            let b = 4 * half;
+            for l in 0..2 {
+                t[b + l] = vaddq_f64(s[b + l], s[b + l + 2]);
+                t[b + l + 2] = vsubq_f64(s[b + l], s[b + l + 2]);
+            }
+        }
+        for l in 0..4 {
+            vst1q_f64(p[l].add(i), vaddq_f64(t[l], t[l + 4]));
+            vst1q_f64(p[l + 4].add(i), vsubq_f64(t[l], t[l + 4]));
+        }
+    }
+    for i in chunks * 2..n {
+        let mut v = [0.0f64; 8];
+        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+            *vl = *pl.add(i);
+        }
+        let o = super::butterfly8_lane(v);
+        for (l, &pl) in p.iter().enumerate() {
+            *pl.add(i) = o[l];
+        }
     }
 }
 

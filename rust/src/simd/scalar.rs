@@ -149,4 +149,34 @@ impl SimdKernels for ScalarKernels {
             *y = u - v;
         }
     }
+
+    fn butterfly4(&self, r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
+        debug_assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+        for i in 0..r0.len() {
+            let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
+            r0[i] = o0;
+            r1[i] = o1;
+            r2[i] = o2;
+            r3[i] = o3;
+        }
+    }
+
+    fn butterfly8(&self, r: [&mut [f64]; 8]) {
+        let n = r[0].len();
+        debug_assert!(r.iter().all(|s| s.len() == n));
+        let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
+        for i in 0..n {
+            let o = super::butterfly8_lane([
+                r0[i], r1[i], r2[i], r3[i], r4[i], r5[i], r6[i], r7[i],
+            ]);
+            r0[i] = o[0];
+            r1[i] = o[1];
+            r2[i] = o[2];
+            r3[i] = o[3];
+            r4[i] = o[4];
+            r5[i] = o[5];
+            r6[i] = o[6];
+            r7[i] = o[7];
+        }
+    }
 }

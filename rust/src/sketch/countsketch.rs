@@ -22,20 +22,36 @@ pub struct CountSketch {
     bucket: Vec<u32>,
     /// sign[i] ∈ {+1, -1}.
     sign: Vec<i8>,
+    /// Inverted hash (CSR over output rows): input rows landing in bucket
+    /// `r` are `inv_rows[inv_offsets[r]..inv_offsets[r+1]]`, in ascending
+    /// input order — exactly the per-row accumulation order of the serial
+    /// streaming pass. Built once at construction (two u32 arrays ≈ 4(m+s)
+    /// bytes) so parallel workers walk only their own rows instead of
+    /// rescanning all m bucket entries per band.
+    inv_offsets: Vec<u32>,
+    inv_rows: Vec<u32>,
 }
 
 impl CountSketch {
     pub fn new(s: usize, m: usize, seed: u64) -> Self {
+        assert!(m <= u32::MAX as usize, "countsketch: m {m} exceeds u32 index range");
         let mut rng = Xoshiro256pp::stream(seed ^ 0xC0DE_5EED, 0);
         let bucket = uniform_buckets(&mut rng, m, s);
         let sign = rademacher_signs_i8(&mut rng, m);
-        Self { s, m, bucket, sign }
+        let (inv_offsets, inv_rows) = invert_buckets(&bucket, s);
+        Self { s, m, bucket, sign, inv_offsets, inv_rows }
     }
 
     /// The hash arrays — exported so the AOT path can feed the *same*
     /// sketch to the Pallas CountSketch kernel.
     pub fn hash_arrays(&self) -> (&[u32], &[i8]) {
         (&self.bucket, &self.sign)
+    }
+
+    /// Input rows hashed to output row `r`, in ascending input order.
+    #[inline]
+    fn bucket_rows(&self, r: usize) -> &[u32] {
+        &self.inv_rows[self.inv_offsets[r] as usize..self.inv_offsets[r + 1] as usize]
     }
 
     /// Worker count for an apply pass over ~`work` element-ops: one band
@@ -47,6 +63,27 @@ impl CountSketch {
             crate::parallel::threads_for(self.s, 8)
         }
     }
+}
+
+/// Build the CSR-style bucket→input-rows inversion: counting pass, prefix
+/// sum, then a placement scan in ascending input order (so each bucket's
+/// row list preserves the serial accumulation order).
+pub(crate) fn invert_buckets(bucket: &[u32], s: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut offsets = vec![0u32; s + 1];
+    for &b in bucket {
+        offsets[b as usize + 1] += 1;
+    }
+    for r in 0..s {
+        offsets[r + 1] += offsets[r];
+    }
+    let mut cursor: Vec<u32> = offsets[..s].to_vec();
+    let mut rows = vec![0u32; bucket.len()];
+    for (i, &b) in bucket.iter().enumerate() {
+        let c = &mut cursor[b as usize];
+        rows[*c as usize] = i as u32;
+        *c += 1;
+    }
+    (offsets, rows)
 }
 
 impl SketchOperator for CountSketch {
@@ -64,10 +101,13 @@ impl SketchOperator for CountSketch {
         let mut b = DenseMatrix::zeros(self.s, n);
         // One streaming pass: B[bucket[i], :] += sign[i] * A[i, :].
         //
-        // Parallel: shard the *output* rows into disjoint bands; each worker
-        // scans the bucket array and accumulates only the input rows that
-        // land in its band, preserving the serial i-order per output row —
-        // bitwise identical to the serial pass at any thread count.
+        // Parallel: shard the *output* rows into disjoint bands. With the
+        // inverted layout (default) each worker walks exactly the input
+        // rows of its band in ascending input order — O(m) total index
+        // traffic instead of the band-rescan baseline's O(threads·m) —
+        // preserving the serial i-order per output row either way, so both
+        // paths are bitwise identical to the serial pass at any thread
+        // count.
         let threads = self.apply_threads(self.m * n);
         if threads <= 1 {
             for i in 0..self.m {
@@ -82,15 +122,27 @@ impl SketchOperator for CountSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                let r = self.bucket[i] as usize;
-                if r < band.start || r >= band.end {
-                    continue;
+            if inverted {
+                for r in band.clone() {
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    for &i in self.bucket_rows(r) {
+                        let i = i as usize;
+                        let w = if self.sign[i] > 0 { 1.0 } else { -1.0 };
+                        crate::linalg::gemm::axpy(w, a.row(i), out);
+                    }
                 }
-                let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                let w = if self.sign[i] > 0 { 1.0 } else { -1.0 };
-                crate::linalg::gemm::axpy(w, a.row(i), out);
+            } else {
+                for i in 0..self.m {
+                    let r = self.bucket[i] as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    let w = if self.sign[i] > 0 { 1.0 } else { -1.0 };
+                    crate::linalg::gemm::axpy(w, a.row(i), out);
+                }
             }
         });
         b
@@ -116,20 +168,38 @@ impl SketchOperator for CountSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                let r = self.bucket[i] as usize;
-                if r < band.start || r >= band.end {
-                    continue;
+            if inverted {
+                for r in band.clone() {
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    for &i in self.bucket_rows(r) {
+                        let i = i as usize;
+                        let (idx, vals) = a.row(i);
+                        if idx.is_empty() {
+                            continue;
+                        }
+                        let sgn = self.sign[i] as f64;
+                        for (&j, &v) in idx.iter().zip(vals.iter()) {
+                            out[j as usize] += sgn * v;
+                        }
+                    }
                 }
-                let (idx, vals) = a.row(i);
-                if idx.is_empty() {
-                    continue;
-                }
-                let sgn = self.sign[i] as f64;
-                let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                for (&j, &v) in idx.iter().zip(vals.iter()) {
-                    out[j as usize] += sgn * v;
+            } else {
+                for i in 0..self.m {
+                    let r = self.bucket[i] as usize;
+                    if r < band.start || r >= band.end {
+                        continue;
+                    }
+                    let (idx, vals) = a.row(i);
+                    if idx.is_empty() {
+                        continue;
+                    }
+                    let sgn = self.sign[i] as f64;
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    for (&j, &v) in idx.iter().zip(vals.iter()) {
+                        out[j as usize] += sgn * v;
+                    }
                 }
             }
         });
@@ -139,10 +209,19 @@ impl SketchOperator for CountSketch {
     fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.m);
         let mut c = vec![0.0; self.s];
-        for i in 0..self.m {
-            c[self.bucket[i] as usize] += self.sign[i] as f64 * v[i];
-        }
+        self.apply_vec_into(v, &mut c);
         c
+    }
+
+    fn apply_vec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.s);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for i in 0..self.m {
+            out[self.bucket[i] as usize] += self.sign[i] as f64 * v[i];
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -201,6 +280,27 @@ mod tests {
             let got: f64 = (0..s).map(|r| b[(r, j)]).sum();
             assert!((expected - got).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn inverted_hash_layout_is_exact() {
+        // The CSR inversion lists every input row exactly once, under its
+        // bucket, in ascending input order (the serial accumulation order).
+        let op = CountSketch::new(16, 300, 9);
+        let (bucket, _) = op.hash_arrays();
+        let mut seen = vec![false; 300];
+        for r in 0..16 {
+            let rows = op.bucket_rows(r);
+            for w in rows.windows(2) {
+                assert!(w[0] < w[1], "bucket {r} not ascending");
+            }
+            for &i in rows {
+                assert_eq!(bucket[i as usize] as usize, r);
+                assert!(!seen[i as usize], "row {i} listed twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some input row missing");
     }
 
     #[test]

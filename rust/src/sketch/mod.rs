@@ -23,6 +23,9 @@ pub mod srht;
 pub mod uniform_dense;
 pub mod uniform_sparse;
 
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
 use crate::linalg::{CsrMatrix, DenseMatrix, Matrix};
 
 pub use countsketch::CountSketch;
@@ -31,6 +34,109 @@ pub use sparse_sign::SparseSignSketch;
 pub use srht::SrhtSketch;
 pub use uniform_dense::UniformDenseSketch;
 pub use uniform_sparse::UniformSparseSketch;
+
+/// Inverted-scatter knob tri-state (process-wide).
+const INV_UNSET: u8 = 0;
+const INV_ON: u8 = 1;
+const INV_OFF: u8 = 2;
+
+static INV_CONFIGURED: AtomicU8 = AtomicU8::new(INV_UNSET);
+
+/// Force the inverted-hash scatter layout on/off for the parallel paths of
+/// the sparse operators (`None` restores the ambient resolution:
+/// `SNSOLVE_SKETCH_INVERT` env var, then the default **on**). Off restores
+/// the band-rescan baseline — every worker scanning all m hash entries —
+/// kept for the `sketch_ablation` bench comparison; the two paths are
+/// bitwise identical.
+pub fn set_inverted_scatter(on: Option<bool>) {
+    let v = match on {
+        None => INV_UNSET,
+        Some(true) => INV_ON,
+        Some(false) => INV_OFF,
+    };
+    INV_CONFIGURED.store(v, Ordering::SeqCst);
+}
+
+fn env_inverted() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let v = std::env::var("SNSOLVE_SKETCH_INVERT")
+            .map(|s| s.trim().to_ascii_lowercase())
+            .unwrap_or_default();
+        !matches!(v.as_str(), "0" | "false" | "off")
+    })
+}
+
+/// Whether the sparse operators' parallel applies currently walk the
+/// inverted bucket→rows layout: [`set_inverted_scatter`] →
+/// `SNSOLVE_SKETCH_INVERT` → on.
+pub fn inverted_scatter_enabled() -> bool {
+    match INV_CONFIGURED.load(Ordering::SeqCst) {
+        INV_ON => true,
+        INV_OFF => false,
+        _ => env_inverted(),
+    }
+}
+
+/// Build the inverted scatter layout shared by the multi-target sparse
+/// operators (sparse-sign, uniform-sparse): a CSR over *output* rows whose
+/// row `r` lists the `(input row, weight)` pairs targeting it, in exactly
+/// the order `for_each` visits them — callers visit in ascending
+/// (input row, within-column position) order, i.e. the serial accumulation
+/// order, which is what makes the inverted walk bitwise identical to the
+/// streaming pass. `for_each` is invoked twice (counting pass, placement
+/// pass) with identical iteration order; `nnz` is the total entry count.
+pub(crate) fn invert_entries(
+    s: usize,
+    nnz: usize,
+    mut for_each: impl FnMut(&mut dyn FnMut(u32, u32, f32)),
+) -> (Vec<u32>, Vec<(u32, f32)>) {
+    assert!(nnz <= u32::MAX as usize, "inverted scatter: nnz {nnz} exceeds u32 index range");
+    let mut offsets = vec![0u32; s + 1];
+    for_each(&mut |_, r, _| offsets[r as usize + 1] += 1);
+    for r in 0..s {
+        offsets[r + 1] += offsets[r];
+    }
+    let mut cursor: Vec<u32> = offsets[..s].to_vec();
+    let mut entries = vec![(0u32, 0f32); nnz];
+    for_each(&mut |i, r, w| {
+        let c = &mut cursor[r as usize];
+        entries[*c as usize] = (i, w);
+        *c += 1;
+    });
+    (offsets, entries)
+}
+
+/// Reusable scratch arena for [`SketchOperator`] applies — the SRHT padded
+/// m̃×n buffer, the blocked-RHS padded rows. A worker owns one and threads
+/// it through `apply_*_ws`; the `_ws` variants are bitwise identical to
+/// their allocating twins (a recycled buffer is re-zeroed before use), so
+/// workspace reuse never changes results.
+#[derive(Debug, Default)]
+pub struct SketchWorkspace {
+    pool: crate::workspace::BufferPool,
+}
+
+impl SketchWorkspace {
+    pub fn new() -> Self {
+        Self { pool: crate::workspace::BufferPool::new() }
+    }
+
+    pub(crate) fn take(&mut self, len: usize) -> Vec<f64> {
+        self.pool.take(len)
+    }
+
+    /// Unspecified-contents take — only for buffers every element of which
+    /// is plain-store overwritten before any read (see
+    /// [`crate::workspace::BufferPool::take_overwrite`]).
+    pub(crate) fn take_overwrite(&mut self, len: usize) -> Vec<f64> {
+        self.pool.take_overwrite(len)
+    }
+
+    pub(crate) fn recycle(&mut self, v: Vec<f64>) {
+        self.pool.recycle(v);
+    }
+}
 
 /// A random `s×m` sketching operator.
 pub trait SketchOperator: Send + Sync {
@@ -50,6 +156,45 @@ pub trait SketchOperator: Send + Sync {
     fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
         let a = DenseMatrix::from_vec(b.len(), 1, b.to_vec()).expect("vector as column");
         self.apply_dense(&a).into_vec()
+    }
+
+    /// `out = S·b` into a caller-provided length-s buffer. **Bitwise
+    /// identical** to [`SketchOperator::apply_vec`] — the default copies;
+    /// the scatter operators override it to accumulate in place, which is
+    /// what makes the blocked-RHS pass ([`SketchOperator::apply_mat`])
+    /// allocation-free per row.
+    fn apply_vec_into(&self, b: &[f64], out: &mut [f64]) {
+        let c = self.apply_vec(b);
+        assert_eq!(out.len(), c.len(), "apply_vec_into: out has wrong length");
+        out.copy_from_slice(&c);
+    }
+
+    /// [`SketchOperator::apply_dense`] with a reusable [`SketchWorkspace`].
+    /// The default ignores the workspace; operators that need large
+    /// scratch (SRHT's padded m̃×n buffer) override it so the steady-state
+    /// serving loop stops allocating. Bitwise identical to `apply_dense`.
+    fn apply_dense_ws(&self, a: &DenseMatrix, _ws: &mut SketchWorkspace) -> DenseMatrix {
+        self.apply_dense(a)
+    }
+
+    /// [`SketchOperator::apply_csr`] with a reusable [`SketchWorkspace`].
+    fn apply_csr_ws(&self, a: &CsrMatrix, _ws: &mut SketchWorkspace) -> DenseMatrix {
+        self.apply_csr(a)
+    }
+
+    /// [`SketchOperator::apply_mat`] with a reusable [`SketchWorkspace`]
+    /// (the worker's batched right-hand-side path). Same per-row bitwise
+    /// contract as `apply_mat`.
+    fn apply_mat_ws(&self, b: &DenseMatrix, _ws: &mut SketchWorkspace) -> DenseMatrix {
+        self.apply_mat(b)
+    }
+
+    /// [`SketchOperator::apply_matrix`] with a reusable workspace.
+    fn apply_matrix_ws(&self, a: &Matrix, ws: &mut SketchWorkspace) -> DenseMatrix {
+        match a {
+            Matrix::Dense(d) => self.apply_dense_ws(d, ws),
+            Matrix::Csr(c) => self.apply_csr_ws(c, ws),
+        }
     }
 
     /// Sketch a row-stored block of k vectors in one parallel pass:
@@ -84,8 +229,7 @@ pub trait SketchOperator: Send + Sync {
         };
         crate::parallel::for_each_row_block(out.data_mut(), k, s, threads, |_, rows, block| {
             for (local, r) in rows.enumerate() {
-                let c = self.apply_vec(b.row(r));
-                block[local * s..(local + 1) * s].copy_from_slice(&c);
+                self.apply_vec_into(b.row(r), &mut block[local * s..(local + 1) * s]);
             }
         });
         out
@@ -297,6 +441,46 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn ws_and_into_variants_match_allocating_paths() {
+        // The `_ws` / `_into` variants are bitwise equal to their
+        // allocating twins, including across repeated applies through ONE
+        // reused workspace (recycled buffers are re-zeroed).
+        let (s, m, n, k) = (16usize, 96usize, 5usize, 4usize);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(69));
+        let a = DenseMatrix::gaussian(m, n, &mut g);
+        let blk = DenseMatrix::gaussian(k, m, &mut g);
+        let v = g.gaussian_vec(m);
+        let sp = {
+            let mut rng = Xoshiro256pp::seed_from_u64(70);
+            let mut builder = CooBuilder::new(m, n);
+            for _ in 0..200 {
+                builder.push(
+                    rng.next_bounded(m as u64) as usize,
+                    rng.next_bounded(n as u64) as usize,
+                    g.next_gaussian(),
+                );
+            }
+            builder.build()
+        };
+        let mut ws = SketchWorkspace::new();
+        for (kind, _) in dense_cases() {
+            let op = build(kind, s, m, 808);
+            let d_ref = op.apply_dense(&a);
+            let c_ref = op.apply_csr(&sp);
+            let m_ref = op.apply_mat(&blk);
+            let v_ref = op.apply_vec(&v);
+            for _ in 0..3 {
+                assert_eq!(op.apply_dense_ws(&a, &mut ws), d_ref, "{}", kind.name());
+                assert_eq!(op.apply_csr_ws(&sp, &mut ws), c_ref, "{}", kind.name());
+                assert_eq!(op.apply_mat_ws(&blk, &mut ws), m_ref, "{}", kind.name());
+            }
+            let mut out = vec![f64::NAN; s];
+            op.apply_vec_into(&v, &mut out);
+            assert_eq!(out, v_ref, "{}", kind.name());
         }
     }
 

@@ -18,6 +18,14 @@ pub struct SparseSignSketch {
     /// Flattened (row, signed-weight) pairs: column i of S occupies
     /// `targets[i*k..(i+1)*k]`.
     targets: Vec<(u32, f32)>,
+    /// Inverted layout (CSR over output rows): the (input row, weight)
+    /// pairs targeting output row `r` are
+    /// `inv_entries[inv_offsets[r]..inv_offsets[r+1]]`, in the serial
+    /// accumulation order (ascending input row, then within-column
+    /// position). Parallel workers walk only their own rows instead of
+    /// filtering all m·k targets per band.
+    inv_offsets: Vec<u32>,
+    inv_entries: Vec<(u32, f32)>,
 }
 
 impl SparseSignSketch {
@@ -33,12 +41,26 @@ impl SparseSignSketch {
                 targets.push((r, sign as f32));
             }
         }
-        Self { s, m, k, targets }
+        // Visit in ascending (input row, within-column position) order —
+        // the serial accumulation order the bitwise contract requires.
+        let (inv_offsets, inv_entries) = super::invert_entries(s, targets.len(), |f| {
+            for (pos, &(r, w)) in targets.iter().enumerate() {
+                f((pos / k) as u32, r, w);
+            }
+        });
+        Self { s, m, k, targets, inv_offsets, inv_entries }
     }
 
     #[inline]
     fn column(&self, i: usize) -> &[(u32, f32)] {
         &self.targets[i * self.k..(i + 1) * self.k]
+    }
+
+    /// The (input row, weight) pairs targeting output row `r`, in serial
+    /// accumulation order.
+    #[inline]
+    fn row_targets(&self, r: usize) -> &[(u32, f32)] {
+        &self.inv_entries[self.inv_offsets[r] as usize..self.inv_offsets[r + 1] as usize]
     }
 
     pub fn nnz_per_column(&self) -> usize {
@@ -82,15 +104,25 @@ impl SketchOperator for SparseSignSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                for &(r, w) in self.column(i) {
-                    let r = r as usize;
-                    if r < band.start || r >= band.end {
-                        continue;
-                    }
+            if inverted {
+                for r in band.clone() {
                     let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                    crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                    for &(i, w) in self.row_targets(r) {
+                        crate::linalg::gemm::axpy(w as f64, a.row(i as usize), out);
+                    }
+                }
+            } else {
+                for i in 0..self.m {
+                    for &(r, w) in self.column(i) {
+                        let r = r as usize;
+                        if r < band.start || r >= band.end {
+                            continue;
+                        }
+                        let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                        crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                    }
                 }
             }
         });
@@ -119,21 +151,38 @@ impl SketchOperator for SparseSignSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                let (idx, vals) = a.row(i);
-                if idx.is_empty() {
-                    continue;
+            if inverted {
+                for r in band.clone() {
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    for &(i, w) in self.row_targets(r) {
+                        let (idx, vals) = a.row(i as usize);
+                        if idx.is_empty() {
+                            continue;
+                        }
+                        let wf = w as f64;
+                        for (&j, &v) in idx.iter().zip(vals.iter()) {
+                            out[j as usize] += wf * v;
+                        }
+                    }
                 }
-                for &(r, w) in self.column(i) {
-                    let r = r as usize;
-                    if r < band.start || r >= band.end {
+            } else {
+                for i in 0..self.m {
+                    let (idx, vals) = a.row(i);
+                    if idx.is_empty() {
                         continue;
                     }
-                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                    let wf = w as f64;
-                    for (&j, &v) in idx.iter().zip(vals.iter()) {
-                        out[j as usize] += wf * v;
+                    for &(r, w) in self.column(i) {
+                        let r = r as usize;
+                        if r < band.start || r >= band.end {
+                            continue;
+                        }
+                        let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                        let wf = w as f64;
+                        for (&j, &v) in idx.iter().zip(vals.iter()) {
+                            out[j as usize] += wf * v;
+                        }
                     }
                 }
             }
@@ -144,16 +193,25 @@ impl SketchOperator for SparseSignSketch {
     fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.m);
         let mut c = vec![0.0; self.s];
+        self.apply_vec_into(v, &mut c);
+        c
+    }
+
+    fn apply_vec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.s);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for i in 0..self.m {
             let vi = v[i];
             if vi == 0.0 {
                 continue;
             }
             for &(r, w) in self.column(i) {
-                c[r as usize] += w as f64 * vi;
+                out[r as usize] += w as f64 * vi;
             }
         }
-        c
     }
 
     fn name(&self) -> &'static str {
@@ -184,6 +242,22 @@ mod tests {
             assert_eq!(nnz.len(), k, "column {j}");
             let norm2: f64 = nnz.iter().map(|v| v * v).sum();
             assert!((norm2 - 1.0).abs() < 1e-10, "column {j} norm² {norm2}");
+        }
+    }
+
+    #[test]
+    fn inverted_targets_preserve_serial_order() {
+        let op = SparseSignSketch::new(24, 150, 4, 8);
+        // Rebuild the serial (input row, within-column) visit order per
+        // output row; the inverted layout must list exactly that.
+        let mut expect: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 24];
+        for i in 0..150 {
+            for &(r, w) in op.column(i) {
+                expect[r as usize].push((i as u32, w));
+            }
+        }
+        for (r, exp) in expect.iter().enumerate() {
+            assert_eq!(op.row_targets(r), &exp[..], "row {r}");
         }
     }
 

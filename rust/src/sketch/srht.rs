@@ -6,7 +6,7 @@
 //! FWHT — asymptotically between CountSketch and Gaussian, the classic
 //! "fast dense" operator.
 
-use super::SketchOperator;
+use super::{SketchOperator, SketchWorkspace};
 use crate::linalg::hadamard::fwht_columns_inplace;
 use crate::linalg::{next_power_of_two, CsrMatrix, DenseMatrix};
 use crate::rng::distributions::{rademacher_signs_i8, sample_without_replacement};
@@ -26,11 +26,21 @@ pub struct SrhtSketch {
 }
 
 impl SrhtSketch {
+    /// Build an s×m SRHT. **Hard-errors** when `s` exceeds the padded
+    /// Hadamard order m̃ = 2^⌈log₂ m⌉: only m̃ distinct Hadamard rows
+    /// exist, and the old behavior — silently clamping the sample while
+    /// `sketch_dim()` kept reporting `s` — left the trailing `s − m̃`
+    /// output rows all-zero (a silent embedding-quality loss).
     pub fn new(s: usize, m: usize, seed: u64) -> Self {
         let m_pad = next_power_of_two(m);
+        assert!(
+            s <= m_pad,
+            "srht: sketch dim s={s} exceeds the padded Hadamard order m̃={m_pad} \
+             (m={m}); only m̃ distinct rows can be sampled"
+        );
         let mut rng = Xoshiro256pp::stream(seed ^ 0x44AD_1357, 2);
         let sign = rademacher_signs_i8(&mut rng, m);
-        let rows = sample_without_replacement(&mut rng, m_pad, s.min(m_pad));
+        let rows = sample_without_replacement(&mut rng, m_pad, s);
         Self { s, m, m_pad, sign, rows, scale: 1.0 / (s as f64).sqrt() }
     }
 
@@ -57,6 +67,24 @@ impl SrhtSketch {
         }
         out
     }
+
+    /// Single-vector transform into caller buffers: sign-flip `v` into the
+    /// padded scratch row, FWHT, write the sampled/scaled result — the
+    /// exact op sequence of `apply_vec` (bitwise).
+    fn transform_vec_into(&self, v: &[f64], pad: &mut [f64], out: &mut [f64]) {
+        debug_assert_eq!(pad.len(), self.m_pad);
+        debug_assert_eq!(out.len(), self.s);
+        for i in 0..self.m {
+            pad[i] = self.sign[i] as f64 * v[i];
+        }
+        for p in pad[self.m..].iter_mut() {
+            *p = 0.0;
+        }
+        crate::linalg::hadamard::fwht_inplace(pad).expect("power of two");
+        for (o, &r) in out.iter_mut().zip(self.rows.iter()) {
+            *o = pad[r as usize] * self.scale;
+        }
+    }
 }
 
 impl SketchOperator for SrhtSketch {
@@ -69,9 +97,17 @@ impl SketchOperator for SrhtSketch {
     }
 
     fn apply_dense(&self, a: &DenseMatrix) -> DenseMatrix {
+        self.apply_dense_ws(a, &mut SketchWorkspace::new())
+    }
+
+    /// The real dense apply: the padded m̃×n scratch comes from (and
+    /// returns to) the workspace, so the serving loop's repeated sketches
+    /// reuse one allocation. A recycled buffer is re-zeroed by the pool —
+    /// bitwise identical to the fresh-allocation path.
+    fn apply_dense_ws(&self, a: &DenseMatrix, ws: &mut SketchWorkspace) -> DenseMatrix {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
-        let mut buf = vec![0.0; self.m_pad * n];
+        let mut buf = ws.take(self.m_pad * n);
         // Parallel: the sign-flip copy shards the padded buffer by disjoint
         // row blocks (bitwise identical at any thread count); the FWHT then
         // parallelizes internally over column bands.
@@ -85,13 +121,19 @@ impl SketchOperator for SrhtSketch {
                 }
             }
         });
-        self.transform_padded(&mut buf, n)
+        let out = self.transform_padded(&mut buf, n);
+        ws.recycle(buf);
+        out
     }
 
     fn apply_csr(&self, a: &CsrMatrix) -> DenseMatrix {
+        self.apply_csr_ws(a, &mut SketchWorkspace::new())
+    }
+
+    fn apply_csr_ws(&self, a: &CsrMatrix, ws: &mut SketchWorkspace) -> DenseMatrix {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
-        let mut buf = vec![0.0; self.m_pad * n];
+        let mut buf = ws.take(self.m_pad * n);
         let threads = self.copy_threads(n);
         crate::parallel::for_each_row_block(&mut buf, self.m_pad, n, threads, |_, rows, block| {
             for i in rows.start..rows.end.min(self.m) {
@@ -103,17 +145,68 @@ impl SketchOperator for SrhtSketch {
                 }
             }
         });
-        self.transform_padded(&mut buf, n)
+        let out = self.transform_padded(&mut buf, n);
+        ws.recycle(buf);
+        out
     }
 
     fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.m);
-        let mut buf = vec![0.0; self.m_pad];
-        for i in 0..self.m {
-            buf[i] = self.sign[i] as f64 * v[i];
+        let mut out = vec![0.0; self.s];
+        self.apply_vec_into(v, &mut out);
+        out
+    }
+
+    fn apply_vec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.s);
+        let mut pad = vec![0.0; self.m_pad];
+        self.transform_vec_into(v, &mut pad, out);
+    }
+
+    fn apply_mat_ws(&self, b: &DenseMatrix, ws: &mut SketchWorkspace) -> DenseMatrix {
+        // Bulk blocked-RHS path: ONE k×m̃ workspace buffer holds every
+        // row's padded transform (the default path allocates an m̃ scratch
+        // per row). Each row still runs exactly the single-vector op
+        // sequence (`transform_vec_into` ≡ `apply_vec`), and rows shard
+        // across the pool — so row r stays bitwise identical to the serial
+        // `apply_vec(b.row(r))` at any thread count.
+        let m = self.m;
+        let s = self.s;
+        assert_eq!(b.cols(), m, "apply_mat: block has {} cols, S expects {m}", b.cols());
+        let k = b.rows();
+        let mut out = DenseMatrix::zeros(k, s);
+        if k == 0 {
+            return out;
         }
-        crate::linalg::hadamard::fwht_inplace(&mut buf).expect("power of two");
-        self.rows.iter().map(|&r| buf[r as usize] * self.scale).collect()
+        // Every m̃-row of the scratch is plain-store overwritten by
+        // transform_vec_into (sign-flip writes 0..m, explicit zeroing of
+        // m..m̃) before the FWHT reads it → unspecified-contents take.
+        let mut scratch = ws.take_overwrite(k * self.m_pad);
+        let work = k.saturating_mul(m);
+        let threads = if work < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(k, 1)
+        };
+        let scratch_ptr = crate::parallel::SendMutPtr(scratch.as_mut_ptr());
+        let m_pad = self.m_pad;
+        crate::parallel::for_each_row_block(out.data_mut(), k, s, threads, |_, rows, block| {
+            for (local, r) in rows.enumerate() {
+                // SAFETY: row ranges partition [0, k), so workers touch
+                // disjoint m̃-rows of the scratch buffer, which outlives
+                // the scoped pool region.
+                let pad =
+                    unsafe { std::slice::from_raw_parts_mut(scratch_ptr.0.add(r * m_pad), m_pad) };
+                self.transform_vec_into(b.row(r), pad, &mut block[local * s..(local + 1) * s]);
+            }
+        });
+        ws.recycle(scratch);
+        out
+    }
+
+    fn apply_mat(&self, b: &DenseMatrix) -> DenseMatrix {
+        self.apply_mat_ws(b, &mut SketchWorkspace::new())
     }
 
     fn name(&self) -> &'static str {
@@ -164,6 +257,23 @@ mod tests {
                 assert!(sst[(i, j)].abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn sketch_dim_larger_than_padded_order_hard_errors() {
+        // m = 100 pads to m̃ = 128. s = 160 > m̃ used to silently clamp the
+        // row sample to 128 while sketch_dim() kept reporting 160, leaving
+        // the trailing 32 output rows all-zero. It must hard-error now.
+        let r = std::panic::catch_unwind(|| SrhtSketch::new(160, 100, 1));
+        assert!(r.is_err(), "s > m_pad must panic");
+        // s = m̃ exactly is the boundary and stays valid: every Hadamard
+        // row is sampled once.
+        let op = SrhtSketch::new(128, 100, 1);
+        assert_eq!(op.sketch_dim(), 128);
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(2));
+        let a = DenseMatrix::gaussian(100, 2, &mut g);
+        let b = op.apply_dense(&a);
+        assert_eq!(b.shape(), (128, 2));
     }
 
     #[test]

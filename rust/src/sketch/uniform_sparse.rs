@@ -19,6 +19,11 @@ pub struct UniformSparseSketch {
     /// CSR-like: offsets[i]..offsets[i+1] indexes into entries.
     offsets: Vec<u64>,
     entries: Vec<(u32, f32)>,
+    /// Inverted layout (CSR over output rows; see sparse_sign.rs): the
+    /// (input row, value) pairs targeting output row `r`, in the serial
+    /// accumulation order.
+    inv_offsets: Vec<u32>,
+    inv_entries: Vec<(u32, f32)>,
 }
 
 impl UniformSparseSketch {
@@ -45,12 +50,28 @@ impl UniformSparseSketch {
             }
             offsets.push(entries.len() as u64);
         }
-        Self { s, m, density, offsets, entries }
+        // Visit in ascending (input row, within-column position) order —
+        // the serial accumulation order the bitwise contract requires.
+        let (inv_offsets, inv_entries) = super::invert_entries(s, entries.len(), |f| {
+            for i in 0..m {
+                for &(r, w) in &entries[offsets[i] as usize..offsets[i + 1] as usize] {
+                    f(i as u32, r, w);
+                }
+            }
+        });
+        Self { s, m, density, offsets, entries, inv_offsets, inv_entries }
     }
 
     #[inline]
     fn column(&self, i: usize) -> &[(u32, f32)] {
         &self.entries[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// The (input row, value) pairs targeting output row `r`, in serial
+    /// accumulation order.
+    #[inline]
+    fn row_targets(&self, r: usize) -> &[(u32, f32)] {
+        &self.inv_entries[self.inv_offsets[r] as usize..self.inv_offsets[r + 1] as usize]
     }
 
     /// Realized density of the generated operator.
@@ -103,15 +124,25 @@ impl SketchOperator for UniformSparseSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                for &(r, w) in self.column(i) {
-                    let r = r as usize;
-                    if r < band.start || r >= band.end {
-                        continue;
-                    }
+            if inverted {
+                for r in band.clone() {
                     let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                    crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                    for &(i, w) in self.row_targets(r) {
+                        crate::linalg::gemm::axpy(w as f64, a.row(i as usize), out);
+                    }
+                }
+            } else {
+                for i in 0..self.m {
+                    for &(r, w) in self.column(i) {
+                        let r = r as usize;
+                        if r < band.start || r >= band.end {
+                            continue;
+                        }
+                        let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                        crate::linalg::gemm::axpy(w as f64, a.row(i), out);
+                    }
                 }
             }
         });
@@ -140,21 +171,38 @@ impl SketchOperator for UniformSparseSketch {
             return b;
         }
         let s = self.s;
+        let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
-            for i in 0..self.m {
-                let (idx, vals) = a.row(i);
-                if idx.is_empty() {
-                    continue;
+            if inverted {
+                for r in band.clone() {
+                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                    for &(i, w) in self.row_targets(r) {
+                        let (idx, vals) = a.row(i as usize);
+                        if idx.is_empty() {
+                            continue;
+                        }
+                        let wf = w as f64;
+                        for (&j, &v) in idx.iter().zip(vals.iter()) {
+                            out[j as usize] += wf * v;
+                        }
+                    }
                 }
-                for &(r, w) in self.column(i) {
-                    let r = r as usize;
-                    if r < band.start || r >= band.end {
+            } else {
+                for i in 0..self.m {
+                    let (idx, vals) = a.row(i);
+                    if idx.is_empty() {
                         continue;
                     }
-                    let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
-                    let wf = w as f64;
-                    for (&j, &v) in idx.iter().zip(vals.iter()) {
-                        out[j as usize] += wf * v;
+                    for &(r, w) in self.column(i) {
+                        let r = r as usize;
+                        if r < band.start || r >= band.end {
+                            continue;
+                        }
+                        let out = &mut block[(r - band.start) * n..(r - band.start + 1) * n];
+                        let wf = w as f64;
+                        for (&j, &v) in idx.iter().zip(vals.iter()) {
+                            out[j as usize] += wf * v;
+                        }
                     }
                 }
             }
@@ -165,16 +213,25 @@ impl SketchOperator for UniformSparseSketch {
     fn apply_vec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.m);
         let mut c = vec![0.0; self.s];
+        self.apply_vec_into(v, &mut c);
+        c
+    }
+
+    fn apply_vec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.s);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for i in 0..self.m {
             let vi = v[i];
             if vi == 0.0 {
                 continue;
             }
             for &(r, w) in self.column(i) {
-                c[r as usize] += w as f64 * vi;
+                out[r as usize] += w as f64 * vi;
             }
         }
-        c
     }
 
     fn name(&self) -> &'static str {
@@ -213,6 +270,23 @@ mod tests {
         }
         let mean = acc / 2000.0;
         assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn inverted_entries_preserve_serial_order() {
+        let op = UniformSparseSketch::new(32, 400, 0.07, 15);
+        let mut expect: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 32];
+        for i in 0..400 {
+            for &(r, w) in op.column(i) {
+                expect[r as usize].push((i as u32, w));
+            }
+        }
+        let mut total = 0;
+        for (r, exp) in expect.iter().enumerate() {
+            assert_eq!(op.row_targets(r), &exp[..], "row {r}");
+            total += exp.len();
+        }
+        assert_eq!(total, op.entries.len());
     }
 
     #[test]

@@ -105,6 +105,53 @@ pub struct LsqrResult {
     pub history: Vec<f64>,
 }
 
+/// Reusable scratch arena for [`lsqr_ws`]/[`lsqr_block_ws`]: the u/v/w
+/// bidiagonalization vectors, the apply scratch, and the per-iteration
+/// active-column blocks of the blocked solver all draw from (and return
+/// to) one [`crate::workspace::BufferPool`], so a warm worker's repeated
+/// solves perform no scratch allocations. Recycled buffers are re-zeroed
+/// on `take`, making workspace reuse **bitwise identical** to fresh
+/// allocation (pinned by `tests/workspace_reuse.rs`).
+#[derive(Debug, Default)]
+pub struct SolveWorkspace {
+    pool: crate::workspace::BufferPool,
+}
+
+impl SolveWorkspace {
+    pub fn new() -> Self {
+        Self { pool: crate::workspace::BufferPool::new() }
+    }
+
+    fn take(&mut self, len: usize) -> Vec<f64> {
+        self.pool.take(len)
+    }
+
+    /// Unspecified-contents take — only for buffers every element of which
+    /// is plain-store overwritten before any read (see
+    /// [`crate::workspace::BufferPool::take_overwrite`]); NOT for apply
+    /// outputs, whose `beta·y + …` kernels read the buffer.
+    fn take_overwrite(&mut self, len: usize) -> Vec<f64> {
+        self.pool.take_overwrite(len)
+    }
+
+    fn take_mat(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+        self.pool.take_matrix(rows, cols)
+    }
+
+    /// See [`SolveWorkspace::take_overwrite`].
+    fn take_mat_overwrite(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+        self.pool.take_matrix_overwrite(rows, cols)
+    }
+
+    fn recycle(&mut self, v: Vec<f64>) {
+        self.pool.recycle(v);
+    }
+
+    fn recycle_mat(&mut self, m: DenseMatrix) {
+        self.pool.recycle_matrix(m);
+    }
+}
+
 /// Solve `min ‖Ax − b‖² + damp²‖x‖²` by LSQR.
 ///
 /// `x0` warm-starts the iteration (Algorithm 1 step 6 passes `z₀ = Qᵀc`).
@@ -113,6 +160,20 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
     b: &[f64],
     x0: Option<&[f64]>,
     cfg: &LsqrConfig,
+) -> LsqrResult {
+    lsqr_ws(a, b, x0, cfg, &mut SolveWorkspace::new())
+}
+
+/// [`lsqr`] with a reusable [`SolveWorkspace`]: the u/v/w vectors and the
+/// apply scratch come from the pool instead of fresh `vec![0.0; …]`
+/// allocations, so warm-started re-solves (the worker's factor-cache path)
+/// stop allocating. Bitwise identical to [`lsqr`].
+pub fn lsqr_ws<Op: LinearOperator + ?Sized>(
+    a: &Op,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    cfg: &LsqrConfig,
+    ws: &mut SolveWorkspace,
 ) -> LsqrResult {
     let (m, n) = a.shape();
     assert_eq!(b.len(), m, "lsqr: b has {} entries, A is {m}x{n}", b.len());
@@ -126,17 +187,20 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
     // --- initialization ---------------------------------------------------
     let bnorm = nrm2(b);
     let mut x: Vec<f64>;
-    let mut u = b.to_vec();
+    // Fully copy-overwritten before any read → unspecified-contents take.
+    let mut u = ws.take_overwrite(m);
+    u.copy_from_slice(b);
     let mut beta;
     match x0 {
         Some(x0v) => {
             assert_eq!(x0v.len(), n, "lsqr: x0 has {} entries, need {n}", x0v.len());
             x = x0v.to_vec();
-            let mut ax = vec![0.0; m];
+            let mut ax = ws.take(m);
             a.apply(x0v, &mut ax);
             for (ui, &axi) in u.iter_mut().zip(ax.iter()) {
                 *ui -= axi;
             }
+            ws.recycle(ax);
             beta = nrm2(&u);
         }
         None => {
@@ -145,7 +209,7 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
         }
     }
 
-    let mut v = vec![0.0; n];
+    let mut v = ws.take(n);
     let mut alpha;
     if beta > 0.0 {
         let inv = 1.0 / beta;
@@ -165,7 +229,8 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
             *vi *= inv;
         }
     }
-    let mut w = v.clone();
+    let mut w = ws.take_overwrite(n);
+    w.copy_from_slice(&v);
 
     let mut rhobar = alpha;
     let mut phibar = beta;
@@ -184,6 +249,9 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
     let mut arnorm = alpha * beta;
 
     if arnorm == 0.0 {
+        ws.recycle(u);
+        ws.recycle(v);
+        ws.recycle(w);
         return LsqrResult {
             x,
             istop: StopReason::TrivialSolution,
@@ -200,8 +268,8 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
 
     let mut istop = StopReason::IterLimit;
     let mut itn = 0usize;
-    let mut scratch_m = vec![0.0; m];
-    let mut scratch_n = vec![0.0; n];
+    let mut scratch_m = ws.take(m);
+    let mut scratch_n = ws.take(n);
 
     // --- main loop ---------------------------------------------------------
     while itn < iter_lim {
@@ -331,7 +399,7 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
         }
     }
 
-    LsqrResult {
+    let result = LsqrResult {
         x,
         istop,
         itn,
@@ -342,7 +410,13 @@ pub fn lsqr<Op: LinearOperator + ?Sized>(
         arnorm,
         xnorm,
         history,
-    }
+    };
+    ws.recycle(u);
+    ws.recycle(v);
+    ws.recycle(w);
+    ws.recycle(scratch_m);
+    ws.recycle(scratch_n);
+    result
 }
 
 /// Per-column scalar state of the blocked iteration — exactly the locals of
@@ -395,6 +469,21 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
     x0: Option<&DenseMatrix>,
     cfg: &LsqrConfig,
 ) -> Vec<LsqrResult> {
+    lsqr_block_ws(a, b, x0, cfg, &mut SolveWorkspace::new())
+}
+
+/// [`lsqr_block`] with a reusable [`SolveWorkspace`]: the u/v/w/x blocks
+/// and the per-iteration active-column staging matrices (va/av/ub/atu —
+/// previously fresh `DenseMatrix::zeros` clones every iteration) come from
+/// the pool, so the worker's steady-state batched serving loop performs no
+/// scratch allocations. Bitwise identical to [`lsqr_block`].
+pub fn lsqr_block_ws<Op: LinearOperator + ?Sized>(
+    a: &Op,
+    b: &DenseMatrix,
+    x0: Option<&DenseMatrix>,
+    cfg: &LsqrConfig,
+    ws: &mut SolveWorkspace,
+) -> Vec<LsqrResult> {
     let (m, n) = a.shape();
     let k = b.rows();
     assert_eq!(b.cols(), m, "lsqr_block: RHS block has {} cols, A is {m}x{n}", b.cols());
@@ -407,8 +496,12 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
     let dampsq = cfg.damp * cfg.damp;
 
     // --- initialization (identical to lsqr, vectorized over columns) -----
+    // Blocks that are fully copy-overwritten before any read use the
+    // unspecified-contents takes; apply outputs (ax/av/atu) and the
+    // zero-started x keep the zeroed takes (their kernels read the buffer).
     let mut x: DenseMatrix;
-    let mut u = b.clone();
+    let mut u = ws.take_mat_overwrite(k, m);
+    u.data_mut().copy_from_slice(b.data());
     let mut betas = vec![0.0f64; k];
     match x0 {
         Some(x0m) => {
@@ -418,8 +511,9 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
                 "lsqr_block: x0 block is {:?}, need ({k}, {n})",
                 x0m.shape()
             );
-            x = x0m.clone();
-            let mut ax = DenseMatrix::zeros(k, m);
+            x = ws.take_mat_overwrite(k, n);
+            x.data_mut().copy_from_slice(x0m.data());
+            let mut ax = ws.take_mat(k, m);
             a.apply_mat(x0m, &mut ax);
             for j in 0..k {
                 let urow = u.row_mut(j);
@@ -428,16 +522,19 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
                 }
                 betas[j] = nrm2(u.row(j));
             }
+            ws.recycle_mat(ax);
         }
         None => {
-            x = DenseMatrix::zeros(k, n);
+            x = ws.take_mat(k, n);
             for j in 0..k {
                 betas[j] = nrm2(b.row(j));
             }
         }
     }
 
-    let mut v = DenseMatrix::zeros(k, n);
+    // Every row of v is copy-overwritten below (β > 0 rows from atu, the
+    // rest from x) → unspecified-contents take.
+    let mut v = ws.take_mat_overwrite(k, n);
     let mut alphas = vec![0.0f64; k];
     {
         // One shared transpose apply for every column with β > 0; columns
@@ -450,16 +547,18 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
             }
         }
         if !pos.is_empty() {
-            let mut ub = DenseMatrix::zeros(pos.len(), m);
+            let mut ub = ws.take_mat_overwrite(pos.len(), m);
             for (bi, &j) in pos.iter().enumerate() {
                 ub.row_mut(bi).copy_from_slice(u.row(j));
             }
-            let mut atu = DenseMatrix::zeros(pos.len(), n);
+            let mut atu = ws.take_mat(pos.len(), n);
             a.apply_transpose_mat(&ub, &mut atu);
             for (bi, &j) in pos.iter().enumerate() {
                 v.row_mut(j).copy_from_slice(atu.row(bi));
                 alphas[j] = nrm2(v.row(j));
             }
+            ws.recycle_mat(ub);
+            ws.recycle_mat(atu);
         }
         for j in 0..k {
             if betas[j] > 0.0 {
@@ -477,7 +576,8 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
             }
         }
     }
-    let mut w = v.clone();
+    let mut w = ws.take_mat_overwrite(k, n);
+    w.data_mut().copy_from_slice(v.data());
 
     let mut cols: Vec<BlockCol> = (0..k)
         .map(|j| {
@@ -528,12 +628,15 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
         itn += 1;
 
         // Bidiagonalization, blocked: β u = A v − α u ; α v = Aᵀ u − β v.
+        // The active-column staging blocks come from the workspace pool —
+        // after the first iteration these are pure reuses (the active set
+        // only shrinks), so the loop allocates nothing.
         let ka = active.len();
-        let mut va = DenseMatrix::zeros(ka, n);
+        let mut va = ws.take_mat_overwrite(ka, n);
         for (ai, &j) in active.iter().enumerate() {
             va.row_mut(ai).copy_from_slice(v.row(j));
         }
-        let mut av = DenseMatrix::zeros(ka, m);
+        let mut av = ws.take_mat(ka, m);
         a.apply_mat(&va, &mut av);
         for (ai, &j) in active.iter().enumerate() {
             let alpha = cols[j].alpha;
@@ -543,6 +646,8 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
             }
             cols[j].beta = nrm2(u.row(j));
         }
+        ws.recycle_mat(va);
+        ws.recycle_mat(av);
 
         let tcols: Vec<usize> = active.iter().copied().filter(|&j| cols[j].beta > 0.0).collect();
         if !tcols.is_empty() {
@@ -556,11 +661,11 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
                     (c.anorm * c.anorm + c.alpha * c.alpha + c.beta * c.beta + dampsq).sqrt();
             }
             let kb = tcols.len();
-            let mut ub = DenseMatrix::zeros(kb, m);
+            let mut ub = ws.take_mat_overwrite(kb, m);
             for (bi, &j) in tcols.iter().enumerate() {
                 ub.row_mut(bi).copy_from_slice(u.row(j));
             }
-            let mut atu = DenseMatrix::zeros(kb, n);
+            let mut atu = ws.take_mat(kb, n);
             a.apply_transpose_mat(&ub, &mut atu);
             for (bi, &j) in tcols.iter().enumerate() {
                 let beta = cols[j].beta;
@@ -577,6 +682,8 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
                     }
                 }
             }
+            ws.recycle_mat(ub);
+            ws.recycle_mat(atu);
         }
 
         // Per-column Givens rotation, x/w update, norm estimates and
@@ -683,7 +790,8 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
         }
     }
 
-    cols.into_iter()
+    let results: Vec<LsqrResult> = cols
+        .into_iter()
         .enumerate()
         .map(|(j, c)| LsqrResult {
             x: x.row(j).to_vec(),
@@ -697,7 +805,12 @@ pub fn lsqr_block<Op: LinearOperator + ?Sized>(
             xnorm: c.xnorm,
             history: c.history,
         })
-        .collect()
+        .collect();
+    ws.recycle_mat(x);
+    ws.recycle_mat(u);
+    ws.recycle_mat(v);
+    ws.recycle_mat(w);
+    results
 }
 
 /// The deterministic baseline as a [`Solver`].
@@ -955,6 +1068,38 @@ mod tests {
         assert_eq!(block[0].istop, StopReason::IterLimit);
         let empty = lsqr_block(&a, &DenseMatrix::zeros(0, 150), None, &cfg);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_identical() {
+        // Repeated solves through ONE SolveWorkspace (recycled, re-zeroed
+        // buffers) must match the fresh-allocation path bitwise — the
+        // guarantee the worker's steady-state serving loop relies on.
+        let (a, _xt, b) = well_conditioned(80, 12, 89);
+        let cfg =
+            LsqrConfig { atol: 1e-12, btol: 1e-12, track_history: true, ..Default::default() };
+        let fresh = lsqr(&a, &b, None, &cfg);
+        let mut ws = SolveWorkspace::new();
+        for trial in 0..3 {
+            let r = lsqr_ws(&a, &b, None, &cfg, &mut ws);
+            assert_eq!(r.x, fresh.x, "trial {trial}");
+            assert_eq!(r.itn, fresh.itn, "trial {trial}");
+            assert_eq!(r.istop, fresh.istop, "trial {trial}");
+            assert_eq!(r.r1norm.to_bits(), fresh.r1norm.to_bits(), "trial {trial}");
+            assert_eq!(r.history, fresh.history, "trial {trial}");
+        }
+        // Blocked path (with warm starts) through the same workspace.
+        let x0 = rhs_block(&[vec![0.1; 12], vec![0.0; 12]]);
+        let rhs = rhs_block(&[b.clone(), b.clone()]);
+        let fresh_blk = lsqr_block(&a, &rhs, Some(&x0), &cfg);
+        for trial in 0..3 {
+            let blk = lsqr_block_ws(&a, &rhs, Some(&x0), &cfg, &mut ws);
+            for (col, (rb, rf)) in blk.iter().zip(fresh_blk.iter()).enumerate() {
+                assert_eq!(rb.x, rf.x, "trial {trial} col {col}");
+                assert_eq!(rb.itn, rf.itn, "trial {trial} col {col}");
+                assert_eq!(rb.istop, rf.istop, "trial {trial} col {col}");
+            }
+        }
     }
 
     #[test]

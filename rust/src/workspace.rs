@@ -1,0 +1,193 @@
+//! Reusable `f64` buffer arenas for the hot serving paths.
+//!
+//! The coordinator's steady-state loop used to allocate (and page-fault)
+//! fresh scratch on every request: the SRHT padded m̃×n buffer per
+//! `apply_dense`, the u/v/w/scratch vectors per LSQR solve, and the
+//! per-iteration active-column blocks of `lsqr_block`. [`BufferPool`] is
+//! the arena behind [`crate::sketch::SketchWorkspace`] and
+//! [`crate::solvers::lsqr::SolveWorkspace`]: `take` hands out a **zeroed**
+//! buffer (recycling capacity when a previously returned buffer fits),
+//! `recycle` returns it. Zeroing a recycled buffer writes exactly the
+//! values a fresh `vec![0.0; len]` holds, so workspace-reuse is bitwise
+//! identical to fresh allocation (pinned by `tests/workspace_reuse.rs`).
+
+use crate::linalg::DenseMatrix;
+
+/// A small free-list of `f64` buffers. Not thread-safe by design — each
+/// worker owns its pool, matching the coordinator's one-context-per-thread
+/// layout.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    pool: Vec<Vec<f64>>,
+}
+
+impl BufferPool {
+    pub const fn new() -> Self {
+        Self { pool: Vec::new() }
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing the first
+    /// recycled buffer whose capacity already fits (steady-state: no
+    /// allocation at all). When nothing parked fits, this allocates with
+    /// `vec![0.0; len]` — the `alloc_zeroed`/lazy-zero-page path — so
+    /// one-shot uses through a throwaway workspace (e.g. the sketch
+    /// operators' non-`_ws` entry points) cost exactly what a plain fresh
+    /// allocation did, not an extra explicit memset.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        match self.pool.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut v = self.pool.swap_remove(i);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix::from_vec(rows, cols, self.take(rows * cols)).expect("pool-sized buffer")
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (stale values from a previous use) — skips [`BufferPool::take`]'s
+    /// O(len) re-zeroing pass. Only for consumers that overwrite every
+    /// element with **plain stores** (`copy_from_slice`, direct
+    /// assignment) before any read. It is NOT safe for buffers handed to
+    /// `beta·y + …`-style accumulating kernels (e.g. the dense
+    /// `matvec_into`): `0·stale` re-rounds the sign of zero (and
+    /// propagates stale NaN), which would break the bitwise
+    /// fresh-vs-reused contract.
+    pub fn take_overwrite(&mut self, len: usize) -> Vec<f64> {
+        match self.pool.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut v = self.pool.swap_remove(i);
+                // resize only zero-fills growth past the stale prefix;
+                // shrinking truncates. Either way no full memset.
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// [`BufferPool::take_overwrite`] shaped as a `rows × cols` matrix.
+    pub fn take_matrix_overwrite(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix::from_vec(rows, cols, self.take_overwrite(rows * cols))
+            .expect("pool-sized buffer")
+    }
+
+    /// Return a buffer to the pool for reuse. The pool is capped (a
+    /// worker's solve shapes are few): past the cap the smallest parked
+    /// buffer is dropped, so a drifting workload can never accumulate
+    /// unboundedly many misfit buffers.
+    pub fn recycle(&mut self, v: Vec<f64>) {
+        const MAX_PARKED: usize = 16;
+        if v.capacity() == 0 {
+            return;
+        }
+        self.pool.push(v);
+        if self.pool.len() > MAX_PARKED {
+            let smallest = self
+                .pool
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i);
+            if let Some(i) = smallest {
+                self.pool.swap_remove(i);
+            }
+        }
+    }
+
+    /// Return a matrix's backing buffer to the pool.
+    pub fn recycle_matrix(&mut self, m: DenseMatrix) {
+        self.recycle(m.into_vec());
+    }
+
+    /// Number of buffers currently parked in the pool (tests/diagnostics).
+    pub fn parked(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses_capacity() {
+        let mut p = BufferPool::new();
+        let mut v = p.take(16);
+        assert_eq!(v, vec![0.0; 16]);
+        v.iter_mut().for_each(|x| *x = 7.5);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        p.recycle(v);
+        assert_eq!(p.parked(), 1);
+        let w = p.take(10);
+        // Same allocation, fully re-zeroed.
+        assert_eq!(w.as_ptr(), ptr);
+        assert!(w.capacity() >= cap.min(16));
+        assert_eq!(w, vec![0.0; 10]);
+        assert_eq!(p.parked(), 0);
+    }
+
+    #[test]
+    fn take_matrix_roundtrip() {
+        let mut p = BufferPool::new();
+        let m = p.take_matrix(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert!(m.data().iter().all(|&v| v == 0.0));
+        p.recycle_matrix(m);
+        assert_eq!(p.parked(), 1);
+        // A larger request than any parked buffer allocates fresh.
+        let big = p.take(64);
+        assert_eq!(big.len(), 64);
+    }
+
+    #[test]
+    fn empty_recycles_are_dropped() {
+        let mut p = BufferPool::new();
+        p.recycle(Vec::new());
+        assert_eq!(p.parked(), 0);
+    }
+
+    #[test]
+    fn take_overwrite_reuses_without_zeroing() {
+        let mut p = BufferPool::new();
+        let mut v = p.take(8);
+        v.iter_mut().for_each(|x| *x = 3.25);
+        let ptr = v.as_ptr();
+        p.recycle(v);
+        // Same allocation back, stale prefix retained, shrink works.
+        let w = p.take_overwrite(6);
+        assert_eq!(w.as_ptr(), ptr);
+        assert_eq!(w.len(), 6);
+        assert!(w.iter().all(|&x| x == 3.25));
+        p.recycle(w);
+        // No parked buffer fits → fresh zeroed (calloc-path) allocation;
+        // the misfit stays parked for later same-size takes.
+        let g = p.take_overwrite(10);
+        assert_eq!(g.len(), 10);
+        assert!(g.iter().all(|&x| x == 0.0));
+        assert_eq!(p.parked(), 1);
+        // Matrix shape over unspecified contents (reuses the cap-10 buf).
+        p.recycle(g);
+        let m = p.take_matrix_overwrite(2, 5);
+        assert_eq!(m.shape(), (2, 5));
+    }
+
+    #[test]
+    fn recycle_caps_parked_buffers() {
+        let mut p = BufferPool::new();
+        for len in 1..=40usize {
+            let v = p.take(len);
+            p.recycle(v);
+        }
+        assert!(p.parked() <= 16, "pool grew unboundedly: {}", p.parked());
+        // The largest capacities survive the eviction of the smallest.
+        assert!(p.take(24).capacity() >= 24);
+    }
+}

@@ -1,0 +1,234 @@
+//! Bitwise equivalence suite for the sketch-application engine (PR 5):
+//!
+//! (a) the blocked, stage-fused FWHT (`fwht_columns_with_radix` /
+//!     `fwht_with_radix` at radix 2/4/8) is **bitwise identical** to the
+//!     stage-per-pass baseline (radix 1) at every SIMD backend the host
+//!     supports and at thread counts {1, 2, 4, 7} — the fused radix
+//!     kernels compute exactly the cascaded radix-2 adds/subs, and tiling
+//!     only reorders independent (element, stage) work;
+//!
+//! (b) the inverted-hash scatter layout of CountSketch / SparseSign /
+//!     UniformSparse is **bitwise identical** to the band-rescan baseline
+//!     (and to the serial streaming pass) on the dense and CSR paths, at
+//!     every thread count and backend — each output row accumulates its
+//!     input rows in the same serial order under every layout;
+//!
+//! (c) the `--fwht-radix` / config knob round-trips: forcing radix 1
+//!     through the global knob reproduces the baseline bitwise.
+//!
+//! Everything lives in ONE test function: the pool size, the SIMD backend,
+//! the FWHT radix and the scatter layout are process-wide settings, and
+//! keeping the sweep single-threaded at the test level makes the
+//! `set_threads`/`set_choice`/`set_fwht_radix`/`set_inverted_scatter`
+//! transitions race-free (the same rule as `tests/parallel_determinism`).
+//! The pure-computation radix checks (no globals) get their own function.
+
+use snsolve::linalg::sparse::CooBuilder;
+use snsolve::linalg::{hadamard, DenseMatrix};
+use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
+use snsolve::sketch::{self, SketchKind, SketchOperator};
+
+/// Thread counts the engine acceptance criteria call out (7 is
+/// deliberately not a divisor of anything).
+const SWEEP: [usize; 4] = [1, 2, 4, 7];
+
+const RADICES: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn sketch_engine_paths_bitwise_identical_across_knobs() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(9001));
+
+    // --- FWHT fixtures ---------------------------------------------------
+    // Column transform: 4096 × 33 clears the parallel floor (135k elems),
+    // splits into ≥ 4 column bands (ceil(33/8) = 5), and at band widths
+    // ~6-33 the L2 tile is smaller than 4096 rows — so phase A (in-tile
+    // stages), phase B (cross-tile fused stages) and ragged vector tails
+    // all execute.
+    let (frows, fcols) = (4096usize, 33usize);
+    let fdata = g.gaussian_vec(frows * fcols);
+    // Vector transform: 2^18 elements = 8 tiles of 32768, so phase B runs
+    // a full radix-8 fused pass (3 cross-tile stages).
+    let fvec = g.gaussian_vec(1 << 18);
+
+    // --- scatter fixtures ------------------------------------------------
+    let (sm, sn, ss) = (4096usize, 24usize, 96usize);
+    let sa_dense = DenseMatrix::gaussian(sm, sn, &mut g);
+    let sa_csr = {
+        let mut rng = Xoshiro256pp::seed_from_u64(9002);
+        let mut bld = CooBuilder::with_capacity(sm, sn, sm * 4);
+        for i in 0..sm {
+            for _ in 0..4 {
+                bld.push(i, rng.next_bounded(sn as u64) as usize, g.next_gaussian());
+            }
+        }
+        bld.build()
+    };
+    let scatter_kinds =
+        [SketchKind::CountSketch, SketchKind::SparseSign, SketchKind::UniformSparse];
+
+    // --- FWHT references: stage-per-pass, scalar backend, 1 thread -------
+    // The butterfly cascade is adds/subs only, so these references are
+    // valid bitwise targets for EVERY backend; the scatter operators'
+    // accumulation instead goes through the dispatched axpy (whose FMA
+    // contraction re-rounds per backend), so their serial references are
+    // rebuilt per backend below.
+    snsolve::parallel::set_threads(1);
+    snsolve::simd::set_choice(snsolve::simd::SimdChoice::Scalar);
+    let cols_ref = {
+        let mut d = fdata.clone();
+        hadamard::fwht_columns_with_radix(&mut d, frows, fcols, 1).unwrap();
+        d
+    };
+    let vec_ref = {
+        let mut x = fvec.clone();
+        hadamard::fwht_with_radix(&mut x, 1).unwrap();
+        x
+    };
+
+    for backend in snsolve::simd::available() {
+        snsolve::simd::set_choice(backend.as_choice());
+        assert_eq!(snsolve::simd::active(), backend, "backend failed to activate");
+        let name = backend.name();
+
+        // Per-backend serial scatter reference (threads = 1 streams rows;
+        // no layout branch on the serial path).
+        snsolve::parallel::set_threads(1);
+        let scatter_ref: Vec<(SketchKind, DenseMatrix, DenseMatrix)> = scatter_kinds
+            .iter()
+            .map(|&kind| {
+                let op = sketch::build(kind, ss, sm, 4242);
+                (kind, op.apply_dense(&sa_dense), op.apply_csr(&sa_csr))
+            })
+            .collect();
+
+        for &t in &SWEEP {
+            snsolve::parallel::set_threads(t);
+
+            // (a) every radix — including the radix-1 baseline itself —
+            // reproduces the scalar/1-thread/stage-per-pass bits.
+            for radix in RADICES {
+                let mut d = fdata.clone();
+                hadamard::fwht_columns_with_radix(&mut d, frows, fcols, radix).unwrap();
+                assert_eq!(
+                    d, cols_ref,
+                    "{name}: fwht_columns radix {radix} not bitwise at {t} threads"
+                );
+                let mut x = fvec.clone();
+                hadamard::fwht_with_radix(&mut x, radix).unwrap();
+                assert_eq!(x, vec_ref, "{name}: fwht radix {radix} not bitwise at {t} threads");
+            }
+
+            // (b) inverted scatter vs band-rescan vs the serial reference,
+            // dense and CSR paths.
+            for (kind, dense_ref, csr_ref) in &scatter_ref {
+                let op = sketch::build(*kind, ss, sm, 4242);
+                sketch::set_inverted_scatter(Some(false));
+                let d_rescan = op.apply_dense(&sa_dense);
+                let c_rescan = op.apply_csr(&sa_csr);
+                sketch::set_inverted_scatter(Some(true));
+                let d_inv = op.apply_dense(&sa_dense);
+                let c_inv = op.apply_csr(&sa_csr);
+                sketch::set_inverted_scatter(None);
+                assert_eq!(
+                    &d_rescan,
+                    dense_ref,
+                    "{name}: {} rescan dense differs at {t} threads",
+                    kind.name()
+                );
+                assert_eq!(
+                    d_inv, d_rescan,
+                    "{name}: {} inverted dense not bitwise at {t} threads",
+                    kind.name()
+                );
+                assert_eq!(
+                    &c_rescan,
+                    csr_ref,
+                    "{name}: {} rescan csr differs at {t} threads",
+                    kind.name()
+                );
+                assert_eq!(
+                    c_inv, c_rescan,
+                    "{name}: {} inverted csr not bitwise at {t} threads",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    // (c) the global radix knob round-trips: forcing the baseline through
+    // the knob reproduces the reference via the default-dispatch entry
+    // points, and every forced radix agrees.
+    snsolve::parallel::set_threads(2);
+    for radix in RADICES {
+        hadamard::set_fwht_radix(Some(radix));
+        assert_eq!(hadamard::fwht_radix_in_use(), radix);
+        let mut d = fdata.clone();
+        hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
+        assert_eq!(d, cols_ref, "knob radix {radix}: fwht_columns_inplace not bitwise");
+        let mut x = fvec.clone();
+        hadamard::fwht_inplace(&mut x).unwrap();
+        assert_eq!(x, vec_ref, "knob radix {radix}: fwht_inplace not bitwise");
+    }
+    hadamard::set_fwht_radix(None);
+
+    // Restore the ambient configuration for other test binaries.
+    snsolve::parallel::set_threads(0);
+    snsolve::simd::clear_choice();
+}
+
+/// Pure-computation radix equivalence across sizes (no process-global
+/// knobs touched: explicit-radix entry points only, and the FWHT is
+/// adds/subs — invariant to whichever backend/thread settings the sweep
+/// above has installed at any instant).
+#[test]
+fn fwht_radix_equivalence_across_sizes() {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(9003));
+    for rows in [1usize, 2, 4, 8, 16, 64, 512, 2048] {
+        let x = g.gaussian_vec(rows);
+        let mut base = x.clone();
+        hadamard::fwht_with_radix(&mut base, 1).unwrap();
+        for radix in [2usize, 4, 8] {
+            let mut y = x.clone();
+            hadamard::fwht_with_radix(&mut y, radix).unwrap();
+            assert_eq!(y, base, "vector rows={rows} radix={radix}");
+        }
+        for cols in [1usize, 3, 8, 17] {
+            let data = g.gaussian_vec(rows * cols);
+            let mut cbase = data.clone();
+            hadamard::fwht_columns_with_radix(&mut cbase, rows, cols, 1).unwrap();
+            for radix in [2usize, 4, 8] {
+                let mut d = data.clone();
+                hadamard::fwht_columns_with_radix(&mut d, rows, cols, radix).unwrap();
+                assert_eq!(d, cbase, "columns rows={rows} cols={cols} radix={radix}");
+            }
+        }
+    }
+    // The blocked engine still matches the O(n²) reference transform.
+    let x = g.gaussian_vec(256);
+    let reference = hadamard::wht_reference(&x);
+    for radix in [2usize, 4, 8] {
+        let mut y = x.clone();
+        hadamard::fwht_with_radix(&mut y, radix).unwrap();
+        for (u, v) in y.iter().zip(reference.iter()) {
+            assert!((u - v).abs() < 1e-9, "radix {radix} vs reference");
+        }
+    }
+}
+
+/// The SRHT silent-clamp regression at the integration level: a sketch
+/// dimension beyond the padded Hadamard order must hard-error instead of
+/// returning an operator whose trailing rows are silently zero.
+#[test]
+fn srht_rejects_sketch_dim_beyond_padded_order() {
+    let r = std::panic::catch_unwind(|| sketch::SrhtSketch::new(200, 100, 7));
+    assert!(r.is_err(), "s=200 > m̃=128 must panic");
+    let op = sketch::SrhtSketch::new(120, 100, 7);
+    assert_eq!(op.sketch_dim(), 120);
+    // Materialized S has no all-zero row (every sampled Hadamard row is a
+    // ±1 pattern times the sign flip).
+    let s_mat = op.materialize();
+    for r in 0..120 {
+        let nonzero = s_mat.row(r).iter().filter(|v| **v != 0.0).count();
+        assert!(nonzero > 0, "row {r} of S is all-zero");
+    }
+}

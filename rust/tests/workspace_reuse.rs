@@ -1,0 +1,110 @@
+//! Workspace-reuse equivalence (PR 5): every `_ws` entry point — the
+//! sketch operators' `apply_dense_ws`/`apply_csr_ws`/`apply_mat_ws` and
+//! the solvers' `lsqr_ws`/`lsqr_block_ws` — must be **bitwise identical**
+//! to its fresh-allocation twin, across repeated applies through ONE
+//! reused workspace (recycled buffers are re-zeroed by the pool, so reuse
+//! can never leak state between requests). This is the guarantee that
+//! makes the worker's zero-allocation steady-state serving loop safe.
+//!
+//! This file deliberately touches no process-global knobs (threads, SIMD
+//! backend, radix, scatter layout), so its bitwise assertions cannot race
+//! another test's sweep — globals-flipping sweeps live in
+//! `tests/sketch_engine_equivalence.rs` and `tests/parallel_determinism.rs`.
+
+use snsolve::linalg::sparse::CooBuilder;
+use snsolve::linalg::DenseMatrix;
+use snsolve::rng::{GaussianSource, RngCore, Xoshiro256pp};
+use snsolve::sketch::{self, SketchKind, SketchOperator, SketchWorkspace};
+use snsolve::solvers::lsqr::{lsqr, lsqr_block, lsqr_block_ws, lsqr_ws, LsqrConfig, SolveWorkspace};
+
+#[test]
+fn sketch_workspace_reuse_bitwise_identical() {
+    let (s, m, n, k) = (64usize, 600usize, 9usize, 6usize);
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1201));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let blk = DenseMatrix::gaussian(k, m, &mut g);
+    let sp = {
+        let mut rng = Xoshiro256pp::seed_from_u64(1202);
+        let mut bld = CooBuilder::with_capacity(m, n, m * 3);
+        for i in 0..m {
+            for _ in 0..3 {
+                bld.push(i, rng.next_bounded(n as u64) as usize, g.next_gaussian());
+            }
+        }
+        bld.build()
+    };
+    // ONE workspace shared by every operator and every repeat — buffer
+    // sizes differ per operator, so the pool's recycle/re-zero logic is
+    // genuinely exercised.
+    let mut ws = SketchWorkspace::new();
+    for kind in SketchKind::ALL {
+        let op = sketch::build(kind, s, m, 3131);
+        let d_ref = op.apply_dense(&a);
+        let c_ref = op.apply_csr(&sp);
+        let m_ref = op.apply_mat(&blk);
+        for trial in 0..3 {
+            assert_eq!(
+                op.apply_dense_ws(&a, &mut ws),
+                d_ref,
+                "{} dense trial {trial}",
+                kind.name()
+            );
+            assert_eq!(op.apply_csr_ws(&sp, &mut ws), c_ref, "{} csr trial {trial}", kind.name());
+            assert_eq!(op.apply_mat_ws(&blk, &mut ws), m_ref, "{} mat trial {trial}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn solve_workspace_reuse_bitwise_identical() {
+    let (m, n) = (160usize, 24usize);
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(1203));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let x_true = g.gaussian_vec(n);
+    let b = a.matvec(&x_true);
+    let mut noisy = b.clone();
+    for bi in noisy.iter_mut() {
+        *bi += 0.4 * g.next_gaussian();
+    }
+    let cfg = LsqrConfig { atol: 1e-12, btol: 1e-12, track_history: true, ..Default::default() };
+
+    let fresh_b = lsqr(&a, &b, None, &cfg);
+    let fresh_noisy = lsqr(&a, &noisy, Some(&x_true), &cfg);
+    let mut ws = SolveWorkspace::new();
+    // Alternating problems through one workspace: consistent, then noisy
+    // warm-started, repeatedly — every result must match fresh allocation
+    // bitwise (x, stop reason, iteration count, residual history).
+    for trial in 0..3 {
+        let r1 = lsqr_ws(&a, &b, None, &cfg, &mut ws);
+        assert_eq!(r1.x, fresh_b.x, "trial {trial}");
+        assert_eq!(r1.itn, fresh_b.itn, "trial {trial}");
+        assert_eq!(r1.istop, fresh_b.istop, "trial {trial}");
+        assert_eq!(r1.history, fresh_b.history, "trial {trial}");
+        let r2 = lsqr_ws(&a, &noisy, Some(&x_true), &cfg, &mut ws);
+        assert_eq!(r2.x, fresh_noisy.x, "trial {trial}");
+        assert_eq!(r2.itn, fresh_noisy.itn, "trial {trial}");
+    }
+
+    // Blocked path: mixed batch (consistent + noisy + zero RHS) with warm
+    // starts, through the same (already warm) workspace.
+    let mut rhs = DenseMatrix::zeros(3, m);
+    rhs.row_mut(0).copy_from_slice(&b);
+    rhs.row_mut(1).copy_from_slice(&noisy);
+    let mut x0 = DenseMatrix::zeros(3, n);
+    x0.row_mut(1).copy_from_slice(&x_true);
+    let fresh_blk = lsqr_block(&a, &rhs, Some(&x0), &cfg);
+    for trial in 0..3 {
+        let blk = lsqr_block_ws(&a, &rhs, Some(&x0), &cfg, &mut ws);
+        assert_eq!(blk.len(), fresh_blk.len());
+        for (col, (rb, rf)) in blk.iter().zip(fresh_blk.iter()).enumerate() {
+            assert_eq!(rb.x, rf.x, "trial {trial} col {col}");
+            assert_eq!(rb.itn, rf.itn, "trial {trial} col {col}");
+            assert_eq!(rb.istop, rf.istop, "trial {trial} col {col}");
+            assert_eq!(rb.history, rf.history, "trial {trial} col {col}");
+        }
+    }
+
+    // And the solo path again after blocked solves resized the pool.
+    let r = lsqr_ws(&a, &b, None, &cfg, &mut ws);
+    assert_eq!(r.x, fresh_b.x);
+}
