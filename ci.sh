@@ -47,6 +47,18 @@ SNSOLVE_SIMD=scalar cargo test -q --test sketch_engine_equivalence --test worksp
 echo "== sketch engine equivalence (detected-best backend) =="
 cargo test -q --test sketch_engine_equivalence --test workspace_reuse
 
+# Scheduler matrix: the determinism harness (including the steal-heavy
+# adversarial sweep) under both worker-pool schedulers at awkward ambient
+# pool sizes (7 divides nothing). The test drives its own thread/schedule
+# sweeps internally; the env matrix additionally pins the ambient
+# resolution each knob path must honor.
+for sched in steal static; do
+  for t in 2 7; do
+    echo "== parallel determinism (SNSOLVE_SCHEDULE=$sched SNSOLVE_THREADS=$t) =="
+    SNSOLVE_SCHEDULE=$sched SNSOLVE_THREADS=$t cargo test -q --test parallel_determinism
+  done
+done
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

@@ -200,5 +200,18 @@ fn main() {
     println!("{}", table.render());
     let _ = table.save("coordinator_throughput");
 
+    // Kernel worker-pool scheduler counters accumulated across the runs
+    // above — the same numbers the OP_METRICS frame reports to clients.
+    let pool = snsolve::parallel::pool_stats();
+    println!(
+        "pool: schedule={} regions={} units={} stolen={} steal_rate={:.3} max_depth={}",
+        snsolve::parallel::active_schedule().name(),
+        pool.regions,
+        pool.executed,
+        pool.stolen,
+        pool.steal_rate(),
+        pool.max_depth,
+    );
+
     block_rhs_sweep(&a, &b, requests);
 }

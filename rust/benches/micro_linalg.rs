@@ -14,9 +14,11 @@
 //! cross-checks each against the scalar reference (≤ 1e-12 relative; FWHT
 //! bitwise).
 //!
-//! The final sweep times packed vs unpacked GEMM and blocked vs unblocked
-//! Householder QR (the PR-4 tentpole) and saves the record as
-//! `BENCH_micro_linalg.{json,csv}`.
+//! The final sweeps time packed vs unpacked GEMM and blocked vs unblocked
+//! Householder QR (the PR-4 tentpole, saved as
+//! `BENCH_micro_linalg.{json,csv}`) and static vs work-stealing scheduling
+//! on skewed workloads (the PR-6 tentpole, saved as
+//! `BENCH_pool_schedule.{json,csv}` with bitwise agreement asserted).
 
 use snsolve::bench_harness::report::Table;
 use snsolve::bench_harness::{
@@ -182,8 +184,15 @@ fn main() {
     println!("{}", tent_table.render());
     let _ = tent_table.save("BENCH_micro_linalg");
 
-    // Restore the ambient thread/backend/packing configuration.
+    // ---- static vs work-stealing scheduler on skewed workloads ----------
+    // The PR-6 tentpole record: saved as BENCH_pool_schedule.{json,csv}.
+    let pool_table = run_pool_schedule_sweep();
+    println!("{}", pool_table.render());
+    let _ = pool_table.save("BENCH_pool_schedule");
+
+    // Restore the ambient thread/backend/packing/scheduler configuration.
     snsolve::parallel::set_threads(0);
+    snsolve::parallel::set_schedule(None);
     snsolve::simd::clear_choice();
     snsolve::linalg::gemm::set_packing(None);
 }
@@ -262,6 +271,162 @@ fn run_packed_blocked_sweep() -> Table {
             ]);
         }
     }
+    table
+}
+
+/// Static vs work-stealing scheduler on skewed workloads — the PR-6
+/// tentpole record. Two sweeps at pool sizes {2, 4, 7}:
+///
+/// * **Skewed CSR SpMV**: every heavy row (64 nnz) lands in the first
+///   static band while the rest carry 4 nnz, so the static schedule
+///   serializes on worker 0 and stealing rebalances.
+/// * **Tall-skinny GEMM**: uniform per-row cost — the control where both
+///   schedules should tie (and must still agree bitwise).
+///
+/// Each row records measured GFLOP/s under both schedules plus a
+/// `model_speedup` column: the static schedule's critical-path work
+/// divided by the balanced critical path `max(total/threads, heaviest
+/// unit)` over the actual steal-unit decomposition. That ratio is the
+/// machine-independent record of the imbalance — wall-clock speedup
+/// converges to it when that many cores are actually idle, while a
+/// single-core CI runner still verifies the bitwise static==steal
+/// contract (asserted on every output). Acceptance: model_speedup ≥ 1.2
+/// on the skewed sweep at 4+ threads.
+fn run_pool_schedule_sweep() -> Table {
+    use snsolve::parallel::{partition, plan_units, Schedule};
+    let mut table = Table::new(
+        "pool schedule — static vs work-stealing on skewed workloads",
+        &[
+            "kernel",
+            "shape",
+            "threads",
+            "schedule",
+            "median_s",
+            "gflops",
+            "speedup_vs_static",
+            "model_speedup",
+            "agreement",
+        ],
+    );
+    let cfg = BenchConfig::quick();
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(53));
+    let sweep = [2usize, 4, 7];
+
+    // Skewed CSR SpMV: heavy head band, light tail.
+    {
+        let (m, n) = (1usize << 17, 512usize);
+        let heavy = m / 8;
+        let mut rng = Xoshiro256pp::seed_from_u64(54);
+        let mut bld = CooBuilder::with_capacity(m, n, heavy * 64 + (m - heavy) * 4);
+        for i in 0..m {
+            let per_row = if i < heavy { 64 } else { 4 };
+            for _ in 0..per_row {
+                bld.push(i, rng.next_bounded(n as u64) as usize, g.next_gaussian());
+            }
+        }
+        let a = bld.build();
+        let x = g.gaussian_vec(n);
+        let row_cost: Vec<f64> = (0..m).map(|i| a.row(i).0.len() as f64 + 1.0).collect();
+        let total_cost: f64 = row_cost.iter().sum();
+        let flops = 2.0 * a.nnz() as f64;
+
+        for &t in &sweep {
+            snsolve::parallel::set_threads(t);
+            let static_crit = partition(m, t)
+                .into_iter()
+                .map(|r| row_cost[r].iter().sum::<f64>())
+                .fold(0.0f64, f64::max);
+            // Same auto-grain formula the steal planner uses.
+            let grain = (m / (t * 8)).max(1);
+            let max_unit = plan_units(m, t, grain, 1)
+                .units
+                .iter()
+                .map(|u| row_cost[u.clone()].iter().sum::<f64>())
+                .fold(0.0f64, f64::max);
+            let model = static_crit / (total_cost / t as f64).max(max_unit);
+
+            snsolve::parallel::set_schedule(Some(Schedule::Static));
+            let mut y_static = vec![0.0; m];
+            a.matvec_into(&x, &mut y_static);
+            let st_static = bench(&cfg, || {
+                let mut y = vec![0.0; m];
+                a.matvec_into(&x, &mut y);
+                y
+            });
+            snsolve::parallel::set_schedule(Some(Schedule::Steal));
+            let mut y_steal = vec![0.0; m];
+            a.matvec_into(&x, &mut y_steal);
+            assert_eq!(y_static, y_steal, "skewed csr: steal != static bitwise at {t} threads");
+            let st_steal = bench(&cfg, || {
+                let mut y = vec![0.0; m];
+                a.matvec_into(&x, &mut y);
+                y
+            });
+            if t >= 4 {
+                assert!(
+                    model >= 1.2,
+                    "skewed sweep model speedup {model:.2} < 1.2 at {t} threads"
+                );
+            }
+            for (schedule, st, speedup) in [
+                ("static", &st_static, 1.0),
+                ("steal", &st_steal, st_static.median / st_steal.median),
+            ] {
+                table.row(vec![
+                    "csr_matvec_skewed".into(),
+                    format!("{m}x{n} nnz={} head-heavy", a.nnz()),
+                    t.to_string(),
+                    schedule.into(),
+                    format!("{:.6}", st.median),
+                    format!("{:.2}", flops / st.median / 1e9),
+                    format!("{speedup:.2}"),
+                    format!("{model:.2}"),
+                    "bitwise".into(),
+                ]);
+            }
+        }
+    }
+
+    // Tall-skinny GEMM: uniform per-row work — the no-imbalance control.
+    {
+        let (m, k, n) = (8192usize, 96usize, 64usize);
+        let a = DenseMatrix::gaussian(m, k, &mut g);
+        let b = DenseMatrix::gaussian(k, n, &mut g);
+        let flops = 2.0 * (m * k * n) as f64;
+        for &t in &sweep {
+            snsolve::parallel::set_threads(t);
+            // Uniform cost: the static critical path is the largest part.
+            let static_crit =
+                partition(m, t).into_iter().map(|r| r.len() as f64).fold(0.0f64, f64::max);
+            let model = static_crit / (m as f64 / t as f64);
+
+            snsolve::parallel::set_schedule(Some(Schedule::Static));
+            let c_static = gemm::matmul(&a, &b).unwrap();
+            let st_static = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+            snsolve::parallel::set_schedule(Some(Schedule::Steal));
+            let c_steal = gemm::matmul(&a, &b).unwrap();
+            assert_eq!(c_static, c_steal, "gemm: steal != static bitwise at {t} threads");
+            let st_steal = bench(&cfg, || gemm::matmul(&a, &b).unwrap());
+            for (schedule, st, speedup) in [
+                ("static", &st_static, 1.0),
+                ("steal", &st_steal, st_static.median / st_steal.median),
+            ] {
+                table.row(vec![
+                    "gemm_tall_skinny".into(),
+                    format!("{m}x{k}x{n}"),
+                    t.to_string(),
+                    schedule.into(),
+                    format!("{:.6}", st.median),
+                    format!("{:.2}", flops / st.median / 1e9),
+                    format!("{speedup:.2}"),
+                    format!("{model:.2}"),
+                    "bitwise".into(),
+                ]);
+            }
+        }
+    }
+
+    snsolve::parallel::set_schedule(None);
     table
 }
 

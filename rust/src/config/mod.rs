@@ -155,6 +155,9 @@ impl Config {
                 .map(|v| v.max(0) as usize)
                 .filter(|&r| crate::linalg::hadamard::is_valid_fwht_radix(r))
                 .unwrap_or(0),
+            schedule: self
+                .get_str("parallel", "schedule")
+                .and_then(crate::parallel::Schedule::parse),
         }
     }
 
@@ -206,8 +209,9 @@ impl Config {
 /// 0 = auto-detect), the SIMD backend they dispatch to (`[parallel] simd
 /// = "auto"|"scalar"|"avx2"|"avx512"|"neon"`), the packed-panel GEMM
 /// toggle (`[parallel] pack`), the blocked-QR panel width
-/// (`[parallel] qr_nb`, 0 = auto) and the FWHT engine radix
-/// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto).
+/// (`[parallel] qr_nb`, 0 = auto), the FWHT engine radix
+/// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto) and the worker-pool
+/// scheduler (`[parallel] schedule = "static"|"steal"`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
@@ -229,6 +233,11 @@ pub struct SolveConfig {
     /// engine with that max fused radix; 0 resolves to the ambient radix
     /// (`SNSOLVE_FWHT_RADIX`, then 8).
     pub fwht_radix: usize,
+    /// Worker-pool scheduler. `None` (key absent) leaves the ambient
+    /// resolution alone (`SNSOLVE_SCHEDULE`, then work-stealing). Both
+    /// schedules produce bitwise-identical results; `Static` is the
+    /// range-sharded baseline kept for benchmarking and triage.
+    pub schedule: Option<crate::parallel::Schedule>,
 }
 
 impl SolveConfig {
@@ -250,6 +259,9 @@ impl SolveConfig {
         }
         if self.fwht_radix != 0 {
             crate::linalg::hadamard::set_fwht_radix(Some(self.fwht_radix));
+        }
+        if let Some(s) = self.schedule {
+            crate::parallel::set_schedule(Some(s));
         }
     }
 
@@ -329,6 +341,7 @@ simd = "scalar"
 pack = true
 qr_nb = 16
 fwht_radix = 4
+schedule = "static"
 "#;
 
     #[test]
@@ -368,6 +381,7 @@ fwht_radix = 4
         assert_eq!(s.pack, Some(true));
         assert_eq!(s.qr_nb, 16);
         assert_eq!(s.fwht_radix, 4);
+        assert_eq!(s.schedule, Some(crate::parallel::Schedule::Static));
         // absent key → ambient (and an unparseable simd value → ambient),
         // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
@@ -378,6 +392,7 @@ fwht_radix = 4
         assert_eq!(d.pack, None);
         assert_eq!(d.qr_nb, 0);
         assert_eq!(d.fwht_radix, 0);
+        assert_eq!(d.schedule, None);
         let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
         assert_eq!(bad.simd, None);
         // A negative qr_nb clamps to auto instead of wrapping to a huge
@@ -390,6 +405,12 @@ fwht_radix = 4
         assert_eq!(badr.fwht_radix, 0);
         let negr = Config::parse("[parallel]\nfwht_radix = -4").unwrap().solve_config();
         assert_eq!(negr.fwht_radix, 0);
+        // An unparseable schedule resolves to ambient here; `cmd_serve`
+        // hard-errors on present-but-invalid values.
+        let bads = Config::parse("[parallel]\nschedule = \"fifo\"").unwrap().solve_config();
+        assert_eq!(bads.schedule, None);
+        let steal = Config::parse("[parallel]\nschedule = \"steal\"").unwrap().solve_config();
+        assert_eq!(steal.schedule, Some(crate::parallel::Schedule::Steal));
     }
 
     #[test]

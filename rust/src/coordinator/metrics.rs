@@ -133,18 +133,23 @@ impl Metrics {
         Self::get(&self.batched_requests) as f64 / b as f64
     }
 
-    /// Human-readable dump.
+    /// Human-readable dump. Includes a kernel worker-pool line (the
+    /// process-wide scheduler counters from [`crate::parallel::pool_stats`])
+    /// so the OP_METRICS protocol frame surfaces steal rates to clients.
     pub fn report(&self) -> String {
         let (qc, qm, qp50, qp99, qmax) = self.queue_latency.snapshot();
         let (_sc, sm, sp50, sp99, smax) = self.solve_latency.snapshot();
         let (_ec, em, ep50, ep99, emax) = self.e2e_latency.snapshot();
+        let pool = crate::parallel::pool_stats();
         format!(
             "submitted={} completed={} failed={} rejected={} deadline_missed={}\n\
              dispatch: pjrt={} native={} | batches={} mean_batch={:.2} \
              blocked_batches={} blocked_rhs={} factor_cache hit={} miss={}\n\
              queue_us:  n={} mean={:.0} p50={} p99={} max={}\n\
              solve_us:  mean={:.0} p50={} p99={} max={}\n\
-             e2e_us:    mean={:.0} p50={} p99={} max={}",
+             e2e_us:    mean={:.0} p50={} p99={} max={}\n\
+             pool: schedule={} regions={} units={} stolen={} \
+             steal_rate={:.3} max_depth={}",
             Self::get(&self.submitted),
             Self::get(&self.completed),
             Self::get(&self.failed),
@@ -171,6 +176,12 @@ impl Metrics {
             ep50,
             ep99,
             emax,
+            crate::parallel::active_schedule().name(),
+            pool.regions,
+            pool.executed,
+            pool.stolen,
+            pool.steal_rate(),
+            pool.max_depth,
         )
     }
 }
@@ -213,6 +224,10 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 3.0);
         let rep = m.report();
         assert!(rep.contains("submitted=1"));
+        // Scheduler counters ride along in every report (and therefore in
+        // the OP_METRICS protocol frame).
+        assert!(rep.contains("pool: schedule="));
+        assert!(rep.contains("steal_rate="));
     }
 
     #[test]

@@ -166,7 +166,7 @@ pub fn matmul_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) -> Res
         // MR-aligned panel boundaries keep the register-tile layout (and
         // hence every rounding) identical to the serial nest.
         let panels = crate::parallel::partition_aligned(m, threads, kern.mr());
-        crate::parallel::for_each_row_range(cdata, n, &panels, |_, rows, cblock| {
+        crate::parallel::for_each_row_range(cdata, n, &panels, kern.mr(), |_, rows, cblock| {
             let ablock = &adata[rows.start * k..rows.end * k];
             gemm_nest(ablock, bdata, cblock, rows.len(), k, n, kern, packed);
         });
@@ -207,7 +207,7 @@ fn gemm_packed_nest(
             let bbuf = &mut bpack.buf_mut()[..npanels * tnr * kc];
             kern.pack_b(b, n, pc, jc, kc, nc, bbuf);
             let bbuf: &[f64] = bbuf;
-            crate::parallel::for_each_row_range(c, n, &panels, |_, rows, cblock| {
+            crate::parallel::for_each_row_range(c, n, &panels, kern.mr(), |_, rows, cblock| {
                 let ablock = &a[rows.start * k..rows.end * k];
                 packed_block_rows(ablock, bbuf, cblock, rows.len(), k, n, jc, pc, kc, nc, kern);
             });
@@ -478,7 +478,7 @@ pub fn matvec_t(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
         crate::parallel::threads_for(n.div_ceil(MATVEC_T_COL_ALIGN), 1)
     };
     let stripes = crate::parallel::partition_aligned(n, threads, MATVEC_T_COL_ALIGN);
-    crate::parallel::for_each_row_range(&mut y, 1, &stripes, |_, cols, yblock| {
+    crate::parallel::for_each_row_range(&mut y, 1, &stripes, MATVEC_T_COL_ALIGN, |_, cols, yblock| {
         for (i, &xi) in x.iter().enumerate() {
             let row = &adata[i * n + cols.start..i * n + cols.end];
             kern.axpy(xi, row, yblock);

@@ -148,17 +148,42 @@ impl CsrMatrix {
     }
 
     /// `y = A x` into a caller buffer (no allocation — LSQR hot loop).
+    ///
+    /// Parallel: y's entries shard into contiguous row blocks behind an
+    /// nnz-sized [`crate::parallel::PAR_MIN_ELEMS`] gate. Each entry is
+    /// one row's scalar accumulation in index order, so every entry is
+    /// **bitwise identical** to the serial loop at any thread count and
+    /// under either scheduler. Row *counts* split evenly but row *costs*
+    /// need not (skewed nnz profiles) — exactly the imbalance the steal
+    /// scheduler exists for (`benches/micro_linalg.rs` pool sweep).
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            let lo = self.indptr[i] as usize;
-            let hi = self.indptr[i + 1] as usize;
-            let mut s = 0.0;
-            for k in lo..hi {
-                s += self.values[k] * x[self.indices[k] as usize];
+        let threads = if self.nnz() < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(self.rows, 8)
+        };
+        if threads <= 1 {
+            for i in 0..self.rows {
+                let (idx, vals) = self.row(i);
+                let mut s = 0.0;
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    s += v * x[j as usize];
+                }
+                y[i] = s;
             }
-            y[i] = s;
+            return;
         }
+        crate::parallel::for_each_row_block(y, self.rows, 1, threads, |_, rows, yblock| {
+            for (local, i) in rows.enumerate() {
+                let (idx, vals) = self.row(i);
+                let mut s = 0.0;
+                for (&j, &v) in idx.iter().zip(vals.iter()) {
+                    s += v * x[j as usize];
+                }
+                yblock[local] = s;
+            }
+        });
     }
 
     /// `y = Aᵀ x`.

@@ -172,7 +172,7 @@ pub fn right_solve_upper_multi(a: &DenseMatrix, r: &DenseMatrix) -> Result<Dense
         crate::parallel::threads_for(m, 64)
     };
     let ranges = crate::parallel::partition_aligned(m, threads, 64);
-    crate::parallel::for_each_row_range(y.data_mut(), n, &ranges, |_, rows, block| {
+    crate::parallel::for_each_row_range(y.data_mut(), n, &ranges, 64, |_, rows, block| {
         right_solve_rows(block, rows.len(), r, &inv_diag);
     });
     Ok(y)

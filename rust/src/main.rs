@@ -46,6 +46,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "pack", takes_value: true, help: "packed-panel GEMM: true|false (default true)" },
         FlagSpec { name: "qr-nb", takes_value: true, help: "blocked-QR panel width (0 = auto, default 32)" },
         FlagSpec { name: "fwht-radix", takes_value: true, help: "FWHT engine radix: 1 (stage-per-pass baseline)|2|4|8 (default 8)" },
+        FlagSpec { name: "schedule", takes_value: true, help: "worker-pool scheduler: steal (work-stealing, default)|static (range-sharded baseline)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -119,6 +120,18 @@ fn main() {
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
             std::process::exit(2);
+        }
+    }
+    if let Some(s) = args.flag("schedule") {
+        match snsolve::parallel::Schedule::parse(s) {
+            Some(sched) => snsolve::parallel::set_schedule(Some(sched)),
+            None => {
+                eprintln!(
+                    "error: invalid value for --schedule: {s} (expected steal|static)\n\n{}",
+                    usage("snsolve", SUBCOMMANDS, &specs)
+                );
+                std::process::exit(2);
+            }
         }
     }
     let code = match args.subcommand.as_deref() {
@@ -250,6 +263,18 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                         }
                     }
                 }
+                if let Some(raw) = c.get("parallel", "schedule") {
+                    let ok = raw
+                        .as_str()
+                        .and_then(snsolve::parallel::Schedule::parse)
+                        .is_some();
+                    if !ok {
+                        eprintln!(
+                            "config error: [parallel] schedule must be \"steal\" or \"static\""
+                        );
+                        return 2;
+                    }
+                }
                 // `[parallel]` kernel keys apply unless the matching CLI
                 // flag (already installed in main, higher precedence) was
                 // given; absent keys leave the env vars / defaults alone.
@@ -265,6 +290,9 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 }
                 if args.flag("fwht-radix").is_none() && sc.fwht_radix != 0 {
                     snsolve::linalg::hadamard::set_fwht_radix(Some(sc.fwht_radix));
+                }
+                if let (None, Some(sched)) = (args.flag("schedule"), sc.schedule) {
+                    snsolve::parallel::set_schedule(Some(sched));
                 }
                 c.service_config()
             }

@@ -3,15 +3,21 @@
 //! Design constraints (Murray et al. 2023 §software; Epperly 2024):
 //!
 //! * **No external crates.** Everything is `std::thread::scope` + atomics.
-//! * **Deterministic.** For a fixed thread count every kernel produces the
-//!   same bits on every run, and every partitioning is a pure function of
-//!   `(total, threads)`. Kernels that shard *disjoint output regions*
-//!   (GEMM row panels, FWHT column bands, sketch output rows) are bitwise
-//!   identical to the serial path at any thread count; kernels that merge
-//!   per-thread accumulators ([`partitioned_reduce`]) reduce in fixed
-//!   partition order, so they differ from serial only by floating-point
-//!   re-association (≪ 1e-12 relative — asserted by
-//!   `tests/parallel_determinism.rs`).
+//! * **Deterministic.** Every partitioning and every work-unit plan is a
+//!   pure function of `(total, threads, grain, align)`. Kernels that shard
+//!   *disjoint output regions* (GEMM row panels, FWHT column bands, sketch
+//!   output rows) are bitwise identical to the serial path at any thread
+//!   count **and under either scheduler**; kernels that merge per-thread
+//!   accumulators ([`partitioned_reduce`]) keep one partial per static
+//!   part and reduce in fixed sequence order, so they differ from serial
+//!   only by floating-point re-association (≪ 1e-12 relative — asserted
+//!   by `tests/parallel_determinism.rs`).
+//! * **Two schedulers, same bits.** [`Schedule::Static`] hands each worker
+//!   one fixed contiguous range (the historical baseline);
+//!   [`Schedule::Steal`] (the default) cuts the same ranges into
+//!   sequence-numbered units and lets idle workers steal from busy ones
+//!   (see [`steal`]). Selection: [`set_schedule`] → `SNSOLVE_SCHEDULE`
+//!   env var → steal.
 //! * **No nesting.** Code running inside a pool worker sees
 //!   [`threads_for`] == 1, so a parallel GEMM called from a parallel sketch
 //!   never oversubscribes the machine.
@@ -24,6 +30,13 @@ use std::cell::Cell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+mod steal;
+
+pub use steal::{
+    active_schedule, plan_from_parts, plan_units, pool_stats, reset_pool_stats, run_units,
+    set_schedule, set_steal_grain, PoolStats, Schedule, StealPlan,
+};
 
 /// Work-size floor below which the kernels stay serial: spawning threads
 /// costs ~10µs; anything under ~64k element-ops is faster single-threaded.
@@ -51,25 +64,36 @@ fn env_threads() -> usize {
     })
 }
 
-/// Configure the pool size for this process. `0` means auto (available
-/// parallelism). Overrides `SNSOLVE_THREADS`.
+/// Configure the pool size for this process. `0` means auto (environment,
+/// then available parallelism). Overrides `SNSOLVE_THREADS`.
 pub fn set_threads(n: usize) {
     CONFIGURED.store(n, Ordering::SeqCst);
 }
 
 /// Resolve a requested thread count (0 = auto) to an effective one.
+///
+/// Auto falls back to `SNSOLVE_THREADS` before `available_parallelism()`,
+/// so a caller handing an unset config value straight to `resolve` honors
+/// the same env cap as [`max_threads`].
 pub fn resolve(requested: usize) -> usize {
-    if requested > 0 {
-        return requested;
+    resolve_with_env(requested, env_threads())
+}
+
+/// [`resolve`] with the env override injected (pure — unit-testable
+/// without mutating process environment).
+fn resolve_with_env(requested: usize, env: usize) -> usize {
+    let n = if requested > 0 { requested } else { env };
+    if n > 0 {
+        n
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// The effective pool size: configured → env → available parallelism.
 pub fn max_threads() -> usize {
     let c = CONFIGURED.load(Ordering::SeqCst);
-    let requested = if c == UNSET { env_threads() } else { c };
-    resolve(requested)
+    resolve(if c == UNSET { 0 } else { c })
 }
 
 /// True while the calling thread is itself a pool worker.
@@ -123,22 +147,58 @@ pub fn partition(total: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `f(part_index, range)` over a partitioning of `[0, total)` on up to
-/// `threads` scoped workers. Partition 0 runs on the calling thread.
+/// Run `f(seq, range)` over a decomposition of `[0, total)` on up to
+/// `threads` scoped workers, under the active [`Schedule`]. The first
+/// range runs on the calling thread.
 ///
-/// `f` must only touch state that is disjoint per partition (or shared
-/// immutably); the partitioning itself is deterministic.
+/// `f` must only touch state that is disjoint per **index** (or shared
+/// immutably) and be insensitive to how `[0, total)` is cut into ranges —
+/// true for every per-row / per-column kernel in this crate. Under the
+/// static schedule the ranges are exactly [`partition`]`(total, threads)`;
+/// under steal they are a deterministic refinement of those same ranges.
 pub fn run_partitioned<F>(total: usize, threads: usize, f: F)
 where
     F: Fn(usize, Range<usize>) + Sync,
 {
-    let parts = partition(total, threads);
+    run_partitioned_with(total, threads, active_schedule(), f);
+}
+
+pub(crate) fn run_partitioned_with<F>(total: usize, threads: usize, schedule: Schedule, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    if total == 0 {
+        return;
+    }
+    if threads <= 1 {
+        steal::record_static_region(1);
+        enter_pool(|| f(0, 0..total));
+        return;
+    }
+    match schedule {
+        Schedule::Static => {
+            let parts = partition(total, threads);
+            run_static(&parts, &f);
+        }
+        Schedule::Steal => {
+            let plan = plan_units(total, threads, steal::steal_grain(total, threads), 1);
+            run_units(&plan, f);
+        }
+    }
+}
+
+/// The static executor: one scoped worker per range, range 0 on the
+/// calling thread — byte-for-byte the pre-steal baseline schedule.
+fn run_static<F>(parts: &[Range<usize>], f: &F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    steal::record_static_region(parts.len());
     match parts.len() {
         0 => {}
         1 => enter_pool(|| f(0, parts[0].clone())),
         _ => std::thread::scope(|s| {
             for (i, r) in parts.iter().cloned().enumerate().skip(1) {
-                let f = &f;
                 s.spawn(move || enter_pool(|| f(i, r)));
             }
             enter_pool(|| f(0, parts[0].clone()));
@@ -149,7 +209,25 @@ where
 /// Deterministic partitioned reduction: map each range of `[0, total)` to a
 /// value on its own worker, then return the values **in partition order**
 /// so the caller's fold is independent of thread scheduling.
+///
+/// Both schedulers produce the *same* partials: the unit plan pins one
+/// unit per static part (stealing degenerates to claiming whole parts —
+/// refining them would change the fold's association and hence the bits),
+/// and the slot a partial lands in is its sequence number.
 pub fn partitioned_reduce<T, F>(total: usize, threads: usize, map: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    partitioned_reduce_with(total, threads, active_schedule(), map)
+}
+
+pub(crate) fn partitioned_reduce_with<T, F>(
+    total: usize,
+    threads: usize,
+    schedule: Schedule,
+    map: F,
+) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, Range<usize>) -> T + Sync,
@@ -157,22 +235,45 @@ where
     let parts = partition(total, threads);
     match parts.len() {
         0 => Vec::new(),
-        1 => vec![enter_pool(|| map(0, parts[0].clone()))],
-        _ => std::thread::scope(|s| {
-            let handles: Vec<_> = parts
-                .iter()
-                .cloned()
-                .enumerate()
-                .map(|(i, r)| {
-                    let map = &map;
-                    s.spawn(move || enter_pool(|| map(i, r)))
+        1 => {
+            steal::record_static_region(1);
+            vec![enter_pool(|| map(0, parts[0].clone()))]
+        }
+        n => match schedule {
+            Schedule::Static => {
+                steal::record_static_region(n);
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = parts
+                        .iter()
+                        .cloned()
+                        .enumerate()
+                        .map(|(i, r)| {
+                            let map = &map;
+                            s.spawn(move || enter_pool(|| map(i, r)))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("parallel worker panicked"))
+                        .collect()
                 })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("parallel worker panicked"))
-                .collect()
-        }),
+            }
+            Schedule::Steal => {
+                // One unit per part; partials land in sequence-numbered
+                // slots, read back in order after the scope joins.
+                let plan = plan_from_parts(&parts, usize::MAX, 1);
+                let mut slots: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
+                let slot_ptr = SendPtr(slots.as_mut_ptr());
+                run_units(&plan, |seq, r| {
+                    let v = map(seq, r);
+                    // SAFETY: each sequence number is claimed exactly once
+                    // (CAS deques), so slot `seq` has a unique writer; the
+                    // scope join orders all writes before the reads below.
+                    unsafe { *slot_ptr.0.add(seq) = Some(v) };
+                });
+                slots.into_iter().map(|o| o.expect("every unit executed")).collect()
+            }
+        },
     }
 }
 
@@ -190,44 +291,99 @@ pub fn partition_aligned(total: usize, parts: usize, align: usize) -> Vec<Range<
 }
 
 /// Shard a row-major `rows × row_len` buffer into disjoint contiguous row
-/// blocks and run `f(part_index, row_range, block)` on scoped workers.
-/// Each worker owns its block mutably — safe output-row sharding for the
-/// sketch scatter kernels and GEMM C panels.
+/// blocks and run `f(seq, row_range, block)` on scoped workers. Each
+/// worker owns its block mutably — safe output-row sharding for the
+/// sketch scatter kernels and GEMM C panels. Rows must be independent
+/// (align 1): the steal schedule may split blocks at any row boundary.
 pub fn for_each_row_block<F>(data: &mut [f64], rows: usize, row_len: usize, threads: usize, f: F)
 where
     F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
 {
     debug_assert_eq!(data.len(), rows * row_len);
-    for_each_row_range(data, row_len, &partition(rows, threads), f);
+    for_each_row_range(data, row_len, &partition(rows, threads), 1, f);
 }
 
 /// [`for_each_row_block`] over caller-supplied contiguous row ranges (they
 /// must tile `[0, rows)` in order — e.g. from [`partition_aligned`]).
-/// Range 0 runs on the calling thread; the rest on scoped workers.
-pub fn for_each_row_range<F>(data: &mut [f64], row_len: usize, ranges: &[Range<usize>], f: F)
-where
+/// Under the static schedule each range is one worker's fixed block (range
+/// 0 on the calling thread); under steal the ranges are refined into
+/// stealable units whose boundaries stay multiples of `align` — pass the
+/// same alignment the ranges were built with, so the kernel's
+/// `align`-periodic tiling (register tiles, vector-body chunks) is
+/// preserved and the bits cannot change.
+pub fn for_each_row_range<F>(
+    data: &mut [f64],
+    row_len: usize,
+    ranges: &[Range<usize>],
+    align: usize,
+    f: F,
+) where
     F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
 {
-    match ranges.len() {
-        0 => {}
-        1 => enter_pool(|| f(0, ranges[0].clone(), data)),
-        _ => std::thread::scope(|s| {
-            let mut rest = data;
-            let mut first: Option<(Range<usize>, &mut [f64])> = None;
-            for (i, r) in ranges.iter().cloned().enumerate() {
-                let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_len);
-                rest = tail;
-                if i == 0 {
-                    first = Some((r, block));
-                    continue;
-                }
-                let f = &f;
-                s.spawn(move || enter_pool(|| f(i, r, block)));
-            }
-            let (r0, block0) = first.expect("ranges non-empty");
-            enter_pool(|| f(0, r0, block0));
-        }),
+    if ranges.is_empty() {
+        return;
     }
+    debug_assert_eq!(ranges[0].start, 0, "ranges must tile [0, rows) from 0");
+    let total_rows = ranges.last().unwrap().end;
+    debug_assert!(data.len() >= total_rows * row_len);
+    if ranges.len() == 1 {
+        steal::record_static_region(1);
+        enter_pool(|| f(0, ranges[0].clone(), data));
+        return;
+    }
+    match active_schedule() {
+        Schedule::Static => {
+            steal::record_static_region(ranges.len());
+            std::thread::scope(|s| {
+                let mut rest = data;
+                let mut first: Option<(Range<usize>, &mut [f64])> = None;
+                for (i, r) in ranges.iter().cloned().enumerate() {
+                    let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_len);
+                    rest = tail;
+                    if i == 0 {
+                        first = Some((r, block));
+                        continue;
+                    }
+                    let f = &f;
+                    s.spawn(move || enter_pool(|| f(i, r, block)));
+                }
+                let (r0, block0) = first.expect("ranges non-empty");
+                enter_pool(|| f(0, r0, block0));
+            });
+        }
+        Schedule::Steal => {
+            let grain = steal::steal_grain(total_rows, ranges.len());
+            let plan = plan_from_parts(ranges, grain, align);
+            let base = SendMutPtr(data.as_mut_ptr());
+            run_units(&plan, |seq, rows| {
+                // SAFETY: units are disjoint row ranges of `data`, each
+                // claimed exactly once, so every slice below is exclusive;
+                // `data` outlives the scope inside `run_units`.
+                let block = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.0.add(rows.start * row_len),
+                        rows.len() * row_len,
+                    )
+                };
+                f(seq, rows, block);
+            });
+        }
+    }
+}
+
+/// Zero a row-major `rows × row_len` buffer **in parallel, banded the same
+/// way the consuming kernel shards it** — so (first-touch policy) each
+/// band's pages fault in on the worker that will stream them. Writing
+/// `0.0` over zeros or stale values is bitwise identical to a fresh
+/// `vec![0.0; len]`, so this is a pure placement optimization; NUMA
+/// groundwork for the FWHT pad buffers and the scatter outputs.
+pub fn first_touch_rows(data: &mut [f64], rows: usize, row_len: usize, threads: usize) {
+    debug_assert_eq!(data.len(), rows * row_len);
+    if threads <= 1 || data.len() < PAR_MIN_ELEMS {
+        data.fill(0.0);
+        return;
+    }
+    for_each_row_block(data, rows, row_len, threads, |_, _, block| block.fill(0.0));
 }
 
 /// A raw mutable `f64` pointer that may cross thread boundaries.
@@ -243,6 +399,14 @@ pub(crate) struct SendMutPtr(pub(crate) *mut f64);
 
 unsafe impl Send for SendMutPtr {}
 unsafe impl Sync for SendMutPtr {}
+
+/// Typed sibling of [`SendMutPtr`] for non-`f64` payloads (LSQR column
+/// states, reduction slots). Same safety contract: disjoint per-thread
+/// element sets, buffer outlives all accesses, `T: Send`.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -298,32 +462,52 @@ mod tests {
     }
 
     #[test]
-    fn run_partitioned_touches_every_index_once() {
+    fn run_partitioned_touches_every_index_once_under_both_schedules() {
         let n = 1000;
-        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-        run_partitioned(n, 4, |_, range| {
-            for i in range {
-                hits[i].fetch_add(1, Ordering::Relaxed);
-            }
-        });
-        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        for schedule in [Schedule::Static, Schedule::Steal] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            run_partitioned_with(n, 4, schedule, |_, range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "{schedule:?} missed or repeated an index"
+            );
+        }
     }
 
     #[test]
-    fn partitioned_reduce_in_order() {
-        // Each partition returns its index; the output must be sorted.
-        for threads in [1usize, 2, 3, 8] {
-            let out = partitioned_reduce(64, threads, |idx, _range| idx);
-            let expect: Vec<usize> = (0..out.len()).collect();
-            assert_eq!(out, expect);
+    fn partitioned_reduce_in_order_under_both_schedules() {
+        for schedule in [Schedule::Static, Schedule::Steal] {
+            // Each partition returns its index; the output must be sorted.
+            for threads in [1usize, 2, 3, 8] {
+                let out = partitioned_reduce_with(64, threads, schedule, |idx, _range| idx);
+                let expect: Vec<usize> = (0..out.len()).collect();
+                assert_eq!(out, expect);
+            }
+            // Sum over ranges equals the serial sum regardless of threads.
+            let serial: usize = (0..500).sum();
+            for threads in [1usize, 2, 5, 7] {
+                let total: usize =
+                    partitioned_reduce_with(500, threads, schedule, |_, r| r.sum::<usize>())
+                        .into_iter()
+                        .sum();
+                assert_eq!(total, serial);
+            }
         }
-        // Sum over ranges equals the serial sum regardless of threads.
-        let serial: usize = (0..500).sum();
-        for threads in [1usize, 2, 5, 7] {
-            let total: usize = partitioned_reduce(500, threads, |_, r| r.sum::<usize>())
-                .into_iter()
-                .sum();
-            assert_eq!(total, serial);
+    }
+
+    #[test]
+    fn reduce_partials_are_schedule_invariant() {
+        // The *ranges* handed to the map closure must match exactly across
+        // schedules — that is what pins the fp association of the callers'
+        // ordered folds (gaussian/uniform-dense block streams).
+        for threads in [2usize, 4, 7] {
+            let st = partitioned_reduce_with(997, threads, Schedule::Static, |i, r| (i, r));
+            let wl = partitioned_reduce_with(997, threads, Schedule::Steal, |i, r| (i, r));
+            assert_eq!(st, wl);
         }
     }
 
@@ -341,12 +525,32 @@ mod tests {
     }
 
     #[test]
-    fn no_nested_parallelism() {
-        run_partitioned(8, 4, |_, _| {
-            assert!(in_parallel_region());
-            assert_eq!(threads_for(1_000_000, 1), 1);
+    fn row_ranges_respect_alignment_under_steal() {
+        // Steal refinement of 16-aligned stripes must only cut at 16s.
+        let rows = 160;
+        let mut data = vec![0.0f64; rows];
+        let ranges = partition_aligned(rows, 4, 16);
+        set_steal_grain(Some(1)); // max refinement
+        for_each_row_range(&mut data, 1, &ranges, 16, |_, rr, block| {
+            assert!(rr.start % 16 == 0, "unit start {} not 16-aligned", rr.start);
+            assert!(rr.end % 16 == 0 || rr.end == rows);
+            for v in block.iter_mut() {
+                *v += 1.0;
+            }
         });
-        assert!(!in_parallel_region());
+        set_steal_grain(None);
+        assert!(data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn no_nested_parallelism_under_both_schedules() {
+        for schedule in [Schedule::Static, Schedule::Steal] {
+            run_partitioned_with(8, 4, schedule, |_, _| {
+                assert!(in_parallel_region());
+                assert_eq!(threads_for(1_000_000, 1), 1);
+            });
+            assert!(!in_parallel_region());
+        }
     }
 
     #[test]
@@ -361,5 +565,28 @@ mod tests {
     fn resolve_zero_is_auto() {
         assert!(resolve(0) >= 1);
         assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn resolve_auto_honors_env_cap() {
+        // Regression: resolve(0) used to jump straight to
+        // available_parallelism(), silently ignoring SNSOLVE_THREADS.
+        assert_eq!(resolve_with_env(0, 3), 3);
+        assert_eq!(resolve_with_env(5, 3), 5);
+        assert!(resolve_with_env(0, 0) >= 1);
+        // And the live path agrees with whatever the process env says.
+        assert_eq!(resolve(0), resolve_with_env(0, env_threads()));
+    }
+
+    #[test]
+    fn first_touch_matches_fresh_zeros() {
+        let mut data = vec![f64::NAN; 64 * 8];
+        first_touch_rows(&mut data, 64, 8, 4);
+        assert!(data.iter().all(|&v| v == 0.0 && v.is_sign_positive()));
+        // Above the gate it must still be all-zero under refinement.
+        let rows = PAR_MIN_ELEMS / 8 + 3;
+        let mut big = vec![1.0f64; rows * 8];
+        first_touch_rows(&mut big, rows, 8, 4);
+        assert!(big.iter().all(|&v| v == 0.0));
     }
 }

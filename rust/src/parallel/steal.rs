@@ -1,0 +1,506 @@
+//! Deterministic work-stealing executor for the worker pool.
+//!
+//! The static scheduler in the parent module hands each worker one
+//! contiguous range and waits: one slow band (uneven CSR rows,
+//! cache-miss-heavy FWHT tiles, masked LSQR columns) idles every other
+//! worker. This module keeps utilization high **without giving up a single
+//! bit of reproducibility**:
+//!
+//! * Work is cut into *sequence-numbered units* — a pure function of
+//!   `(total, threads, grain, align)` ([`plan_units`]). The unit list and
+//!   each worker's initial ownership never depend on timing.
+//! * Each worker owns a deque of unit indices (one packed `AtomicU64`
+//!   holding `head:tail` cursors over its contiguous block of the unit
+//!   array). Owners pop from the front; when a worker runs dry it scans
+//!   the other deques in a fixed round-robin order and steals from the
+//!   back. Claims go through CAS, so every unit executes exactly once.
+//! * Determinism does **not** come from replaying an interleaving — it
+//!   comes from the units themselves: every pool kernel writes a disjoint
+//!   output region per index (or reduces in fixed sequence order, see
+//!   [`super::partitioned_reduce`]), and unit boundaries respect the
+//!   kernel's alignment (`align`), so *which* worker runs a unit, and
+//!   *when*, cannot change the bits. `tests/parallel_determinism.rs`
+//!   asserts steal ≡ static ≡ serial at thread counts {1, 2, 4, 7}.
+//!
+//! No external crates: `std::thread::scope` + atomics only.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Scheduling policy for the worker pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// One contiguous range per worker, fixed up front (the pre-steal
+    /// baseline — kept selectable for A/B benches and bisection).
+    Static,
+    /// Sequence-numbered units with work stealing (the default).
+    Steal,
+}
+
+impl Schedule {
+    /// Parse a knob value (`"static"` / `"steal"`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(Schedule::Static),
+            "steal" => Some(Schedule::Steal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Steal => "steal",
+        }
+    }
+}
+
+/// Process-wide configured schedule: 0 = unset, 1 = static, 2 = steal.
+static SCHED_CFG: AtomicU8 = AtomicU8::new(0);
+
+fn env_schedule() -> Option<Schedule> {
+    static ENV: OnceLock<Option<Schedule>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SNSOLVE_SCHEDULE").ok().and_then(|s| Schedule::parse(&s))
+    })
+}
+
+/// Configure the scheduler for this process (`None` = fall through to
+/// `SNSOLVE_SCHEDULE`, then the default). Overrides the environment.
+pub fn set_schedule(s: Option<Schedule>) {
+    let v = match s {
+        None => 0,
+        Some(Schedule::Static) => 1,
+        Some(Schedule::Steal) => 2,
+    };
+    SCHED_CFG.store(v, Ordering::SeqCst);
+}
+
+/// The schedule in effect: [`set_schedule`] → `SNSOLVE_SCHEDULE` → steal.
+pub fn active_schedule() -> Schedule {
+    match SCHED_CFG.load(Ordering::SeqCst) {
+        1 => Schedule::Static,
+        2 => Schedule::Steal,
+        _ => env_schedule().unwrap_or(Schedule::Steal),
+    }
+}
+
+/// Units each worker's range is cut into under the steal schedule (the
+/// auto grain targets this many units per worker, so thieves always find
+/// something at a victim's tail without the units getting cache-hostile).
+const UNITS_PER_WORKER: usize = 8;
+
+/// Test/bench hook: force the steal grain (elements per unit, rounded up
+/// to the kernel's alignment). `None`/0 restores the auto grain. A grain
+/// of 1 yields the maximal unit count — the steal-heaviest schedule — and
+/// must still produce identical bits (asserted by the adversarial tests).
+pub fn set_steal_grain(grain: Option<usize>) {
+    GRAIN_OVERRIDE.store(grain.unwrap_or(0), Ordering::SeqCst);
+}
+
+static GRAIN_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// The steal grain for a region of `total` elements on `threads` workers:
+/// override → `total / (threads · UNITS_PER_WORKER)`, floored at 1.
+pub(crate) fn steal_grain(total: usize, threads: usize) -> usize {
+    let o = GRAIN_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    (total / (threads.max(1) * UNITS_PER_WORKER)).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler observability (satellite: steal/execute counters, queue depth).
+// ---------------------------------------------------------------------------
+
+static REGIONS: AtomicU64 = AtomicU64::new(0);
+static EXECUTED: AtomicU64 = AtomicU64::new(0);
+static STOLEN: AtomicU64 = AtomicU64::new(0);
+static MAX_DEPTH: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative scheduler counters since process start (or the last
+/// [`reset_pool_stats`]). `executed` counts units run through any pool
+/// region (static parts count as one unit each); `stolen` counts units a
+/// worker claimed from another worker's deque; `max_depth` is the deepest
+/// initial per-worker queue seen.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub regions: u64,
+    pub executed: u64,
+    pub stolen: u64,
+    pub max_depth: u64,
+}
+
+impl PoolStats {
+    /// Fraction of executed units that were stolen.
+    pub fn steal_rate(&self) -> f64 {
+        if self.executed == 0 {
+            return 0.0;
+        }
+        self.stolen as f64 / self.executed as f64
+    }
+}
+
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        regions: REGIONS.load(Ordering::Relaxed),
+        executed: EXECUTED.load(Ordering::Relaxed),
+        stolen: STOLEN.load(Ordering::Relaxed),
+        max_depth: MAX_DEPTH.load(Ordering::Relaxed),
+    }
+}
+
+pub fn reset_pool_stats() {
+    REGIONS.store(0, Ordering::Relaxed);
+    EXECUTED.store(0, Ordering::Relaxed);
+    STOLEN.store(0, Ordering::Relaxed);
+    MAX_DEPTH.store(0, Ordering::Relaxed);
+}
+
+/// Record a region run under the static schedule (`parts` one-range units,
+/// depth 1, nothing stealable).
+pub(crate) fn record_static_region(parts: usize) {
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    EXECUTED.fetch_add(parts as u64, Ordering::Relaxed);
+    MAX_DEPTH.fetch_max(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Unit planning — a pure function of (total, threads, grain, align).
+// ---------------------------------------------------------------------------
+
+/// A deterministic decomposition of an index space into sequence-numbered
+/// work units plus each worker's initial ownership.
+#[derive(Clone, Debug)]
+pub struct StealPlan {
+    /// Contiguous, ascending, disjoint ranges tiling the index space;
+    /// the vector index is the unit's sequence number.
+    pub units: Vec<Range<usize>>,
+    /// `worker_units[w]` = the unit sequence numbers worker `w` owns
+    /// initially (a contiguous block; may be empty).
+    pub worker_units: Vec<Range<usize>>,
+}
+
+impl StealPlan {
+    /// Deepest initial per-worker queue.
+    pub fn max_depth(&self) -> usize {
+        self.worker_units.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+}
+
+/// Cut `[0, total)` for `threads` workers: the static parts come from
+/// [`super::partition_aligned`] (so worker ownership matches the static
+/// schedule exactly), then each part is subdivided into units of at least
+/// `grain` elements with every interior boundary a multiple of `align`.
+pub fn plan_units(total: usize, threads: usize, grain: usize, align: usize) -> StealPlan {
+    plan_from_parts(&super::partition_aligned(total, threads, align), grain, align)
+}
+
+/// [`plan_units`] over caller-supplied static parts (they must be the
+/// ascending, disjoint ranges the static schedule would use — e.g. from
+/// [`super::partition_aligned`] with the kernel's own alignment).
+pub fn plan_from_parts(parts: &[Range<usize>], grain: usize, align: usize) -> StealPlan {
+    let align = align.max(1);
+    // Round the grain up to the alignment; saturate so `grain = usize::MAX`
+    // (one unit per part — how ordered reductions keep their partial count)
+    // cannot overflow.
+    let step = grain.max(1).div_ceil(align).saturating_mul(align);
+    let mut units = Vec::new();
+    let mut worker_units = Vec::with_capacity(parts.len());
+    for part in parts {
+        let first = units.len();
+        let mut s = part.start;
+        while s < part.end {
+            let e = part.end.min(s.saturating_add(step));
+            units.push(s..e);
+            s = e;
+        }
+        worker_units.push(first..units.len());
+    }
+    StealPlan { units, worker_units }
+}
+
+// ---------------------------------------------------------------------------
+// The executor.
+// ---------------------------------------------------------------------------
+
+/// One worker's deque: `head:u32 | tail:u32` cursors packed into a single
+/// atomic, covering a fixed block of the unit array. The owner claims from
+/// the front (`head += 1`), thieves from the back (`tail -= 1`); `head`
+/// only grows and `tail` only shrinks, so a successful CAS is always a
+/// unique claim (no ABA).
+fn pack(head: u32, tail: u32) -> u64 {
+    (u64::from(head) << 32) | u64::from(tail)
+}
+
+fn pop_front(d: &AtomicU64) -> Option<usize> {
+    let mut s = d.load(Ordering::Acquire);
+    loop {
+        let (h, t) = ((s >> 32) as u32, s as u32);
+        if h >= t {
+            return None;
+        }
+        match d.compare_exchange_weak(s, pack(h + 1, t), Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return Some(h as usize),
+            Err(cur) => s = cur,
+        }
+    }
+}
+
+fn pop_back(d: &AtomicU64) -> Option<usize> {
+    let mut s = d.load(Ordering::Acquire);
+    loop {
+        let (h, t) = ((s >> 32) as u32, s as u32);
+        if h >= t {
+            return None;
+        }
+        match d.compare_exchange_weak(s, pack(h, t - 1), Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return Some((t - 1) as usize),
+            Err(cur) => s = cur,
+        }
+    }
+}
+
+/// Execute every unit of `plan` exactly once on scoped workers (worker 0
+/// is the calling thread), stealing across deques as workers run dry.
+///
+/// `f(seq, range)` must only touch state that is disjoint per index (or
+/// shared immutably) — the same contract as [`super::run_partitioned`],
+/// strengthened to hold under any refinement of the static parts at the
+/// plan's alignment. No commit ordering is needed for such kernels; the
+/// scope join is the only barrier.
+pub fn run_units<F>(plan: &StealPlan, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let nunits = plan.units.len();
+    if nunits == 0 {
+        return;
+    }
+    debug_assert!(nunits <= u32::MAX as usize, "unit count overflows the packed cursors");
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    EXECUTED.fetch_add(nunits as u64, Ordering::Relaxed);
+    MAX_DEPTH.fetch_max(plan.max_depth() as u64, Ordering::Relaxed);
+    let nworkers = plan.worker_units.len();
+    if nworkers <= 1 || nunits == 1 {
+        super::enter_pool(|| {
+            for (seq, u) in plan.units.iter().enumerate() {
+                f(seq, u.clone());
+            }
+        });
+        return;
+    }
+    let deques: Vec<AtomicU64> = plan
+        .worker_units
+        .iter()
+        .map(|r| AtomicU64::new(pack(r.start as u32, r.end as u32)))
+        .collect();
+    let stolen = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for id in 1..nworkers {
+            let (deques, units, f, stolen) = (&deques, &plan.units, &f, &stolen);
+            s.spawn(move || super::enter_pool(|| worker_loop(id, deques, units, f, stolen)));
+        }
+        super::enter_pool(|| worker_loop(0, &deques, &plan.units, &f, &stolen));
+    });
+    STOLEN.fetch_add(stolen.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn worker_loop<F>(
+    me: usize,
+    deques: &[AtomicU64],
+    units: &[Range<usize>],
+    f: &F,
+    stolen: &AtomicU64,
+) where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let nworkers = deques.len();
+    let mut nstolen = 0u64;
+    loop {
+        if let Some(seq) = pop_front(&deques[me]) {
+            f(seq, units[seq].clone());
+            continue;
+        }
+        // Own deque dry: scan victims in fixed round-robin order. No unit
+        // is ever *produced* mid-region, so one full empty scan means done
+        // (units still in flight on other workers are joined by the scope).
+        let mut found = false;
+        for k in 1..nworkers {
+            let victim = (me + k) % nworkers;
+            if let Some(seq) = pop_back(&deques[victim]) {
+                nstolen += 1;
+                f(seq, units[seq].clone());
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            break;
+        }
+    }
+    if nstolen > 0 {
+        stolen.fetch_add(nstolen, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_plan_tiles(plan: &StealPlan, total: usize, align: usize) {
+        let units = &plan.units;
+        if total == 0 {
+            assert!(units.is_empty());
+            return;
+        }
+        assert_eq!(units[0].start, 0);
+        assert_eq!(units.last().unwrap().end, total);
+        for w in units.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        for u in units {
+            assert!(!u.is_empty());
+        }
+        // Worker blocks tile the unit list in order.
+        let mut next = 0;
+        for wr in &plan.worker_units {
+            assert_eq!(wr.start, next);
+            next = wr.end;
+        }
+        assert_eq!(next, units.len());
+        // Interior unit boundaries of aligned parts are align multiples.
+        for w in units.windows(2) {
+            if w[0].end != total {
+                assert_eq!(w[0].end % align, 0, "unit boundary {} not {}-aligned", w[0].end, align);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_pure_and_tiles() {
+        for (total, threads, grain, align) in [
+            (1000usize, 4usize, 32usize, 1usize),
+            (1000, 4, 32, 8),
+            (37, 3, 5, 4),
+            (100, 16, 1, 1),
+            (0, 4, 16, 8),
+        ] {
+            let a = plan_units(total, threads, grain, align);
+            let b = plan_units(total, threads, grain, align);
+            assert_eq!(a.units, b.units);
+            assert_eq!(a.worker_units, b.worker_units);
+            assert_plan_tiles(&a, total, align);
+        }
+    }
+
+    #[test]
+    fn plan_owners_match_static_parts() {
+        // Every worker's owned units concatenate to exactly its static part.
+        for (total, threads, grain, align) in
+            [(1000usize, 7usize, 13usize, 1usize), (513, 4, 8, 16), (64, 9, 1, 4)]
+        {
+            let parts = crate::parallel::partition_aligned(total, threads, align);
+            let plan = plan_units(total, threads, grain, align);
+            assert_eq!(plan.worker_units.len(), parts.len());
+            for (part, wr) in parts.iter().zip(&plan.worker_units) {
+                assert_eq!(plan.units[wr.start].start, part.start);
+                assert_eq!(plan.units[wr.end - 1].end, part.end);
+            }
+        }
+    }
+
+    #[test]
+    fn grain_larger_than_total_is_one_unit_per_part() {
+        for grain in [1000usize, usize::MAX] {
+            let plan = plan_units(100, 4, grain, 8);
+            assert_eq!(plan.units.len(), plan.worker_units.len());
+            assert!(plan.worker_units.iter().all(|r| r.len() == 1));
+            assert_plan_tiles(&plan, 100, 8);
+        }
+    }
+
+    #[test]
+    fn threads_exceed_items() {
+        // 3 items on 8 workers: at most 3 non-empty parts, every index once.
+        let plan = plan_units(3, 8, 4, 1);
+        assert_plan_tiles(&plan, 3, 1);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        run_units(&plan, |_, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_length_region_is_a_noop() {
+        let plan = plan_units(0, 4, 16, 8);
+        run_units(&plan, |_, _| panic!("no units to run"));
+    }
+
+    #[test]
+    fn every_unit_runs_exactly_once_under_forced_stealing() {
+        // Unit 0 blocks until every other unit has run, so workers 1..W
+        // must drain their own deques and then steal the rest of worker
+        // 0's — the steal-heaviest interleaving this machine can produce.
+        let total = 4096;
+        let plan = plan_units(total, 4, 64, 1);
+        let nunits = plan.units.len();
+        assert!(nunits >= 8, "need a deep deque to steal from");
+        let done = AtomicUsize::new(0);
+        let hits: Vec<AtomicUsize> = (0..total).map(|_| AtomicUsize::new(0)).collect();
+        let before = pool_stats();
+        run_units(&plan, |seq, r| {
+            if seq == 0 {
+                while done.load(Ordering::Acquire) < nunits - 1 {
+                    std::thread::yield_now();
+                }
+            }
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+            done.fetch_add(1, Ordering::Release);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let after = pool_stats();
+        assert_eq!(after.executed - before.executed, nunits as u64);
+        assert!(after.stolen > before.stolen, "forced schedule must actually steal");
+        assert!(after.max_depth >= plan.max_depth() as u64);
+    }
+
+    #[test]
+    fn deque_claims_are_unique() {
+        let d = AtomicU64::new(pack(0, 5));
+        let mut got = Vec::new();
+        while let Some(i) = pop_front(&d) {
+            got.push(i);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        let d = AtomicU64::new(pack(2, 5));
+        assert_eq!(pop_back(&d), Some(4));
+        assert_eq!(pop_front(&d), Some(2));
+        assert_eq!(pop_back(&d), Some(3));
+        assert_eq!(pop_back(&d), None);
+        assert_eq!(pop_front(&d), None);
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        assert_eq!(Schedule::parse("static"), Some(Schedule::Static));
+        assert_eq!(Schedule::parse(" Steal "), Some(Schedule::Steal));
+        assert_eq!(Schedule::parse("guided"), None);
+        assert_eq!(Schedule::parse(Schedule::Steal.name()), Some(Schedule::Steal));
+        assert_eq!(Schedule::parse(Schedule::Static.name()), Some(Schedule::Static));
+    }
+
+    #[test]
+    fn steal_rate_math() {
+        let s = PoolStats { regions: 1, executed: 8, stolen: 2, max_depth: 4 };
+        assert!((s.steal_rate() - 0.25).abs() < 1e-15);
+        assert_eq!(PoolStats::default().steal_rate(), 0.0);
+    }
+}

@@ -122,6 +122,10 @@ impl SketchOperator for CountSketch {
             return b;
         }
         let s = self.s;
+        // First-touch: fault the output's pages in on the worker that owns
+        // each band below (NUMA groundwork; 0.0-over-0.0 is bitwise
+        // neutral with the zeroed allocation).
+        crate::parallel::first_touch_rows(b.data_mut(), s, n, threads);
         let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
             if inverted {
@@ -168,6 +172,10 @@ impl SketchOperator for CountSketch {
             return b;
         }
         let s = self.s;
+        // First-touch: fault the output's pages in on the worker that owns
+        // each band below (NUMA groundwork; 0.0-over-0.0 is bitwise
+        // neutral with the zeroed allocation).
+        crate::parallel::first_touch_rows(b.data_mut(), s, n, threads);
         let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
             if inverted {

@@ -104,6 +104,10 @@ impl SketchOperator for SparseSignSketch {
             return b;
         }
         let s = self.s;
+        // First-touch: fault the output's pages in on the worker that owns
+        // each band below (NUMA groundwork; 0.0-over-0.0 is bitwise
+        // neutral with the zeroed allocation).
+        crate::parallel::first_touch_rows(b.data_mut(), s, n, threads);
         let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
             if inverted {
@@ -151,6 +155,10 @@ impl SketchOperator for SparseSignSketch {
             return b;
         }
         let s = self.s;
+        // First-touch: fault the output's pages in on the worker that owns
+        // each band below (NUMA groundwork; 0.0-over-0.0 is bitwise
+        // neutral with the zeroed allocation).
+        crate::parallel::first_touch_rows(b.data_mut(), s, n, threads);
         let inverted = super::inverted_scatter_enabled();
         crate::parallel::for_each_row_block(b.data_mut(), s, n, threads, |_, band, block| {
             if inverted {

@@ -107,11 +107,17 @@ impl SketchOperator for SrhtSketch {
     fn apply_dense_ws(&self, a: &DenseMatrix, ws: &mut SketchWorkspace) -> DenseMatrix {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
-        let mut buf = ws.take(self.m_pad * n);
+        let mut buf = ws.take_overwrite(self.m_pad * n);
+        let threads = self.copy_threads(n);
+        // First-touch: zero the pad buffer in the same row bands the
+        // sign-flip copy below will stream, so a recycled buffer's pages
+        // fault in on the worker that owns each band instead of being
+        // re-zeroed serially on the calling thread (NUMA groundwork;
+        // 0.0-fill is bitwise identical to the zeroed take).
+        crate::parallel::first_touch_rows(&mut buf, self.m_pad, n, threads);
         // Parallel: the sign-flip copy shards the padded buffer by disjoint
         // row blocks (bitwise identical at any thread count); the FWHT then
         // parallelizes internally over column bands.
-        let threads = self.copy_threads(n);
         crate::parallel::for_each_row_block(&mut buf, self.m_pad, n, threads, |_, rows, block| {
             for i in rows.start..rows.end.min(self.m) {
                 let sgn = self.sign[i] as f64;
@@ -133,8 +139,12 @@ impl SketchOperator for SrhtSketch {
     fn apply_csr_ws(&self, a: &CsrMatrix, ws: &mut SketchWorkspace) -> DenseMatrix {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
-        let mut buf = ws.take(self.m_pad * n);
+        let mut buf = ws.take_overwrite(self.m_pad * n);
         let threads = self.copy_threads(n);
+        // First-touch band placement, as in `apply_dense_ws`; the CSR copy
+        // only writes nonzero positions, so the explicit zero pass also
+        // restores the blank cells a recycled buffer needs.
+        crate::parallel::first_touch_rows(&mut buf, self.m_pad, n, threads);
         crate::parallel::for_each_row_block(&mut buf, self.m_pad, n, threads, |_, rows, block| {
             for i in rows.start..rows.end.min(self.m) {
                 let (idx, vals) = a.row(i);

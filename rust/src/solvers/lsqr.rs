@@ -446,6 +446,117 @@ struct BlockCol {
     history: Vec<f64>,
 }
 
+/// One column's Givens rotation, x/w update, norm estimates and stopping
+/// tests — the exact scalar recurrences of `lsqr`, operating on column
+/// `j`'s state (`c`) and its rows of x/w/v. Free of any cross-column
+/// reads or writes, which is what lets [`lsqr_block_ws`] shard the active
+/// set across the worker pool bitwise-identically to the serial loop.
+#[allow(clippy::too_many_arguments)]
+fn update_column(
+    c: &mut BlockCol,
+    xrow: &mut [f64],
+    wrow: &mut [f64],
+    vrow: &[f64],
+    cfg: &LsqrConfig,
+    dampsq: f64,
+    eps: f64,
+    ctol: f64,
+    itn: usize,
+    iter_lim: usize,
+) {
+    let (rhobar1, psi) = if cfg.damp > 0.0 {
+        let rhobar1 = (c.rhobar * c.rhobar + dampsq).sqrt();
+        let cs1 = c.rhobar / rhobar1;
+        let sn1 = cfg.damp / rhobar1;
+        let psi = sn1 * c.phibar;
+        c.phibar *= cs1;
+        (rhobar1, psi)
+    } else {
+        (c.rhobar, 0.0)
+    };
+
+    let rho = (rhobar1 * rhobar1 + c.beta * c.beta).sqrt();
+    let cs = rhobar1 / rho;
+    let sn = c.beta / rho;
+    let theta = sn * c.alpha;
+    c.rhobar = -cs * c.alpha;
+    let phi = cs * c.phibar;
+    c.phibar *= sn;
+    let tau = sn * phi;
+
+    let t1 = phi / rho;
+    let t2 = -theta / rho;
+    let inv_rho = 1.0 / rho;
+    let mut dknorm2 = 0.0;
+    for ((xi, wslot), &vi) in xrow.iter_mut().zip(wrow.iter_mut()).zip(vrow.iter()) {
+        let wi = *wslot;
+        let dk = wi * inv_rho;
+        dknorm2 += dk * dk;
+        *xi += t1 * wi;
+        *wslot = vi + t2 * wi;
+    }
+    c.ddnorm += dknorm2;
+
+    let delta = c.sn2 * rho;
+    let gambar = -c.cs2 * rho;
+    let rhs = phi - delta * c.z;
+    let zbar = rhs / gambar;
+    c.xnorm = (c.xxnorm + zbar * zbar).sqrt();
+    let gamma = (gambar * gambar + theta * theta).sqrt();
+    c.cs2 = gambar / gamma;
+    c.sn2 = theta / gamma;
+    c.z = rhs / gamma;
+    c.xxnorm += c.z * c.z;
+
+    c.acond = c.anorm * c.ddnorm.sqrt();
+    let res1 = c.phibar * c.phibar;
+    c.res2 += psi * psi;
+    c.rnorm = (res1 + c.res2).sqrt();
+    c.arnorm = c.alpha * tau.abs();
+
+    let r1sq = c.rnorm * c.rnorm - dampsq * c.xxnorm;
+    c.r1norm = r1sq.abs().sqrt();
+    if r1sq < 0.0 {
+        c.r1norm = -c.r1norm;
+    }
+    c.r2norm = c.rnorm;
+
+    if cfg.track_history {
+        c.history.push(c.rnorm);
+    }
+
+    let test1 = c.rnorm / c.bnorm;
+    let test2 = c.arnorm / (c.anorm * c.rnorm + eps);
+    let test3 = 1.0 / (c.acond + eps);
+    let t1s = test1 / (1.0 + c.anorm * c.xnorm / c.bnorm);
+    let rtol = cfg.btol + cfg.atol * c.anorm * c.xnorm / c.bnorm;
+
+    let mut istop = StopReason::IterLimit;
+    if 1.0 + test3 <= 1.0 {
+        istop = StopReason::ConditionMachineEps;
+    }
+    if 1.0 + test2 <= 1.0 {
+        istop = StopReason::LeastSquaresMachineEps;
+    }
+    if 1.0 + t1s <= 1.0 {
+        istop = StopReason::ResidualMachineEps;
+    }
+    if test3 <= ctol {
+        istop = StopReason::ConditionLimit;
+    }
+    if test2 <= cfg.atol {
+        istop = StopReason::LeastSquaresTol;
+    }
+    if test1 <= rtol {
+        istop = StopReason::ResidualTol;
+    }
+    if istop != StopReason::IterLimit || itn >= iter_lim {
+        c.istop = istop;
+        c.itn = itn;
+        c.done = true;
+    }
+}
+
 /// Blocked multi-RHS LSQR: solve `min ‖A xᵣ − bᵣ‖² + damp²‖xᵣ‖²` for the k
 /// right-hand sides stored as the rows of `b` (k×m; row r = RHS r), with
 /// optional per-RHS warm starts `x0` (k×n).
@@ -687,106 +798,53 @@ pub fn lsqr_block_ws<Op: LinearOperator + ?Sized>(
         }
 
         // Per-column Givens rotation, x/w update, norm estimates and
-        // stopping tests — the exact scalar recurrences of lsqr.
-        for &j in &active {
-            let c = &mut cols[j];
-
-            let (rhobar1, psi) = if cfg.damp > 0.0 {
-                let rhobar1 = (c.rhobar * c.rhobar + dampsq).sqrt();
-                let cs1 = c.rhobar / rhobar1;
-                let sn1 = cfg.damp / rhobar1;
-                let psi = sn1 * c.phibar;
-                c.phibar *= cs1;
-                (rhobar1, psi)
-            } else {
-                (c.rhobar, 0.0)
-            };
-
-            let rho = (rhobar1 * rhobar1 + c.beta * c.beta).sqrt();
-            let cs = rhobar1 / rho;
-            let sn = c.beta / rho;
-            let theta = sn * c.alpha;
-            c.rhobar = -cs * c.alpha;
-            let phi = cs * c.phibar;
-            c.phibar *= sn;
-            let tau = sn * phi;
-
-            let t1 = phi / rho;
-            let t2 = -theta / rho;
-            let inv_rho = 1.0 / rho;
-            let mut dknorm2 = 0.0;
-            {
-                let xrow = x.row_mut(j);
-                let wrow = w.row_mut(j);
-                let vrow = v.row(j);
-                for i in 0..n {
-                    let wi = wrow[i];
-                    let dk = wi * inv_rho;
-                    dknorm2 += dk * dk;
-                    xrow[i] += t1 * wi;
-                    wrow[i] = vrow[i] + t2 * wi;
+        // stopping tests — the exact scalar recurrences of lsqr. Columns
+        // are independent (disjoint cols[j] state, disjoint rows of
+        // x/w/v), so the active set shards across the worker pool behind
+        // the usual work gate; every column runs the identical scalar
+        // recurrence whatever the schedule, so the result is bitwise
+        // identical to the serial loop at any thread count.
+        let threads = if active.len().saturating_mul(n) < crate::parallel::PAR_MIN_ELEMS {
+            1
+        } else {
+            crate::parallel::threads_for(active.len(), 1)
+        };
+        if threads <= 1 {
+            for &j in &active {
+                update_column(
+                    &mut cols[j],
+                    x.row_mut(j),
+                    w.row_mut(j),
+                    v.row(j),
+                    cfg,
+                    dampsq,
+                    eps,
+                    ctol,
+                    itn,
+                    iter_lim,
+                );
+            }
+        } else {
+            let cols_ptr = crate::parallel::SendPtr(cols.as_mut_ptr());
+            let x_ptr = crate::parallel::SendMutPtr(x.data_mut().as_mut_ptr());
+            let w_ptr = crate::parallel::SendMutPtr(w.data_mut().as_mut_ptr());
+            let (vdata, active_ref) = (v.data(), &active);
+            crate::parallel::run_partitioned(active.len(), threads, |_, range| {
+                for ai in range {
+                    let j = active_ref[ai];
+                    // SAFETY: `active` holds distinct column indices and
+                    // each index lands in exactly one unit, so column j's
+                    // state and row j of x/w have a unique accessor; all
+                    // buffers outlive the pool region.
+                    unsafe {
+                        let c = &mut *cols_ptr.0.add(j);
+                        let xrow = std::slice::from_raw_parts_mut(x_ptr.0.add(j * n), n);
+                        let wrow = std::slice::from_raw_parts_mut(w_ptr.0.add(j * n), n);
+                        let vrow = &vdata[j * n..(j + 1) * n];
+                        update_column(c, xrow, wrow, vrow, cfg, dampsq, eps, ctol, itn, iter_lim);
+                    }
                 }
-            }
-            c.ddnorm += dknorm2;
-
-            let delta = c.sn2 * rho;
-            let gambar = -c.cs2 * rho;
-            let rhs = phi - delta * c.z;
-            let zbar = rhs / gambar;
-            c.xnorm = (c.xxnorm + zbar * zbar).sqrt();
-            let gamma = (gambar * gambar + theta * theta).sqrt();
-            c.cs2 = gambar / gamma;
-            c.sn2 = theta / gamma;
-            c.z = rhs / gamma;
-            c.xxnorm += c.z * c.z;
-
-            c.acond = c.anorm * c.ddnorm.sqrt();
-            let res1 = c.phibar * c.phibar;
-            c.res2 += psi * psi;
-            c.rnorm = (res1 + c.res2).sqrt();
-            c.arnorm = c.alpha * tau.abs();
-
-            let r1sq = c.rnorm * c.rnorm - dampsq * c.xxnorm;
-            c.r1norm = r1sq.abs().sqrt();
-            if r1sq < 0.0 {
-                c.r1norm = -c.r1norm;
-            }
-            c.r2norm = c.rnorm;
-
-            if cfg.track_history {
-                c.history.push(c.rnorm);
-            }
-
-            let test1 = c.rnorm / c.bnorm;
-            let test2 = c.arnorm / (c.anorm * c.rnorm + eps);
-            let test3 = 1.0 / (c.acond + eps);
-            let t1s = test1 / (1.0 + c.anorm * c.xnorm / c.bnorm);
-            let rtol = cfg.btol + cfg.atol * c.anorm * c.xnorm / c.bnorm;
-
-            let mut istop = StopReason::IterLimit;
-            if 1.0 + test3 <= 1.0 {
-                istop = StopReason::ConditionMachineEps;
-            }
-            if 1.0 + test2 <= 1.0 {
-                istop = StopReason::LeastSquaresMachineEps;
-            }
-            if 1.0 + t1s <= 1.0 {
-                istop = StopReason::ResidualMachineEps;
-            }
-            if test3 <= ctol {
-                istop = StopReason::ConditionLimit;
-            }
-            if test2 <= cfg.atol {
-                istop = StopReason::LeastSquaresTol;
-            }
-            if test1 <= rtol {
-                istop = StopReason::ResidualTol;
-            }
-            if istop != StopReason::IterLimit || itn >= iter_lim {
-                c.istop = istop;
-                c.itn = itn;
-                c.done = true;
-            }
+            });
         }
     }
 

@@ -24,6 +24,14 @@
 //!     stripes, PR 4) are **bitwise identical** to the serial chains at
 //!     every thread count and on every backend.
 //!
+//! (f) the work-stealing scheduler (PR 6) is **bitwise identical** to the
+//!     static range-sharded baseline on every kernel — GEMM, FWHT,
+//!     matvec/matvec_t, every sketch apply, the blocked triangular solve
+//!     and the LSQR block loop — at thread counts {1, 2, 4, 7}, both at
+//!     the auto grain and under an adversarial grain-1 decomposition that
+//!     maximizes stealing. Ordered reduction + alignment-quantized unit
+//!     boundaries make the steal interleaving unobservable.
+//!
 //! The thread-count and SIMD-backend sweeps live in ONE test function: the
 //! pool size and the kernel backend are process-wide settings, and keeping
 //! the sweeps single-threaded at the test level makes the
@@ -292,8 +300,111 @@ fn parallel_paths_match_serial_across_thread_counts() {
         }
     }
 
+    // --- scheduler sweep (f) --------------------------------------------
+    // The work-stealing pool must be bitwise identical to the static
+    // range-sharded baseline on every kernel, at every thread count, and
+    // under an adversarial steal-heavy decomposition (grain 1: every unit
+    // is one alignment quantum, so almost everything a worker runs beyond
+    // its first unit was stolen or contended). The LSQR block loop rides
+    // along because its per-column recurrences shard over the same pool.
+    snsolve::simd::clear_choice();
+    let lsqr_a = DenseMatrix::gaussian(900, 40, &mut g);
+    let lsqr_b = {
+        let mut rhs = DenseMatrix::zeros(12, 900);
+        for r in 0..12 {
+            let xs = g.gaussian_vec(40);
+            rhs.row_mut(r).copy_from_slice(&lsqr_a.matvec(&xs));
+        }
+        rhs
+    };
+    let lsqr_cfg = snsolve::solvers::lsqr::LsqrConfig {
+        atol: 1e-10,
+        btol: 1e-10,
+        ..Default::default()
+    };
+    // Static references at each thread count (grain irrelevant: the static
+    // schedule never splits below one range per worker).
+    snsolve::parallel::set_schedule(Some(snsolve::parallel::Schedule::Static));
+    let static_ref: Vec<_> = SWEEP
+        .iter()
+        .map(|&t| {
+            snsolve::parallel::set_threads(t);
+            let gemm_s = gemm::matmul(&ga, &gb).unwrap();
+            let mut fwht_s = fdata.clone();
+            hadamard::fwht_columns_inplace(&mut fwht_s, frows, fcols).unwrap();
+            let mv_s = mva.matvec(&mvx);
+            let mvt_s = mva.matvec_t(&mvu);
+            let sketches: Vec<DenseMatrix> = SketchKind::ALL
+                .iter()
+                .map(|&kind| sketch::build(kind, ss, sm, 4242).apply_dense(&sa_dense))
+                .collect();
+            let rsm_s = right_solve_upper_multi(&a_rs, &rtri).unwrap();
+            let lsqr_s = snsolve::solvers::lsqr::lsqr_block(&lsqr_a, &lsqr_b, None, &lsqr_cfg);
+            (gemm_s, fwht_s, mv_s, mvt_s, sketches, rsm_s, lsqr_s)
+        })
+        .collect();
+    // All static schedules agree with each other (and with the pre-refactor
+    // 1-thread references asserted bitwise above).
+    for (i, &t) in SWEEP.iter().enumerate() {
+        assert_eq!(static_ref[i].0, static_ref[0].0, "static gemm differs at {t} threads");
+        assert_eq!(static_ref[i].6.len(), static_ref[0].6.len());
+    }
+    snsolve::parallel::set_schedule(Some(snsolve::parallel::Schedule::Steal));
+    for grain in [None, Some(1)] {
+        snsolve::parallel::set_steal_grain(grain);
+        for (i, &t) in SWEEP.iter().enumerate() {
+            snsolve::parallel::set_threads(t);
+            let label = if grain.is_some() { "steal/adversarial" } else { "steal/auto" };
+            let (gemm_s, fwht_s, mv_s, mvt_s, sketches, rsm_s, lsqr_s) = &static_ref[i];
+            assert_eq!(
+                &gemm::matmul(&ga, &gb).unwrap(),
+                gemm_s,
+                "{label}: gemm != static at {t} threads"
+            );
+            let mut d = fdata.clone();
+            hadamard::fwht_columns_inplace(&mut d, frows, fcols).unwrap();
+            assert_eq!(&d, fwht_s, "{label}: fwht != static at {t} threads");
+            assert_eq!(&mva.matvec(&mvx), mv_s, "{label}: matvec != static at {t} threads");
+            assert_eq!(&mva.matvec_t(&mvu), mvt_s, "{label}: matvec_t != static at {t} threads");
+            for (kind, sref) in SketchKind::ALL.iter().zip(sketches.iter()) {
+                assert_eq!(
+                    &sketch::build(*kind, ss, sm, 4242).apply_dense(&sa_dense),
+                    sref,
+                    "{label}: {} != static at {t} threads",
+                    kind.name()
+                );
+            }
+            assert_eq!(
+                &right_solve_upper_multi(&a_rs, &rtri).unwrap(),
+                rsm_s,
+                "{label}: right_solve_upper_multi != static at {t} threads"
+            );
+            let lsqr_t = snsolve::solvers::lsqr::lsqr_block(&lsqr_a, &lsqr_b, None, &lsqr_cfg);
+            assert_eq!(lsqr_t.len(), lsqr_s.len());
+            for (r, (got, want)) in lsqr_t.iter().zip(lsqr_s.iter()).enumerate() {
+                assert_eq!(got.x, want.x, "{label}: lsqr_block x[{r}] != static at {t} threads");
+                assert_eq!(
+                    got.itn, want.itn,
+                    "{label}: lsqr_block itn[{r}] != static at {t} threads"
+                );
+            }
+            // Steal executions actually happened under the adversarial
+            // decomposition at multi-thread counts (the property above is
+            // vacuous if everything ran serially).
+            if grain.is_some() && t >= 4 {
+                let stats = snsolve::parallel::pool_stats();
+                assert!(
+                    stats.executed > 0 && stats.max_depth > 1,
+                    "adversarial sweep never queued multiple units per worker"
+                );
+            }
+        }
+    }
+    snsolve::parallel::set_steal_grain(None);
+
     // Restore the ambient (auto) configuration for other tests.
     snsolve::parallel::set_threads(0);
+    snsolve::parallel::set_schedule(None);
     snsolve::simd::clear_choice();
 }
 
