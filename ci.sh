@@ -59,6 +59,19 @@ for sched in steal static; do
   done
 done
 
+# Serving-tier e2e under both wire clients: the suite's env-selected flow
+# runs through the legacy v1 blocking client and the pipelined v2 client,
+# alongside the always-on pipelining/regression tests.
+for client in legacy pipelined; do
+  echo "== service e2e (SNSOLVE_CLIENT=$client) =="
+  SNSOLVE_CLIENT=$client cargo test -q --test service_e2e
+done
+
+# Front-end bench smoke: closed-loop serial vs pipelined sweep in quick
+# mode; records BENCH_frontend_pipeline.{json,csv} with p50/p95/p99 + QPS.
+echo "== frontend pipeline bench (quick) =="
+SNSOLVE_BENCH_QUICK=1 cargo bench --bench coordinator_throughput -- --frontend
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

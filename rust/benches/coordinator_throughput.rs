@@ -4,13 +4,17 @@
 //! direct in-thread solve, and the blocked multi-RHS sweep
 //! (`--block-rhs` runs only that sweep): 16-RHS same-matrix batches solved
 //! by one `lsqr_block` vs the per-item loop, reporting solves/sec and the
-//! speedup ratio.
+//! speedup ratio. `--frontend` runs only the TCP front-end sweep: closed-loop
+//! load through a serial v1 client vs a pipelined v2 client at depth 16,
+//! with client-side p50/p95/p99 latency, saved as `BENCH_frontend_pipeline`.
 
-use std::time::Duration;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use snsolve::bench_harness::report::Table;
 use snsolve::coordinator::batcher::BatcherConfig;
 use snsolve::coordinator::metrics::Metrics;
+use snsolve::coordinator::tcp::{Client, PipelinedClient, TcpServer};
 use snsolve::coordinator::{Service, ServiceConfig, SolveRequest, SolverChoice};
 use snsolve::linalg::{DenseMatrix, Matrix};
 use snsolve::rng::{GaussianSource, Xoshiro256pp};
@@ -96,9 +100,106 @@ fn block_rhs_sweep(a: &DenseMatrix, b: &[f64], requests: usize) {
     let _ = table.save("coordinator_block_rhs");
 }
 
+/// Exact percentile over a pre-sorted latency vector (nearest-rank).
+fn pctl(sorted_us: &[u64], q: f64) -> u64 {
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx]
+}
+
+/// The `--frontend` sweep: closed-loop load through the TCP front-end,
+/// one blocking v1 client vs one pipelined v2 client at depth 16, with
+/// client-side latency percentiles. RTT and batcher wait dominate on the
+/// small matrix, so the pipelined client's amortization is what's measured.
+fn frontend_sweep(requests: usize) {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(6));
+    let a = DenseMatrix::gaussian(256, 16, &mut g);
+    let b = a.matvec(&g.gaussian_vec(16));
+
+    let svc = Service::start(ServiceConfig {
+        workers: 2,
+        queue_capacity: 1024,
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(500) },
+        ..Default::default()
+    });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let mut table = Table::new(
+        "coordinator — TCP front-end: serial vs pipelined (depth 16)",
+        &["mode", "requests", "wall_s", "qps", "p50_us", "p95_us", "p99_us"],
+    );
+
+    // Serial: one request in flight at a time. Each solo request also ages
+    // out of the batcher alone, so it pays the full max_wait.
+    let mut client = Client::connect(addr).expect("connect v1");
+    let id = client.register_dense(&a).expect("register");
+    client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("warmup");
+    let mut lat = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let s = Instant::now();
+        client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+        lat.push(s.elapsed().as_micros() as u64);
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+    lat.sort_unstable();
+    table.row(vec![
+        "serial (v1 blocking)".into(),
+        requests.to_string(),
+        format!("{serial_wall:.3}"),
+        format!("{:.1}", requests as f64 / serial_wall),
+        pctl(&lat, 0.50).to_string(),
+        pctl(&lat, 0.95).to_string(),
+        pctl(&lat, 0.99).to_string(),
+    ]);
+
+    // Pipelined: keep 16 requests in flight on one socket; harvest the
+    // oldest ticket and immediately refill the window.
+    let depth = 16usize;
+    let mut pc = PipelinedClient::connect(addr).expect("connect v2");
+    let mut lat = Vec::with_capacity(requests);
+    let mut window = VecDeque::new();
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    while lat.len() < requests {
+        while submitted < requests && window.len() < depth {
+            let s = Instant::now();
+            let t = pc.submit_solve(id, &b, SolverChoice::Saa, 1e-10, 0).expect("submit");
+            window.push_back((s, t));
+            submitted += 1;
+        }
+        let (s, t) = window.pop_front().expect("window nonempty");
+        let (_sol, at) = t.wait_timed().expect("pipelined solve");
+        lat.push(at.duration_since(s).as_micros() as u64);
+    }
+    let pipe_wall = t0.elapsed().as_secs_f64();
+    lat.sort_unstable();
+    table.row(vec![
+        format!("pipelined (v2 depth {depth})"),
+        requests.to_string(),
+        format!("{pipe_wall:.3}"),
+        format!("{:.1}", requests as f64 / pipe_wall),
+        pctl(&lat, 0.50).to_string(),
+        pctl(&lat, 0.95).to_string(),
+        pctl(&lat, 0.99).to_string(),
+    ]);
+
+    println!("{}", table.render());
+    let speedup = serial_wall / pipe_wall;
+    println!("frontend pipelining speedup at depth {depth}: {speedup:.2}x QPS over serial");
+    match table.save("BENCH_frontend_pipeline") {
+        Ok(p) => println!("saved {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+
+    server.stop();
+    svc.shutdown();
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let only_block = argv.iter().any(|a| a == "--block-rhs");
+    let only_frontend = argv.iter().any(|a| a == "--frontend");
     let quick = std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let (m, n, requests) = if quick { (2048, 64, 60) } else { (8192, 128, 200) };
     let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(5));
@@ -107,6 +208,10 @@ fn main() {
 
     if only_block {
         block_rhs_sweep(&a, &b, requests);
+        return;
+    }
+    if only_frontend {
+        frontend_sweep(requests);
         return;
     }
 
@@ -214,4 +319,5 @@ fn main() {
     );
 
     block_rhs_sweep(&a, &b, requests);
+    frontend_sweep(requests);
 }

@@ -202,6 +202,18 @@ impl Config {
         }
         cfg
     }
+
+    /// Build a [`crate::coordinator::tcp::FrontendConfig`] from `[service]`
+    /// (`readers` key). An absent key keeps the default resolution
+    /// (`SNSOLVE_READERS` env, else 2); the `--readers` CLI flag overrides
+    /// both.
+    pub fn frontend_config(&self) -> crate::coordinator::tcp::FrontendConfig {
+        let mut cfg = crate::coordinator::tcp::FrontendConfig::default();
+        if let Some(r) = self.get_usize("service", "readers") {
+            cfg.readers = r.max(1);
+        }
+        cfg
+    }
 }
 
 /// Process-wide solve/kernel execution settings: the thread budget the
@@ -322,6 +334,7 @@ mod tests {
 workers = 4
 queue_capacity = 128
 submit_timeout_ms = 10
+readers = 3
 
 [batcher]
 max_batch = 16
@@ -368,6 +381,15 @@ schedule = "static"
             Some(std::path::Path::new("artifacts"))
         );
         assert_eq!(sc.worker.threads, 3);
+    }
+
+    #[test]
+    fn frontend_config_built() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.frontend_config().readers, 3);
+        // Absent key: default resolution (>= 1 whatever the env says).
+        let empty = Config::parse("[service]\nworkers = 1\n").unwrap();
+        assert!(empty.frontend_config().readers >= 1);
     }
 
     #[test]

@@ -102,6 +102,18 @@ pub struct Metrics {
     pub blocked_rhs: AtomicU64,
     pub factor_cache_hits: AtomicU64,
     pub factor_cache_misses: AtomicU64,
+    /// TCP front-end: `accept()` errors survived (transient kinds retried
+    /// with backoff instead of killing the accept loop).
+    pub accept_errors: AtomicU64,
+    /// TCP front-end: connections accepted / fully retired.
+    pub conns_opened: AtomicU64,
+    pub conns_closed: AtomicU64,
+    /// TCP front-end: solve requests currently in flight (decoded and
+    /// submitted, response not yet queued for write) — a gauge.
+    pub frontend_inflight: AtomicU64,
+    /// High-water mark of `frontend_inflight` (pipelining depth actually
+    /// sustained by clients).
+    pub frontend_peak_inflight: AtomicU64,
     pub queue_latency: LatencyHistogram,
     pub solve_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
@@ -120,8 +132,19 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Decrement a gauge (callers pair this with a prior `inc`).
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
+    }
+
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
+    }
+
+    /// Increment the in-flight gauge and fold the new depth into its peak.
+    pub fn gauge_enter(gauge: &AtomicU64, peak: &AtomicU64) {
+        let now = gauge.fetch_add(1, Ordering::Relaxed) + 1;
+        peak.fetch_max(now, Ordering::Relaxed);
     }
 
     /// Mean requests per batch.
@@ -145,6 +168,8 @@ impl Metrics {
             "submitted={} completed={} failed={} rejected={} deadline_missed={}\n\
              dispatch: pjrt={} native={} | batches={} mean_batch={:.2} \
              blocked_batches={} blocked_rhs={} factor_cache hit={} miss={}\n\
+             frontend: conns_opened={} conns_closed={} accept_errors={} \
+             inflight={} peak_inflight={}\n\
              queue_us:  n={} mean={:.0} p50={} p99={} max={}\n\
              solve_us:  mean={:.0} p50={} p99={} max={}\n\
              e2e_us:    mean={:.0} p50={} p99={} max={}\n\
@@ -163,6 +188,11 @@ impl Metrics {
             Self::get(&self.blocked_rhs),
             Self::get(&self.factor_cache_hits),
             Self::get(&self.factor_cache_misses),
+            Self::get(&self.conns_opened),
+            Self::get(&self.conns_closed),
+            Self::get(&self.accept_errors),
+            Self::get(&self.frontend_inflight),
+            Self::get(&self.frontend_peak_inflight),
             qc,
             qm,
             qp50,
@@ -228,6 +258,24 @@ mod tests {
         // the OP_METRICS protocol frame).
         assert!(rep.contains("pool: schedule="));
         assert!(rep.contains("steal_rate="));
+        // So do the front-end counters.
+        assert!(rep.contains("accept_errors=0"));
+        assert!(rep.contains("peak_inflight=0"));
+    }
+
+    #[test]
+    fn inflight_gauge_tracks_peak() {
+        let m = Metrics::new();
+        Metrics::gauge_enter(&m.frontend_inflight, &m.frontend_peak_inflight);
+        Metrics::gauge_enter(&m.frontend_inflight, &m.frontend_peak_inflight);
+        Metrics::dec(&m.frontend_inflight);
+        Metrics::gauge_enter(&m.frontend_inflight, &m.frontend_peak_inflight);
+        assert_eq!(Metrics::get(&m.frontend_inflight), 2);
+        assert_eq!(Metrics::get(&m.frontend_peak_inflight), 2);
+        Metrics::dec(&m.frontend_inflight);
+        Metrics::dec(&m.frontend_inflight);
+        assert_eq!(Metrics::get(&m.frontend_inflight), 0);
+        assert_eq!(Metrics::get(&m.frontend_peak_inflight), 2);
     }
 
     #[test]

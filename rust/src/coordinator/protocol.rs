@@ -1,21 +1,47 @@
 //! Wire protocol for the TCP front-end: length-prefixed binary frames.
 //!
+//! Two protocol versions share one framing layer. Every connection starts
+//! in **v1 (legacy)**: one logical request/response pair at a time, with
+//! responses written in request order. A client that sends `HELLO` with
+//! `version = 2` upgrades the connection to **v2 (pipelined)**: every
+//! request frame carries a client-chosen `u64 request_id`, many requests
+//! may be in flight on one socket, and responses complete **out of
+//! order**, each tagged with the id of the request it answers. The `HELLO`
+//! exchange itself is a v1 frame pair; the first v2-format frame is the
+//! one after `OK_HELLO`.
+//!
 //! ```text
-//! frame   := u32le payload_len, u8 opcode, payload
-//! opcodes (requests):
+//! frame      := u32le payload_len, payload           (len ∈ [1, MAX_FRAME])
+//!
+//! v1 payload := u8 opcode, body
+//! v2 payload := u8 opcode, u64le request_id, body    (requests AND responses)
+//!
+//! request opcodes (body grammar identical in v1 and v2):
 //!   1 REGISTER_DENSE  := u32 m, u32 n, f64le[m*n] row-major
 //!   2 SOLVE           := u64 matrix_id, u8 solver, f64 tol, u64 deadline_us,
 //!                        u32 m, f64le[m] rhs
 //!   3 METRICS         := (empty)
 //!   4 EVICT           := u64 matrix_id
-//! opcodes (responses):
+//!   5 HELLO           := u8 version            (v1-format; version 2 = pipelined)
+//! response opcodes:
 //!   128 OK_REGISTER   := u64 matrix_id
 //!   129 OK_SOLVE      := u32 n, f64le[n] x, u32 iterations, f64 resnorm,
 //!                        u8 converged, u64 queue_us, u64 solve_us
 //!   130 OK_METRICS    := utf8 text
 //!   131 OK_EVICT      := u8 existed
+//!   132 OK_HELLO      := u8 version            (v1-format, even when upgrading)
 //!   255 ERROR         := utf8 message
 //! ```
+//!
+//! v2 error scoping: a malformed frame whose opcode + request id still
+//! decode fails **only that request** (an `ERROR` tagged with its id); a
+//! frame too short to carry an id is answered with `ERROR` id 0; only a
+//! broken framing layer (bad length prefix) tears down the connection,
+//! because byte-stream resynchronization is impossible.
+//!
+//! Request ids are chosen by the client (uniqueness per connection is the
+//! client's job — the reference client uses a counter starting at 1) and
+//! echoed verbatim; the server never interprets them beyond routing.
 
 use super::SolverChoice;
 
@@ -23,11 +49,16 @@ pub const OP_REGISTER_DENSE: u8 = 1;
 pub const OP_SOLVE: u8 = 2;
 pub const OP_METRICS: u8 = 3;
 pub const OP_EVICT: u8 = 4;
+pub const OP_HELLO: u8 = 5;
 pub const OP_OK_REGISTER: u8 = 128;
 pub const OP_OK_SOLVE: u8 = 129;
 pub const OP_OK_METRICS: u8 = 130;
 pub const OP_OK_EVICT: u8 = 131;
+pub const OP_OK_HELLO: u8 = 132;
 pub const OP_ERROR: u8 = 255;
+
+/// The pipelined protocol version negotiated by `HELLO`.
+pub const PROTO_V2: u8 = 2;
 
 /// Max accepted frame: 1 GiB (a 8192×16384 f64 matrix).
 pub const MAX_FRAME: usize = 1 << 30;

@@ -235,18 +235,25 @@ mod tests {
                 let q = q.clone();
                 thread::spawn(move || {
                     let mut got = Vec::new();
-                    while let Ok(v) = q.pop_timeout(Duration::from_millis(500)) {
-                        got.push(v);
+                    // Keep popping until Closed: close() lets pops drain
+                    // whatever is queued first, so exiting only on Closed
+                    // (never on TimedOut) makes the count deterministic.
+                    loop {
+                        match q.pop_timeout(Duration::from_millis(100)) {
+                            Ok(v) => got.push(v),
+                            Err(PopError::TimedOut) => continue,
+                            Err(PopError::Closed) => return got,
+                        }
                     }
-                    got
                 })
             })
             .collect();
         for p in producers {
             p.join().unwrap();
         }
-        // After producers finish, give consumers time to drain then close.
-        thread::sleep(Duration::from_millis(50));
+        // Every item is in the queue (or already popped) once the producers
+        // have joined; close-after-join + drain-then-Closed pops account for
+        // all 1000 without any sleep-based race.
         q.close();
         let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
         assert_eq!(total, 1000);

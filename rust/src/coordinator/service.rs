@@ -43,12 +43,37 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Where a finished solve goes: a blocking waiter's channel, or a
+/// completion callback (the oneshot-per-request shape the pipelined TCP
+/// front-end uses to route responses back to the owning connection's
+/// writer). Exactly one response is delivered either way; a callback that
+/// already fired swallows later sends.
+pub(crate) enum Responder {
+    Channel(mpsc::Sender<SolveResponse>),
+    Callback(Option<Box<dyn FnOnce(SolveResponse) + Send>>),
+}
+
+impl Responder {
+    fn send(&mut self, resp: SolveResponse) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            Responder::Callback(cb) => {
+                if let Some(f) = cb.take() {
+                    f(resp);
+                }
+            }
+        }
+    }
+}
+
 /// Internal queued item.
 struct Pending {
     id: RequestId,
     req: SolveRequest,
     submitted: Instant,
-    responder: mpsc::Sender<SolveResponse>,
+    responder: Responder,
 }
 
 /// Handle to await one response.
@@ -157,16 +182,41 @@ impl Service {
 
     /// Submit a solve request; returns a handle to await the response.
     pub fn submit(&self, req: SolveRequest) -> Result<ResponseHandle, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit_inner(req, Responder::Channel(tx))?;
+        Ok(ResponseHandle { id, rx })
+    }
+
+    /// Submit a solve request with a completion callback instead of a
+    /// channel. The callback fires exactly once, on whatever thread
+    /// finishes the request (a worker, or the dispatcher on shutdown) —
+    /// this is the oneshot shape the pipelined TCP front-end uses to route
+    /// out-of-order completions back to each connection's writer.
+    pub fn submit_with<F>(
+        &self,
+        req: SolveRequest,
+        complete: F,
+    ) -> Result<RequestId, ServiceError>
+    where
+        F: FnOnce(SolveResponse) + Send + 'static,
+    {
+        self.submit_inner(req, Responder::Callback(Some(Box::new(complete))))
+    }
+
+    fn submit_inner(
+        &self,
+        req: SolveRequest,
+        responder: Responder,
+    ) -> Result<RequestId, ServiceError> {
         Metrics::inc(&self.metrics.submitted);
         if self.registry.get(req.matrix).is_none() {
             Metrics::inc(&self.metrics.failed);
             return Err(ServiceError::UnknownMatrix(req.matrix.0));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        let pending = Pending { id, req, submitted: Instant::now(), responder: tx };
+        let pending = Pending { id, req, submitted: Instant::now(), responder };
         match self.queue.push_timeout(pending, self.submit_timeout) {
-            Ok(()) => Ok(ResponseHandle { id, rx }),
+            Ok(()) => Ok(id),
             Err(PushError::Full(_)) => {
                 Metrics::inc(&self.metrics.rejected_overload);
                 Err(ServiceError::Overloaded)
@@ -256,9 +306,10 @@ fn emit(
             Err(PushError::Full(b)) => item = b,
             Err(PushError::Closed(b)) => {
                 // Shutting down: fail the batch.
-                for p in b.items {
-                    let _ = p.responder.send(SolveResponse {
-                        id: p.id,
+                for mut p in b.items {
+                    let id = p.id;
+                    p.responder.send(SolveResponse {
+                        id,
                         result: Err(ServiceError::ShuttingDown),
                         executed_on: ExecutedOn::Native,
                         queue_us: 0,
@@ -290,14 +341,15 @@ fn worker_loop(
 
         // Deadline checks up front; survivors drain into blocked solves.
         let mut live: Vec<(Pending, u64)> = Vec::new();
-        for p in batch.items {
+        for mut p in batch.items {
             let queue_us = p.submitted.elapsed().as_micros() as u64;
             metrics.queue_latency.record(queue_us);
             if p.req.deadline_us > 0 && queue_us > p.req.deadline_us {
                 Metrics::inc(&metrics.deadline_missed);
                 Metrics::inc(&metrics.failed);
-                let _ = p.responder.send(SolveResponse {
-                    id: p.id,
+                let id = p.id;
+                p.responder.send(SolveResponse {
+                    id,
                     result: Err(ServiceError::DeadlineExceeded),
                     executed_on: ExecutedOn::Native,
                     queue_us,
@@ -341,23 +393,43 @@ fn worker_loop(
             // every member's solve latency.
             let solve_us = t0.elapsed().as_micros() as u64;
             for (&i, (result, executed_on)) in idxs.iter().zip(results) {
-                let (p, queue_us) = &live[i];
+                let (p, queue_us) = &mut live[i];
+                let queue_us = *queue_us;
                 metrics.solve_latency.record(solve_us);
-                metrics.e2e_latency.record(*queue_us + solve_us);
+                metrics.e2e_latency.record(queue_us + solve_us);
+                // Deadline enforcement at completion time: a solve that ran
+                // past its deadline must not report success, even though the
+                // work was already done (the client has long stopped caring).
+                let result = if result.is_ok()
+                    && deadline_blown(p.req.deadline_us, queue_us, solve_us)
+                {
+                    Metrics::inc(&metrics.deadline_missed);
+                    Err(ServiceError::DeadlineExceeded)
+                } else {
+                    result
+                };
                 match &result {
                     Ok(_) => Metrics::inc(&metrics.completed),
                     Err(_) => Metrics::inc(&metrics.failed),
                 }
-                let _ = p.responder.send(SolveResponse {
-                    id: p.id,
+                let id = p.id;
+                p.responder.send(SolveResponse {
+                    id,
                     result,
                     executed_on,
-                    queue_us: *queue_us,
+                    queue_us,
                     solve_us,
                 });
             }
         }
     }
+}
+
+/// True when a request with a deadline finished after it: total observed
+/// latency (queue wait + solve wall time) exceeds `deadline_us`. A zero
+/// deadline means "no deadline".
+pub(crate) fn deadline_blown(deadline_us: u64, queue_us: u64, solve_us: u64) -> bool {
+    deadline_us > 0 && queue_us.saturating_add(solve_us) > deadline_us
 }
 
 #[cfg(test)]
@@ -433,6 +505,58 @@ mod tests {
         r.deadline_us = 1; // already expired by the time a worker sees it
         let resp = svc.solve_blocking(r).unwrap();
         assert!(matches!(resp.result, Err(ServiceError::DeadlineExceeded)));
+    }
+
+    #[test]
+    fn deadline_blown_helper() {
+        assert!(!deadline_blown(0, 1_000_000, 1_000_000)); // 0 = no deadline
+        assert!(!deadline_blown(100, 40, 60)); // exactly on time
+        assert!(deadline_blown(100, 40, 61));
+        assert!(deadline_blown(100, 101, 0)); // queue alone blows it
+        assert!(deadline_blown(100, 0, 101)); // solve alone blows it
+        assert!(deadline_blown(1, u64::MAX, u64::MAX)); // saturating add
+    }
+
+    #[test]
+    fn completion_time_deadline_enforced() {
+        // An ill-conditioned inconsistent system: LSQR with tol 0 cannot
+        // satisfy any residual test and runs to its iteration limit
+        // (2n = 400), so the solve takes far longer than the 2 ms deadline
+        // while the request spends almost no time queued (max_batch 1
+        // flushes immediately). Code that only checks the deadline at
+        // worker pickup returns Ok here — the completion-time check is
+        // what fails it.
+        let svc = Service::start(ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig { max_batch: 1, ..Default::default() },
+            ..Default::default()
+        });
+        let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(21));
+        let mut a = DenseMatrix::gaussian(800, 200, &mut g);
+        for i in 0..800 {
+            for (j, v) in a.row_mut(i).iter_mut().enumerate() {
+                *v *= 10f64.powf(-8.0 * j as f64 / 199.0);
+            }
+        }
+        let b = g.gaussian_vec(800); // inconsistent: rnorm plateaus
+        let id = svc.register_matrix(Matrix::Dense(a));
+        let resp = svc
+            .solve_blocking(SolveRequest {
+                matrix: id,
+                rhs: b,
+                solver: SolverChoice::Lsqr,
+                tol: 0.0,
+                deadline_us: 2_000,
+            })
+            .unwrap();
+        assert!(
+            matches!(resp.result, Err(ServiceError::DeadlineExceeded)),
+            "expected DeadlineExceeded, got ok={} (queue={}us solve={}us)",
+            resp.result.is_ok(),
+            resp.queue_us,
+            resp.solve_us,
+        );
+        assert!(Metrics::get(&svc.metrics().deadline_missed) >= 1);
     }
 
     #[test]

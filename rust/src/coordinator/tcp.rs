@@ -1,31 +1,123 @@
-//! TCP front-end: a thread-per-connection server speaking the
-//! length-prefixed binary protocol, plus a blocking client for tests,
-//! examples and the CLI.
+//! TCP front-end: a poll-driven reader pool speaking the length-prefixed
+//! binary protocol (v1 legacy in-order, v2 pipelined out-of-order — see
+//! [`crate::coordinator::protocol`]), plus blocking and pipelined clients
+//! for tests, examples and the CLI.
+//!
+//! Server shape: one accept thread classifies `accept()` errors (transient
+//! kinds retry with backoff instead of killing the loop) and hands accepted
+//! sockets round-robin to a small pool of reader threads. Readers poll
+//! their connections, decode frames, and submit solves through
+//! [`Service::submit_with`] with a per-request completion handle; finished
+//! solves are routed — in any order — to the owning connection's writer
+//! thread, which interleaves responses as they complete. Legacy (v1)
+//! connections get a per-connection sequence number and a reorder buffer so
+//! their responses still come back in request order.
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::*;
 use crate::coordinator::registry::MatrixId;
 use crate::coordinator::service::Service;
-use crate::coordinator::{ServiceError, SolveRequest, SolverChoice};
+use crate::coordinator::{ServiceError, SolveRequest, SolveResponse, SolverChoice};
 use crate::linalg::{DenseMatrix, Matrix};
 
-/// Read one frame (payload including opcode) from a stream.
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+// ----------------------------------------------------------------------
+// poll(2) via FFI — no libc crate in a zero-dependency build.
+// ----------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_short, c_ulong};
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+
+    pub fn pollin(fd: c_int) -> PollFd {
+        PollFd { fd, events: POLLIN, revents: 0 }
+    }
+
+    pub fn pollout(fd: c_int) -> PollFd {
+        PollFd { fd, events: POLLOUT, revents: 0 }
+    }
+
+    /// Wait up to `timeout_ms` for events on `fds`; returns the number of
+    /// descriptors with events (0 on timeout, negative on error).
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> i32 {
+        if fds.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(1) as u64));
+            return 0;
+        }
+        unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    /// Fallback for non-Linux unix: pretend every descriptor is ready after
+    /// a short sleep — the nonblocking reads/writes then report WouldBlock
+    /// themselves, so correctness is kept at the cost of some polling.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    pub fn pollin(fd: i32) -> PollFd {
+        PollFd { fd, events: POLLIN, revents: 0 }
+    }
+
+    pub fn pollout(fd: i32) -> PollFd {
+        PollFd { fd, events: POLLOUT, revents: 0 }
+    }
+
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> i32 {
+        std::thread::sleep(std::time::Duration::from_millis((timeout_ms.max(1) as u64).min(10)));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        fds.len() as i32
+    }
+}
+
+// ----------------------------------------------------------------------
+// Framing helpers (shared by server and clients)
+// ----------------------------------------------------------------------
+
+/// Read one frame (payload including opcode) from a blocking stream.
+fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     match stream.read_exact(&mut len_buf) {
         Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
         Err(e) => return Err(e),
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len == 0 || len > MAX_FRAME {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
             format!("bad frame length {len}"),
         ));
     }
@@ -34,7 +126,7 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
     Ok(Some(payload))
 }
 
-fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> std::io::Result<()> {
+fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> io::Result<()> {
     stream.write_all(frame)?;
     stream.flush()
 }
@@ -43,106 +135,631 @@ fn error_frame(msg: &str) -> Vec<u8> {
     Writer::new(OP_ERROR).utf8(msg).frame()
 }
 
+/// Rewrite a v1 response frame (`len, opcode, body`) into its v2 form
+/// (`len, opcode, request_id, body`) so every v1 encoder is reused verbatim
+/// on pipelined connections.
+fn retag_v2(frame: Vec<u8>, id: u64) -> Vec<u8> {
+    debug_assert!(frame.len() >= 5);
+    let mut out = Vec::with_capacity(frame.len() + 8);
+    out.extend_from_slice(&((frame.len() - 4 + 8) as u32).to_le_bytes());
+    out.push(frame[4]);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&frame[5..]);
+    out
+}
+
+fn encode_solve_response(resp: &SolveResponse) -> Vec<u8> {
+    match &resp.result {
+        Ok(sol) => Writer::new(OP_OK_SOLVE)
+            .u32(sol.x.len() as u32)
+            .f64_slice(&sol.x)
+            .u32(sol.iterations as u32)
+            .f64(sol.resnorm)
+            .u8(sol.converged as u8)
+            .u64(resp.queue_us)
+            .u64(resp.solve_us)
+            .frame(),
+        Err(e) => error_frame(&e.to_string()),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Accept-error classification
+// ----------------------------------------------------------------------
+
+/// Classify an `accept()` error: `Some(backoff)` for transient kinds the
+/// accept loop should retry after sleeping (a client resetting mid-accept,
+/// a signal, fd/buffer exhaustion), `None` for fatal errors that mean the
+/// listener itself is broken.
+pub fn accept_retry_backoff(e: &io::Error) -> Option<Duration> {
+    use io::ErrorKind::*;
+    match e.kind() {
+        // The peer gave up between SYN and accept(), or a signal landed:
+        // nothing is wrong with the listener.
+        ConnectionAborted | ConnectionReset | Interrupted => Some(Duration::from_millis(1)),
+        _ => match e.raw_os_error() {
+            // EMFILE(24)/ENFILE(23)/ENOBUFS(105)/ENOMEM(12): resource
+            // exhaustion — back off longer so existing connections can
+            // retire and free descriptors.
+            Some(24) | Some(23) | Some(105) | Some(12) => Some(Duration::from_millis(20)),
+            _ => None,
+        },
+    }
+}
+
+// ----------------------------------------------------------------------
+// Per-connection outbox + writer
+// ----------------------------------------------------------------------
+
+/// Frames queued for one connection's writer thread. v2 completions land
+/// directly in `ready` (any order); v1 completions carry a per-connection
+/// sequence number and sit in `reorder` until every earlier response has
+/// been queued, preserving the legacy in-order contract.
+struct Outbox {
+    state: Mutex<OutboxState>,
+    cond: Condvar,
+}
+
+struct OutboxState {
+    ready: VecDeque<Vec<u8>>,
+    reorder: HashMap<u64, Vec<u8>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+impl Outbox {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(OutboxState {
+                ready: VecDeque::new(),
+                reorder: HashMap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Queue a frame for immediate (out-of-order) write.
+    fn push_ready(&self, frame: Vec<u8>) {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return;
+        }
+        s.ready.push_back(frame);
+        drop(s);
+        self.cond.notify_one();
+    }
+
+    /// Queue the response to legacy request number `seq`; releases to
+    /// `ready` only once all earlier sequence numbers have been queued.
+    fn push_seq(&self, seq: u64, frame: Vec<u8>) {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return;
+        }
+        s.reorder.insert(seq, frame);
+        let mut released = false;
+        while let Some(f) = s.reorder.remove(&s.next_seq) {
+            s.ready.push_back(f);
+            s.next_seq += 1;
+            released = true;
+        }
+        drop(s);
+        if released {
+            self.cond.notify_one();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Next frame to write; drains `ready` even after close, then reports
+    /// `None` once closed-and-empty.
+    fn pop(&self) -> Option<Vec<u8>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(f) = s.ready.pop_front() {
+                return Some(f);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+}
+
+/// Write all of `buf` to a nonblocking stream, polling for writability on
+/// WouldBlock. (std's `write_all` is wrong here: it loses progress when a
+/// partial write is followed by WouldBlock.)
+fn write_all_nb(stream: &mut TcpStream, buf: &[u8]) -> io::Result<()> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "write returned 0")),
+            Ok(k) => off += k,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                let mut fds = [sys::pollout(stream.as_raw_fd())];
+                let _ = sys::poll_fds(&mut fds, 100);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn writer_loop(mut stream: TcpStream, outbox: Arc<Outbox>) {
+    while let Some(frame) = outbox.pop() {
+        if write_all_nb(&mut stream, &frame).is_err() {
+            // Make sure the reader notices the dead connection too.
+            let _ = stream.shutdown(Shutdown::Both);
+            break;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Server
+// ----------------------------------------------------------------------
+
+/// State a connection shares with the server handle, so `stop()` can
+/// unblock it: a stream clone to `shutdown()` and the outbox to close.
+struct ConnShared {
+    stream: TcpStream,
+    outbox: Arc<Outbox>,
+}
+
+/// A connection as owned by its reader thread.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    writer: Option<JoinHandle<()>>,
+    /// Received-but-unparsed bytes.
+    rbuf: Vec<u8>,
+    /// Protocol version (1 until a HELLO upgrade).
+    proto: u8,
+    /// Next legacy sequence number to assign (v1 response ordering).
+    next_seq: u64,
+    dead: bool,
+}
+
+type ConnTable = Arc<Mutex<HashMap<u64, Arc<ConnShared>>>>;
+
+/// Front-end tuning knobs.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Reader threads multiplexing all connections (`SNSOLVE_READERS` env
+    /// override; CLI `--readers`).
+    pub readers: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        let readers = std::env::var("SNSOLVE_READERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&r| r > 0)
+            .unwrap_or(2);
+        Self { readers }
+    }
+}
+
 /// A running TCP server.
 pub struct TcpServer {
-    addr: std::net::SocketAddr,
+    addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    readers: Vec<JoinHandle<()>>,
+    conns: ConnTable,
+    injected_accept_errors: Arc<Mutex<VecDeque<io::Error>>>,
 }
 
 impl TcpServer {
-    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
-    pub fn serve(service: Arc<Service>, addr: impl ToSocketAddrs) -> std::io::Result<TcpServer> {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port) with the
+    /// default front-end configuration.
+    pub fn serve(service: Arc<Service>, addr: impl ToSocketAddrs) -> io::Result<TcpServer> {
+        Self::serve_with(service, addr, FrontendConfig::default())
+    }
+
+    /// Bind and serve with an explicit [`FrontendConfig`].
+    pub fn serve_with(
+        service: Arc<Service>,
+        addr: impl ToSocketAddrs,
+        cfg: FrontendConfig,
+    ) -> io::Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnTable = Arc::new(Mutex::new(HashMap::new()));
+        let injected: Arc<Mutex<VecDeque<io::Error>>> = Arc::new(Mutex::new(VecDeque::new()));
+
+        let n_readers = cfg.readers.max(1);
+        let mut reader_txs = Vec::with_capacity(n_readers);
+        let mut readers = Vec::with_capacity(n_readers);
+        for i in 0..n_readers {
+            let (tx, rx) = mpsc::channel::<Conn>();
+            reader_txs.push(tx);
+            let stop2 = stop.clone();
+            let table = conns.clone();
+            let svc = service.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("sns-tcp-reader-{i}"))
+                    .spawn(move || reader_loop(rx, stop2, table, svc))?,
+            );
+        }
+
         let stop2 = stop.clone();
+        let table = conns.clone();
+        let inj = injected.clone();
         let accept_thread = std::thread::Builder::new()
             .name("sns-tcp-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((mut stream, _peer)) => {
-                            stream.set_nonblocking(false).ok();
-                            stream.set_nodelay(true).ok();
-                            let svc = service.clone();
-                            // Detached: a connection thread lives exactly as
-                            // long as its client keeps the socket open, so
-                            // joining here would deadlock stop() whenever a
-                            // client is still connected.
-                            let _ = std::thread::Builder::new()
-                                .name("sns-tcp-conn".into())
-                                .spawn(move || connection_loop(&mut stream, svc))
-                                .expect("spawn conn thread");
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+            .spawn(move || accept_loop(listener, service, stop2, table, inj, reader_txs))?;
+
+        Ok(TcpServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            readers,
+            conns,
+            injected_accept_errors: injected,
+        })
     }
 
-    pub fn addr(&self) -> std::net::SocketAddr {
+    pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Stop accepting; existing connections finish on client disconnect.
+    /// Test hook: the accept loop consumes this error as if `accept()` had
+    /// returned it (per-server, so parallel tests can't cross-contaminate).
+    pub fn inject_accept_error(&self, e: io::Error) {
+        self.injected_accept_errors.lock().unwrap().push_back(e);
+    }
+
+    /// Stop accepting and tear down every live connection: sockets are
+    /// `shutdown(Both)` so reader/writer threads blocked on them wake up,
+    /// outboxes are closed, and all server threads are joined.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        {
+            let table = self.conns.lock().unwrap();
+            for shared in table.values() {
+                let _ = shared.stream.shutdown(Shutdown::Both);
+                shared.outbox.close();
+            }
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-    }
-}
-
-fn connection_loop(stream: &mut TcpStream, service: Arc<Service>) {
-    loop {
-        let payload = match read_frame(stream) {
-            Ok(Some(p)) => p,
-            Ok(None) => return, // clean EOF
-            Err(_) => return,
-        };
-        let resp = handle_frame(&payload, &service);
-        if write_frame(stream, &resp).is_err() {
-            return;
+        for r in self.readers.drain(..) {
+            let _ = r.join();
         }
     }
 }
 
-fn handle_frame(payload: &[u8], service: &Arc<Service>) -> Vec<u8> {
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        // A server dropped without stop() still winds its threads down:
+        // they all watch this flag with bounded poll timeouts.
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    table: ConnTable,
+    injected: Arc<Mutex<VecDeque<io::Error>>>,
+    reader_txs: Vec<mpsc::Sender<Conn>>,
+) {
+    let mut next_id: u64 = 1;
+    let mut rr: usize = 0;
+    while !stop.load(Ordering::Relaxed) {
+        let injected_err = injected.lock().unwrap().pop_front();
+        let result = match injected_err {
+            Some(e) => Err(e),
+            None => listener.accept().map(|(s, _peer)| s),
+        };
+        match result {
+            Ok(stream) => {
+                let id = next_id;
+                next_id += 1;
+                let r = register_conn(stream, id, &service, &table, &reader_txs, &mut rr);
+                if let Err(e) = r {
+                    eprintln!("tcp: connection setup failed: {e}");
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                let mut fds = [sys::pollin(listener.as_raw_fd())];
+                let _ = sys::poll_fds(&mut fds, 50);
+            }
+            Err(e) => {
+                Metrics::inc(&service.metrics().accept_errors);
+                match accept_retry_backoff(&e) {
+                    Some(backoff) => std::thread::sleep(backoff),
+                    None => {
+                        eprintln!("tcp: fatal accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn register_conn(
+    stream: TcpStream,
+    id: u64,
+    service: &Arc<Service>,
+    table: &ConnTable,
+    reader_txs: &[mpsc::Sender<Conn>],
+    rr: &mut usize,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    // Nonblocking applies to the shared file *description* — the writer's
+    // clone inherits it, which is why writes go through write_all_nb.
+    stream.set_nonblocking(true)?;
+    let wstream = stream.try_clone()?;
+    let sstream = stream.try_clone()?;
+    let outbox = Arc::new(Outbox::new());
+    let wb = outbox.clone();
+    let writer = std::thread::Builder::new()
+        .name("sns-tcp-writer".into())
+        .spawn(move || writer_loop(wstream, wb))?;
+    let shared = Arc::new(ConnShared { stream: sstream, outbox });
+    table.lock().unwrap().insert(id, shared.clone());
+    let conn = Conn {
+        id,
+        stream,
+        shared,
+        writer: Some(writer),
+        rbuf: Vec::new(),
+        proto: 1,
+        next_seq: 0,
+        dead: false,
+    };
+    Metrics::inc(&service.metrics().conns_opened);
+    let k = *rr % reader_txs.len();
+    *rr += 1;
+    if let Err(mpsc::SendError(c)) = reader_txs[k].send(conn) {
+        // Reader already gone (server stopping): retire immediately.
+        retire(c, table, service.metrics());
+    }
+    Ok(())
+}
+
+/// Tear one connection down: drop it from the table, unblock and join its
+/// writer, and count it closed.
+fn retire(mut c: Conn, table: &ConnTable, metrics: &Metrics) {
+    table.lock().unwrap().remove(&c.id);
+    let _ = c.stream.shutdown(Shutdown::Both);
+    c.shared.outbox.close();
+    if let Some(w) = c.writer.take() {
+        let _ = w.join();
+    }
+    Metrics::inc(&metrics.conns_closed);
+}
+
+fn reader_loop(
+    rx: mpsc::Receiver<Conn>,
+    stop: Arc<AtomicBool>,
+    table: ConnTable,
+    service: Arc<Service>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        while let Ok(c) = rx.try_recv() {
+            conns.push(c);
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if conns.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(c) => conns.push(c),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Accept loop died; nothing to read until stop().
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+            continue;
+        }
+        let mut fds: Vec<sys::PollFd> =
+            conns.iter().map(|c| sys::pollin(c.stream.as_raw_fd())).collect();
+        if sys::poll_fds(&mut fds, 10) <= 0 {
+            continue;
+        }
+        for (i, f) in fds.iter().enumerate() {
+            // Any event (readable, hangup, error) means "try to read".
+            if f.revents != 0 && !drain_conn(&mut conns[i], &service) {
+                conns[i].dead = true;
+            }
+        }
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].dead {
+                let c = conns.swap_remove(i);
+                retire(c, &table, service.metrics());
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for c in conns.drain(..) {
+        retire(c, &table, service.metrics());
+    }
+    while let Ok(c) = rx.try_recv() {
+        retire(c, &table, service.metrics());
+    }
+}
+
+/// Read everything currently available on the socket and process complete
+/// frames. Returns false when the connection is finished (EOF, error, or a
+/// broken framing layer).
+fn drain_conn(c: &mut Conn, service: &Arc<Service>) -> bool {
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match c.stream.read(&mut tmp) {
+            Ok(0) => return false,
+            Ok(k) => {
+                c.rbuf.extend_from_slice(&tmp[..k]);
+                if !parse_frames(c, service) {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Process every complete frame in `rbuf`. Returns false only for a broken
+/// framing layer (bad length prefix) — the one error byte-stream protocols
+/// cannot recover from.
+fn parse_frames(c: &mut Conn, service: &Arc<Service>) -> bool {
+    loop {
+        if c.rbuf.len() < 4 {
+            return true;
+        }
+        let len = u32::from_le_bytes(c.rbuf[..4].try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return false;
+        }
+        if c.rbuf.len() < 4 + len {
+            return true;
+        }
+        let payload: Vec<u8> = c.rbuf[4..4 + len].to_vec();
+        c.rbuf.drain(..4 + len);
+        if c.proto == PROTO_V2 {
+            handle_v2(c, &payload, service);
+        } else {
+            handle_v1(c, &payload, service);
+        }
+    }
+}
+
+/// Where a finished solve's response goes.
+#[derive(Clone)]
+enum Completion {
+    Legacy { outbox: Arc<Outbox>, seq: u64 },
+    V2 { outbox: Arc<Outbox>, id: u64 },
+}
+
+impl Completion {
+    fn deliver(&self, frame_v1: Vec<u8>) {
+        match self {
+            Completion::Legacy { outbox, seq } => outbox.push_seq(*seq, frame_v1),
+            Completion::V2 { outbox, id } => outbox.push_ready(retag_v2(frame_v1, *id)),
+        }
+    }
+}
+
+fn submit_solve(service: &Arc<Service>, req: SolveRequest, done: Completion) {
+    let m = service.metrics();
+    Metrics::gauge_enter(&m.frontend_inflight, &m.frontend_peak_inflight);
+    let svc = service.clone();
+    let done2 = done.clone();
+    let res = service.submit_with(req, move |resp| {
+        Metrics::dec(&svc.metrics().frontend_inflight);
+        done2.deliver(encode_solve_response(&resp));
+    });
+    if let Err(e) = res {
+        // Rejected at submit (overload, unknown matrix, shutdown): the
+        // callback was never installed, so answer here.
+        Metrics::dec(&m.frontend_inflight);
+        done.deliver(error_frame(&e.to_string()));
+    }
+}
+
+fn handle_v1(c: &mut Conn, payload: &[u8], service: &Arc<Service>) {
+    // Every legacy request gets the next sequence number — including
+    // inline ops — so responses interleave back in exact request order.
+    let seq = c.next_seq;
+    c.next_seq += 1;
     let mut r = Reader::new(payload);
     let op = match r.u8() {
         Ok(op) => op,
-        Err(e) => return error_frame(&e.to_string()),
+        Err(e) => {
+            c.shared.outbox.push_seq(seq, error_frame(&e.to_string()));
+            return;
+        }
     };
     match op {
-        OP_REGISTER_DENSE => match decode_register(&mut r) {
+        OP_HELLO => {
+            let resp = match r.u8() {
+                Ok(v) if v >= PROTO_V2 => {
+                    c.proto = PROTO_V2;
+                    Writer::new(OP_OK_HELLO).u8(PROTO_V2).frame()
+                }
+                Ok(_) => Writer::new(OP_OK_HELLO).u8(1).frame(),
+                Err(e) => error_frame(&e.to_string()),
+            };
+            c.shared.outbox.push_seq(seq, resp);
+        }
+        OP_SOLVE => match decode_solve(&mut r) {
+            Ok(req) => submit_solve(
+                service,
+                req,
+                Completion::Legacy { outbox: c.shared.outbox.clone(), seq },
+            ),
+            Err(e) => c.shared.outbox.push_seq(seq, error_frame(&e.to_string())),
+        },
+        other => {
+            let resp = handle_inline(other, &mut r, service);
+            c.shared.outbox.push_seq(seq, resp);
+        }
+    }
+}
+
+fn handle_v2(c: &mut Conn, payload: &[u8], service: &Arc<Service>) {
+    let mut r = Reader::new(payload);
+    let op = match r.u8() {
+        Ok(op) => op,
+        Err(_) => return, // unreachable: frames have at least one byte
+    };
+    let id = match r.u64() {
+        Ok(id) => id,
+        Err(e) => {
+            // Too short to carry a request id: ERROR tagged with id 0.
+            c.shared.outbox.push_ready(retag_v2(error_frame(&e.to_string()), 0));
+            return;
+        }
+    };
+    match op {
+        OP_SOLVE => match decode_solve(&mut r) {
+            Ok(req) => submit_solve(
+                service,
+                req,
+                Completion::V2 { outbox: c.shared.outbox.clone(), id },
+            ),
+            // Malformed solve with a decodable id: fail only this request.
+            Err(e) => c.shared.outbox.push_ready(retag_v2(error_frame(&e.to_string()), id)),
+        },
+        other => {
+            let resp = handle_inline(other, &mut r, service);
+            c.shared.outbox.push_ready(retag_v2(resp, id));
+        }
+    }
+}
+
+/// Requests answered directly on the reader thread (no worker round-trip).
+/// Returns a v1 response frame; v2 connections retag it with the id.
+fn handle_inline(op: u8, r: &mut Reader, service: &Arc<Service>) -> Vec<u8> {
+    match op {
+        OP_REGISTER_DENSE => match decode_register(r) {
             Ok(matrix) => {
                 let id = service.register_matrix(matrix);
                 Writer::new(OP_OK_REGISTER).u64(id.0).frame()
             }
-            Err(e) => error_frame(&e.to_string()),
-        },
-        OP_SOLVE => match decode_solve(&mut r) {
-            Ok(req) => match service.solve_blocking(req) {
-                Ok(resp) => match resp.result {
-                    Ok(sol) => Writer::new(OP_OK_SOLVE)
-                        .u32(sol.x.len() as u32)
-                        .f64_slice(&sol.x)
-                        .u32(sol.iterations as u32)
-                        .f64(sol.resnorm)
-                        .u8(sol.converged as u8)
-                        .u64(resp.queue_us)
-                        .u64(resp.solve_us)
-                        .frame(),
-                    Err(e) => error_frame(&e.to_string()),
-                },
-                Err(e) => error_frame(&e.to_string()),
-            },
             Err(e) => error_frame(&e.to_string()),
         },
         OP_METRICS => Writer::new(OP_OK_METRICS).utf8(&service.metrics().report()).frame(),
@@ -164,8 +781,7 @@ fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
         return Err(DecodeError(format!("bad dims {m}x{n}")));
     }
     let data = r.f64_vec(m * n)?;
-    let dm = DenseMatrix::from_vec(m, n, data)
-        .map_err(|e| DecodeError(e.to_string()))?;
+    let dm = DenseMatrix::from_vec(m, n, data).map_err(|e| DecodeError(e.to_string()))?;
     Ok(Matrix::Dense(dm))
 }
 
@@ -180,17 +796,17 @@ fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
 }
 
 // ----------------------------------------------------------------------
-// Client
+// Blocking client (protocol v1)
 // ----------------------------------------------------------------------
 
-/// Blocking client for the TCP front-end.
+/// Blocking one-request-at-a-time client for the TCP front-end.
 pub struct Client {
     stream: TcpStream,
 }
 
 #[derive(Debug)]
 pub enum ClientError {
-    Io(std::io::Error),
+    Io(io::Error),
     Decode(DecodeError),
     Server(String),
     UnexpectedOpcode(u8),
@@ -217,8 +833,8 @@ impl std::error::Error for ClientError {
     }
 }
 
-impl From<std::io::Error> for ClientError {
-    fn from(e: std::io::Error) -> Self {
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
         ClientError::Io(e)
     }
 }
@@ -240,8 +856,20 @@ pub struct WireSolution {
     pub solve_us: u64,
 }
 
+fn decode_wire_solution(body: &[u8]) -> Result<WireSolution, ClientError> {
+    let mut r = Reader::new(body);
+    let n = r.u32()? as usize;
+    let x = r.f64_vec(n)?;
+    let iterations = r.u32()? as usize;
+    let resnorm = r.f64()?;
+    let converged = r.u8()? != 0;
+    let queue_us = r.u64()?;
+    let solve_us = r.u64()?;
+    Ok(WireSolution { x, iterations, resnorm, converged, queue_us, solve_us })
+}
+
 impl Client {
-    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         Ok(Client { stream })
@@ -251,8 +879,8 @@ impl Client {
         write_frame(&mut self.stream, &frame)?;
         match read_frame(&mut self.stream)? {
             Some(p) => Ok(p),
-            None => Err(ClientError::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
+            None => Err(ClientError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
                 "server closed",
             ))),
         }
@@ -282,7 +910,7 @@ impl Client {
         Ok(Reader::new(&body).u64()?)
     }
 
-    /// Solve against a registered matrix.
+    /// Solve against a registered matrix (no deadline).
     pub fn solve(
         &mut self,
         matrix_id: u64,
@@ -290,24 +918,30 @@ impl Client {
         solver: SolverChoice,
         tol: f64,
     ) -> Result<WireSolution, ClientError> {
+        self.solve_with_deadline(matrix_id, rhs, solver, tol, 0)
+    }
+
+    /// Solve with an end-to-end deadline in microseconds (0 = none): the
+    /// server fails the request with `deadline exceeded` if queue wait plus
+    /// solve time overruns it.
+    pub fn solve_with_deadline(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        deadline_us: u64,
+    ) -> Result<WireSolution, ClientError> {
         let frame = Writer::new(OP_SOLVE)
             .u64(matrix_id)
             .u8(solver_to_u8(solver))
             .f64(tol)
-            .u64(0)
+            .u64(deadline_us)
             .u32(rhs.len() as u32)
             .f64_slice(rhs)
             .frame();
         let body = self.expect(frame, OP_OK_SOLVE)?;
-        let mut r = Reader::new(&body);
-        let n = r.u32()? as usize;
-        let x = r.f64_vec(n)?;
-        let iterations = r.u32()? as usize;
-        let resnorm = r.f64()?;
-        let converged = r.u8()? != 0;
-        let queue_us = r.u64()?;
-        let solve_us = r.u64()?;
-        Ok(WireSolution { x, iterations, resnorm, converged, queue_us, solve_us })
+        decode_wire_solution(&body)
     }
 
     /// Fetch the metrics report.
@@ -318,8 +952,7 @@ impl Client {
 
     /// Evict a matrix; true if it existed.
     pub fn evict(&mut self, matrix_id: u64) -> Result<bool, ClientError> {
-        let body =
-            self.expect(Writer::new(OP_EVICT).u64(matrix_id).frame(), OP_OK_EVICT)?;
+        let body = self.expect(Writer::new(OP_EVICT).u64(matrix_id).frame(), OP_OK_EVICT)?;
         Ok(Reader::new(&body).u8()? != 0)
     }
 }
@@ -327,5 +960,331 @@ impl Client {
 impl From<ServiceError> for ClientError {
     fn from(e: ServiceError) -> Self {
         ClientError::Server(e.to_string())
+    }
+}
+
+// ----------------------------------------------------------------------
+// Pipelined client (protocol v2)
+// ----------------------------------------------------------------------
+
+/// A response delivered to a ticket: raw payload plus the instant the
+/// client's reader thread pulled it off the socket, so latency measurement
+/// is independent of when the caller gets around to waiting.
+struct PipelinedReply {
+    payload: Vec<u8>,
+    received: Instant,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<PipelinedReply>>>>;
+
+fn conn_closed() -> ClientError {
+    ClientError::Io(io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed"))
+}
+
+/// Handle to one in-flight pipelined solve.
+pub struct SolveTicket {
+    pub id: u64,
+    rx: mpsc::Receiver<PipelinedReply>,
+}
+
+impl SolveTicket {
+    fn decode(rep: PipelinedReply) -> Result<WireSolution, ClientError> {
+        let mut r = Reader::new(&rep.payload);
+        let op = r.u8()?;
+        let _id = r.u64()?;
+        if op == OP_ERROR {
+            return Err(ClientError::Server(r.rest_utf8()?));
+        }
+        if op != OP_OK_SOLVE {
+            return Err(ClientError::UnexpectedOpcode(op));
+        }
+        decode_wire_solution(&rep.payload[9..])
+    }
+
+    /// Block until this request completes.
+    pub fn wait(self) -> Result<WireSolution, ClientError> {
+        let rep = self.rx.recv().map_err(|_| conn_closed())?;
+        Self::decode(rep)
+    }
+
+    /// Like [`SolveTicket::wait`], also returning the instant the response
+    /// arrived at the client (recorded by the reader thread at delivery).
+    pub fn wait_timed(self) -> Result<(WireSolution, Instant), ClientError> {
+        let rep = self.rx.recv().map_err(|_| conn_closed())?;
+        let t = rep.received;
+        Self::decode(rep).map(|s| (s, t))
+    }
+
+    /// Non-blocking check: `None` while the request is still in flight.
+    pub fn try_take(&mut self) -> Option<Result<WireSolution, ClientError>> {
+        match self.rx.try_recv() {
+            Ok(rep) => Some(Self::decode(rep)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(conn_closed())),
+        }
+    }
+
+    /// Wait up to `d`; `None` on timeout (the request stays in flight).
+    pub fn wait_timeout(&mut self, d: Duration) -> Option<Result<WireSolution, ClientError>> {
+        match self.rx.recv_timeout(d) {
+            Ok(rep) => Some(Self::decode(rep)),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Err(conn_closed())),
+        }
+    }
+}
+
+/// Pipelined (protocol v2) client: many solves in flight on one socket,
+/// completing out of order. A background reader thread demultiplexes
+/// responses to their tickets by request id.
+pub struct PipelinedClient {
+    stream: TcpStream,
+    next_id: u64,
+    pending: PendingMap,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl PipelinedClient {
+    /// Connect and upgrade the connection to protocol v2 via `HELLO`.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<PipelinedClient, ClientError> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        write_frame(&mut stream, &Writer::new(OP_HELLO).u8(PROTO_V2).frame())?;
+        let p = read_frame(&mut stream)?.ok_or_else(conn_closed)?;
+        let mut r = Reader::new(&p);
+        match r.u8()? {
+            OP_OK_HELLO => {
+                if r.u8()? != PROTO_V2 {
+                    return Err(ClientError::Server("server declined protocol v2".into()));
+                }
+            }
+            OP_ERROR => return Err(ClientError::Server(r.rest_utf8()?)),
+            op => return Err(ClientError::UnexpectedOpcode(op)),
+        }
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let mut rstream = stream.try_clone().map_err(ClientError::Io)?;
+        let pending2 = pending.clone();
+        let reader = std::thread::Builder::new()
+            .name("sns-pipe-reader".into())
+            .spawn(move || loop {
+                match read_frame(&mut rstream) {
+                    Ok(Some(p)) => {
+                        if p.len() < 9 {
+                            continue; // response too short to route; drop
+                        }
+                        let id = u64::from_le_bytes(p[1..9].try_into().unwrap());
+                        let tx = pending2.lock().unwrap().remove(&id);
+                        if let Some(tx) = tx {
+                            let _ = tx
+                                .send(PipelinedReply { payload: p, received: Instant::now() });
+                        }
+                    }
+                    Ok(None) | Err(_) => {
+                        // Dropping the senders fails every outstanding wait.
+                        pending2.lock().unwrap().clear();
+                        return;
+                    }
+                }
+            })
+            .map_err(ClientError::Io)?;
+        Ok(PipelinedClient { stream, next_id: 1, pending, reader: Some(reader) })
+    }
+
+    fn submit(
+        &mut self,
+        build: impl FnOnce(u64) -> Vec<u8>,
+    ) -> Result<(u64, mpsc::Receiver<PipelinedReply>), ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        let frame = build(id);
+        if let Err(e) = write_frame(&mut self.stream, &frame) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(e.into());
+        }
+        Ok((id, rx))
+    }
+
+    fn call(
+        &mut self,
+        build: impl FnOnce(u64) -> Vec<u8>,
+        expect_op: u8,
+    ) -> Result<Vec<u8>, ClientError> {
+        let (_id, rx) = self.submit(build)?;
+        let rep = rx.recv().map_err(|_| conn_closed())?;
+        let mut r = Reader::new(&rep.payload);
+        let op = r.u8()?;
+        let _ = r.u64()?;
+        if op == OP_ERROR {
+            return Err(ClientError::Server(r.rest_utf8()?));
+        }
+        if op != expect_op {
+            return Err(ClientError::UnexpectedOpcode(op));
+        }
+        Ok(rep.payload[9..].to_vec())
+    }
+
+    /// Fire a solve without waiting; the returned ticket resolves whenever
+    /// the server finishes it, independent of other in-flight requests.
+    pub fn submit_solve(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        deadline_us: u64,
+    ) -> Result<SolveTicket, ClientError> {
+        let (id, rx) = self.submit(|id| {
+            Writer::new(OP_SOLVE)
+                .u64(id)
+                .u64(matrix_id)
+                .u8(solver_to_u8(solver))
+                .f64(tol)
+                .u64(deadline_us)
+                .u32(rhs.len() as u32)
+                .f64_slice(rhs)
+                .frame()
+        })?;
+        Ok(SolveTicket { id, rx })
+    }
+
+    /// Blocking solve (submit + wait), for drop-in parity with [`Client`].
+    pub fn solve(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+    ) -> Result<WireSolution, ClientError> {
+        self.submit_solve(matrix_id, rhs, solver, tol, 0)?.wait()
+    }
+
+    /// Blocking solve with a deadline (see [`Client::solve_with_deadline`]).
+    pub fn solve_with_deadline(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        deadline_us: u64,
+    ) -> Result<WireSolution, ClientError> {
+        self.submit_solve(matrix_id, rhs, solver, tol, deadline_us)?.wait()
+    }
+
+    /// Register a dense matrix; returns the server-side id.
+    pub fn register_dense(&mut self, a: &DenseMatrix) -> Result<u64, ClientError> {
+        let body = self.call(
+            |id| {
+                Writer::new(OP_REGISTER_DENSE)
+                    .u64(id)
+                    .u32(a.rows() as u32)
+                    .u32(a.cols() as u32)
+                    .f64_slice(a.data())
+                    .frame()
+            },
+            OP_OK_REGISTER,
+        )?;
+        Ok(Reader::new(&body).u64()?)
+    }
+
+    /// Fetch the metrics report.
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        let body = self.call(|id| Writer::new(OP_METRICS).u64(id).frame(), OP_OK_METRICS)?;
+        Ok(Reader::new(&body).rest_utf8()?)
+    }
+
+    /// Evict a matrix; true if it existed.
+    pub fn evict(&mut self, matrix_id: u64) -> Result<bool, ClientError> {
+        let body = self.call(
+            |id| Writer::new(OP_EVICT).u64(id).u64(matrix_id).frame(),
+            OP_OK_EVICT,
+        )?;
+        Ok(Reader::new(&body).u8()? != 0)
+    }
+}
+
+impl Drop for PipelinedClient {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_backoff_classification() {
+        use io::ErrorKind;
+        // Transient kinds: retried with backoff.
+        let transient = [
+            ErrorKind::ConnectionAborted,
+            ErrorKind::ConnectionReset,
+            ErrorKind::Interrupted,
+        ];
+        for kind in transient {
+            assert!(accept_retry_backoff(&io::Error::new(kind, "x")).is_some(), "{kind:?}");
+        }
+        // Resource exhaustion (EMFILE/ENFILE/ENOBUFS/ENOMEM): longer backoff.
+        for code in [24, 23, 105, 12] {
+            let e = io::Error::from_raw_os_error(code);
+            assert!(accept_retry_backoff(&e).is_some(), "os error {code}");
+        }
+        // Fatal: accept loop must break.
+        assert!(accept_retry_backoff(&io::Error::new(ErrorKind::InvalidInput, "x")).is_none());
+        assert!(accept_retry_backoff(&io::Error::from_raw_os_error(9)).is_none()); // EBADF
+    }
+
+    #[test]
+    fn outbox_orders_legacy_seqs() {
+        let ob = Outbox::new();
+        ob.push_seq(2, vec![2]);
+        ob.push_seq(0, vec![0]);
+        // seq 1 still missing: only seq 0 may be released.
+        assert_eq!(ob.pop().unwrap(), vec![0]);
+        ob.push_seq(1, vec![1]);
+        assert_eq!(ob.pop().unwrap(), vec![1]);
+        assert_eq!(ob.pop().unwrap(), vec![2]);
+        ob.close();
+        assert!(ob.pop().is_none());
+    }
+
+    #[test]
+    fn outbox_ready_fifo_then_close_drains() {
+        let ob = Outbox::new();
+        ob.push_ready(vec![1]);
+        ob.push_ready(vec![2]);
+        ob.close();
+        // Close lets queued frames drain first...
+        assert_eq!(ob.pop().unwrap(), vec![1]);
+        assert_eq!(ob.pop().unwrap(), vec![2]);
+        assert!(ob.pop().is_none());
+        // ...but drops anything pushed after.
+        ob.push_ready(vec![3]);
+        assert!(ob.pop().is_none());
+    }
+
+    #[test]
+    fn retag_v2_inserts_id_after_opcode() {
+        let f = Writer::new(OP_OK_EVICT).u8(1).frame();
+        let t = retag_v2(f, 0xABCD);
+        let len = u32::from_le_bytes(t[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, t.len() - 4);
+        let mut r = Reader::new(&t[4..]);
+        assert_eq!(r.u8().unwrap(), OP_OK_EVICT);
+        assert_eq!(r.u64().unwrap(), 0xABCD);
+        assert_eq!(r.u8().unwrap(), 1);
+        assert!(r.finished());
+    }
+
+    #[test]
+    fn frontend_config_floor() {
+        // serve_with clamps to at least one reader; the default is >= 1
+        // whatever SNSOLVE_READERS says (non-numeric / zero are ignored).
+        assert!(FrontendConfig::default().readers >= 1);
     }
 }

@@ -78,7 +78,10 @@ impl Default for WorkerConfig {
 
 /// One request's payload inside a flushed batch handed to
 /// [`WorkerContext::execute_batch`] (the batch shares matrix and solver;
-/// tolerance stays per-request).
+/// tolerance stays per-request). With the pipelined TCP front-end, items
+/// batched together may come from different connections — results are
+/// routed back per-request through each item's completion responder, so
+/// nothing here may assume a single downstream consumer.
 #[derive(Debug)]
 pub struct BatchItem {
     pub rhs: Vec<f64>,

@@ -41,6 +41,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "smoke", takes_value: false, help: "small/fast parameterization" },
         FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7447)" },
         FlagSpec { name: "workers", takes_value: true, help: "serve: worker threads (default 2)" },
+        FlagSpec { name: "readers", takes_value: true, help: "serve: front-end reader threads (default 2, or SNSOLVE_READERS)" },
         FlagSpec { name: "threads", takes_value: true, help: "kernel pool size for GEMM/FWHT/sketch (0 = auto)" },
         FlagSpec { name: "simd", takes_value: true, help: "kernel SIMD backend: auto|scalar|avx2|avx512|neon" },
         FlagSpec { name: "pack", takes_value: true, help: "packed-panel GEMM: true|false (default true)" },
@@ -215,7 +216,7 @@ fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
 }
 
 fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
-    let mut cfg = if let Some(path) = args.flag("config") {
+    let (mut cfg, mut fcfg) = if let Some(path) = args.flag("config") {
         match snsolve::config::Config::load(std::path::Path::new(path)) {
             Ok(c) => {
                 // A present-but-unparseable simd key is a config error,
@@ -294,7 +295,7 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 if let (None, Some(sched)) = (args.flag("schedule"), sc.schedule) {
                     snsolve::parallel::set_schedule(Some(sched));
                 }
-                c.service_config()
+                (c.service_config(), c.frontend_config())
             }
             Err(e) => {
                 eprintln!("config error: {e}");
@@ -302,10 +303,14 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
             }
         }
     } else {
-        ServiceConfig::default()
+        let fcfg = snsolve::coordinator::tcp::FrontendConfig::default();
+        (ServiceConfig::default(), fcfg)
     };
     if let Some(w) = args.flag_usize("workers").unwrap() {
         cfg.workers = w.max(1);
+    }
+    if let Some(r) = args.flag_usize("readers").unwrap() {
+        fcfg.readers = r.max(1);
     }
     if let Some(t) = args.flag_usize("threads").unwrap() {
         cfg.worker.threads = t;
@@ -318,7 +323,7 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
     }
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7447").to_string();
     let service = Service::start(cfg);
-    let server = match TcpServer::serve(service.clone(), addr.as_str()) {
+    let server = match TcpServer::serve_with(service.clone(), addr.as_str(), fcfg) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("bind {addr}: {e}");
@@ -342,10 +347,22 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
         let err = snsolve::linalg::norms::nrm2_diff(&sol.x, &x_true)
             / snsolve::linalg::norms::nrm2(&x_true);
         println!("demo solve: rel_err={err:.3e} queue={}µs solve={}µs", sol.queue_us, sol.solve_us);
+        // Pipelined burst on a single v2 connection: submit 8 solves before
+        // reading any reply, then harvest out of order.
+        let mut pc =
+            snsolve::coordinator::tcp::PipelinedClient::connect(server.addr()).expect("connect v2");
+        let tickets: Vec<_> = (0..8)
+            .map(|_| pc.submit_solve(id, &b, SolverChoice::Saa, 1e-10, 0).expect("submit"))
+            .collect();
+        let mut ok = true;
+        for t in tickets {
+            ok &= t.wait().expect("pipelined solve").converged;
+        }
+        println!("demo pipelined: 8 in-flight solves ok={ok}");
         println!("{}", client.metrics().expect("metrics"));
         server.stop();
         service.shutdown();
-        return if err < 1e-6 { 0 } else { 1 };
+        return if err < 1e-6 && ok { 0 } else { 1 };
     }
 
     // Run until killed.

@@ -1,10 +1,16 @@
 //! End-to-end service tests: TCP front-end, batching under load,
 //! backpressure, PJRT-bucket routing when artifacts are present.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use snsolve::coordinator::tcp::{Client, TcpServer};
+use snsolve::coordinator::metrics::Metrics;
+use snsolve::coordinator::protocol::{
+    OP_ERROR, OP_HELLO, OP_OK_HELLO, OP_OK_SOLVE, OP_SOLVE, PROTO_V2, Reader, Writer,
+};
+use snsolve::coordinator::tcp::{Client, ClientError, PipelinedClient, TcpServer};
 use snsolve::coordinator::{
     Service, ServiceConfig, SolveRequest, SolverChoice,
 };
@@ -325,4 +331,334 @@ fn graceful_shutdown_drains() {
     }
     // Submitted before close: the dispatcher drains them.
     assert!(ok >= 1, "at least some requests must complete, got {ok}");
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined front-end (protocol v2) and serving-tier regression tests
+// ---------------------------------------------------------------------------
+
+/// Read one length-prefixed frame from a raw socket (test-side decoder).
+fn read_frame_raw(s: &mut TcpStream) -> Vec<u8> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).expect("frame length");
+    let n = u32::from_le_bytes(len) as usize;
+    let mut p = vec![0u8; n];
+    s.read_exact(&mut p).expect("frame payload");
+    p
+}
+
+#[test]
+fn pipelined_16_inflight_out_of_order() {
+    // The acceptance pin for the multiplexed front-end: one socket holds
+    // >= 16 concurrent in-flight solves (witnessed by the server-side peak
+    // gauge), and a slow request submitted *first* completes *after* the 16
+    // fast ones behind it — completion order inverts submission order.
+    let svc = Service::start(ServiceConfig {
+        workers: 2,
+        batcher: snsolve::coordinator::batcher::BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(30),
+        },
+        ..Default::default()
+    });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(300, 12, 31);
+    // Inconsistent system + tol 0 => LSQR runs its full iteration budget,
+    // so the heavy request deterministically outlives the fast batch.
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(32));
+    let heavy = DenseMatrix::gaussian(2000, 400, &mut g);
+    let heavy_rhs = g.gaussian_vec(2000);
+
+    let mut pc = PipelinedClient::connect(addr).expect("connect v2");
+    let id = pc.register_dense(&a).expect("register");
+    let heavy_id = pc.register_dense(&heavy).expect("register heavy");
+
+    let slow = pc
+        .submit_solve(heavy_id, &heavy_rhs, SolverChoice::Lsqr, 0.0, 0)
+        .expect("submit slow");
+    let fast: Vec<_> = (0..16)
+        .map(|i| {
+            let c = (i + 1) as f64;
+            let rhs: Vec<f64> = b.iter().map(|v| c * v).collect();
+            pc.submit_solve(id, &rhs, SolverChoice::Saa, 1e-10, 0).expect("submit fast")
+        })
+        .collect();
+
+    // Harvest in reverse submission order: each ticket resolves on its own,
+    // and linearity (rhs scaled by c => solution scaled by c) proves every
+    // response was routed to the request that asked for it.
+    let mut last_fast_arrival = None;
+    for (i, t) in fast.into_iter().enumerate().rev() {
+        let c = (i + 1) as f64;
+        let (sol, at) = t.wait_timed().expect("fast solve");
+        assert!(sol.converged, "fast {i} did not converge");
+        let scaled: Vec<f64> = x_true.iter().map(|v| c * v).collect();
+        let err = nrm2_diff(&sol.x, &scaled) / nrm2(&scaled);
+        assert!(err < 1e-8, "fast {i} err {err}");
+        let latest = last_fast_arrival.unwrap_or(at);
+        last_fast_arrival = Some(latest.max(at));
+    }
+    // The slow head-of-line request finishes after every fast one.
+    let (sol, slow_at) = slow.wait_timed().expect("slow solve");
+    assert_eq!(sol.x.len(), 400);
+    assert!(
+        slow_at > last_fast_arrival.unwrap(),
+        "slow response should arrive after all fast responses"
+    );
+
+    let peak = Metrics::get(&svc.metrics().frontend_peak_inflight);
+    assert!(peak >= 16, "expected >=16 concurrent in-flight solves, saw peak {peak}");
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn pipelined_malformed_frame_errors_only_that_request() {
+    // A malformed frame in the middle of a pipeline must error only its own
+    // request id; the well-formed requests around it still complete.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(250, 10, 33);
+    let mut reg = Client::connect(addr).expect("connect v1");
+    let id = reg.register_dense(&a).expect("register");
+
+    let mut s = TcpStream::connect(addr).expect("connect raw");
+    s.write_all(&Writer::new(OP_HELLO).u8(PROTO_V2).frame()).unwrap();
+    let hello = read_frame_raw(&mut s);
+    assert_eq!(hello[0], OP_OK_HELLO);
+    assert_eq!(hello[1], PROTO_V2);
+
+    let solve_frame = |rid: u64, solver: u8| {
+        Writer::new(OP_SOLVE)
+            .u64(rid)
+            .u64(id)
+            .u8(solver)
+            .f64(1e-10)
+            .u64(0)
+            .u32(b.len() as u32)
+            .f64_slice(&b)
+            .frame()
+    };
+    // Three pipelined requests; the middle one has an invalid solver byte.
+    let mut burst = Vec::new();
+    burst.extend_from_slice(&solve_frame(1, 0));
+    burst.extend_from_slice(&solve_frame(2, 99));
+    burst.extend_from_slice(&solve_frame(3, 0));
+    s.write_all(&burst).unwrap();
+
+    let mut ok = 0;
+    let mut errored_id = 0;
+    for _ in 0..3 {
+        let p = read_frame_raw(&mut s);
+        let mut r = Reader::new(&p);
+        let op = r.u8().unwrap();
+        let rid = r.u64().unwrap();
+        if op == OP_ERROR {
+            errored_id = rid;
+            continue;
+        }
+        assert_eq!(op, OP_OK_SOLVE, "request {rid}");
+        let n = r.u32().unwrap() as usize;
+        let x = r.f64_vec(n).unwrap();
+        let err = nrm2_diff(&x, &x_true) / nrm2(&x_true);
+        assert!(err < 1e-8, "request {rid} err {err}");
+        ok += 1;
+    }
+    assert_eq!(ok, 2, "both well-formed requests must succeed");
+    assert_eq!(errored_id, 2, "only the malformed request may error");
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn legacy_pipelining_stays_fifo() {
+    // v1 has no request ids: a client that writes several requests before
+    // reading must get responses back in submission order even though the
+    // server completes work out of order internally.
+    let svc = Service::start(ServiceConfig { workers: 2, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(220, 9, 35);
+    let mut reg = Client::connect(addr).expect("connect");
+    let id = reg.register_dense(&a).expect("register");
+
+    let mut s = TcpStream::connect(addr).expect("connect raw");
+    let mut burst = Vec::new();
+    for i in 0..4u32 {
+        let c = (i + 1) as f64;
+        let rhs: Vec<f64> = b.iter().map(|v| c * v).collect();
+        let f = Writer::new(OP_SOLVE)
+            .u64(id)
+            .u8(0)
+            .f64(1e-10)
+            .u64(0)
+            .u32(rhs.len() as u32)
+            .f64_slice(&rhs)
+            .frame();
+        burst.extend_from_slice(&f);
+    }
+    s.write_all(&burst).unwrap();
+    for i in 0..4u32 {
+        let c = (i + 1) as f64;
+        let p = read_frame_raw(&mut s);
+        let mut r = Reader::new(&p);
+        assert_eq!(r.u8().unwrap(), OP_OK_SOLVE, "response {i}");
+        let n = r.u32().unwrap() as usize;
+        let x = r.f64_vec(n).unwrap();
+        let scaled: Vec<f64> = x_true.iter().map(|v| c * v).collect();
+        let err = nrm2_diff(&x, &scaled) / nrm2(&scaled);
+        assert!(err < 1e-8, "response {i} out of order or corrupt (err {err})");
+    }
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn accept_loop_survives_transient_errors() {
+    // Regression: transient accept() failures used to kill the accept loop,
+    // leaving the service running but permanently unreachable.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    for kind in [
+        std::io::ErrorKind::ConnectionAborted,
+        std::io::ErrorKind::ConnectionReset,
+        std::io::ErrorKind::Interrupted,
+    ] {
+        server.inject_accept_error(std::io::Error::new(kind, "synthetic"));
+    }
+    server.inject_accept_error(std::io::Error::from_raw_os_error(24)); // EMFILE
+
+    // New connections still get served after the errors are consumed.
+    let (a, x_true, b) = planted(200, 8, 37);
+    let mut client = Client::connect(server.addr()).expect("connect after errors");
+    let id = client.register_dense(&a).expect("register");
+    let sol = client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+    let err = nrm2_diff(&sol.x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-8, "err {err}");
+
+    // Every injected failure was counted.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while Metrics::get(&svc.metrics().accept_errors) < 4 {
+        assert!(Instant::now() < deadline, "accept_errors never reached 4");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn accept_loop_fatal_error_stops_listening() {
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+    // Sanity: reachable before the fatal error (held open across it).
+    let _pre = Client::connect(addr).expect("connect before");
+    server.inject_accept_error(std::io::Error::new(
+        std::io::ErrorKind::PermissionDenied,
+        "synthetic fatal",
+    ));
+    // The accept thread exits and drops the listener, so new connections
+    // are refused (retry until the injected error is consumed).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while TcpStream::connect(addr).is_ok() {
+        assert!(Instant::now() < deadline, "listener still accepting after fatal error");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(Metrics::get(&svc.metrics().accept_errors) >= 1);
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn stop_closes_live_connections_and_refuses_new() {
+    // Regression: stop() used to strand detached per-connection threads
+    // blocked in read; now it shuts every live socket down and joins all
+    // server threads before returning.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(200, 8, 39);
+    let mut client = Client::connect(addr).expect("connect");
+    let id = client.register_dense(&a).expect("register");
+    let sol = client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+    assert!(nrm2_diff(&sol.x, &x_true) / nrm2(&x_true) < 1e-8);
+
+    server.stop(); // joins accept, readers and all connection writers
+
+    // The live connection was shut down server-side: further calls fail.
+    assert!(client.metrics().is_err(), "call on a closed connection must error");
+    // And the port no longer accepts.
+    assert!(TcpStream::connect(addr).is_err(), "post-stop connect must be refused");
+    svc.shutdown();
+}
+
+#[test]
+fn client_deadline_is_transmitted_and_enforced() {
+    // Regression: Client::solve used to hardcode deadline_us = 0, so no
+    // deadline ever reached the server. solve_with_deadline must transmit
+    // it, and a 1µs budget is always blown by queue time alone.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+    let (a, x_true, b) = planted(200, 8, 41);
+
+    let mut legacy = Client::connect(addr).expect("connect v1");
+    let id = legacy.register_dense(&a).expect("register");
+    match legacy.solve_with_deadline(id, &b, SolverChoice::Saa, 1e-10, 1) {
+        Err(ClientError::Server(msg)) => {
+            assert!(msg.to_lowercase().contains("deadline"), "unexpected error: {msg}");
+        }
+        Err(e) => panic!("wrong error kind over v1: {e}"),
+        Ok(_) => panic!("expected a deadline error over v1"),
+    }
+    // Without a deadline the same request succeeds.
+    let sol = legacy.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+    assert!(nrm2_diff(&sol.x, &x_true) / nrm2(&x_true) < 1e-8);
+
+    let mut pipe = PipelinedClient::connect(addr).expect("connect v2");
+    match pipe.solve_with_deadline(id, &b, SolverChoice::Saa, 1e-10, 1) {
+        Err(ClientError::Server(msg)) => {
+            assert!(msg.to_lowercase().contains("deadline"), "unexpected error: {msg}");
+        }
+        Err(e) => panic!("wrong error kind over v2: {e}"),
+        Ok(_) => panic!("expected a deadline error over v2"),
+    }
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn client_flow_selected_by_env() {
+    // CI runs this suite twice with SNSOLVE_CLIENT=legacy|pipelined; the
+    // same register/solve/evict flow must pass through either client.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+    let (a, x_true, b) = planted(240, 10, 43);
+    let choice = std::env::var("SNSOLVE_CLIENT").unwrap_or_default();
+    let (x, evicted, metrics) = if choice == "pipelined" {
+        let mut c = PipelinedClient::connect(addr).expect("connect v2");
+        let id = c.register_dense(&a).expect("register");
+        let sol = c.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+        (sol.x, c.evict(id).expect("evict"), c.metrics().expect("metrics"))
+    } else {
+        let mut c = Client::connect(addr).expect("connect v1");
+        let id = c.register_dense(&a).expect("register");
+        let sol = c.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+        (sol.x, c.evict(id).expect("evict"), c.metrics().expect("metrics"))
+    };
+    let err = nrm2_diff(&x, &x_true) / nrm2(&x_true);
+    assert!(err < 1e-8, "err {err} (client {choice:?})");
+    assert!(evicted);
+    assert!(metrics.contains("completed="), "{metrics}");
+    server.stop();
+    svc.shutdown();
 }
