@@ -1,7 +1,50 @@
 #!/usr/bin/env bash
 # Tier-1 verify plus lint gates, as run by .github/workflows/ci.yml.
+#
+# `./ci.sh --lint` runs only the fast static gates — snsolve-lint, its
+# self-tests, rustfmt and clippy — as the pre-push inner loop (seconds,
+# not minutes).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+lint_only=0
+for arg in "$@"; do
+  case "$arg" in
+    --lint) lint_only=1 ;;
+    *)
+      echo "usage: ci.sh [--lint]" >&2
+      exit 2
+      ;;
+  esac
+done
+
+run_lint_gates() {
+  # Project lint first: it is the cheapest gate and its findings are the
+  # most actionable (missing SAFETY comments, stray env reads, half-wired
+  # knobs).
+  echo "== snsolve-lint =="
+  cargo run -q -p snsolve-lint
+
+  echo "== snsolve-lint self-tests =="
+  cargo test -q -p snsolve-lint
+
+  echo "== cargo fmt --check =="
+  cargo fmt --all --check
+
+  echo "== cargo clippy -- -D warnings =="
+  cargo clippy --workspace --all-targets -- -D warnings
+
+  # Release-profile clippy too: cfg(debug_assertions)-gated code flips,
+  # and optimizer-dependent lints (e.g. overflow checks) differ.
+  echo "== cargo clippy --release -- -D warnings =="
+  cargo clippy --workspace --all-targets --release -- -D warnings
+}
+
+if [[ $lint_only -eq 1 ]]; then
+  run_lint_gates
+  echo "LINT OK"
+  exit 0
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -72,10 +115,6 @@ done
 echo "== frontend pipeline bench (quick) =="
 SNSOLVE_BENCH_QUICK=1 cargo bench --bench coordinator_throughput -- --frontend
 
-echo "== cargo fmt --check =="
-cargo fmt --check
-
-echo "== cargo clippy -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
+run_lint_gates
 
 echo "CI OK"

@@ -114,6 +114,8 @@ pub fn fmt_secs(s: f64) -> String {
 /// `SNSOLVE_BENCH_QUICK=1` switches every bench to the quick policy —
 /// used by `make bench-smoke` and CI.
 pub fn config_from_env() -> BenchConfig {
+    // snsolve-lint: allow(env-reads-behind-config) — bench-only toggle
+    // (SNSOLVE_BENCH_QUICK), never read on a solve/serve path.
     if std::env::var("SNSOLVE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
         BenchConfig::quick()
     } else {

@@ -120,6 +120,9 @@ impl Table {
 
 /// `target/bench-reports` (override with SNSOLVE_REPORT_DIR).
 pub fn reports_dir() -> PathBuf {
+    // snsolve-lint: allow(env-reads-behind-config) — bench-only report
+    // directory override (SNSOLVE_REPORT_DIR), never read on a
+    // solve/serve path.
     std::env::var("SNSOLVE_REPORT_DIR")
         .map(PathBuf::from)
         .unwrap_or_else(|_| Path::new("target").join("bench-reports"))

@@ -158,6 +158,7 @@ impl Config {
             schedule: self
                 .get_str("parallel", "schedule")
                 .and_then(crate::parallel::Schedule::parse),
+            sketch_invert: self.get_bool("parallel", "sketch_invert"),
         }
     }
 
@@ -222,8 +223,9 @@ impl Config {
 /// = "auto"|"scalar"|"avx2"|"avx512"|"neon"`), the packed-panel GEMM
 /// toggle (`[parallel] pack`), the blocked-QR panel width
 /// (`[parallel] qr_nb`, 0 = auto), the FWHT engine radix
-/// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto) and the worker-pool
-/// scheduler (`[parallel] schedule = "static"|"steal"`).
+/// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto), the worker-pool
+/// scheduler (`[parallel] schedule = "static"|"steal"`) and the
+/// inverted-hash CountSketch scatter toggle (`[parallel] sketch_invert`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
@@ -250,6 +252,11 @@ pub struct SolveConfig {
     /// schedules produce bitwise-identical results; `Static` is the
     /// range-sharded baseline kept for benchmarking and triage.
     pub schedule: Option<crate::parallel::Schedule>,
+    /// Inverted-hash CountSketch scatter toggle. `None` (key absent)
+    /// leaves the ambient resolution alone (`SNSOLVE_SKETCH_INVERT`, then
+    /// on). Both paths are bitwise identical; the direct-scatter baseline
+    /// is kept for benchmarking and triage.
+    pub sketch_invert: Option<bool>,
 }
 
 impl SolveConfig {
@@ -274,6 +281,9 @@ impl SolveConfig {
         }
         if let Some(s) = self.schedule {
             crate::parallel::set_schedule(Some(s));
+        }
+        if let Some(v) = self.sketch_invert {
+            crate::sketch::set_inverted_scatter(Some(v));
         }
     }
 
@@ -355,6 +365,7 @@ pack = true
 qr_nb = 16
 fwht_radix = 4
 schedule = "static"
+sketch_invert = false
 "#;
 
     #[test]
@@ -404,6 +415,7 @@ schedule = "static"
         assert_eq!(s.qr_nb, 16);
         assert_eq!(s.fwht_radix, 4);
         assert_eq!(s.schedule, Some(crate::parallel::Schedule::Static));
+        assert_eq!(s.sketch_invert, Some(false));
         // absent key → ambient (and an unparseable simd value → ambient),
         // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
@@ -415,6 +427,7 @@ schedule = "static"
         assert_eq!(d.qr_nb, 0);
         assert_eq!(d.fwht_radix, 0);
         assert_eq!(d.schedule, None);
+        assert_eq!(d.sketch_invert, None);
         let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
         assert_eq!(bad.simd, None);
         // A negative qr_nb clamps to auto instead of wrapping to a huge

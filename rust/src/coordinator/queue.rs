@@ -1,5 +1,27 @@
 //! Bounded MPMC queue with blocking push/pop, timeouts and close semantics —
 //! the backpressure primitive (no crossbeam/tokio offline; Mutex+Condvar).
+//!
+//! # Memory-ordering audit (loom-style)
+//!
+//! There are **no raw atomics here** — every field (`items`, `closed`)
+//! lives under the single `inner` mutex, so the protocol is sequentially
+//! consistent by construction: lock acquisition/release provides all
+//! happens-before edges, and TSan/Miri have nothing unordered to observe.
+//! The properties worth auditing are the condvar protocol, not orderings:
+//!
+//! * **No lost wakeups.** Every state transition that can unblock a
+//!   waiter signals the matching condvar *after* the guard is dropped
+//!   (push → `not_empty`, pop/drain → `not_full`, close → both,
+//!   `notify_all`). Signalling outside the lock is sound because waiters
+//!   re-check their predicate (`items` length / `closed`) under the lock
+//!   in a loop — spurious and stolen wakeups are absorbed by the re-check.
+//! * **Deadline, not duration.** Waits recompute `deadline − now` each
+//!   lap, so a spurious wakeup never extends the total timeout.
+//! * **Close is sticky and drains.** `closed = true` is only ever set
+//!   (never cleared) under the lock; pops keep returning queued items
+//!   until empty, then report `Closed` — consumers that exit only on
+//!   `Closed` therefore see every pushed item exactly once (asserted by
+//!   `mpmc_stress`).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -66,6 +66,9 @@ mod sys {
             std::thread::sleep(std::time::Duration::from_millis(timeout_ms.max(1) as u64));
             return 0;
         }
+        // SAFETY: `fds` is a live, exclusively borrowed `#[repr(C)]`
+        // PollFd slice, so the pointer/length pair describes exactly
+        // `nfds` writable pollfd records for the duration of the call.
         unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) }
     }
 }
@@ -340,6 +343,9 @@ pub struct FrontendConfig {
 
 impl Default for FrontendConfig {
     fn default() -> Self {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: SNSOLVE_READERS default for
+        // FrontendConfig (--readers / [service] readers take precedence).
         let readers = std::env::var("SNSOLVE_READERS")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())

@@ -24,6 +24,11 @@
 //! println!("relative error = {:.2e}", p.relative_error(&sol.x));
 //! ```
 
+// Every unsafe operation inside an `unsafe fn` must be explicitly scoped
+// in its own `unsafe {}` block (each carrying a `// SAFETY:` comment —
+// machine-checked by `cargo run -p snsolve-lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench_harness;
 pub mod cli;
 pub mod config;

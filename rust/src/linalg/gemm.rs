@@ -72,6 +72,9 @@ fn env_packing() -> bool {
     static ENV: OnceLock<bool> = OnceLock::new();
     *ENV.get_or_init(|| {
         // Case-insensitive like SNSOLVE_SIMD, so OFF/False/0 all disable.
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_GEMM_PACK fallback
+        // behind set_packing() (CLI/config take precedence).
         let v = std::env::var("SNSOLVE_GEMM_PACK")
             .map(|s| s.trim().to_ascii_lowercase())
             .unwrap_or_default();

@@ -63,6 +63,9 @@ pub fn set_fwht_radix(radix: Option<usize>) {
 fn env_radix() -> usize {
     static ENV: OnceLock<usize> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_FWHT_RADIX fallback
+        // behind set_fwht_radix() (CLI/config take precedence).
         std::env::var("SNSOLVE_FWHT_RADIX")
             .ok()
             .and_then(|s| s.trim().parse::<usize>().ok())
@@ -377,7 +380,8 @@ unsafe fn fwht_band(
     radix: usize,
 ) {
     if radix == 1 {
-        fwht_band_stagewise(kern, base, rows, cols, j0, j1);
+        // SAFETY: forwards the function-level contract unchanged.
+        unsafe { fwht_band_stagewise(kern, base, rows, cols, j0, j1) };
         return;
     }
     let w = j1 - j0;
@@ -385,11 +389,15 @@ unsafe fn fwht_band(
     if tile > 1 {
         let mut t0 = 0;
         while t0 < rows {
-            fused_stages_band(kern, base, cols, j0, w, t0, t0 + tile, 1, tile, radix);
+            // SAFETY: forwards the function-level contract; row tiles
+            // partition [0, rows) so each early-stage pass is in-bounds.
+            unsafe { fused_stages_band(kern, base, cols, j0, w, t0, t0 + tile, 1, tile, radix) };
             t0 += tile;
         }
     }
-    fused_stages_band(kern, base, cols, j0, w, 0, rows, tile, rows, radix);
+    // SAFETY: forwards the function-level contract (late stages sweep the
+    // whole band once the per-tile stages are done).
+    unsafe { fused_stages_band(kern, base, cols, j0, w, 0, rows, tile, rows, radix) };
 }
 
 /// Stage-per-pass baseline restricted to columns `[j0, j1)` (the seed
@@ -410,8 +418,15 @@ unsafe fn fwht_band_stagewise(
     while h < rows {
         for block in (0..rows).step_by(2 * h) {
             for i in block..block + h {
-                let a = std::slice::from_raw_parts_mut(base.add(i * cols + j0), w);
-                let b = std::slice::from_raw_parts_mut(base.add((i + h) * cols + j0), w);
+                // SAFETY: function contract — this thread owns columns
+                // [j0, j1) of the live rows×cols buffer; rows `i` and
+                // `i + h` are distinct, so the two slices never alias.
+                let (a, b) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(base.add(i * cols + j0), w),
+                        std::slice::from_raw_parts_mut(base.add((i + h) * cols + j0), w),
+                    )
+                };
                 kern.butterfly(a, b);
             }
         }
@@ -441,7 +456,8 @@ unsafe fn fused_stages_band(
     let mut h = h0;
     while h < h_end {
         let r = next_radix(h, h_end, radix);
-        fused_pass_band(kern, base, cols, j0, w, r0, r1, h, r);
+        // SAFETY: forwards the function-level contract for one fused pass.
+        unsafe { fused_pass_band(kern, base, cols, j0, w, r0, r1, h, r) };
         h *= r;
     }
 }

@@ -47,6 +47,9 @@ pub fn set_panel_nb(nb: usize) {
 fn env_nb() -> usize {
     static ENV: OnceLock<usize> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_QR_NB fallback
+        // behind set_panel_nb() (CLI/config take precedence).
         std::env::var("SNSOLVE_QR_NB")
             .ok()
             .and_then(|s| s.trim().parse::<usize>().ok())

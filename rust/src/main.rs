@@ -48,6 +48,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "qr-nb", takes_value: true, help: "blocked-QR panel width (0 = auto, default 32)" },
         FlagSpec { name: "fwht-radix", takes_value: true, help: "FWHT engine radix: 1 (stage-per-pass baseline)|2|4|8 (default 8)" },
         FlagSpec { name: "schedule", takes_value: true, help: "worker-pool scheduler: steal (work-stealing, default)|static (range-sharded baseline)" },
+        FlagSpec { name: "sketch-invert", takes_value: true, help: "inverted-hash CountSketch scatter: true|false (default true; false = direct-scatter baseline)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
@@ -129,6 +130,19 @@ fn main() {
             None => {
                 eprintln!(
                     "error: invalid value for --schedule: {s} (expected steal|static)\n\n{}",
+                    usage("snsolve", SUBCOMMANDS, &specs)
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(s) = args.flag("sketch-invert") {
+        match s {
+            "true" | "1" | "on" => snsolve::sketch::set_inverted_scatter(Some(true)),
+            "false" | "0" | "off" => snsolve::sketch::set_inverted_scatter(Some(false)),
+            _ => {
+                eprintln!(
+                    "error: invalid value for --sketch-invert: {s} (expected true|false)\n\n{}",
                     usage("snsolve", SUBCOMMANDS, &specs)
                 );
                 std::process::exit(2);
@@ -276,6 +290,13 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                         return 2;
                     }
                 }
+                let invert_present = c.get("parallel", "sketch_invert").is_some();
+                if invert_present && c.get_bool("parallel", "sketch_invert").is_none() {
+                    eprintln!(
+                        "config error: [parallel] sketch_invert must be true or false (unquoted)"
+                    );
+                    return 2;
+                }
                 // `[parallel]` kernel keys apply unless the matching CLI
                 // flag (already installed in main, higher precedence) was
                 // given; absent keys leave the env vars / defaults alone.
@@ -294,6 +315,9 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 }
                 if let (None, Some(sched)) = (args.flag("schedule"), sc.schedule) {
                     snsolve::parallel::set_schedule(Some(sched));
+                }
+                if let (None, Some(v)) = (args.flag("sketch-invert"), sc.sketch_invert) {
+                    snsolve::sketch::set_inverted_scatter(Some(v));
                 }
                 (c.service_config(), c.frontend_config())
             }

@@ -57,6 +57,9 @@ thread_local! {
 fn env_threads() -> usize {
     static ENV: OnceLock<usize> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_THREADS fallback
+        // behind set_threads() (CLI/config take precedence).
         std::env::var("SNSOLVE_THREADS")
             .ok()
             .and_then(|s| s.trim().parse::<usize>().ok())
@@ -397,7 +400,11 @@ pub fn first_touch_rows(data: &mut [f64], rows: usize, row_len: usize, threads: 
 #[derive(Clone, Copy)]
 pub(crate) struct SendMutPtr(pub(crate) *mut f64);
 
+// SAFETY: sending the pointer only moves the address; every dereference
+// stays behind the caller's disjoint-elements contract above.
 unsafe impl Send for SendMutPtr {}
+// SAFETY: shared references only copy the pointer value — all writes
+// through it are partitioned per-thread by the same contract.
 unsafe impl Sync for SendMutPtr {}
 
 /// Typed sibling of [`SendMutPtr`] for non-`f64` payloads (LSQR column
@@ -405,7 +412,12 @@ unsafe impl Sync for SendMutPtr {}
 /// element sets, buffer outlives all accesses, `T: Send`.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
+// SAFETY: moving the wrapper across threads moves only the address;
+// dereferences stay behind the disjoint-elements contract, and `T: Send`
+// keeps the pointee movable between threads.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: shared access copies the pointer value only; per-thread element
+// disjointness (caller contract) serializes all actual `T` accesses.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]

@@ -62,6 +62,9 @@ static SCHED_CFG: AtomicU8 = AtomicU8::new(0);
 fn env_schedule() -> Option<Schedule> {
     static ENV: OnceLock<Option<Schedule>> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_SCHEDULE fallback
+        // behind set_schedule() (CLI/config take precedence).
         std::env::var("SNSOLVE_SCHEDULE").ok().and_then(|s| Schedule::parse(&s))
     })
 }
@@ -231,10 +234,51 @@ pub fn plan_from_parts(parts: &[Range<usize>], grain: usize, align: usize) -> St
 /// the front (`head += 1`), thieves from the back (`tail -= 1`); `head`
 /// only grows and `tail` only shrinks, so a successful CAS is always a
 /// unique claim (no ABA).
+///
+/// # Memory-ordering audit (loom-style)
+///
+/// Three happens-before obligations exist in this executor, and each is
+/// discharged by exactly one mechanism:
+///
+/// 1. **Claim uniqueness** — every unit index handed out exactly once.
+///    Discharged by CAS *atomicity* alone (no ordering needed): both
+///    cursors live in one `AtomicU64`, `head` is monotonically
+///    non-decreasing and `tail` monotonically non-increasing within a
+///    region, so a stale snapshot can never CAS successfully (no ABA) and
+///    two racing claimers of the same index can never both win.
+/// 2. **Plan visibility** — workers must see the fully initialized
+///    `units` / `deques` vectors. Discharged by `std::thread::scope`'s
+///    spawn edge: `Scope::spawn` synchronizes-with the start of each
+///    worker closure, which carries the plan by shared reference.
+/// 3. **Result visibility** — the caller must see every output region the
+///    kernels wrote, including stolen units executed on foreign workers.
+///    Discharged by the scope *join* barrier: `std::thread::scope` only
+///    returns after joining every worker, and join synchronizes-with each
+///    worker's termination. Kernels write **disjoint** regions per index
+///    (the [`run_units`] contract), so no cross-worker ordering is needed
+///    while the region runs — the join is the only barrier required.
+///
+/// Given 1–3, `Relaxed` CAS would already be *correct* for the deque
+/// word. The claim loops nevertheless use `Acquire` loads and
+/// `AcqRel`/`Acquire` `compare_exchange_weak` so that every successful
+/// claim is also a release/acquire edge from the previous claimer:
+/// TSan/Miri then see an explicit handoff chain per deque instead of
+/// having to reason through the join barrier, and on x86/aarch64 the
+/// upgrade from `Relaxed` is free-to-cheap on this uncontended-by-design
+/// word (UNITS_PER_WORKER deques each touched mostly by their owner).
+///
+/// The observability counters ([`PoolStats`]) are deliberately `Relaxed`:
+/// they are monotone event tallies guarding no data, read only after
+/// regions complete (where the join already ordered them) or for
+/// best-effort reporting.
 fn pack(head: u32, tail: u32) -> u64 {
     (u64::from(head) << 32) | u64::from(tail)
 }
 
+/// Owner-side claim (`head += 1`). Orderings per the audit above: the
+/// `Acquire` load / failure ordering pairs with the `AcqRel` success of
+/// whichever claimer last moved this word; correctness needs only the CAS
+/// atomicity.
 fn pop_front(d: &AtomicU64) -> Option<usize> {
     let mut s = d.load(Ordering::Acquire);
     loop {
@@ -249,6 +293,9 @@ fn pop_front(d: &AtomicU64) -> Option<usize> {
     }
 }
 
+/// Thief-side claim (`tail -= 1`) — same word, same orderings, same
+/// audit as [`pop_front`]; symmetry means owner and thief racing for the
+/// last unit resolve through a single CAS with no special case.
 fn pop_back(d: &AtomicU64) -> Option<usize> {
     let mut s = d.load(Ordering::Acquire);
     loop {

@@ -116,6 +116,9 @@ impl SimdKernels for Avx512Kernels {
 }
 
 /// 8x8 register-tile `C += A·B` over `kc` depth steps (unpacked operands).
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "avx512f")]
 unsafe fn gemm_tile_avx512(
@@ -129,27 +132,33 @@ unsafe fn gemm_tile_avx512(
     pc: usize,
     kc: usize,
 ) {
-    assert!(kc > 0 && (i0 + MR - 1) * k + pc + kc <= a.len());
-    assert!((pc + kc - 1) * n + j0 + NR <= b.len());
-    assert!((i0 + MR - 1) * n + j0 + NR <= c.len());
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let zero = _mm512_setzero_pd();
-    let mut acc = [zero; MR];
-    let mut a_off = [0usize; MR];
-    for (r, off) in a_off.iter_mut().enumerate() {
-        *off = (i0 + r) * k + pc;
-    }
-    for p in 0..kc {
-        let b0 = _mm512_loadu_pd(bp.add((pc + p) * n + j0));
-        for (r, accr) in acc.iter_mut().enumerate() {
-            let ar = _mm512_set1_pd(*ap.add(a_off[r] + p));
-            *accr = _mm512_fmadd_pd(ar, b0, *accr);
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        assert!(kc > 0 && (i0 + MR - 1) * k + pc + kc <= a.len());
+        assert!((pc + kc - 1) * n + j0 + NR <= b.len());
+        assert!((i0 + MR - 1) * n + j0 + NR <= c.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let zero = _mm512_setzero_pd();
+        let mut acc = [zero; MR];
+        let mut a_off = [0usize; MR];
+        for (r, off) in a_off.iter_mut().enumerate() {
+            *off = (i0 + r) * k + pc;
         }
-    }
-    for (r, &v) in acc.iter().enumerate() {
-        let cp = c.as_mut_ptr().add((i0 + r) * n + j0);
-        _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), v));
+        for p in 0..kc {
+            let b0 = _mm512_loadu_pd(bp.add((pc + p) * n + j0));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let ar = _mm512_set1_pd(*ap.add(a_off[r] + p));
+                *accr = _mm512_fmadd_pd(ar, b0, *accr);
+            }
+        }
+        for (r, &v) in acc.iter().enumerate() {
+            let cp = c.as_mut_ptr().add((i0 + r) * n + j0);
+            _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), v));
+        }
     }
 }
 
@@ -157,6 +166,9 @@ unsafe fn gemm_tile_avx512(
 /// the contiguous pack strip / panel — full tiles are bitwise identical to
 /// the direct tile. Ragged tiles (zero-padded in the pack) spill the
 /// accumulators and mask the write-back.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "avx512f")]
 unsafe fn gemm_tile_packed_avx512(
@@ -170,36 +182,42 @@ unsafe fn gemm_tile_packed_avx512(
     mr: usize,
     nr: usize,
 ) {
-    assert!(kc > 0 && mr <= MR && nr <= NR);
-    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
-    assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
-    let app = ap.as_ptr();
-    let bpp = bp.as_ptr();
-    let zero = _mm512_setzero_pd();
-    let mut acc = [zero; MR];
-    for p in 0..kc {
-        let b0 = _mm512_loadu_pd(bpp.add(p * NR));
-        let arow = app.add(p * MR);
-        for (r, accr) in acc.iter_mut().enumerate() {
-            let ar = _mm512_set1_pd(*arow.add(r));
-            *accr = _mm512_fmadd_pd(ar, b0, *accr);
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        assert!(kc > 0 && mr <= MR && nr <= NR);
+        assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        let zero = _mm512_setzero_pd();
+        let mut acc = [zero; MR];
+        for p in 0..kc {
+            let b0 = _mm512_loadu_pd(bpp.add(p * NR));
+            let arow = app.add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let ar = _mm512_set1_pd(*arow.add(r));
+                *accr = _mm512_fmadd_pd(ar, b0, *accr);
+            }
         }
-    }
-    if mr == MR && nr == NR {
-        for (r, &v) in acc.iter().enumerate() {
-            let cp = c.as_mut_ptr().add((i0 + r) * ldc + j0);
-            _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), v));
-        }
-    } else {
-        // Spill and mask: the padded accumulator rows/columns never reach C.
-        let mut spill = [0.0f64; MR * NR];
-        for (r, &v) in acc.iter().enumerate() {
-            _mm512_storeu_pd(spill.as_mut_ptr().add(r * NR), v);
-        }
-        for r in 0..mr {
-            let crow = (i0 + r) * ldc + j0;
-            for s in 0..nr {
-                c[crow + s] += spill[r * NR + s];
+        if mr == MR && nr == NR {
+            for (r, &v) in acc.iter().enumerate() {
+                let cp = c.as_mut_ptr().add((i0 + r) * ldc + j0);
+                _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), v));
+            }
+        } else {
+            // Spill and mask: the padded accumulator rows/columns never reach C.
+            let mut spill = [0.0f64; MR * NR];
+            for (r, &v) in acc.iter().enumerate() {
+                _mm512_storeu_pd(spill.as_mut_ptr().add(r * NR), v);
+            }
+            for r in 0..mr {
+                let crow = (i0 + r) * ldc + j0;
+                for s in 0..nr {
+                    c[crow + s] += spill[r * NR + s];
+                }
             }
         }
     }
@@ -207,174 +225,240 @@ unsafe fn gemm_tile_packed_avx512(
 
 /// Dot product: 4 vector accumulators (stride 32), combined pairwise like
 /// the scalar kernel's 4 partial sums, scalar tail.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn dot_avx512(a: &[f64], b: &[f64]) -> f64 {
-    let n = a.len();
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut s0 = _mm512_setzero_pd();
-    let mut s1 = _mm512_setzero_pd();
-    let mut s2 = _mm512_setzero_pd();
-    let mut s3 = _mm512_setzero_pd();
-    let chunks = n / 32;
-    for ch in 0..chunks {
-        let i = ch * 32;
-        s0 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i)), _mm512_loadu_pd(bp.add(i)), s0);
-        s1 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i + 8)), _mm512_loadu_pd(bp.add(i + 8)), s1);
-        s2 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i + 16)), _mm512_loadu_pd(bp.add(i + 16)), s2);
-        s3 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i + 24)), _mm512_loadu_pd(bp.add(i + 24)), s3);
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut s0 = _mm512_setzero_pd();
+        let mut s1 = _mm512_setzero_pd();
+        let mut s2 = _mm512_setzero_pd();
+        let mut s3 = _mm512_setzero_pd();
+        let chunks = n / 32;
+        for ch in 0..chunks {
+            let i = ch * 32;
+            s0 = _mm512_fmadd_pd(_mm512_loadu_pd(ap.add(i)), _mm512_loadu_pd(bp.add(i)), s0);
+            s1 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(ap.add(i + 8)),
+                _mm512_loadu_pd(bp.add(i + 8)),
+                s1,
+            );
+            s2 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(ap.add(i + 16)),
+                _mm512_loadu_pd(bp.add(i + 16)),
+                s2,
+            );
+            s3 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(ap.add(i + 24)),
+                _mm512_loadu_pd(bp.add(i + 24)),
+                s3,
+            );
+        }
+        let t = _mm512_add_pd(_mm512_add_pd(s0, s1), _mm512_add_pd(s2, s3));
+        let mut s = _mm512_reduce_add_pd(t);
+        for i in chunks * 32..n {
+            s += a[i] * b[i];
+        }
+        s
     }
-    let t = _mm512_add_pd(_mm512_add_pd(s0, s1), _mm512_add_pd(s2, s3));
-    let mut s = _mm512_reduce_add_pd(t);
-    for i in chunks * 32..n {
-        s += a[i] * b[i];
-    }
-    s
 }
 
 /// `y += alpha · x`, two vectors per iteration (16-element body chunk —
 /// the stripe alignment `gemm::matvec_t` relies on), scalar tail.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn axpy_avx512(alpha: f64, x: &[f64], y: &mut [f64]) {
-    let n = x.len();
-    let va = _mm512_set1_pd(alpha);
-    let xp = x.as_ptr();
-    let yp = y.as_mut_ptr();
-    let chunks = n / 16;
-    for ch in 0..chunks {
-        let i = ch * 16;
-        let y0 = _mm512_fmadd_pd(va, _mm512_loadu_pd(xp.add(i)), _mm512_loadu_pd(yp.add(i)));
-        let y1 =
-            _mm512_fmadd_pd(va, _mm512_loadu_pd(xp.add(i + 8)), _mm512_loadu_pd(yp.add(i + 8)));
-        _mm512_storeu_pd(yp.add(i), y0);
-        _mm512_storeu_pd(yp.add(i + 8), y1);
-    }
-    for i in chunks * 16..n {
-        y[i] += alpha * x[i];
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = x.len();
+        let va = _mm512_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let chunks = n / 16;
+        for ch in 0..chunks {
+            let i = ch * 16;
+            let y0 = _mm512_fmadd_pd(va, _mm512_loadu_pd(xp.add(i)), _mm512_loadu_pd(yp.add(i)));
+            let y1 =
+                _mm512_fmadd_pd(va, _mm512_loadu_pd(xp.add(i + 8)), _mm512_loadu_pd(yp.add(i + 8)));
+            _mm512_storeu_pd(yp.add(i), y0);
+            _mm512_storeu_pd(yp.add(i + 8), y1);
+        }
+        for i in chunks * 16..n {
+            y[i] += alpha * x[i];
+        }
     }
 }
 
 /// `x *= alpha`. One rounding per element — bitwise identical to scalar.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn scal_avx512(alpha: f64, x: &mut [f64]) {
-    let n = x.len();
-    let va = _mm512_set1_pd(alpha);
-    let xp = x.as_mut_ptr();
-    let chunks = n / 8;
-    for ch in 0..chunks {
-        let i = ch * 8;
-        _mm512_storeu_pd(xp.add(i), _mm512_mul_pd(va, _mm512_loadu_pd(xp.add(i))));
-    }
-    for i in chunks * 8..n {
-        x[i] *= alpha;
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = x.len();
+        let va = _mm512_set1_pd(alpha);
+        let xp = x.as_mut_ptr();
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let i = ch * 8;
+            _mm512_storeu_pd(xp.add(i), _mm512_mul_pd(va, _mm512_loadu_pd(xp.add(i))));
+        }
+        for i in chunks * 8..n {
+            x[i] *= alpha;
+        }
     }
 }
 
 /// Fused radix-4 butterfly — two cascaded add/sub levels per lane, bitwise
 /// identical to two stage-per-pass butterflies on every backend.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn butterfly4_avx512(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
-    let n = r0.len();
-    let p0 = r0.as_mut_ptr();
-    let p1 = r1.as_mut_ptr();
-    let p2 = r2.as_mut_ptr();
-    let p3 = r3.as_mut_ptr();
-    let chunks = n / 8;
-    for ch in 0..chunks {
-        let i = ch * 8;
-        let a = _mm512_loadu_pd(p0.add(i));
-        let b = _mm512_loadu_pd(p1.add(i));
-        let c = _mm512_loadu_pd(p2.add(i));
-        let d = _mm512_loadu_pd(p3.add(i));
-        let t0 = _mm512_add_pd(a, b);
-        let t1 = _mm512_sub_pd(a, b);
-        let t2 = _mm512_add_pd(c, d);
-        let t3 = _mm512_sub_pd(c, d);
-        _mm512_storeu_pd(p0.add(i), _mm512_add_pd(t0, t2));
-        _mm512_storeu_pd(p1.add(i), _mm512_add_pd(t1, t3));
-        _mm512_storeu_pd(p2.add(i), _mm512_sub_pd(t0, t2));
-        _mm512_storeu_pd(p3.add(i), _mm512_sub_pd(t1, t3));
-    }
-    for i in chunks * 8..n {
-        let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
-        r0[i] = o0;
-        r1[i] = o1;
-        r2[i] = o2;
-        r3[i] = o3;
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = r0.len();
+        let p0 = r0.as_mut_ptr();
+        let p1 = r1.as_mut_ptr();
+        let p2 = r2.as_mut_ptr();
+        let p3 = r3.as_mut_ptr();
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let i = ch * 8;
+            let a = _mm512_loadu_pd(p0.add(i));
+            let b = _mm512_loadu_pd(p1.add(i));
+            let c = _mm512_loadu_pd(p2.add(i));
+            let d = _mm512_loadu_pd(p3.add(i));
+            let t0 = _mm512_add_pd(a, b);
+            let t1 = _mm512_sub_pd(a, b);
+            let t2 = _mm512_add_pd(c, d);
+            let t3 = _mm512_sub_pd(c, d);
+            _mm512_storeu_pd(p0.add(i), _mm512_add_pd(t0, t2));
+            _mm512_storeu_pd(p1.add(i), _mm512_add_pd(t1, t3));
+            _mm512_storeu_pd(p2.add(i), _mm512_sub_pd(t0, t2));
+            _mm512_storeu_pd(p3.add(i), _mm512_sub_pd(t1, t3));
+        }
+        for i in chunks * 8..n {
+            let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
+            r0[i] = o0;
+            r1[i] = o1;
+            r2[i] = o2;
+            r3[i] = o3;
+        }
     }
 }
 
 /// Fused radix-8 butterfly — three cascaded add/sub levels per lane,
 /// bitwise identical to three stage-per-pass butterflies.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn butterfly8_avx512(r: [&mut [f64]; 8]) {
-    let n = r[0].len();
-    let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
-    let p = [
-        r0.as_mut_ptr(),
-        r1.as_mut_ptr(),
-        r2.as_mut_ptr(),
-        r3.as_mut_ptr(),
-        r4.as_mut_ptr(),
-        r5.as_mut_ptr(),
-        r6.as_mut_ptr(),
-        r7.as_mut_ptr(),
-    ];
-    let chunks = n / 8;
-    for ch in 0..chunks {
-        let i = ch * 8;
-        let mut v = [_mm512_setzero_pd(); 8];
-        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
-            *vl = _mm512_loadu_pd(pl.add(i));
-        }
-        let mut s = [_mm512_setzero_pd(); 8];
-        for l in 0..4 {
-            s[2 * l] = _mm512_add_pd(v[2 * l], v[2 * l + 1]);
-            s[2 * l + 1] = _mm512_sub_pd(v[2 * l], v[2 * l + 1]);
-        }
-        let mut t = [_mm512_setzero_pd(); 8];
-        for half in 0..2 {
-            let b = 4 * half;
-            for l in 0..2 {
-                t[b + l] = _mm512_add_pd(s[b + l], s[b + l + 2]);
-                t[b + l + 2] = _mm512_sub_pd(s[b + l], s[b + l + 2]);
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = r[0].len();
+        let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
+        let p = [
+            r0.as_mut_ptr(),
+            r1.as_mut_ptr(),
+            r2.as_mut_ptr(),
+            r3.as_mut_ptr(),
+            r4.as_mut_ptr(),
+            r5.as_mut_ptr(),
+            r6.as_mut_ptr(),
+            r7.as_mut_ptr(),
+        ];
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let i = ch * 8;
+            let mut v = [_mm512_setzero_pd(); 8];
+            for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+                *vl = _mm512_loadu_pd(pl.add(i));
+            }
+            let mut s = [_mm512_setzero_pd(); 8];
+            for l in 0..4 {
+                s[2 * l] = _mm512_add_pd(v[2 * l], v[2 * l + 1]);
+                s[2 * l + 1] = _mm512_sub_pd(v[2 * l], v[2 * l + 1]);
+            }
+            let mut t = [_mm512_setzero_pd(); 8];
+            for half in 0..2 {
+                let b = 4 * half;
+                for l in 0..2 {
+                    t[b + l] = _mm512_add_pd(s[b + l], s[b + l + 2]);
+                    t[b + l + 2] = _mm512_sub_pd(s[b + l], s[b + l + 2]);
+                }
+            }
+            for l in 0..4 {
+                _mm512_storeu_pd(p[l].add(i), _mm512_add_pd(t[l], t[l + 4]));
+                _mm512_storeu_pd(p[l + 4].add(i), _mm512_sub_pd(t[l], t[l + 4]));
             }
         }
-        for l in 0..4 {
-            _mm512_storeu_pd(p[l].add(i), _mm512_add_pd(t[l], t[l + 4]));
-            _mm512_storeu_pd(p[l + 4].add(i), _mm512_sub_pd(t[l], t[l + 4]));
-        }
-    }
-    for i in chunks * 8..n {
-        let mut v = [0.0f64; 8];
-        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
-            *vl = *pl.add(i);
-        }
-        let o = super::butterfly8_lane(v);
-        for (l, &pl) in p.iter().enumerate() {
-            *pl.add(i) = o[l];
+        for i in chunks * 8..n {
+            let mut v = [0.0f64; 8];
+            for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+                *vl = *pl.add(i);
+            }
+            let o = super::butterfly8_lane(v);
+            for (l, &pl) in p.iter().enumerate() {
+                *pl.add(i) = o[l];
+            }
         }
     }
 }
 
 /// Butterfly pass — adds/subs only, bitwise identical to scalar.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified AVX-512F support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "avx512f")]
 unsafe fn butterfly_avx512(a: &mut [f64], b: &mut [f64]) {
-    let n = a.len();
-    let ap = a.as_mut_ptr();
-    let bp = b.as_mut_ptr();
-    let chunks = n / 8;
-    for ch in 0..chunks {
-        let i = ch * 8;
-        let u = _mm512_loadu_pd(ap.add(i));
-        let v = _mm512_loadu_pd(bp.add(i));
-        _mm512_storeu_pd(ap.add(i), _mm512_add_pd(u, v));
-        _mm512_storeu_pd(bp.add(i), _mm512_sub_pd(u, v));
-    }
-    for i in chunks * 8..n {
-        let u = a[i];
-        let v = b[i];
-        a[i] = u + v;
-        b[i] = u - v;
+    // SAFETY: the enclosing fn's contract guarantees AVX-512F is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = a.len();
+        let ap = a.as_mut_ptr();
+        let bp = b.as_mut_ptr();
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let i = ch * 8;
+            let u = _mm512_loadu_pd(ap.add(i));
+            let v = _mm512_loadu_pd(bp.add(i));
+            _mm512_storeu_pd(ap.add(i), _mm512_add_pd(u, v));
+            _mm512_storeu_pd(bp.add(i), _mm512_sub_pd(u, v));
+        }
+        for i in chunks * 8..n {
+            let u = a[i];
+            let v = b[i];
+            a[i] = u + v;
+            b[i] = u - v;
+        }
     }
 }

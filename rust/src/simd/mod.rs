@@ -359,6 +359,9 @@ pub fn clear_choice() {
 fn env_choice() -> SimdChoice {
     static ENV: OnceLock<SimdChoice> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_SIMD fallback
+        // behind set_choice() (CLI/config take precedence).
         std::env::var("SNSOLVE_SIMD")
             .ok()
             .and_then(|s| SimdChoice::parse(&s))

@@ -109,6 +109,9 @@ impl SimdKernels for NeonKernels {
 }
 
 /// 4x8 register-tile `C += A·B` over `kc` depth steps.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "neon")]
 unsafe fn gemm_tile_neon(
@@ -122,33 +125,39 @@ unsafe fn gemm_tile_neon(
     pc: usize,
     kc: usize,
 ) {
-    assert!(kc > 0 && (i0 + MR - 1) * k + pc + kc <= a.len());
-    assert!((pc + kc - 1) * n + j0 + NR <= b.len());
-    assert!((i0 + MR - 1) * n + j0 + NR <= c.len());
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let zero: float64x2_t = vdupq_n_f64(0.0);
-    let mut acc = [[zero; 4]; MR];
-    let a_off = [i0 * k + pc, (i0 + 1) * k + pc, (i0 + 2) * k + pc, (i0 + 3) * k + pc];
-    for p in 0..kc {
-        let brow = bp.add((pc + p) * n + j0);
-        let b0 = vld1q_f64(brow);
-        let b1 = vld1q_f64(brow.add(2));
-        let b2 = vld1q_f64(brow.add(4));
-        let b3 = vld1q_f64(brow.add(6));
-        for r in 0..MR {
-            let ar = vdupq_n_f64(*ap.add(a_off[r] + p));
-            acc[r][0] = vfmaq_f64(acc[r][0], ar, b0);
-            acc[r][1] = vfmaq_f64(acc[r][1], ar, b1);
-            acc[r][2] = vfmaq_f64(acc[r][2], ar, b2);
-            acc[r][3] = vfmaq_f64(acc[r][3], ar, b3);
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        assert!(kc > 0 && (i0 + MR - 1) * k + pc + kc <= a.len());
+        assert!((pc + kc - 1) * n + j0 + NR <= b.len());
+        assert!((i0 + MR - 1) * n + j0 + NR <= c.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let zero: float64x2_t = vdupq_n_f64(0.0);
+        let mut acc = [[zero; 4]; MR];
+        let a_off = [i0 * k + pc, (i0 + 1) * k + pc, (i0 + 2) * k + pc, (i0 + 3) * k + pc];
+        for p in 0..kc {
+            let brow = bp.add((pc + p) * n + j0);
+            let b0 = vld1q_f64(brow);
+            let b1 = vld1q_f64(brow.add(2));
+            let b2 = vld1q_f64(brow.add(4));
+            let b3 = vld1q_f64(brow.add(6));
+            for r in 0..MR {
+                let ar = vdupq_n_f64(*ap.add(a_off[r] + p));
+                acc[r][0] = vfmaq_f64(acc[r][0], ar, b0);
+                acc[r][1] = vfmaq_f64(acc[r][1], ar, b1);
+                acc[r][2] = vfmaq_f64(acc[r][2], ar, b2);
+                acc[r][3] = vfmaq_f64(acc[r][3], ar, b3);
+            }
         }
-    }
-    for (r, row) in acc.iter().enumerate() {
-        let crow = c.as_mut_ptr().add((i0 + r) * n + j0);
-        for (s, &v) in row.iter().enumerate() {
-            let cp = crow.add(2 * s);
-            vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+        for (r, row) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i0 + r) * n + j0);
+            for (s, &v) in row.iter().enumerate() {
+                let cp = crow.add(2 * s);
+                vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+            }
         }
     }
 }
@@ -157,6 +166,9 @@ unsafe fn gemm_tile_neon(
 /// depth, four q-register columns per row), reading the contiguous pack
 /// strip / panel — full tiles are bitwise identical to the direct tile.
 /// Ragged tiles (zero-padded in the pack) spill and mask the write-back.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "neon")]
 unsafe fn gemm_tile_packed_neon(
@@ -170,48 +182,54 @@ unsafe fn gemm_tile_packed_neon(
     mr: usize,
     nr: usize,
 ) {
-    assert!(kc > 0 && mr <= MR && nr <= NR);
-    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
-    assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
-    let app = ap.as_ptr();
-    let bpp = bp.as_ptr();
-    let zero: float64x2_t = vdupq_n_f64(0.0);
-    let mut acc = [[zero; 4]; MR];
-    for p in 0..kc {
-        let brow = bpp.add(p * NR);
-        let b0 = vld1q_f64(brow);
-        let b1 = vld1q_f64(brow.add(2));
-        let b2 = vld1q_f64(brow.add(4));
-        let b3 = vld1q_f64(brow.add(6));
-        let arow = app.add(p * MR);
-        for (r, accr) in acc.iter_mut().enumerate() {
-            let ar = vdupq_n_f64(*arow.add(r));
-            accr[0] = vfmaq_f64(accr[0], ar, b0);
-            accr[1] = vfmaq_f64(accr[1], ar, b1);
-            accr[2] = vfmaq_f64(accr[2], ar, b2);
-            accr[3] = vfmaq_f64(accr[3], ar, b3);
-        }
-    }
-    if mr == MR && nr == NR {
-        for (r, row) in acc.iter().enumerate() {
-            let crow = c.as_mut_ptr().add((i0 + r) * ldc + j0);
-            for (s, &v) in row.iter().enumerate() {
-                let cp = crow.add(2 * s);
-                vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        assert!(kc > 0 && mr <= MR && nr <= NR);
+        assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        assert!((i0 + mr - 1) * ldc + j0 + nr <= c.len());
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        let zero: float64x2_t = vdupq_n_f64(0.0);
+        let mut acc = [[zero; 4]; MR];
+        for p in 0..kc {
+            let brow = bpp.add(p * NR);
+            let b0 = vld1q_f64(brow);
+            let b1 = vld1q_f64(brow.add(2));
+            let b2 = vld1q_f64(brow.add(4));
+            let b3 = vld1q_f64(brow.add(6));
+            let arow = app.add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let ar = vdupq_n_f64(*arow.add(r));
+                accr[0] = vfmaq_f64(accr[0], ar, b0);
+                accr[1] = vfmaq_f64(accr[1], ar, b1);
+                accr[2] = vfmaq_f64(accr[2], ar, b2);
+                accr[3] = vfmaq_f64(accr[3], ar, b3);
             }
         }
-    } else {
-        // Spill and mask: the padded accumulator rows/columns never reach C.
-        let mut spill = [0.0f64; MR * NR];
-        for (r, row) in acc.iter().enumerate() {
-            for (s, &v) in row.iter().enumerate() {
-                vst1q_f64(spill.as_mut_ptr().add(r * NR + 2 * s), v);
+        if mr == MR && nr == NR {
+            for (r, row) in acc.iter().enumerate() {
+                let crow = c.as_mut_ptr().add((i0 + r) * ldc + j0);
+                for (s, &v) in row.iter().enumerate() {
+                    let cp = crow.add(2 * s);
+                    vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), v));
+                }
             }
-        }
-        for r in 0..mr {
-            let crow = (i0 + r) * ldc + j0;
-            for s in 0..nr {
-                c[crow + s] += spill[r * NR + s];
+        } else {
+            // Spill and mask: the padded accumulator rows/columns never reach C.
+            let mut spill = [0.0f64; MR * NR];
+            for (r, row) in acc.iter().enumerate() {
+                for (s, &v) in row.iter().enumerate() {
+                    vst1q_f64(spill.as_mut_ptr().add(r * NR + 2 * s), v);
+                }
+            }
+            for r in 0..mr {
+                let crow = (i0 + r) * ldc + j0;
+                for s in 0..nr {
+                    c[crow + s] += spill[r * NR + s];
+                }
             }
         }
     }
@@ -219,173 +237,227 @@ unsafe fn gemm_tile_packed_neon(
 
 /// Dot product: 4 vector accumulators (stride 8), combined pairwise like
 /// the scalar kernel's partial sums, scalar tail.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
-    let n = a.len();
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut s0 = vdupq_n_f64(0.0);
-    let mut s1 = vdupq_n_f64(0.0);
-    let mut s2 = vdupq_n_f64(0.0);
-    let mut s3 = vdupq_n_f64(0.0);
-    let chunks = n / 8;
-    for ch in 0..chunks {
-        let i = ch * 8;
-        s0 = vfmaq_f64(s0, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
-        s1 = vfmaq_f64(s1, vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2)));
-        s2 = vfmaq_f64(s2, vld1q_f64(ap.add(i + 4)), vld1q_f64(bp.add(i + 4)));
-        s3 = vfmaq_f64(s3, vld1q_f64(ap.add(i + 6)), vld1q_f64(bp.add(i + 6)));
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut s0 = vdupq_n_f64(0.0);
+        let mut s1 = vdupq_n_f64(0.0);
+        let mut s2 = vdupq_n_f64(0.0);
+        let mut s3 = vdupq_n_f64(0.0);
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let i = ch * 8;
+            s0 = vfmaq_f64(s0, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
+            s1 = vfmaq_f64(s1, vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2)));
+            s2 = vfmaq_f64(s2, vld1q_f64(ap.add(i + 4)), vld1q_f64(bp.add(i + 4)));
+            s3 = vfmaq_f64(s3, vld1q_f64(ap.add(i + 6)), vld1q_f64(bp.add(i + 6)));
+        }
+        let t = vaddq_f64(vaddq_f64(s0, s1), vaddq_f64(s2, s3));
+        let mut s = vaddvq_f64(t);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
     }
-    let t = vaddq_f64(vaddq_f64(s0, s1), vaddq_f64(s2, s3));
-    let mut s = vaddvq_f64(t);
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
 }
 
 /// `y += alpha · x`, two vectors per iteration, scalar tail.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
-    let n = x.len();
-    let va = vdupq_n_f64(alpha);
-    let xp = x.as_ptr();
-    let yp = y.as_mut_ptr();
-    let chunks = n / 4;
-    for ch in 0..chunks {
-        let i = ch * 4;
-        let y0 = vfmaq_f64(vld1q_f64(yp.add(i)), va, vld1q_f64(xp.add(i)));
-        let y1 = vfmaq_f64(vld1q_f64(yp.add(i + 2)), va, vld1q_f64(xp.add(i + 2)));
-        vst1q_f64(yp.add(i), y0);
-        vst1q_f64(yp.add(i + 2), y1);
-    }
-    for i in chunks * 4..n {
-        y[i] += alpha * x[i];
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = x.len();
+        let va = vdupq_n_f64(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let chunks = n / 4;
+        for ch in 0..chunks {
+            let i = ch * 4;
+            let y0 = vfmaq_f64(vld1q_f64(yp.add(i)), va, vld1q_f64(xp.add(i)));
+            let y1 = vfmaq_f64(vld1q_f64(yp.add(i + 2)), va, vld1q_f64(xp.add(i + 2)));
+            vst1q_f64(yp.add(i), y0);
+            vst1q_f64(yp.add(i + 2), y1);
+        }
+        for i in chunks * 4..n {
+            y[i] += alpha * x[i];
+        }
     }
 }
 
 /// `x *= alpha`. One rounding per element — bitwise identical to scalar.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn scal_neon(alpha: f64, x: &mut [f64]) {
-    let n = x.len();
-    let va = vdupq_n_f64(alpha);
-    let xp = x.as_mut_ptr();
-    let chunks = n / 2;
-    for ch in 0..chunks {
-        let i = ch * 2;
-        vst1q_f64(xp.add(i), vmulq_f64(va, vld1q_f64(xp.add(i))));
-    }
-    for i in chunks * 2..n {
-        x[i] *= alpha;
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = x.len();
+        let va = vdupq_n_f64(alpha);
+        let xp = x.as_mut_ptr();
+        let chunks = n / 2;
+        for ch in 0..chunks {
+            let i = ch * 2;
+            vst1q_f64(xp.add(i), vmulq_f64(va, vld1q_f64(xp.add(i))));
+        }
+        for i in chunks * 2..n {
+            x[i] *= alpha;
+        }
     }
 }
 
 /// Fused radix-4 butterfly — two cascaded add/sub levels per lane, bitwise
 /// identical to two stage-per-pass butterflies on every backend.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn butterfly4_neon(r0: &mut [f64], r1: &mut [f64], r2: &mut [f64], r3: &mut [f64]) {
-    let n = r0.len();
-    let p0 = r0.as_mut_ptr();
-    let p1 = r1.as_mut_ptr();
-    let p2 = r2.as_mut_ptr();
-    let p3 = r3.as_mut_ptr();
-    let chunks = n / 2;
-    for ch in 0..chunks {
-        let i = ch * 2;
-        let a = vld1q_f64(p0.add(i));
-        let b = vld1q_f64(p1.add(i));
-        let c = vld1q_f64(p2.add(i));
-        let d = vld1q_f64(p3.add(i));
-        let t0 = vaddq_f64(a, b);
-        let t1 = vsubq_f64(a, b);
-        let t2 = vaddq_f64(c, d);
-        let t3 = vsubq_f64(c, d);
-        vst1q_f64(p0.add(i), vaddq_f64(t0, t2));
-        vst1q_f64(p1.add(i), vaddq_f64(t1, t3));
-        vst1q_f64(p2.add(i), vsubq_f64(t0, t2));
-        vst1q_f64(p3.add(i), vsubq_f64(t1, t3));
-    }
-    for i in chunks * 2..n {
-        let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
-        r0[i] = o0;
-        r1[i] = o1;
-        r2[i] = o2;
-        r3[i] = o3;
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = r0.len();
+        let p0 = r0.as_mut_ptr();
+        let p1 = r1.as_mut_ptr();
+        let p2 = r2.as_mut_ptr();
+        let p3 = r3.as_mut_ptr();
+        let chunks = n / 2;
+        for ch in 0..chunks {
+            let i = ch * 2;
+            let a = vld1q_f64(p0.add(i));
+            let b = vld1q_f64(p1.add(i));
+            let c = vld1q_f64(p2.add(i));
+            let d = vld1q_f64(p3.add(i));
+            let t0 = vaddq_f64(a, b);
+            let t1 = vsubq_f64(a, b);
+            let t2 = vaddq_f64(c, d);
+            let t3 = vsubq_f64(c, d);
+            vst1q_f64(p0.add(i), vaddq_f64(t0, t2));
+            vst1q_f64(p1.add(i), vaddq_f64(t1, t3));
+            vst1q_f64(p2.add(i), vsubq_f64(t0, t2));
+            vst1q_f64(p3.add(i), vsubq_f64(t1, t3));
+        }
+        for i in chunks * 2..n {
+            let (o0, o1, o2, o3) = super::butterfly4_lane(r0[i], r1[i], r2[i], r3[i]);
+            r0[i] = o0;
+            r1[i] = o1;
+            r2[i] = o2;
+            r3[i] = o3;
+        }
     }
 }
 
 /// Fused radix-8 butterfly — three cascaded add/sub levels per lane,
 /// bitwise identical to three stage-per-pass butterflies.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn butterfly8_neon(r: [&mut [f64]; 8]) {
-    let n = r[0].len();
-    let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
-    let p = [
-        r0.as_mut_ptr(),
-        r1.as_mut_ptr(),
-        r2.as_mut_ptr(),
-        r3.as_mut_ptr(),
-        r4.as_mut_ptr(),
-        r5.as_mut_ptr(),
-        r6.as_mut_ptr(),
-        r7.as_mut_ptr(),
-    ];
-    let chunks = n / 2;
-    for ch in 0..chunks {
-        let i = ch * 2;
-        let zero: float64x2_t = vdupq_n_f64(0.0);
-        let mut v = [zero; 8];
-        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
-            *vl = vld1q_f64(pl.add(i));
-        }
-        let mut s = [zero; 8];
-        for l in 0..4 {
-            s[2 * l] = vaddq_f64(v[2 * l], v[2 * l + 1]);
-            s[2 * l + 1] = vsubq_f64(v[2 * l], v[2 * l + 1]);
-        }
-        let mut t = [zero; 8];
-        for half in 0..2 {
-            let b = 4 * half;
-            for l in 0..2 {
-                t[b + l] = vaddq_f64(s[b + l], s[b + l + 2]);
-                t[b + l + 2] = vsubq_f64(s[b + l], s[b + l + 2]);
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = r[0].len();
+        let [r0, r1, r2, r3, r4, r5, r6, r7] = r;
+        let p = [
+            r0.as_mut_ptr(),
+            r1.as_mut_ptr(),
+            r2.as_mut_ptr(),
+            r3.as_mut_ptr(),
+            r4.as_mut_ptr(),
+            r5.as_mut_ptr(),
+            r6.as_mut_ptr(),
+            r7.as_mut_ptr(),
+        ];
+        let chunks = n / 2;
+        for ch in 0..chunks {
+            let i = ch * 2;
+            let zero: float64x2_t = vdupq_n_f64(0.0);
+            let mut v = [zero; 8];
+            for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+                *vl = vld1q_f64(pl.add(i));
+            }
+            let mut s = [zero; 8];
+            for l in 0..4 {
+                s[2 * l] = vaddq_f64(v[2 * l], v[2 * l + 1]);
+                s[2 * l + 1] = vsubq_f64(v[2 * l], v[2 * l + 1]);
+            }
+            let mut t = [zero; 8];
+            for half in 0..2 {
+                let b = 4 * half;
+                for l in 0..2 {
+                    t[b + l] = vaddq_f64(s[b + l], s[b + l + 2]);
+                    t[b + l + 2] = vsubq_f64(s[b + l], s[b + l + 2]);
+                }
+            }
+            for l in 0..4 {
+                vst1q_f64(p[l].add(i), vaddq_f64(t[l], t[l + 4]));
+                vst1q_f64(p[l + 4].add(i), vsubq_f64(t[l], t[l + 4]));
             }
         }
-        for l in 0..4 {
-            vst1q_f64(p[l].add(i), vaddq_f64(t[l], t[l + 4]));
-            vst1q_f64(p[l + 4].add(i), vsubq_f64(t[l], t[l + 4]));
-        }
-    }
-    for i in chunks * 2..n {
-        let mut v = [0.0f64; 8];
-        for (vl, &pl) in v.iter_mut().zip(p.iter()) {
-            *vl = *pl.add(i);
-        }
-        let o = super::butterfly8_lane(v);
-        for (l, &pl) in p.iter().enumerate() {
-            *pl.add(i) = o[l];
+        for i in chunks * 2..n {
+            let mut v = [0.0f64; 8];
+            for (vl, &pl) in v.iter_mut().zip(p.iter()) {
+                *vl = *pl.add(i);
+            }
+            let o = super::butterfly8_lane(v);
+            for (l, &pl) in p.iter().enumerate() {
+                *pl.add(i) = o[l];
+            }
         }
     }
 }
 
 /// Butterfly pass — adds/subs only, bitwise identical to scalar.
+// SAFETY: callers must only reach this through the dispatch layer
+// (`backend_kernels()`), which verified NEON support on the
+// running CPU before handing out this backend.
 #[target_feature(enable = "neon")]
 unsafe fn butterfly_neon(a: &mut [f64], b: &mut [f64]) {
-    let n = a.len();
-    let ap = a.as_mut_ptr();
-    let bp = b.as_mut_ptr();
-    let chunks = n / 2;
-    for ch in 0..chunks {
-        let i = ch * 2;
-        let u = vld1q_f64(ap.add(i));
-        let v = vld1q_f64(bp.add(i));
-        vst1q_f64(ap.add(i), vaddq_f64(u, v));
-        vst1q_f64(bp.add(i), vsubq_f64(u, v));
-    }
-    for i in chunks * 2..n {
-        let u = a[i];
-        let v = b[i];
-        a[i] = u + v;
-        b[i] = u - v;
+    // SAFETY: the enclosing fn's contract guarantees NEON is
+    // available; every load/store/`add` offset below stays inside the
+    // bounds of the argument slices (chunked main loops with scalar
+    // tails, or tile offsets pinned by the asserts).
+    unsafe {
+        let n = a.len();
+        let ap = a.as_mut_ptr();
+        let bp = b.as_mut_ptr();
+        let chunks = n / 2;
+        for ch in 0..chunks {
+            let i = ch * 2;
+            let u = vld1q_f64(ap.add(i));
+            let v = vld1q_f64(bp.add(i));
+            vst1q_f64(ap.add(i), vaddq_f64(u, v));
+            vst1q_f64(bp.add(i), vsubq_f64(u, v));
+        }
+        for i in chunks * 2..n {
+            let u = a[i];
+            let v = b[i];
+            a[i] = u + v;
+            b[i] = u - v;
+        }
     }
 }

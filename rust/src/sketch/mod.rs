@@ -60,6 +60,10 @@ pub fn set_inverted_scatter(on: Option<bool>) {
 fn env_inverted() -> bool {
     static ENV: OnceLock<bool> = OnceLock::new();
     *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — designated
+        // knob-resolution site: OnceLock-cached SNSOLVE_SKETCH_INVERT
+        // fallback behind set_inverted_scatter() (CLI/config take
+        // precedence).
         let v = std::env::var("SNSOLVE_SKETCH_INVERT")
             .map(|s| s.trim().to_ascii_lowercase())
             .unwrap_or_default();

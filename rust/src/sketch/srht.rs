@@ -206,8 +206,9 @@ impl SketchOperator for SrhtSketch {
                 // SAFETY: row ranges partition [0, k), so workers touch
                 // disjoint m̃-rows of the scratch buffer, which outlives
                 // the scoped pool region.
-                let pad =
-                    unsafe { std::slice::from_raw_parts_mut(scratch_ptr.0.add(r * m_pad), m_pad) };
+                let pad = unsafe {
+                    std::slice::from_raw_parts_mut(scratch_ptr.0.add(r * m_pad), m_pad)
+                };
                 self.transform_vec_into(b.row(r), pad, &mut block[local * s..(local + 1) * s]);
             }
         });

@@ -54,6 +54,8 @@ impl PropRng {
 pub const DEFAULT_CASES: usize = 50;
 
 fn base_seed() -> u64 {
+    // snsolve-lint: allow(env-reads-behind-config) — test-only property
+    // seed override (SNSOLVE_PROP_SEED), compiled into test builds only.
     std::env::var("SNSOLVE_PROP_SEED")
         .ok()
         .and_then(|s| s.parse().ok())

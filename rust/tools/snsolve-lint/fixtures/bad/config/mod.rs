@@ -1,0 +1,6 @@
+//! Fixture: a config module that wires none of the knob table, so every
+//! table entry is reported half-wired.
+
+pub struct SolveConfig {
+    pub nothing: usize,
+}

@@ -1,0 +1,26 @@
+//! Fixture: seeded violations in a kernel path. Never compiled — lexed
+//! only by the snsolve-lint integration tests.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn lookup(map: &HashMap<u32, f64>) -> f64 {
+    map.values().sum()
+}
+
+pub fn elapsed_nondeterminism() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub unsafe fn raw_read(p: *const f64) -> f64 {
+    *p
+}
+
+pub fn undocumented_block(p: *const f64) -> f64 {
+    unsafe { *p }
+}
+
+pub fn stray_env_read() -> bool {
+    std::env::var("SNSOLVE_BOGUS").is_ok()
+}

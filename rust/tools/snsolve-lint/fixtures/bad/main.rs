@@ -1,0 +1,5 @@
+//! Fixture: a main that declares no knob flags.
+
+fn main() {
+    println!("no flags here");
+}

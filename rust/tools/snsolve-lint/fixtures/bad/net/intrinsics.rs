@@ -1,0 +1,8 @@
+//! Fixture: intrinsics leaking out of the dispatch layer (this file is
+//! outside simd/, so both lines below must be flagged).
+
+use core::arch::x86_64::__m256d;
+
+// SAFETY: irrelevant — the violation is the location, not the safety doc.
+#[target_feature(enable = "avx2")]
+pub unsafe fn leaked(_x: __m256d) {}

@@ -1,0 +1,5 @@
+//! Fixture: `thread::spawn` outside parallel/ and coordinator/.
+
+pub fn rogue_thread() {
+    std::thread::spawn(|| {}).join().unwrap();
+}

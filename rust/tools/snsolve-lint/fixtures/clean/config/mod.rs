@@ -1,0 +1,46 @@
+//! Fixture: a config module that fully wires every knob in the table —
+//! the key/section literals, the struct fields, and (config/ being the
+//! designated env layer) the env reads.
+
+pub struct SolveConfig {
+    pub threads: usize,
+    pub simd: u8,
+    pub pack: bool,
+    pub qr_nb: usize,
+    pub fwht_radix: usize,
+    pub schedule: u8,
+    pub sketch_invert: bool,
+}
+
+pub struct FrontendConfig {
+    pub readers: usize,
+}
+
+pub fn keys() -> [(&'static str, &'static str); 8] {
+    [
+        ("parallel", "threads"),
+        ("parallel", "simd"),
+        ("parallel", "pack"),
+        ("parallel", "qr_nb"),
+        ("parallel", "fwht_radix"),
+        ("parallel", "schedule"),
+        ("parallel", "sketch_invert"),
+        ("service", "readers"),
+    ]
+}
+
+pub fn env_overrides() -> Vec<String> {
+    [
+        "SNSOLVE_THREADS",
+        "SNSOLVE_SIMD",
+        "SNSOLVE_GEMM_PACK",
+        "SNSOLVE_QR_NB",
+        "SNSOLVE_FWHT_RADIX",
+        "SNSOLVE_SCHEDULE",
+        "SNSOLVE_SKETCH_INVERT",
+        "SNSOLVE_READERS",
+    ]
+    .iter()
+    .filter_map(|k| std::env::var(k).ok())
+    .collect()
+}

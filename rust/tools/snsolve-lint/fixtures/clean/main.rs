@@ -1,0 +1,18 @@
+//! Fixture: a main that declares every knob flag from the table.
+
+const FLAGS: &[&str] = &[
+    "threads",
+    "simd",
+    "pack",
+    "qr-nb",
+    "fwht-radix",
+    "schedule",
+    "sketch-invert",
+    "readers",
+];
+
+fn main() {
+    for f in FLAGS {
+        println!("--{f}");
+    }
+}

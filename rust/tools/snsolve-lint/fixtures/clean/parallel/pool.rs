@@ -1,0 +1,19 @@
+//! Fixture: allowed patterns in parallel/ — spawn is confined here, and
+//! an explicitly suppressed hazard stays suppressed.
+
+pub fn spawn_is_fine_here() {
+    std::thread::spawn(|| {}).join().unwrap();
+}
+
+pub fn timed_scope() -> f64 {
+    // snsolve-lint: allow(determinism-hazards) — wall-clock feeds a stats
+    // counter only, never a kernel result.
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn annotated_env_read() -> usize {
+    // snsolve-lint: allow(env-reads-behind-config) — designated knob
+    // resolution site for SNSOLVE_THREADS.
+    std::env::var("SNSOLVE_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}

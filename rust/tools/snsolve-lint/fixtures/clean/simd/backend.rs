@@ -1,0 +1,24 @@
+//! Fixture: the negative cases — intrinsics under simd/, documented
+//! unsafe, suppressed findings. Must lint clean.
+
+use core::arch::x86_64::{__m256d, _mm256_setzero_pd};
+
+// SAFETY: callers reach this only through the dispatch layer, which has
+// verified AVX2 support on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn documented(_x: __m256d) -> __m256d {
+    // SAFETY: the intrinsic has no memory-safety obligations beyond the
+    // AVX2 requirement guaranteed by the enclosing target_feature fn.
+    unsafe { _mm256_setzero_pd() }
+}
+
+/// # Safety
+/// The pointer must be valid for reads of one f64.
+pub unsafe fn doc_section_counts(p: *const f64) -> f64 {
+    // SAFETY: contract forwarded verbatim from the caller.
+    unsafe { *p }
+}
+
+pub fn string_mentions_are_not_code() -> &'static str {
+    "unsafe { thread::spawn } // core::arch inside a string is fine"
+}

@@ -1,0 +1,721 @@
+//! `snsolve-lint` — dependency-free static analysis for the snsolve tree.
+//!
+//! The crate grew a large hand-written unsafe/concurrency surface (three
+//! SIMD intrinsic backends, a CAS-packed work-stealing deque, `SendPtr`
+//! output sharding, raw `poll(2)` FFI) plus nine `SNSOLVE_*` knobs that
+//! must stay coherent across env var, `--flag`, config key and
+//! `SolveConfig` field. Nothing machine-checked those invariants; this
+//! tool does, with a small hand-rolled lexer (strings, raw strings,
+//! nested block comments — no `syn`, std only per the repo's no-deps
+//! rule) and five rules:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `unsafe-needs-safety` | every `unsafe` occurrence is immediately preceded by a `// SAFETY:` comment (or a `# Safety` doc section) |
+//! | `intrinsics-behind-dispatch` | `core::arch` / `#[target_feature]` only under `src/simd/`, so illegal instructions can't bypass runtime dispatch |
+//! | `determinism-hazards` | no `HashMap`/`HashSet`/`Instant`/`SystemTime`/thread-id logic in kernel paths; `thread::spawn` confined to `parallel/` + `coordinator/` |
+//! | `knob-coherence` | every `SNSOLVE_*` knob is fully wired (env read + CLI flag + config key + config field) or exempted with a rationale |
+//! | `env-reads-behind-config` | `env::var` only in `config/` or at designated (annotated) knob-resolution sites |
+//!
+//! Any finding is suppressible at its site with
+//! `// snsolve-lint: allow(<rule>) — <rationale>` on the same line or in
+//! the contiguous comment/attribute block directly above it.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule names with one-line descriptions (for `--list-rules`).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "unsafe-needs-safety",
+        "every `unsafe` block/fn/impl must be immediately preceded by a `// SAFETY:` comment",
+    ),
+    (
+        "intrinsics-behind-dispatch",
+        "core::arch intrinsics and #[target_feature] are allowed only under src/simd/",
+    ),
+    (
+        "determinism-hazards",
+        "HashMap/HashSet/Instant/SystemTime/thread-id logic forbidden in kernel paths; \
+         thread::spawn confined to parallel/ and coordinator/",
+    ),
+    (
+        "knob-coherence",
+        "every SNSOLVE_* env knob must be fully wired: env read + --flag + config key + \
+         SolveConfig field (or exempted with a rationale)",
+    ),
+    (
+        "env-reads-behind-config",
+        "env::var only in config/ or at annotated knob-resolution sites",
+    ),
+];
+
+/// One lint finding, anchored to a file and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+/// Per-line view of a lexed source file: `code` is the line with comments
+/// removed and string/char literal contents blanked (delimiters kept);
+/// `comment` concatenates the comment text appearing on the line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+/// A lexed source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub lines: Vec<Line>,
+    /// `(0-based start line, content)` of every string literal
+    /// (plain, byte, raw and raw-byte forms).
+    pub strings: Vec<(usize, String)>,
+}
+
+/// A scanned source file: path relative to the scan root (with `/`
+/// separators, used for path-scoped rules) plus the lexed view.
+#[derive(Debug)]
+pub struct Source {
+    pub rel: String,
+    pub path: PathBuf,
+    pub lx: Lexed,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Tokenize Rust source into per-line code/comment views. Handles line
+/// and (nested) block comments, plain/byte strings with escapes, raw
+/// strings with any `#` count, and char literals vs lifetimes.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut mode = Mode::Code;
+    let mut cur = 0usize;
+    let mut sbuf = String::new();
+    let mut sline = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line::default());
+            cur += 1;
+            match mode {
+                Mode::LineComment => mode = Mode::Code,
+                Mode::Str | Mode::RawStr(_) => sbuf.push('\n'),
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    lines[cur].code.push('"');
+                    sbuf.clear();
+                    sline = cur;
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b' || c == 'c') && !prev_is_ident(&chars, i) {
+                    // Possible raw/byte/C-string prefix: r", r#", b", br#", c", cr#".
+                    let mut j = i + 1;
+                    let mut raw = c == 'r';
+                    if !raw && j < n && chars[j] == 'r' {
+                        raw = true;
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while raw && j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' && (raw || j == i + 1) {
+                        for k in i..j {
+                            lines[cur].code.push(chars[k]);
+                        }
+                        lines[cur].code.push('"');
+                        sbuf.clear();
+                        sline = cur;
+                        mode = if raw { Mode::RawStr(hashes) } else { Mode::Str };
+                        i = j + 1;
+                    } else {
+                        lines[cur].code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime/loop label.
+                    if i + 1 < n && chars[i + 1] == '\\' {
+                        // Escaped char literal: skip quote, backslash and the
+                        // escape head, then scan to the closing quote (the
+                        // head skip makes '\'' terminate correctly).
+                        let mut j = i + 3;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        lines[cur].code.push_str("''");
+                        i = (j + 1).min(n);
+                    } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                        lines[cur].code.push_str("''");
+                        i += 3;
+                    } else {
+                        lines[cur].code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    lines[cur].code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                lines[cur].comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    lines[cur].comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    sbuf.push(c);
+                    if i + 1 < n {
+                        sbuf.push(chars[i + 1]);
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    lines[cur].code.push('"');
+                    strings.push((sline, std::mem::take(&mut sbuf)));
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    sbuf.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    let mut j = i + 1;
+                    while k < hashes && j < n && chars[j] == '#' {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == hashes {
+                        lines[cur].code.push('"');
+                        strings.push((sline, std::mem::take(&mut sbuf)));
+                        mode = Mode::Code;
+                        i = j;
+                    } else {
+                        sbuf.push(c);
+                        i += 1;
+                    }
+                } else {
+                    sbuf.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    Lexed { lines, strings }
+}
+
+/// Whole-word substring search (identifier boundaries on both sides).
+pub fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(p) = code[start..].find(word) {
+        let at = start + p;
+        let end = at + word.len();
+        let before_ok =
+            at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let after_ok =
+            end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Walk back from `idx` through the contiguous comment/attribute block
+/// directly above it (a fully blank line or a code line ends the block),
+/// returning true if any comment in the block — or on `idx` itself —
+/// contains `needle`.
+fn comment_block_contains(lx: &Lexed, idx: usize, needles: &[&str]) -> bool {
+    let hit = |c: &str| needles.iter().any(|n| c.contains(n));
+    if hit(&lx.lines[idx].comment) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let l = &lx.lines[k];
+        let code = l.code.trim();
+        let is_attr = code.starts_with("#[") || code.starts_with("#![");
+        if !code.is_empty() && !is_attr {
+            return false;
+        }
+        if code.is_empty() && l.comment.is_empty() {
+            return false;
+        }
+        if hit(&l.comment) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is a finding of `rule` at (0-based) `idx` suppressed by a
+/// `snsolve-lint: allow(<rule>)` comment on the line or directly above it?
+pub fn suppressed(lx: &Lexed, idx: usize, rule: &str) -> bool {
+    let needle = format!("snsolve-lint: allow({rule})");
+    comment_block_contains(lx, idx, &[needle.as_str()])
+}
+
+/// Is the `unsafe` at (0-based) `idx` covered by a `SAFETY:` comment (or
+/// a `# Safety` doc section) directly above or on the line?
+pub fn safety_documented(lx: &Lexed, idx: usize) -> bool {
+    comment_block_contains(lx, idx, &["SAFETY:", "# Safety"])
+}
+
+/// One fully-wired `SNSOLVE_*` knob: the env var, its CLI `--flag`, its
+/// config `[section] key`, and the config-struct field. Names cannot be
+/// derived from each other (`SNSOLVE_GEMM_PACK` ↔ `--pack`), so the table
+/// is the single declarative source of truth the tree is checked against.
+pub struct Knob {
+    pub env: &'static str,
+    pub flag: &'static str,
+    pub section: &'static str,
+    pub key: &'static str,
+    pub field: &'static str,
+}
+
+/// The knob table. Adding an `SNSOLVE_*` env var to the tree without
+/// adding it here (or to [`ENV_EXEMPT`]) is an `unknown knob` finding;
+/// listing it here without all four legs wired is a `half-wired` finding.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        env: "SNSOLVE_THREADS",
+        flag: "threads",
+        section: "parallel",
+        key: "threads",
+        field: "threads",
+    },
+    Knob { env: "SNSOLVE_SIMD", flag: "simd", section: "parallel", key: "simd", field: "simd" },
+    Knob {
+        env: "SNSOLVE_GEMM_PACK",
+        flag: "pack",
+        section: "parallel",
+        key: "pack",
+        field: "pack",
+    },
+    Knob { env: "SNSOLVE_QR_NB", flag: "qr-nb", section: "parallel", key: "qr_nb", field: "qr_nb" },
+    Knob {
+        env: "SNSOLVE_FWHT_RADIX",
+        flag: "fwht-radix",
+        section: "parallel",
+        key: "fwht_radix",
+        field: "fwht_radix",
+    },
+    Knob {
+        env: "SNSOLVE_SCHEDULE",
+        flag: "schedule",
+        section: "parallel",
+        key: "schedule",
+        field: "schedule",
+    },
+    Knob {
+        env: "SNSOLVE_SKETCH_INVERT",
+        flag: "sketch-invert",
+        section: "parallel",
+        key: "sketch_invert",
+        field: "sketch_invert",
+    },
+    Knob {
+        env: "SNSOLVE_READERS",
+        flag: "readers",
+        section: "service",
+        key: "readers",
+        field: "readers",
+    },
+];
+
+/// `SNSOLVE_*` vars that are deliberately not user-facing solve/service
+/// knobs, with the rationale for exempting them from full wiring.
+pub const ENV_EXEMPT: &[(&str, &str)] = &[
+    ("SNSOLVE_PROP_SEED", "property-test shrink-seed override; test-only (testing/)"),
+    ("SNSOLVE_BENCH_QUICK", "bench-harness quick mode; bench-only (bench_harness/)"),
+    ("SNSOLVE_REPORT_DIR", "bench report output directory; bench-only (bench_harness/)"),
+    ("SNSOLVE_CLIENT", "service_e2e wire-client selector; test-only (rust/tests/)"),
+];
+
+const KERNEL_DIRS: &[&str] = &["linalg/", "sketch/", "solvers/", "parallel/"];
+const SPAWN_DIRS: &[&str] = &["parallel/", "coordinator/"];
+const HAZARD_WORDS: &[&str] = &["HashMap", "HashSet", "Instant", "SystemTime", "ThreadId"];
+
+/// Recursively collect and lex every `.rs` file under `root`, sorted by
+/// path for deterministic output.
+pub fn scan_root(root: &Path) -> io::Result<Vec<Source>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let text = fs::read_to_string(&f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push(Source { rel, path: f, lx: lex(&text) });
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over the scanned tree.
+pub fn check_tree(sources: &[Source]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for s in sources {
+        check_unsafe(s, &mut out);
+        check_intrinsics(s, &mut out);
+        check_determinism(s, &mut out);
+        check_env_reads(s, &mut out);
+    }
+    check_knobs(sources, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+fn push(s: &Source, idx: usize, rule: &'static str, message: String, out: &mut Vec<Finding>) {
+    if !suppressed(&s.lx, idx, rule) {
+        out.push(Finding { file: s.path.clone(), line: idx + 1, rule, message });
+    }
+}
+
+fn check_unsafe(s: &Source, out: &mut Vec<Finding>) {
+    for (idx, line) in s.lx.lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if safety_documented(&s.lx, idx) {
+            continue;
+        }
+        push(
+            s,
+            idx,
+            "unsafe-needs-safety",
+            "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            out,
+        );
+    }
+}
+
+fn check_intrinsics(s: &Source, out: &mut Vec<Finding>) {
+    if s.rel.starts_with("simd/") {
+        return;
+    }
+    for (idx, line) in s.lx.lines.iter().enumerate() {
+        for pat in ["core::arch", "std::arch", "target_feature(enable"] {
+            if line.code.contains(pat) {
+                push(
+                    s,
+                    idx,
+                    "intrinsics-behind-dispatch",
+                    format!("`{pat}` outside src/simd/ bypasses the runtime-dispatch layer"),
+                    out,
+                );
+                break;
+            }
+        }
+    }
+}
+
+fn check_determinism(s: &Source, out: &mut Vec<Finding>) {
+    let kernel = KERNEL_DIRS.iter().any(|d| s.rel.starts_with(d));
+    let spawn_ok = SPAWN_DIRS.iter().any(|d| s.rel.starts_with(d));
+    for (idx, line) in s.lx.lines.iter().enumerate() {
+        if kernel {
+            for w in HAZARD_WORDS {
+                if has_word(&line.code, w) {
+                    push(
+                        s,
+                        idx,
+                        "determinism-hazards",
+                        format!("`{w}` in a kernel path threatens bitwise determinism"),
+                        out,
+                    );
+                    break;
+                }
+            }
+            if line.code.contains("thread::current") {
+                push(
+                    s,
+                    idx,
+                    "determinism-hazards",
+                    "thread-identity logic in a kernel path threatens determinism".to_string(),
+                    out,
+                );
+            }
+        }
+        if !spawn_ok && line.code.contains("thread::spawn") {
+            push(
+                s,
+                idx,
+                "determinism-hazards",
+                "`thread::spawn` outside parallel/ and coordinator/".to_string(),
+                out,
+            );
+        }
+    }
+}
+
+fn check_env_reads(s: &Source, out: &mut Vec<Finding>) {
+    if s.rel.starts_with("config/") {
+        return;
+    }
+    for (idx, line) in s.lx.lines.iter().enumerate() {
+        if line.code.contains("env::var") {
+            push(
+                s,
+                idx,
+                "env-reads-behind-config",
+                "`env::var` outside config/ (annotate designated knob-resolution sites)"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// Extract `SNSOLVE_[A-Z0-9_]+` tokens from a string-literal body.
+pub fn extract_env_tokens(content: &str) -> Vec<String> {
+    let bytes = content.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = content[i..].find("SNSOLVE_") {
+        let at = i + p;
+        let boundary =
+            at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let mut j = at + "SNSOLVE_".len();
+        while j < bytes.len()
+            && (bytes[j].is_ascii_uppercase() || bytes[j].is_ascii_digit() || bytes[j] == b'_')
+        {
+            j += 1;
+        }
+        if boundary && j > at + "SNSOLVE_".len() {
+            out.push(content[at..j].to_string());
+        }
+        i = j.max(at + 1);
+    }
+    out
+}
+
+fn check_knobs(sources: &[Source], out: &mut Vec<Finding>) {
+    // Discovery: every SNSOLVE_* literal anywhere must be a table entry or
+    // an exemption — the catch for knobs added without wiring.
+    for s in sources {
+        for (line, content) in &s.lx.strings {
+            for tok in extract_env_tokens(content) {
+                let known = KNOBS.iter().any(|k| k.env == tok)
+                    || ENV_EXEMPT.iter().any(|(e, _)| *e == tok);
+                if !known {
+                    push(
+                        s,
+                        *line,
+                        "knob-coherence",
+                        format!(
+                            "unknown knob `{tok}`: not in the snsolve-lint knob table or \
+                             exemption list"
+                        ),
+                        out,
+                    );
+                }
+            }
+        }
+    }
+    // Wiring: needs the real config/CLI entry points to be in the tree.
+    let config = sources.iter().find(|s| s.rel == "config/mod.rs");
+    let main = sources.iter().find(|s| s.rel == "main.rs");
+    let (config, main) = match (config, main) {
+        (Some(c), Some(m)) => (c, m),
+        _ => return,
+    };
+    for k in KNOBS {
+        let mut missing: Vec<String> = Vec::new();
+        if !sources.iter().any(|s| s.lx.strings.iter().any(|(_, c)| c.contains(k.env))) {
+            missing.push(format!("no source reads `{}`", k.env));
+        }
+        if !main.lx.strings.iter().any(|(_, c)| c.as_str() == k.flag) {
+            missing.push(format!("`--{}` flag not declared in main.rs", k.flag));
+        }
+        let key_ok = config.lx.strings.iter().any(|(_, c)| c.as_str() == k.key)
+            && config.lx.strings.iter().any(|(_, c)| c.as_str() == k.section);
+        if !key_ok {
+            missing.push(format!("`[{}] {}` key not parsed in config/mod.rs", k.section, k.key));
+        }
+        if !config.lx.lines.iter().any(|l| has_word(&l.code, k.field)) {
+            missing.push(format!("field `{}` absent from config/mod.rs", k.field));
+        }
+        if !missing.is_empty() {
+            push(
+                config,
+                0,
+                "knob-coherence",
+                format!("{} is half-wired: {}", k.env, missing.join("; ")),
+                out,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comment_inside_string_is_code() {
+        let lx = lex("let s = \"http://example\"; // real comment\n");
+        assert!(!lx.lines[0].code.contains("http"));
+        assert!(lx.lines[0].code.contains("let s"));
+        assert!(lx.lines[0].comment.contains("real comment"));
+        assert_eq!(lx.strings.len(), 1);
+        assert_eq!(lx.strings[0].1, "http://example");
+    }
+
+    #[test]
+    fn raw_strings_swallow_comment_markers() {
+        let lx = lex("let r = r#\"// not \"a\" comment\"#; let x = 1;\n");
+        assert!(lx.lines[0].comment.is_empty());
+        assert!(lx.lines[0].code.contains("let x = 1"));
+        assert_eq!(lx.strings[0].1, "// not \"a\" comment");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lx = lex("/* a /* b */ c */ let y = 2;\n");
+        assert!(lx.lines[0].code.contains("let y = 2"));
+        for frag in ["a", "b", "c"] {
+            assert!(lx.lines[0].comment.contains(frag));
+        }
+        assert!(!lx.lines[0].code.contains('a'), "code: {}", lx.lines[0].code);
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let lx = lex("/* first\nsecond */ let z = 3;\n");
+        assert!(lx.lines[0].comment.contains("first"));
+        assert!(lx.lines[1].comment.contains("second"));
+        assert!(lx.lines[1].code.contains("let z"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lx =
+            lex("fn f<'a>(x: &'a str) -> char { '\\'' }\nlet c = 'x'; let d = '\\u{1F600}';\n");
+        assert!(lx.lines[0].code.contains("fn f<'a>"));
+        assert!(lx.lines[1].code.contains("let c = ''"));
+        assert!(lx.lines[1].code.contains("let d = ''"));
+    }
+
+    #[test]
+    fn byte_and_multiline_strings() {
+        let lx = lex("let b = b\"ab\"; let r = br#\"cd\"#;\nlet m = \"one\ntwo\";\n");
+        assert_eq!(lx.strings[0].1, "ab");
+        assert_eq!(lx.strings[1].1, "cd");
+        assert_eq!(lx.strings[2].1, "one\ntwo");
+        assert_eq!(lx.strings[2].0, 1);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(has_word("pub unsafe fn x()", "unsafe"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(!has_word("InstantCoffee", "Instant"));
+        assert!(has_word("Instant::now()", "Instant"));
+    }
+
+    #[test]
+    fn safety_comment_detection() {
+        let ok = lex("// SAFETY: ptr is valid for len elements.\nunsafe { *p }\n");
+        assert!(safety_documented(&ok, 1));
+        let with_attr =
+            lex("// SAFETY: feature checked at dispatch.\n#[inline]\nunsafe fn g() {}\n");
+        assert!(safety_documented(&with_attr, 2));
+        let doc = lex("/// # Safety\n/// caller upholds the contract.\npub unsafe fn h() {}\n");
+        assert!(safety_documented(&doc, 2));
+        let blank_gap = lex("// SAFETY: stale.\n\nunsafe { *p }\n");
+        assert!(!safety_documented(&blank_gap, 2));
+        let none = lex("let a = 1;\nunsafe { *p }\n");
+        assert!(!safety_documented(&none, 1));
+    }
+
+    #[test]
+    fn suppression_detection() {
+        let lx = lex(
+            "// snsolve-lint: allow(determinism-hazards) — bench timing only\nlet t = Instant::now();\n",
+        );
+        assert!(suppressed(&lx, 1, "determinism-hazards"));
+        assert!(!suppressed(&lx, 1, "unsafe-needs-safety"));
+    }
+
+    #[test]
+    fn env_token_extraction() {
+        assert_eq!(
+            extract_env_tokens("read SNSOLVE_THREADS then SNSOLVE_ and SNSOLVE_QR_NB."),
+            vec!["SNSOLVE_THREADS".to_string(), "SNSOLVE_QR_NB".to_string()]
+        );
+        assert!(extract_env_tokens("XSNSOLVE_FOO").is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! CLI for `snsolve-lint`: scan source roots, print findings, exit
+//! non-zero when any survive. `cargo run -p snsolve-lint` from the
+//! workspace root (or `rust/`) lints the real tree.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-rules" => {
+                for (name, desc) in snsolve_lint::RULES {
+                    println!("{name}: {desc}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: snsolve-lint [--list-rules] [ROOT...]\n\n\
+                     Lints every .rs file under each ROOT (default: rust/src or src).\n\
+                     Suppress a finding with `// snsolve-lint: allow(<rule>) — <rationale>`."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => roots.push(PathBuf::from(other)),
+        }
+    }
+    if roots.is_empty() {
+        for cand in ["rust/src", "src"] {
+            if Path::new(cand).is_dir() {
+                roots.push(PathBuf::from(cand));
+                break;
+            }
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("snsolve-lint: no scan root found (expected rust/src or src)");
+        return ExitCode::FAILURE;
+    }
+    let mut total = 0usize;
+    for root in &roots {
+        let sources = match snsolve_lint::scan_root(root) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("snsolve-lint: scanning {}: {e}", root.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let findings = snsolve_lint::check_tree(&sources);
+        for f in &findings {
+            println!("{f}");
+        }
+        total += findings.len();
+    }
+    if total == 0 {
+        eprintln!("snsolve-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("snsolve-lint: {total} finding(s)");
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,66 @@
+//! Integration tests: every seeded fixture violation is caught, the
+//! clean fixture tree and the real `rust/src` tree lint clean.
+
+use std::path::{Path, PathBuf};
+
+use snsolve_lint::{check_tree, scan_root, Finding};
+
+fn lint(dir: &str) -> Vec<Finding> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir);
+    let sources = scan_root(&root).expect("scan fixture root");
+    check_tree(&sources)
+}
+
+fn hits<'a>(findings: &'a [Finding], rule: &str, file_frag: &str) -> Vec<&'a Finding> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule && f.file.to_string_lossy().contains(file_frag))
+        .collect()
+}
+
+#[test]
+fn bad_tree_catches_every_seeded_violation() {
+    let findings = lint("fixtures/bad");
+
+    // unsafe-needs-safety: the undocumented unsafe fn and unsafe block.
+    assert!(hits(&findings, "unsafe-needs-safety", "kernels.rs").len() >= 2);
+
+    // intrinsics-behind-dispatch: `use core::arch` + `#[target_feature]`
+    // outside simd/.
+    assert!(hits(&findings, "intrinsics-behind-dispatch", "intrinsics.rs").len() >= 2);
+
+    // determinism-hazards: HashMap + Instant in linalg/, plus the rogue
+    // thread::spawn in util/.
+    let hazards = hits(&findings, "determinism-hazards", "kernels.rs");
+    assert!(hazards.iter().any(|f| f.message.contains("HashMap")));
+    assert!(hazards.iter().any(|f| f.message.contains("Instant")));
+    assert_eq!(hits(&findings, "determinism-hazards", "spawner.rs").len(), 1);
+
+    // env-reads-behind-config: the un-annotated env::var in linalg/.
+    assert_eq!(hits(&findings, "env-reads-behind-config", "kernels.rs").len(), 1);
+
+    // knob-coherence: the unknown knob literal plus half-wired reports
+    // for every table entry (the fixture config/main wire nothing).
+    let knobs = hits(&findings, "knob-coherence", "kernels.rs");
+    assert!(knobs.iter().any(|f| f.message.contains("SNSOLVE_BOGUS")));
+    let half_wired = hits(&findings, "knob-coherence", "config/mod.rs");
+    assert_eq!(half_wired.len(), snsolve_lint::KNOBS.len());
+    assert!(half_wired.iter().all(|f| f.message.contains("half-wired")));
+}
+
+#[test]
+fn clean_tree_has_no_findings() {
+    let findings = lint("fixtures/clean");
+    assert!(findings.is_empty(), "expected clean, got:\n{findings:?}");
+}
+
+#[test]
+fn real_tree_is_clean() {
+    // tools/snsolve-lint -> ../../src is the crate's real source tree.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    assert!(Path::new(&root).is_dir(), "rust/src not found at {}", root.display());
+    let sources = scan_root(&root).expect("scan rust/src");
+    let findings = check_tree(&sources);
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "rust/src must lint clean:\n{}", rendered.join("\n"));
+}
