@@ -110,10 +110,24 @@ for client in legacy pipelined; do
   SNSOLVE_CLIENT=$client cargo test -q --test service_e2e
 done
 
+# Robust-solving tier: the accuracy pins for the forward-stable ladder and
+# the deterministic fault-injection drills (every ladder rung forced to
+# fail, worker panic containment), under both worker-pool schedulers — the
+# escalation path must hold regardless of how the sweeps are scheduled.
+for sched in steal static; do
+  echo "== solver stability + ladder faults (SNSOLVE_SCHEDULE=$sched) =="
+  SNSOLVE_SCHEDULE=$sched cargo test -q --test solver_stability --test ladder_faults
+done
+
 # Front-end bench smoke: closed-loop serial vs pipelined sweep in quick
 # mode; records BENCH_frontend_pipeline.{json,csv} with p50/p95/p99 + QPS.
 echo "== frontend pipeline bench (quick) =="
 SNSOLVE_BENCH_QUICK=1 cargo bench --bench coordinator_throughput -- --frontend
+
+# Stability bench smoke: quick κ-sweep (forward error vs condition number
+# per solver tier); records BENCH_solver_stability.{json,csv}.
+echo "== solver stability bench (quick) =="
+SNSOLVE_BENCH_QUICK=1 cargo bench --bench solver_stability
 
 run_lint_gates
 

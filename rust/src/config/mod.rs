@@ -159,6 +159,14 @@ impl Config {
                 .get_str("parallel", "schedule")
                 .and_then(crate::parallel::Schedule::parse),
             sketch_invert: self.get_bool("parallel", "sketch_invert"),
+            solver: self
+                .get_str("solver", "solver")
+                .and_then(crate::coordinator::SolverChoice::parse),
+            refine_iters: self
+                .get("solver", "refine_iters")
+                .and_then(Value::as_i64)
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(0),
         }
     }
 
@@ -224,8 +232,11 @@ impl Config {
 /// toggle (`[parallel] pack`), the blocked-QR panel width
 /// (`[parallel] qr_nb`, 0 = auto), the FWHT engine radix
 /// (`[parallel] fwht_radix` ∈ {1, 2, 4, 8}, 0 = auto), the worker-pool
-/// scheduler (`[parallel] schedule = "static"|"steal"`) and the
-/// inverted-hash CountSketch scatter toggle (`[parallel] sketch_invert`).
+/// scheduler (`[parallel] schedule = "static"|"steal"`), the
+/// inverted-hash CountSketch scatter toggle (`[parallel] sketch_invert`),
+/// the default solver choice (`[solver] solver =
+/// "saa"|"lsqr"|"sas"|"stable"`) and the stable-ladder refinement-sweep
+/// cap (`[solver] refine_iters`, 0 = auto).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SolveConfig {
     /// Kernel worker-pool size; 0 resolves to the machine's available
@@ -257,6 +268,13 @@ pub struct SolveConfig {
     /// on). Both paths are bitwise identical; the direct-scatter baseline
     /// is kept for benchmarking and triage.
     pub sketch_invert: Option<bool>,
+    /// Default solver when a request leaves the choice blank. `None` (key
+    /// absent) leaves the ambient resolution alone (`SNSOLVE_SOLVER`, then
+    /// SAA).
+    pub solver: Option<crate::coordinator::SolverChoice>,
+    /// Stable-ladder refinement-sweep cap; 0 resolves to the ambient cap
+    /// (`SNSOLVE_REFINE_ITERS`, then 30).
+    pub refine_iters: usize,
 }
 
 impl SolveConfig {
@@ -284,6 +302,12 @@ impl SolveConfig {
         }
         if let Some(v) = self.sketch_invert {
             crate::sketch::set_inverted_scatter(Some(v));
+        }
+        if let Some(s) = self.solver {
+            crate::coordinator::set_default_solver(Some(s));
+        }
+        if self.refine_iters != 0 {
+            crate::solvers::stable::set_refine_iters(self.refine_iters);
         }
     }
 
@@ -366,6 +390,10 @@ qr_nb = 16
 fwht_radix = 4
 schedule = "static"
 sketch_invert = false
+
+[solver]
+solver = "stable"
+refine_iters = 12
 "#;
 
     #[test]
@@ -416,6 +444,8 @@ sketch_invert = false
         assert_eq!(s.fwht_radix, 4);
         assert_eq!(s.schedule, Some(crate::parallel::Schedule::Static));
         assert_eq!(s.sketch_invert, Some(false));
+        assert_eq!(s.solver, Some(crate::coordinator::SolverChoice::Stable));
+        assert_eq!(s.refine_iters, 12);
         // absent key → ambient (and an unparseable simd value → ambient),
         // so a config file can never stomp SNSOLVE_SIMD by omission.
         let d = Config::parse("").unwrap().solve_config();
@@ -428,6 +458,15 @@ sketch_invert = false
         assert_eq!(d.fwht_radix, 0);
         assert_eq!(d.schedule, None);
         assert_eq!(d.sketch_invert, None);
+        assert_eq!(d.solver, None);
+        assert_eq!(d.refine_iters, 0);
+        // An unknown solver name resolves to ambient here; `cmd_serve`
+        // hard-errors on present-but-invalid values. Negative sweep caps
+        // clamp to auto instead of wrapping through the usize cast.
+        let badsv = Config::parse("[solver]\nsolver = \"qr9\"").unwrap().solve_config();
+        assert_eq!(badsv.solver, None);
+        let negri = Config::parse("[solver]\nrefine_iters = -3").unwrap().solve_config();
+        assert_eq!(negri.refine_iters, 0);
         let bad = Config::parse("[parallel]\nsimd = \"sse9\"").unwrap().solve_config();
         assert_eq!(bad.simd, None);
         // A negative qr_nb clamps to auto instead of wrapping to a huge

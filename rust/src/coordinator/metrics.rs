@@ -114,6 +114,19 @@ pub struct Metrics {
     /// High-water mark of `frontend_inflight` (pipelining depth actually
     /// sustained by clients).
     pub frontend_peak_inflight: AtomicU64,
+    /// Stable-solver ladder: right-hand sides finally answered by each
+    /// stage (sketch-and-solve / preconditioned LSQR / refinement sweeps /
+    /// dense QR).
+    pub ladder_sas: AtomicU64,
+    pub ladder_lsqr: AtomicU64,
+    pub ladder_refine: AtomicU64,
+    pub ladder_dense: AtomicU64,
+    /// Stable-solver ladder: stage escalations (stage entries beyond the
+    /// first, summed over right-hand sides).
+    pub ladder_escalations: AtomicU64,
+    /// Worker batches whose solve panicked and was contained by
+    /// `catch_unwind` (each turned into per-request error responses).
+    pub worker_panics: AtomicU64,
     pub queue_latency: LatencyHistogram,
     pub solve_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
@@ -170,6 +183,8 @@ impl Metrics {
              blocked_batches={} blocked_rhs={} factor_cache hit={} miss={}\n\
              frontend: conns_opened={} conns_closed={} accept_errors={} \
              inflight={} peak_inflight={}\n\
+             ladder: sas={} lsqr={} refine={} dense={} escalations={} \
+             worker_panics={}\n\
              queue_us:  n={} mean={:.0} p50={} p99={} max={}\n\
              solve_us:  mean={:.0} p50={} p99={} max={}\n\
              e2e_us:    mean={:.0} p50={} p99={} max={}\n\
@@ -193,6 +208,12 @@ impl Metrics {
             Self::get(&self.accept_errors),
             Self::get(&self.frontend_inflight),
             Self::get(&self.frontend_peak_inflight),
+            Self::get(&self.ladder_sas),
+            Self::get(&self.ladder_lsqr),
+            Self::get(&self.ladder_refine),
+            Self::get(&self.ladder_dense),
+            Self::get(&self.ladder_escalations),
+            Self::get(&self.worker_panics),
             qc,
             qm,
             qp50,
@@ -261,6 +282,13 @@ mod tests {
         // So do the front-end counters.
         assert!(rep.contains("accept_errors=0"));
         assert!(rep.contains("peak_inflight=0"));
+        // And the stable-solver ladder counters.
+        Metrics::inc(&m.ladder_refine);
+        Metrics::add(&m.ladder_escalations, 2);
+        Metrics::inc(&m.worker_panics);
+        let rep = m.report();
+        assert!(rep.contains("ladder: sas=0 lsqr=0 refine=1 dense=0 escalations=2"));
+        assert!(rep.contains("worker_panics=1"));
     }
 
     #[test]

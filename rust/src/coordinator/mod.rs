@@ -55,6 +55,9 @@ pub enum SolverChoice {
     Lsqr,
     /// One-shot sketch-and-solve (cheap, coarse).
     SketchOnly,
+    /// Forward-stable escalation ladder (sketch-and-solve → preconditioned
+    /// LSQR → refinement sweeps → dense QR) — see [`crate::solvers::ladder`].
+    Stable,
 }
 
 impl SolverChoice {
@@ -63,6 +66,7 @@ impl SolverChoice {
             SolverChoice::Saa => "saa",
             SolverChoice::Lsqr => "lsqr",
             SolverChoice::SketchOnly => "sketch-only",
+            SolverChoice::Stable => "stable",
         }
     }
 
@@ -71,9 +75,44 @@ impl SolverChoice {
             "saa" | "saa-sas" => Some(SolverChoice::Saa),
             "lsqr" => Some(SolverChoice::Lsqr),
             "sketch-only" | "sas" => Some(SolverChoice::SketchOnly),
+            "stable" => Some(SolverChoice::Stable),
             _ => None,
         }
     }
+}
+
+/// Default solver when the caller leaves the choice blank (the `solve`
+/// CLI and demo paths). `0xFF` = unset.
+static SOLVER_CONFIGURED: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0xFF);
+
+/// Set the process-wide default solver (`None` restores the ambient
+/// env/default resolution). Highest-precedence layer of the
+/// `--solver` / `SNSOLVE_SOLVER` / `[solver] solver` knob.
+pub fn set_default_solver(choice: Option<SolverChoice>) {
+    let code = match choice {
+        Some(c) => protocol::solver_to_u8(c),
+        None => 0xFF,
+    };
+    SOLVER_CONFIGURED.store(code, std::sync::atomic::Ordering::Relaxed);
+}
+
+fn env_default_solver() -> Option<SolverChoice> {
+    static ENV: std::sync::OnceLock<Option<SolverChoice>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — this *is* the
+        // config layer for SNSOLVE_SOLVER; precedence over it is enforced
+        // in set_default_solver's callers (CLI flag, config file).
+        std::env::var("SNSOLVE_SOLVER").ok().as_deref().and_then(SolverChoice::parse)
+    })
+}
+
+/// Resolve the default solver: configured → env → SAA.
+pub fn default_solver() -> SolverChoice {
+    let code = SOLVER_CONFIGURED.load(std::sync::atomic::Ordering::Relaxed);
+    if let Ok(c) = protocol::solver_from_u8(code) {
+        return c;
+    }
+    env_default_solver().unwrap_or(SolverChoice::Saa)
 }
 
 /// A solve request: a registered matrix + a right-hand side.

@@ -20,6 +20,7 @@
 //!   1 REGISTER_DENSE  := u32 m, u32 n, f64le[m*n] row-major
 //!   2 SOLVE           := u64 matrix_id, u8 solver, f64 tol, u64 deadline_us,
 //!                        u32 m, f64le[m] rhs
+//!                        (solver: 0 saa, 1 lsqr, 2 sketch-only, 3 stable)
 //!   3 METRICS         := (empty)
 //!   4 EVICT           := u64 matrix_id
 //!   5 HELLO           := u8 version            (v1-format; version 2 = pipelined)
@@ -194,6 +195,7 @@ pub fn solver_to_u8(s: SolverChoice) -> u8 {
         SolverChoice::Saa => 0,
         SolverChoice::Lsqr => 1,
         SolverChoice::SketchOnly => 2,
+        SolverChoice::Stable => 3,
     }
 }
 
@@ -202,6 +204,7 @@ pub fn solver_from_u8(v: u8) -> Result<SolverChoice, DecodeError> {
         0 => Ok(SolverChoice::Saa),
         1 => Ok(SolverChoice::Lsqr),
         2 => Ok(SolverChoice::SketchOnly),
+        3 => Ok(SolverChoice::Stable),
         _ => Err(DecodeError(format!("unknown solver byte {v}"))),
     }
 }
@@ -252,7 +255,12 @@ mod tests {
 
     #[test]
     fn solver_codes_roundtrip() {
-        for s in [SolverChoice::Saa, SolverChoice::Lsqr, SolverChoice::SketchOnly] {
+        for s in [
+            SolverChoice::Saa,
+            SolverChoice::Lsqr,
+            SolverChoice::SketchOnly,
+            SolverChoice::Stable,
+        ] {
             assert_eq!(solver_from_u8(solver_to_u8(s)).unwrap(), s);
         }
         assert!(solver_from_u8(9).is_err());

@@ -388,7 +388,31 @@ fn worker_loop(
                 })
                 .collect();
             let t0 = Instant::now();
-            let results = ctx.execute_batch(&route, key.matrix, key.solver, &bitems);
+            // Panic containment: a solver bug (or an injected "worker"
+            // fault) must cost its own batch an error response, not the
+            // worker thread — a dead worker thread silently shrinks the
+            // pool until the service stops answering.
+            let results = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || ctx.execute_batch(&route, key.matrix, key.solver, &bitems),
+            )) {
+                Ok(results) => results,
+                Err(_) => {
+                    Metrics::inc(&metrics.worker_panics);
+                    // The unwound solve may have left a cache entry or
+                    // scratch arena half-built; drop them all.
+                    ctx.clear_factor_cache();
+                    idxs.iter()
+                        .map(|_| {
+                            (
+                                Err(ServiceError::Solver(
+                                    "worker panicked during solve".to_string(),
+                                )),
+                                ExecutedOn::Native,
+                            )
+                        })
+                        .collect()
+                }
+            };
             // The group solves as one blocked operation; its wall time is
             // every member's solve latency.
             let solve_us = t0.elapsed().as_micros() as u64;
@@ -562,7 +586,12 @@ mod tests {
     #[test]
     fn mixed_solvers_work() {
         let (svc, id, x_true, b) = test_service(2);
-        for solver in [SolverChoice::Saa, SolverChoice::Lsqr, SolverChoice::SketchOnly] {
+        for solver in [
+            SolverChoice::Saa,
+            SolverChoice::Lsqr,
+            SolverChoice::SketchOnly,
+            SolverChoice::Stable,
+        ] {
             let mut r = req(id, &b);
             r.solver = solver;
             r.tol = 1e-10;

@@ -787,6 +787,13 @@ fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
         return Err(DecodeError(format!("bad dims {m}x{n}")));
     }
     let data = r.f64_vec(m * n)?;
+    // Reject poisoned registrations at the boundary: one NaN in A would
+    // silently corrupt the cached factorization every later solve reuses.
+    if !data.iter().all(|v| v.is_finite()) {
+        return Err(DecodeError(
+            "matrix data contains non-finite (NaN/Inf) values".to_string(),
+        ));
+    }
     let dm = DenseMatrix::from_vec(m, n, data).map_err(|e| DecodeError(e.to_string()))?;
     Ok(Matrix::Dense(dm))
 }
@@ -795,9 +802,17 @@ fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
     let matrix = MatrixId(r.u64()?);
     let solver = solver_from_u8(r.u8()?)?;
     let tol = r.f64()?;
+    if !tol.is_finite() || tol < 0.0 {
+        return Err(DecodeError(format!("bad tolerance {tol}")));
+    }
     let deadline_us = r.u64()?;
     let m = r.u32()? as usize;
     let rhs = r.f64_vec(m)?;
+    if !rhs.iter().all(|v| v.is_finite()) {
+        return Err(DecodeError(
+            "rhs contains non-finite (NaN/Inf) values".to_string(),
+        ));
+    }
     Ok(SolveRequest { matrix, rhs, solver, tol, deadline_us })
 }
 

@@ -15,9 +15,11 @@ use crate::linalg::qr::{qr_compact, QrCompact};
 use crate::linalg::{norms, triangular, DenseMatrix, LinearOperator, Matrix};
 use crate::runtime::{Engine, Tensor};
 use crate::sketch::{CountSketch, SketchOperator, SketchWorkspace};
+use crate::solvers::ladder::{run_ladder, LadderConfig, Stage};
 use crate::solvers::lsqr::{lsqr_block_ws, LsqrConfig, SolveWorkspace};
 use crate::solvers::saa::SaaSolver;
 use crate::solvers::{Solution, Solver};
+use crate::testing::FaultAction;
 
 use super::metrics::Metrics;
 use super::registry::{MatrixId, MatrixRegistry};
@@ -169,6 +171,14 @@ impl WorkerContext {
                 ExecutedOn::Native,
             );
         }
+        if !rhs.iter().all(|v| v.is_finite()) {
+            return (
+                Err(ServiceError::BadRequest(
+                    "rhs contains non-finite (NaN/Inf) values".to_string(),
+                )),
+                ExecutedOn::Native,
+            );
+        }
         match route {
             Route::Artifact(name) if self.engine.is_some() => {
                 match self.execute_pjrt(name, matrix_id, &a, rhs, tol) {
@@ -217,6 +227,14 @@ impl WorkerContext {
         solver: SolverChoice,
         items: &[BatchItem],
     ) -> Vec<(Result<Solution, ServiceError>, ExecutedOn)> {
+        // Deterministic chaos hook: an installed "worker" panic plan blows
+        // up here, exercising the service loop's `catch_unwind` containment
+        // exactly where a latent solver bug would.
+        if let Some(plan) = crate::testing::active_faults() {
+            if plan.action("worker") == Some(FaultAction::Panic) {
+                panic!("injected fault: worker panic in execute_batch");
+            }
+        }
         let use_block = self.config.block_rhs
             && !(matches!(route, Route::Artifact(_)) && self.engine.is_some());
         if !use_block {
@@ -244,6 +262,13 @@ impl WorkerContext {
                             "rhs has {} entries, matrix has {m} rows",
                             it.rhs.len()
                         ))),
+                        ExecutedOn::Native,
+                    ))
+                } else if !it.rhs.iter().all(|v| v.is_finite()) {
+                    Some((
+                        Err(ServiceError::BadRequest(
+                            "rhs contains non-finite (NaN/Inf) values".to_string(),
+                        )),
                         ExecutedOn::Native,
                     ))
                 } else {
@@ -277,6 +302,16 @@ impl WorkerContext {
     }
 
     // ---------------- native path with factor reuse ----------------------
+
+    /// Drop every cached factorization and replace the scratch arenas.
+    /// Called by the service loop after a contained solve panic: the
+    /// unwound solve may have left a cache entry or workspace half-built.
+    pub(crate) fn clear_factor_cache(&mut self) {
+        self.cache.clear();
+        self.cache_order.clear();
+        self.sketch_ws = SketchWorkspace::new();
+        self.solve_ws = SolveWorkspace::new();
+    }
 
     fn factor_for(&mut self, id: MatrixId, a: &Matrix) -> Result<(), ServiceError> {
         if self.cache.contains_key(&id) {
@@ -365,6 +400,61 @@ impl WorkerContext {
                         })
                     })
                     .collect()
+            }
+            SolverChoice::Stable => {
+                if let Err(e) = self.factor_for(id, a) {
+                    return (0..k).map(|_| Err(e.clone())).collect();
+                }
+                let faults = crate::testing::active_faults();
+                let entry = self.cache.get(&id).expect("just inserted");
+                let c_block = entry.sketch.apply_mat_ws(&rhs_block, &mut self.sketch_ws);
+                let z0_block = entry.qr.q_transpose_mat(&c_block);
+                let cfg = LadderConfig {
+                    tol,
+                    lsqr: LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() },
+                    refine_iters: crate::solvers::stable::refine_iters(),
+                    ..Default::default()
+                };
+                let out = run_ladder(
+                    a,
+                    &rhs_block,
+                    &entry.r,
+                    &z0_block,
+                    entry.y.as_ref(),
+                    &cfg,
+                    &mut self.solve_ws,
+                    faults.as_ref(),
+                );
+                match out {
+                    Ok(out) => {
+                        for &st in &out.stage_of {
+                            Metrics::inc(match st {
+                                Stage::SketchSolve => &self.metrics.ladder_sas,
+                                Stage::PrecondLsqr => &self.metrics.ladder_lsqr,
+                                Stage::Refine => &self.metrics.ladder_refine,
+                                Stage::DenseQr => &self.metrics.ladder_dense,
+                            });
+                        }
+                        Metrics::add(&self.metrics.ladder_escalations, out.escalations);
+                        (0..k)
+                            .map(|r| {
+                                Ok(Solution {
+                                    x: out.x.row(r).to_vec(),
+                                    iterations: out.iterations[r],
+                                    resnorm: out.resnorm[r],
+                                    arnorm: f64::NAN,
+                                    converged: true,
+                                    fallback_used: out.stage_of[r] == Stage::DenseQr,
+                                    residual_history: Vec::new(),
+                                })
+                            })
+                            .collect()
+                    }
+                    Err(e) => {
+                        let err = ServiceError::Solver(e.to_string());
+                        (0..k).map(|_| Err(err.clone())).collect()
+                    }
+                }
             }
             SolverChoice::Saa | SolverChoice::SketchOnly => {
                 if let Err(e) = self.factor_for(id, a) {
@@ -607,6 +697,41 @@ mod tests {
         // consistent system: sketch-only is exact too
         assert!(norms::nrm2_diff(&sol2.x, &x_true) / norms::nrm2(&x_true) < 1e-8);
         assert_eq!(sol2.iterations, 0);
+    }
+
+    #[test]
+    fn stable_choice_runs_ladder_and_counts_stages() {
+        let (mut ctx, _reg, metrics, id, x_true, b) = setup(4);
+        let (r, on) = ctx.execute(&Route::Native, id, &b, SolverChoice::Stable, 1e-10);
+        assert_eq!(on, ExecutedOn::Native);
+        let sol = r.unwrap();
+        let err = norms::nrm2_diff(&sol.x, &x_true) / norms::nrm2(&x_true);
+        assert!(err < 1e-8, "err {err}");
+        // Exactly one RHS landed somewhere on the ladder.
+        let answered = Metrics::get(&metrics.ladder_sas)
+            + Metrics::get(&metrics.ladder_lsqr)
+            + Metrics::get(&metrics.ladder_refine)
+            + Metrics::get(&metrics.ladder_dense);
+        assert_eq!(answered, 1);
+    }
+
+    #[test]
+    fn non_finite_rhs_rejected() {
+        let (mut ctx, _reg, _m, id, _xt, b) = setup(4);
+        let mut nan_rhs = b.clone();
+        nan_rhs[3] = f64::NAN;
+        let (r, _) = ctx.execute(&Route::Native, id, &nan_rhs, SolverChoice::Saa, 1e-8);
+        assert!(matches!(r, Err(ServiceError::BadRequest(ref m)) if m.contains("non-finite")));
+        // Blocked path: the bad item fails alone, its batch-mate solves.
+        let mut inf_rhs = b.clone();
+        inf_rhs[0] = f64::INFINITY;
+        let items = vec![
+            BatchItem { rhs: b.clone(), tol: 1e-10 },
+            BatchItem { rhs: inf_rhs, tol: 1e-10 },
+        ];
+        let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
+        assert!(out[0].0.is_ok());
+        assert!(matches!(out[1].0, Err(ServiceError::BadRequest(_))));
     }
 
     #[test]

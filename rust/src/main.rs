@@ -34,7 +34,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "beta", takes_value: true, help: "residual norm (default 1e-10)" },
         FlagSpec { name: "sparse", takes_value: false, help: "use the sparse generator" },
         FlagSpec { name: "density", takes_value: true, help: "sparse density (default 5e-3)" },
-        FlagSpec { name: "solver", takes_value: true, help: "saa|lsqr|sas (default saa)" },
+        FlagSpec { name: "solver", takes_value: true, help: "saa|lsqr|sas|stable (default saa, or SNSOLVE_SOLVER)" },
+        FlagSpec { name: "refine-iters", takes_value: true, help: "stable solver: max refinement sweeps (0 = auto, default 30)" },
         FlagSpec { name: "sketch", takes_value: true, help: "sketch operator (default countsketch)" },
         FlagSpec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
         FlagSpec { name: "trials", takes_value: true, help: "figure4 trials (default 10)" },
@@ -149,6 +150,26 @@ fn main() {
             }
         }
     }
+    if let Some(s) = args.flag("solver") {
+        match SolverChoice::parse(s) {
+            Some(choice) => snsolve::coordinator::set_default_solver(Some(choice)),
+            None => {
+                eprintln!(
+                    "error: invalid value for --solver: {s} (expected saa|lsqr|sas|stable)\n\n{}",
+                    usage("snsolve", SUBCOMMANDS, &specs)
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    match args.flag_usize("refine-iters") {
+        Ok(Some(r)) => snsolve::solvers::stable::set_refine_iters(r),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("snsolve", SUBCOMMANDS, &specs));
+            std::process::exit(2);
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
@@ -183,7 +204,9 @@ fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
     } else {
         generate_dense(&DenseProblemSpec { m, n, cond, resid_norm: beta, seed })
     };
-    let solver_name = args.flag("solver").unwrap_or("saa");
+    // --solver already installed the validated choice (set_default_solver
+    // in main); an absent flag resolves SNSOLVE_SOLVER / SAA.
+    let solver_name = snsolve::coordinator::default_solver().name();
     let solver: Box<dyn Solver> = match solver_name {
         "lsqr" => Box::new(LsqrSolver::new(LsqrConfig {
             atol: 1e-12,
@@ -191,7 +214,8 @@ fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
             conlim: 0.0,
             ..Default::default()
         })),
-        "sas" | "sketch-only" => Box::new(snsolve::solvers::sas::SketchAndSolve::default()),
+        "sketch-only" => Box::new(snsolve::solvers::sas::SketchAndSolve::default()),
+        "stable" => Box::new(snsolve::solvers::stable::StableSolver::default()),
         _ => {
             let sketch = args
                 .flag("sketch")
@@ -297,6 +321,31 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                     );
                     return 2;
                 }
+                if let Some(raw) = c.get("solver", "solver") {
+                    let ok = raw
+                        .as_str()
+                        .and_then(SolverChoice::parse)
+                        .is_some();
+                    if !ok {
+                        eprintln!(
+                            "config error: [solver] solver must be \"saa\", \"lsqr\", \
+                             \"sas\" or \"stable\""
+                        );
+                        return 2;
+                    }
+                }
+                if let Some(v) = c.get("solver", "refine_iters") {
+                    match v.as_i64() {
+                        Some(r) if r >= 0 => {}
+                        _ => {
+                            eprintln!(
+                                "config error: [solver] refine_iters must be a non-negative \
+                                 integer (0 = auto)"
+                            );
+                            return 2;
+                        }
+                    }
+                }
                 // `[parallel]` kernel keys apply unless the matching CLI
                 // flag (already installed in main, higher precedence) was
                 // given; absent keys leave the env vars / defaults alone.
@@ -318,6 +367,12 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 }
                 if let (None, Some(v)) = (args.flag("sketch-invert"), sc.sketch_invert) {
                     snsolve::sketch::set_inverted_scatter(Some(v));
+                }
+                if let (None, Some(choice)) = (args.flag("solver"), sc.solver) {
+                    snsolve::coordinator::set_default_solver(Some(choice));
+                }
+                if args.flag("refine-iters").is_none() && sc.refine_iters != 0 {
+                    snsolve::solvers::stable::set_refine_iters(sc.refine_iters);
                 }
                 (c.service_config(), c.frontend_config())
             }

@@ -1,0 +1,669 @@
+//! Condition-driven escalation ladder for the forward-stable solver tier.
+//!
+//! Plain sketch-and-precondition is fast but not backward stable
+//! (Meier–Nakatsukasa–Townsend–Webb, arXiv:2302.07202): on ill-conditioned
+//! nearly-consistent problems its *forward* error can be O(1) while every
+//! cheap residual-based check still passes. The ladder therefore never
+//! trusts a single stage. Each candidate iterate is judged by a
+//! preconditioned forward-error proxy (see [`assess`]) and escalated while
+//! the evidence says the answer is worse than what a stable solver could
+//! deliver:
+//!
+//! 1. **sas** — sketch-and-solve: `x = R⁻¹z₀`. One triangular solve; wins
+//!    on well-conditioned or low-accuracy requests.
+//! 2. **lsqr** — sketch-and-precondition: LSQR on `A R⁻¹`, warm-started
+//!    from `z₀`, then `x = R⁻¹z`.
+//! 3. **refine** — iterative sketching with momentum (Epperly,
+//!    arXiv:2311.04362): heavy-ball refinement sweeps recomputing the true
+//!    residual each sweep, `x⁺ = x + α·R⁻¹R⁻ᵀAᵀ(b−Ax) + β(x − x⁻)`. The
+//!    step/momentum pair is tuned from a cheap power-iteration estimate of
+//!    the preconditioned spectrum (`α = 4/(√L+√μ)²`,
+//!    `β = ((√L−√μ)/(√L+√μ))²`), so the contraction rate depends only on
+//!    the embedding distortion — not on κ(A) — restoring direct-solver
+//!    forward accuracy at randomized speed.
+//! 4. **dense** — terminal dense Householder QR. Always answers (or
+//!    errors), never silently returns a rejected iterate.
+//!
+//! Escalation is per right-hand side: a block request only pays for the
+//! stages its hard columns need; accepted columns are frozen.
+//!
+//! The [`FaultPlan`] hook can force any stage to fail, panic, or emit a
+//! deterministically poisoned iterate, so tests exercise the escalation
+//! path itself — not just matrices that happen to be nasty.
+
+use crate::linalg::operator::PreconditionedOperator;
+use crate::linalg::qr;
+use crate::linalg::{norms, triangular, DenseMatrix, LinearOperator, Matrix};
+use crate::testing::{FaultAction, FaultPlan};
+
+use super::lsqr::{lsqr_block_ws, LsqrConfig, SolveWorkspace};
+use super::{Result, SolverError};
+
+/// The ladder's stages, cheapest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Sketch-and-solve: one triangular solve from the sketched factor.
+    SketchSolve,
+    /// Sketch-and-precondition: LSQR on `A R⁻¹` warm-started from `z₀`.
+    PrecondLsqr,
+    /// Iterative sketching with momentum: true-residual refinement sweeps.
+    Refine,
+    /// Terminal dense Householder QR.
+    DenseQr,
+}
+
+impl Stage {
+    /// Stage name as used by [`FaultPlan`] and the metrics report.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::SketchSolve => "sas",
+            Stage::PrecondLsqr => "lsqr",
+            Stage::Refine => "refine",
+            Stage::DenseQr => "dense",
+        }
+    }
+}
+
+/// Tuning for one ladder run.
+#[derive(Debug, Clone)]
+pub struct LadderConfig {
+    /// Requested relative forward-error tolerance (evidence scale).
+    pub tol: f64,
+    /// LSQR settings for the sketch-and-precondition stage.
+    pub lsqr: LsqrConfig,
+    /// Maximum refinement sweeps (stage 3). 0 skips the stage.
+    pub refine_iters: usize,
+    /// R-diagonal condition estimates beyond this jump straight to the
+    /// dense terminal stage (the sketched factor is numerically rank
+    /// deficient; iterating on it is wasted work).
+    pub cond_limit: f64,
+    /// Multiplier on the attainable-accuracy floor when deciding
+    /// acceptance: candidates are accepted when their evidence is below
+    /// `max(tol, safety · achievable)`.
+    pub safety: f64,
+}
+
+impl Default for LadderConfig {
+    fn default() -> Self {
+        Self {
+            tol: 1e-10,
+            lsqr: LsqrConfig::default(),
+            refine_iters: 0, // 0 ⇒ resolve via solvers::stable::refine_iters()
+            cond_limit: 1e15,
+            safety: 32.0,
+        }
+    }
+}
+
+/// Result of a ladder run over a `k`-row RHS block.
+#[derive(Debug, Clone)]
+pub struct LadderOutcome {
+    /// Accepted solutions, one row per RHS.
+    pub x: DenseMatrix,
+    /// The stage whose iterate was finally accepted, per RHS.
+    pub stage_of: Vec<Stage>,
+    /// Total stages entered beyond the first, summed over RHS columns.
+    pub escalations: u64,
+    /// Iteration count (LSQR iterations + refinement sweeps), per RHS.
+    pub iterations: Vec<usize>,
+    /// ‖b − Ax‖ of the accepted iterate, per RHS.
+    pub resnorm: Vec<f64>,
+    /// Final forward-error evidence `‖R⁻ᵀAᵀr‖ / ‖Rx‖`, per RHS.
+    pub rel: Vec<f64>,
+    /// `max|rᵢᵢ|/min|rᵢᵢ|` condition estimate from the sketched factor.
+    pub cond_est: f64,
+}
+
+/// Forward-error evidence for one candidate column.
+#[derive(Debug, Clone, Copy)]
+struct Evidence {
+    /// `‖w‖/‖Rx‖` with `w = R⁻ᵀAᵀ(b−Ax)`. Since `AᵀA·e = Aᵀr` and
+    /// `AR⁻¹` is a near-isometry, `‖w‖ ≈ ‖A·e‖` — a *forward*-error
+    /// proxy in the A-metric, which plain residual checks are blind to.
+    rel: f64,
+    /// ‖b − Ax‖.
+    resnorm: f64,
+    /// Attainable-accuracy floor for this column (rounding in the
+    /// residual recomputation plus the κ-amplified residual term).
+    achievable: f64,
+}
+
+impl Evidence {
+    fn accept(&self, tol: f64, safety: f64) -> bool {
+        self.rel.is_finite() && self.rel <= f64::max(tol, safety * self.achievable)
+    }
+}
+
+/// ‖R·x‖ by upper-triangular matvec (R is small: n×n).
+fn r_scaled_norm(r: &DenseMatrix, x: &[f64]) -> f64 {
+    let n = r.cols();
+    let mut acc = 0.0f64;
+    for p in 0..n {
+        let row = r.row(p);
+        let mut s = 0.0f64;
+        for q in p..n {
+            s += row[q] * x[q];
+        }
+        acc += s * s;
+    }
+    acc.sqrt()
+}
+
+/// Judge a candidate block: residual, preconditioned gradient, and the
+/// per-column forward-error proxy. `rhs` and `x` are `ka×m` / `ka×n`
+/// row-blocks over the still-active columns.
+#[allow(clippy::too_many_arguments)]
+fn assess(
+    op: &dyn LinearOperator,
+    r: &DenseMatrix,
+    rhs: &DenseMatrix,
+    x: &DenseMatrix,
+    cond_est: f64,
+    a_fro: f64,
+    ws: &mut SolveWorkspace,
+) -> Result<Vec<Evidence>> {
+    let (m, n) = op.shape();
+    let ka = x.rows();
+    let eps = f64::EPSILON;
+    let mut ax = ws.take_mat(ka, m);
+    op.apply_mat(x, &mut ax);
+    // residual in place: ax ← b − Ax
+    for (av, bv) in ax.data_mut().iter_mut().zip(rhs.data().iter()) {
+        *av = *bv - *av;
+    }
+    let mut g = ws.take_mat(ka, n);
+    op.apply_transpose_mat(&ax, &mut g);
+    let w = triangular::solve_upper_transpose_block(r, &g)?;
+    let mut out = Vec::with_capacity(ka);
+    for i in 0..ka {
+        let resnorm = norms::nrm2(ax.row(i));
+        let wnorm = norms::nrm2(w.row(i));
+        let xnorm = norms::nrm2(x.row(i));
+        let scale = r_scaled_norm(r, x.row(i)).max(f64::MIN_POSITIVE);
+        let rel = wnorm / scale;
+        let achievable = eps * (a_fro * xnorm + cond_est * resnorm) / scale;
+        out.push(Evidence { rel, resnorm, achievable });
+    }
+    ws.recycle_mat(ax);
+    ws.recycle_mat(g);
+    Ok(out)
+}
+
+/// Deterministic large-but-finite corruption of a candidate block,
+/// derived from the fault plan's seed (splitmix-style hash per element).
+fn poison_block(x: &mut DenseMatrix, seed: u64) {
+    let magnitude = 1e8 * (1.0 + x.max_abs());
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        let mut h = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let unit = ((h >> 11) as f64) / ((1u64 << 53) as f64); // [0, 1)
+        *v += magnitude * (0.5 + unit);
+    }
+}
+
+/// Estimate the extreme eigenvalues `(L, μ)` of `H = R⁻ᵀAᵀAR⁻¹` by
+/// deterministic power iteration (plain for `L`, shifted by `L` for `μ`).
+/// `H`'s spectrum depends only on the sketch's embedding distortion, not
+/// on κ(A), so a dozen iterations pin it well enough to set the
+/// heavy-ball parameters; the 1.05×/0.95× widening absorbs the power
+/// method's one-sided bias.
+fn estimate_spectrum(op: &dyn LinearOperator, r: &DenseMatrix) -> Option<(f64, f64)> {
+    let n = r.cols();
+    let iters = 12usize;
+    let apply_h = |v: &[f64]| -> Option<Vec<f64>> {
+        let xr = triangular::solve_upper(r, v).ok()?;
+        let av = op.apply_vec(&xr);
+        let g = op.apply_transpose_vec(&av);
+        triangular::solve_upper_transpose(r, &g).ok()
+    };
+    // Deterministic ±1 start vectors (index-hash sign patterns).
+    let start = |mult: u64| -> Vec<f64> {
+        let nrm = (n as f64).sqrt();
+        (0..n)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(mult);
+                if h & 0x10000 != 0 { 1.0 / nrm } else { -1.0 / nrm }
+            })
+            .collect()
+    };
+    let mut v = start(0x9E37_79B9);
+    let mut top = 0.0f64;
+    for _ in 0..iters {
+        let w = apply_h(&v)?;
+        top = v.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+        let nw = norms::nrm2(&w);
+        if !nw.is_finite() || nw == 0.0 {
+            return None;
+        }
+        v = w.iter().map(|x| x / nw).collect();
+    }
+    if !top.is_finite() || top <= 0.0 {
+        return None;
+    }
+    let l = top * 1.05;
+    let mut v = start(0x85EB_CA6B);
+    let mut shifted = 0.0f64;
+    for _ in 0..iters {
+        let hv = apply_h(&v)?;
+        let w: Vec<f64> = v.iter().zip(hv.iter()).map(|(a, b)| l * a - b).collect();
+        shifted = v.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+        let nw = norms::nrm2(&w);
+        if !nw.is_finite() || nw == 0.0 {
+            return None;
+        }
+        v = w.iter().map(|x| x / nw).collect();
+    }
+    let mu = ((l - shifted) * 0.95).max(1e-6 * l);
+    Some((l, mu))
+}
+
+fn fault_action(faults: Option<&FaultPlan>, stage: Stage) -> Option<FaultAction> {
+    let action = faults.and_then(|f| f.action(stage.name()));
+    if action == Some(FaultAction::Panic) {
+        panic!("fault-injected panic in ladder stage '{}'", stage.name());
+    }
+    action
+}
+
+struct State {
+    x: DenseMatrix,
+    best: DenseMatrix,
+    accepted: Vec<bool>,
+    stage_of: Vec<Stage>,
+    entered: Vec<usize>,
+    iterations: Vec<usize>,
+    resnorm: Vec<f64>,
+    rel: Vec<f64>,
+}
+
+impl State {
+    fn active(&self) -> Vec<usize> {
+        (0..self.accepted.len()).filter(|&i| !self.accepted[i]).collect()
+    }
+
+    fn gather_rows(src: &DenseMatrix, idxs: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(idxs.len(), src.cols());
+        for (r, &i) in idxs.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(src.row(i));
+        }
+        out
+    }
+
+    /// Record a stage's candidate for the given active columns, accepting
+    /// those whose evidence clears the bar (`extra_ok` gates per-candidate
+    /// stage-specific acceptance, e.g. LSQR convergence flags).
+    fn judge(
+        &mut self,
+        stage: Stage,
+        idxs: &[usize],
+        cand: &DenseMatrix,
+        ev: &[Evidence],
+        extra_ok: &[bool],
+        tol: f64,
+        safety: f64,
+    ) {
+        for (r, &i) in idxs.iter().enumerate() {
+            self.best.row_mut(i).copy_from_slice(cand.row(r));
+            self.rel[i] = ev[r].rel;
+            self.resnorm[i] = ev[r].resnorm;
+            if extra_ok[r] && ev[r].accept(tol, safety) {
+                self.x.row_mut(i).copy_from_slice(cand.row(r));
+                self.accepted[i] = true;
+                self.stage_of[i] = stage;
+            }
+        }
+    }
+}
+
+/// Run the escalation ladder for a `k`-row RHS block against a cached
+/// sketched factorization.
+///
+/// * `rhs` — `k×m` right-hand sides (one per row).
+/// * `r` — `n×n` upper-triangular factor of the sketched matrix `SA`.
+/// * `z0` — `k×n` sketch-and-solve coordinates `QᵀS b` (one per row).
+/// * `y` — materialized preconditioned operator `A R⁻¹`, if available
+///   (dense path); otherwise the ladder applies `R⁻¹` on the fly.
+#[allow(clippy::too_many_arguments)]
+pub fn run_ladder(
+    a: &Matrix,
+    rhs: &DenseMatrix,
+    r: &DenseMatrix,
+    z0: &DenseMatrix,
+    y: Option<&DenseMatrix>,
+    cfg: &LadderConfig,
+    ws: &mut SolveWorkspace,
+    faults: Option<&FaultPlan>,
+) -> Result<LadderOutcome> {
+    let (m, n) = a.shape();
+    let k = rhs.rows();
+    if rhs.cols() != m || z0.shape() != (k, n) || r.shape() != (n, n) {
+        return Err(SolverError::Dimension(format!(
+            "ladder: A is {m}x{n}, rhs {}x{}, z0 {}x{}, R {}x{}",
+            rhs.rows(),
+            rhs.cols(),
+            z0.rows(),
+            z0.cols(),
+            r.rows(),
+            r.cols()
+        )));
+    }
+    let op = a.as_operator();
+    let tol = cfg.tol;
+    let safety = cfg.safety;
+
+    // Cheap condition evidence from the sketched factor's diagonal: the
+    // sketch preserves singular values to the embedding distortion, so
+    // max|rᵢᵢ|/min|rᵢᵢ| is an order-of-magnitude read on κ(A).
+    let mut dmax = 0.0f64;
+    let mut dmin = f64::INFINITY;
+    for i in 0..n {
+        let d = r[(i, i)].abs();
+        dmax = dmax.max(d);
+        dmin = dmin.min(d);
+    }
+    let cond_est = if dmin > 0.0 { dmax / dmin } else { f64::INFINITY };
+    let a_fro = r.fro_norm();
+    // Rank-deficient-in-double factor: R⁻¹ applications are numerically
+    // meaningless, so skip every iterative stage.
+    let skip_iterative = !cond_est.is_finite() || cond_est > cfg.cond_limit;
+
+    let mut st = State {
+        x: DenseMatrix::zeros(k, n),
+        best: DenseMatrix::zeros(k, n),
+        accepted: vec![false; k],
+        stage_of: vec![Stage::DenseQr; k],
+        entered: vec![0; k],
+        iterations: vec![0; k],
+        resnorm: vec![f64::NAN; k],
+        rel: vec![f64::NAN; k],
+    };
+
+    // ---- stage 1: sketch-and-solve --------------------------------------
+    if !skip_iterative && fault_action(faults, Stage::SketchSolve) != Some(FaultAction::Fail) {
+        let idxs = st.active();
+        for &i in &idxs {
+            st.entered[i] += 1;
+        }
+        if let Ok(mut cand) = triangular::solve_upper_block(r, z0) {
+            if fault_action(faults, Stage::SketchSolve) == Some(FaultAction::Poison) {
+                poison_block(&mut cand, faults.map(|f| f.seed).unwrap_or(0));
+            }
+            let ev = assess(op, r, rhs, &cand, cond_est, a_fro, ws)?;
+            let ok = vec![true; idxs.len()];
+            st.judge(Stage::SketchSolve, &idxs, &cand, &ev, &ok, tol, safety);
+        }
+    }
+
+    // ---- stage 2: sketch-and-precondition (LSQR) ------------------------
+    let idxs = st.active();
+    if !idxs.is_empty()
+        && !skip_iterative
+        && fault_action(faults, Stage::PrecondLsqr) != Some(FaultAction::Fail)
+    {
+        for &i in &idxs {
+            st.entered[i] += 1;
+        }
+        let rhs_sub = State::gather_rows(rhs, &idxs);
+        let z0_sub = State::gather_rows(z0, &idxs);
+        let results = match (y, a) {
+            (Some(ym), _) => lsqr_block_ws(ym, &rhs_sub, Some(&z0_sub), &cfg.lsqr, ws),
+            (None, Matrix::Csr(ac)) => {
+                let pop = PreconditionedOperator::new(ac, r);
+                lsqr_block_ws(&pop, &rhs_sub, Some(&z0_sub), &cfg.lsqr, ws)
+            }
+            (None, Matrix::Dense(ad)) => {
+                let pop = PreconditionedOperator::new(ad, r);
+                lsqr_block_ws(&pop, &rhs_sub, Some(&z0_sub), &cfg.lsqr, ws)
+            }
+        };
+        let mut z = DenseMatrix::zeros(idxs.len(), n);
+        let mut ok = Vec::with_capacity(idxs.len());
+        for (row, res) in results.iter().enumerate() {
+            z.row_mut(row).copy_from_slice(&res.x);
+            st.iterations[idxs[row]] += res.itn;
+            ok.push(res.istop.converged());
+        }
+        if let Ok(mut cand) = triangular::solve_upper_block(r, &z) {
+            if fault_action(faults, Stage::PrecondLsqr) == Some(FaultAction::Poison) {
+                poison_block(&mut cand, faults.map(|f| f.seed).unwrap_or(0));
+            }
+            let ev = assess(op, r, &rhs_sub, &cand, cond_est, a_fro, ws)?;
+            st.judge(Stage::PrecondLsqr, &idxs, &cand, &ev, &ok, tol, safety);
+        }
+    }
+
+    // ---- stage 3: iterative sketching with momentum ---------------------
+    let idxs = st.active();
+    let sweeps = cfg.refine_iters;
+    if !idxs.is_empty()
+        && !skip_iterative
+        && sweeps > 0
+        && fault_action(faults, Stage::Refine) != Some(FaultAction::Fail)
+    {
+        for &i in &idxs {
+            st.entered[i] += 1;
+        }
+        let rhs_sub = State::gather_rows(rhs, &idxs);
+        let z0_sub = State::gather_rows(z0, &idxs);
+        let mut cur = State::gather_rows(&st.best, &idxs);
+        // Warm-start policy: sweep from the better-evidenced of the
+        // inherited iterate and a fresh sketch-and-solve iterate, per
+        // column. A poisoned/diverged inherited iterate contracts too
+        // slowly to be worth sweeping from, and a *zero* restart is
+        // forward-unstable at large κ (the MNTW zero-initializer
+        // instability) — the sketch-and-solve iterate is the cheap
+        // forward-decent start.
+        if let Ok(xs) = triangular::solve_upper_block(r, &z0_sub) {
+            let ev_s = assess(op, r, &rhs_sub, &xs, cond_est, a_fro, ws)?;
+            for (row, &i) in idxs.iter().enumerate() {
+                if !st.rel[i].is_finite() || ev_s[row].rel < st.rel[i] {
+                    cur.row_mut(row).copy_from_slice(xs.row(row));
+                }
+            }
+        }
+        // Heavy-ball parameters from the estimated spectrum of
+        // H = R⁻ᵀAᵀAR⁻¹: α = 4/(√L+√μ)², β = ((√L−√μ)/(√L+√μ))²
+        // (asymptotic contraction √β per sweep, independent of κ(A)).
+        let spectrum = estimate_spectrum(op, r);
+        if let Some((big_l, mu)) = spectrum {
+            let (sl, sm) = (big_l.sqrt(), mu.sqrt());
+            let alpha = 4.0 / ((sl + sm) * (sl + sm));
+            let beta = ((sl - sm) / (sl + sm)).powi(2);
+            let ka = idxs.len();
+            let mut prev = cur.clone();
+            let mut wnorm_prev = vec![f64::INFINITY; ka];
+            let mut stagnant = 0usize;
+            let mut used = 0usize;
+            for sweep in 0..sweeps {
+                used += 1;
+                let mut ax = ws.take_mat(ka, m);
+                op.apply_mat(&cur, &mut ax);
+                for (av, bv) in ax.data_mut().iter_mut().zip(rhs_sub.data().iter()) {
+                    *av = *bv - *av;
+                }
+                let mut g = ws.take_mat(ka, n);
+                op.apply_transpose_mat(&ax, &mut g);
+                ws.recycle_mat(ax);
+                let wt = triangular::solve_upper_transpose_block(r, &g)?;
+                ws.recycle_mat(g);
+                let d = triangular::solve_upper_block(r, &wt)?;
+                // x⁺ = x + α·d + β(x − x⁻), rowwise
+                let mut worse = true;
+                for row in 0..ka {
+                    let wn = norms::nrm2(wt.row(row));
+                    if wn < 0.9 * wnorm_prev[row] {
+                        worse = false;
+                    }
+                    wnorm_prev[row] = wn;
+                }
+                for ((xv, dv), pv) in
+                    cur.data_mut().iter_mut().zip(d.data().iter()).zip(prev.data_mut().iter_mut())
+                {
+                    let old = *xv;
+                    *xv = old + alpha * *dv + beta * (old - *pv);
+                    *pv = old;
+                }
+                // Stagnation exit: heavy ball is non-monotone early, so
+                // only count once the transient is over.
+                if worse && sweep >= 3 {
+                    stagnant += 1;
+                    if stagnant >= 2 {
+                        break; // rounding floor: stop burning sweeps
+                    }
+                } else if !worse {
+                    stagnant = 0;
+                }
+            }
+            for &i in &idxs {
+                st.iterations[i] += used;
+            }
+            let mut cand = cur;
+            if fault_action(faults, Stage::Refine) == Some(FaultAction::Poison) {
+                poison_block(&mut cand, faults.map(|f| f.seed).unwrap_or(0));
+            }
+            let ev = assess(op, r, &rhs_sub, &cand, cond_est, a_fro, ws)?;
+            let ok = vec![true; idxs.len()];
+            st.judge(Stage::Refine, &idxs, &cand, &ev, &ok, tol, safety);
+        }
+    }
+
+    // ---- stage 4: dense QR (terminal) -----------------------------------
+    let idxs = st.active();
+    if !idxs.is_empty() {
+        if fault_action(faults, Stage::DenseQr) == Some(FaultAction::Fail) {
+            return Err(SolverError::NoConvergence(
+                "ladder: dense terminal stage fault-injected to fail".to_string(),
+            ));
+        }
+        for &i in &idxs {
+            st.entered[i] += 1;
+        }
+        let ad = a.to_dense();
+        let f = qr::qr_compact(&ad).map_err(SolverError::Linalg)?;
+        let rhs_sub = State::gather_rows(rhs, &idxs);
+        let zd = f.q_transpose_mat(&rhs_sub);
+        let rd = f.r();
+        let mut cand = triangular::solve_upper_block(&rd, &zd)?;
+        if fault_action(faults, Stage::DenseQr) == Some(FaultAction::Poison) {
+            poison_block(&mut cand, faults.map(|f| f.seed).unwrap_or(0));
+        }
+        let ev = assess(op, r, &rhs_sub, &cand, cond_est, a_fro, ws)?;
+        // Terminal stage: accept unconditionally short of gross
+        // corruption — there is no stage 5, and at extreme κ even dense
+        // QR legitimately sits above the requested tolerance.
+        for (row, &i) in idxs.iter().enumerate() {
+            let finite = cand.row(row).iter().all(|v| v.is_finite());
+            if !finite || ev[row].rel > 0.1 {
+                return Err(SolverError::NoConvergence(format!(
+                    "ladder: dense terminal iterate failed verification \
+                     (rel evidence {:.3e})",
+                    ev[row].rel
+                )));
+            }
+            st.x.row_mut(i).copy_from_slice(cand.row(row));
+            st.accepted[i] = true;
+            st.stage_of[i] = Stage::DenseQr;
+            st.rel[i] = ev[row].rel;
+            st.resnorm[i] = ev[row].resnorm;
+        }
+    }
+
+    let escalations = st.entered.iter().map(|&e| (e.max(1) - 1) as u64).sum();
+    Ok(LadderOutcome {
+        x: st.x,
+        stage_of: st.stage_of,
+        escalations,
+        iterations: st.iterations,
+        resnorm: st.resnorm,
+        rel: st.rel,
+        cond_est,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::triangular::right_solve_upper_multi;
+    use crate::problems::{generate_dense, DenseProblemSpec};
+    use crate::sketch::{self, SketchKind, SketchOperator};
+
+    fn setup(
+        m: usize,
+        n: usize,
+        cond: f64,
+        seed: u64,
+    ) -> (Matrix, DenseMatrix, DenseMatrix, DenseMatrix, DenseMatrix, Vec<f64>) {
+        let p = generate_dense(&DenseProblemSpec {
+            m,
+            n,
+            cond,
+            resid_norm: 1e-10,
+            seed,
+        });
+        let ad = p.a.to_dense();
+        let s_rows = (4 * n).min(m);
+        let s_op = sketch::build(SketchKind::Gaussian, s_rows, m, 0xABCD_0001);
+        let b_sk = s_op.apply_matrix(&p.a);
+        let f = qr::qr_compact(&b_sk).unwrap();
+        let r = f.r();
+        let c = s_op.apply_vec(&p.b);
+        let z0v = f.q_transpose_vec(&c);
+        let mut z0 = DenseMatrix::zeros(1, n);
+        z0.row_mut(0).copy_from_slice(&z0v);
+        let mut rhs = DenseMatrix::zeros(1, m);
+        rhs.row_mut(0).copy_from_slice(&p.b);
+        let y = right_solve_upper_multi(&ad, &r).unwrap();
+        (p.a, rhs, r, z0, y, p.x_true)
+    }
+
+    fn forward_err(x: &[f64], x_true: &[f64]) -> f64 {
+        norms::nrm2_diff(x, x_true) / norms::nrm2(x_true).max(1e-300)
+    }
+
+    #[test]
+    fn well_conditioned_accepts_at_first_stage() {
+        let (a, rhs, r, z0, y, x_true) = setup(400, 20, 10.0, 42);
+        let cfg = LadderConfig { tol: 1e-8, refine_iters: 30, ..Default::default() };
+        let mut ws = SolveWorkspace::new();
+        let out = run_ladder(&a, &rhs, &r, &z0, Some(&y), &cfg, &mut ws, None).unwrap();
+        assert!(out.stage_of[0] <= Stage::PrecondLsqr, "stage {:?}", out.stage_of[0]);
+        assert!(forward_err(out.x.row(0), &x_true) < 1e-6);
+    }
+
+    #[test]
+    fn ill_conditioned_escalates_past_sketch_and_solve() {
+        let (a, rhs, r, z0, y, x_true) = setup(400, 20, 1e10, 43);
+        let cfg = LadderConfig { tol: 1e-10, refine_iters: 40, ..Default::default() };
+        let mut ws = SolveWorkspace::new();
+        let out = run_ladder(&a, &rhs, &r, &z0, Some(&y), &cfg, &mut ws, None).unwrap();
+        assert!(out.stage_of[0] > Stage::SketchSolve, "sketch-and-solve must not pass at κ=1e10");
+        assert!(out.escalations >= 1);
+        let err = forward_err(out.x.row(0), &x_true);
+        assert!(err < 1e-4, "forward error {err:.3e}");
+    }
+
+    #[test]
+    fn dimension_mismatch_is_typed() {
+        let (a, rhs, r, z0, _y, _) = setup(100, 8, 10.0, 44);
+        let bad = DenseMatrix::zeros(1, 3);
+        let mut ws = SolveWorkspace::new();
+        let err = run_ladder(&a, &rhs, &r, &bad, None, &LadderConfig::default(), &mut ws, None);
+        assert!(matches!(err, Err(SolverError::Dimension(_))));
+        let err2 = run_ladder(&a, &bad, &r, &z0, None, &LadderConfig::default(), &mut ws, None);
+        assert!(matches!(err2, Err(SolverError::Dimension(_))));
+    }
+
+    #[test]
+    fn poison_pattern_is_deterministic() {
+        let mut a = DenseMatrix::zeros(2, 3);
+        let mut b = DenseMatrix::zeros(2, 3);
+        poison_block(&mut a, 7);
+        poison_block(&mut b, 7);
+        assert_eq!(a.data(), b.data());
+        assert!(a.data().iter().all(|v| v.is_finite() && v.abs() > 1e7));
+        let mut c = DenseMatrix::zeros(2, 3);
+        poison_block(&mut c, 8);
+        assert_ne!(a.data(), c.data());
+    }
+}

@@ -122,7 +122,7 @@ impl SolveWorkspace {
         Self { pool: crate::workspace::BufferPool::new() }
     }
 
-    fn take(&mut self, len: usize) -> Vec<f64> {
+    pub(crate) fn take(&mut self, len: usize) -> Vec<f64> {
         self.pool.take(len)
     }
 
@@ -130,24 +130,24 @@ impl SolveWorkspace {
     /// is plain-store overwritten before any read (see
     /// [`crate::workspace::BufferPool::take_overwrite`]); NOT for apply
     /// outputs, whose `beta·y + …` kernels read the buffer.
-    fn take_overwrite(&mut self, len: usize) -> Vec<f64> {
+    pub(crate) fn take_overwrite(&mut self, len: usize) -> Vec<f64> {
         self.pool.take_overwrite(len)
     }
 
-    fn take_mat(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+    pub(crate) fn take_mat(&mut self, rows: usize, cols: usize) -> DenseMatrix {
         self.pool.take_matrix(rows, cols)
     }
 
     /// See [`SolveWorkspace::take_overwrite`].
-    fn take_mat_overwrite(&mut self, rows: usize, cols: usize) -> DenseMatrix {
+    pub(crate) fn take_mat_overwrite(&mut self, rows: usize, cols: usize) -> DenseMatrix {
         self.pool.take_matrix_overwrite(rows, cols)
     }
 
-    fn recycle(&mut self, v: Vec<f64>) {
+    pub(crate) fn recycle(&mut self, v: Vec<f64>) {
         self.pool.recycle(v);
     }
 
-    fn recycle_mat(&mut self, m: DenseMatrix) {
+    pub(crate) fn recycle_mat(&mut self, m: DenseMatrix) {
         self.pool.recycle_matrix(m);
     }
 }

@@ -11,20 +11,29 @@
 //!   `x̂ = R⁻¹Qᵀ(Sb)` (cheapest, lowest accuracy).
 //! * [`direct`] — dense Householder-QR direct solve (small-problem oracle).
 //! * [`perturb`] — the implicit `A + σG/√m` operator for the fallback path.
+//! * [`stable`] — the forward-stable tier: iterative sketching with
+//!   momentum + refinement sweeps behind the [`ladder`] escalation ladder
+//!   (sketch-and-solve → preconditioned LSQR → refinement → dense QR),
+//!   escalating on an R-preconditioned forward-error proxy instead of
+//!   trusting any single stage.
 
 pub mod direct;
+pub mod ladder;
 pub mod lsqr;
 pub mod perturb;
 pub mod saa;
 pub mod sap;
 pub mod sas;
+pub mod stable;
 
 use crate::linalg::Matrix;
 
+pub use ladder::{LadderConfig, LadderOutcome, Stage};
 pub use lsqr::{lsqr, LsqrConfig, LsqrResult, StopReason};
 pub use saa::SaaSolver;
 pub use sap::SapSolver;
 pub use sas::SketchAndSolve;
+pub use stable::{StableConfig, StableSolver};
 
 /// Errors from the solver layer.
 #[derive(Debug)]

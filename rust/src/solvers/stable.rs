@@ -1,0 +1,277 @@
+//! Forward-stable solver: the escalation ladder behind a [`Solver`] face.
+//!
+//! `StableSolver` packages the [`super::ladder`] pipeline — sketch-and-solve
+//! → preconditioned LSQR → iterative sketching with momentum → dense QR —
+//! as a drop-in solver choice. It builds its own sketched factorization
+//! (the serving tier instead reuses the worker's factor cache and calls
+//! [`super::ladder::run_ladder`] directly), and is the reference
+//! implementation for the `--solver stable` CLI path and the
+//! accuracy-vs-κ(A) bench.
+//!
+//! ## Refinement-sweep knob
+//!
+//! The maximum number of stage-3 refinement sweeps resolves, highest
+//! precedence first:
+//!
+//! 1. [`set_refine_iters`] — `--refine-iters` / `[solver] refine_iters`.
+//! 2. `SNSOLVE_REFINE_ITERS` environment variable.
+//! 3. The built-in default (30: at contraction ε = ½ per sweep that is
+//!    enough to pull even an O(1) forward error to the rounding floor).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::linalg::triangular::right_solve_upper_multi;
+use crate::linalg::{qr, DenseMatrix, Matrix};
+use crate::sketch::{self, SketchKind};
+use crate::testing::FaultPlan;
+
+use super::ladder::{run_ladder, LadderConfig, LadderOutcome};
+use super::lsqr::{LsqrConfig, SolveWorkspace};
+use super::saa::sketch_rows;
+use super::{check_dims, Result, Solution, Solver, SolverError};
+
+/// Built-in default for the maximum refinement sweeps.
+const DEFAULT_REFINE_ITERS: usize = 30;
+
+/// Programmatic override (CLI flag / config file). 0 = unset.
+static REFINE_CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide maximum refinement sweeps (0 restores the
+/// ambient env/default resolution).
+pub fn set_refine_iters(n: usize) {
+    REFINE_CONFIGURED.store(n, Ordering::Relaxed);
+}
+
+fn env_refine_iters() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        // snsolve-lint: allow(env-reads-behind-config) — this *is* the
+        // config layer for SNSOLVE_REFINE_ITERS; precedence over it is
+        // enforced in set_refine_iters's callers (CLI flag, config file).
+        std::env::var("SNSOLVE_REFINE_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Resolve the maximum refinement sweeps: configured → env → default.
+pub fn refine_iters() -> usize {
+    let configured = REFINE_CONFIGURED.load(Ordering::Relaxed);
+    if configured != 0 {
+        return configured;
+    }
+    let env = env_refine_iters();
+    if env != 0 {
+        return env;
+    }
+    DEFAULT_REFINE_ITERS
+}
+
+/// Tuning for [`StableSolver`].
+#[derive(Debug, Clone)]
+pub struct StableConfig {
+    /// Sketch family for the preconditioner factorization.
+    pub sketch: SketchKind,
+    /// Sketch rows as a multiple of n.
+    pub sketch_factor: f64,
+    /// LSQR settings for the sketch-and-precondition stage.
+    pub lsqr: LsqrConfig,
+    /// Sketch seed.
+    pub seed: u64,
+    /// Evidence tolerance (relative forward-error proxy).
+    pub tol: f64,
+    /// Maximum refinement sweeps; 0 defers to [`refine_iters`].
+    pub refine_iters: usize,
+    /// Condition estimates beyond this skip straight to dense QR.
+    pub cond_limit: f64,
+    /// Acceptance safety multiplier on the attainable-accuracy floor.
+    pub safety: f64,
+}
+
+impl Default for StableConfig {
+    fn default() -> Self {
+        Self {
+            sketch: SketchKind::CountSketch,
+            sketch_factor: 4.0,
+            lsqr: LsqrConfig { atol: 1e-12, btol: 1e-12, conlim: 0.0, ..LsqrConfig::default() },
+            seed: 0x57AB_1E00,
+            tol: 1e-10,
+            refine_iters: 0,
+            cond_limit: 1e15,
+            safety: 32.0,
+        }
+    }
+}
+
+/// The forward-stable solver choice (`--solver stable`).
+#[derive(Debug, Clone, Default)]
+pub struct StableSolver {
+    pub config: StableConfig,
+}
+
+impl StableSolver {
+    pub fn new(config: StableConfig) -> Self {
+        Self { config }
+    }
+
+    /// Ladder configuration with the refine-sweep knob resolved.
+    fn ladder_config(&self) -> LadderConfig {
+        let sweeps = if self.config.refine_iters != 0 {
+            self.config.refine_iters
+        } else {
+            refine_iters()
+        };
+        LadderConfig {
+            tol: self.config.tol,
+            lsqr: self.config.lsqr.clone(),
+            refine_iters: sweeps,
+            cond_limit: self.config.cond_limit,
+            safety: self.config.safety,
+        }
+    }
+
+    /// Block entry: solve the `k` right-hand sides in `rhs` (one per row),
+    /// building the sketched factorization once, then running the
+    /// escalation ladder. `faults` injects deterministic stage failures
+    /// (tests / chaos drills); pass `None` in production.
+    pub fn solve_block(
+        &self,
+        a: &Matrix,
+        rhs: &DenseMatrix,
+        ws: &mut SolveWorkspace,
+        faults: Option<&FaultPlan>,
+    ) -> Result<LadderOutcome> {
+        let (m, n) = a.shape();
+        if rhs.cols() != m {
+            return Err(SolverError::Dimension(format!(
+                "stable: rhs block has {} cols, A is {m}x{n}",
+                rhs.cols()
+            )));
+        }
+        if m <= n + 1 {
+            return Err(SolverError::Dimension(format!(
+                "stable solver needs a strictly tall matrix, got {m}x{n}"
+            )));
+        }
+        let s_rows = sketch_rows(self.config.sketch_factor, m, n);
+        let s_op = sketch::build(self.config.sketch, s_rows, m, self.config.seed);
+        let b_sk = s_op.apply_matrix(a);
+        let f = qr::qr_compact(&b_sk).map_err(SolverError::Linalg)?;
+        let r = f.r();
+        let c_block = s_op.apply_mat(rhs);
+        let z0 = f.q_transpose_mat(&c_block);
+        // Materialize Y = A·R⁻¹ on the dense path (the blocked LSQR then
+        // runs on a plain GEMM operator); CSR applies R⁻¹ on the fly.
+        let y = match a {
+            Matrix::Dense(ad) => Some(right_solve_upper_multi(ad, &r)?),
+            Matrix::Csr(_) => None,
+        };
+        run_ladder(a, rhs, &r, &z0, y.as_ref(), &self.ladder_config(), ws, faults)
+    }
+}
+
+impl Solver for StableSolver {
+    fn solve(&self, a: &Matrix, b: &[f64]) -> Result<Solution> {
+        check_dims(a, b)?;
+        let m = a.shape().0;
+        let mut rhs = DenseMatrix::zeros(1, m);
+        rhs.row_mut(0).copy_from_slice(b);
+        let mut ws = SolveWorkspace::new();
+        let out = self.solve_block(a, &rhs, &mut ws, None)?;
+        Ok(Solution {
+            x: out.x.row(0).to_vec(),
+            iterations: out.iterations[0],
+            resnorm: out.resnorm[0],
+            arnorm: f64::NAN,
+            converged: true,
+            fallback_used: out.stage_of[0] == super::ladder::Stage::DenseQr,
+            residual_history: Vec::new(),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "stable"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{generate_dense, DenseProblemSpec};
+    use crate::solvers::ladder::Stage;
+
+    #[test]
+    fn refine_iters_precedence() {
+        // configured beats env/default; 0 restores ambient.
+        set_refine_iters(7);
+        assert_eq!(refine_iters(), 7);
+        set_refine_iters(0);
+        assert!(refine_iters() >= 1);
+    }
+
+    #[test]
+    fn solves_well_conditioned_problem() {
+        let p = generate_dense(&DenseProblemSpec {
+            m: 300,
+            n: 12,
+            cond: 50.0,
+            resid_norm: 1e-8,
+            seed: 901,
+        });
+        let solver = StableSolver::default();
+        let sol = solver.solve(&p.a, &p.b).unwrap();
+        assert!(sol.converged);
+        assert!(p.relative_error(&sol.x) < 1e-8, "err {:.3e}", p.relative_error(&sol.x));
+        assert_eq!(solver.name(), "stable");
+    }
+
+    #[test]
+    fn recovers_accuracy_on_ill_conditioned_problem() {
+        let p = generate_dense(&DenseProblemSpec {
+            m: 400,
+            n: 16,
+            cond: 1e10,
+            resid_norm: 1e-10,
+            seed: 902,
+        });
+        let solver = StableSolver::default();
+        let sol = solver.solve(&p.a, &p.b).unwrap();
+        let err = p.relative_error(&sol.x);
+        assert!(err < 1e-4, "forward error {err:.3e} at κ=1e10");
+    }
+
+    #[test]
+    fn short_fat_matrix_rejected() {
+        let p = generate_dense(&DenseProblemSpec {
+            m: 10,
+            n: 9,
+            cond: 2.0,
+            resid_norm: 0.0,
+            seed: 903,
+        });
+        let err = StableSolver::default().solve(&p.a, &p.b);
+        assert!(matches!(err, Err(SolverError::Dimension(_))));
+    }
+
+    #[test]
+    fn block_path_reports_stages_per_column() {
+        let p = generate_dense(&DenseProblemSpec {
+            m: 300,
+            n: 10,
+            cond: 10.0,
+            resid_norm: 1e-8,
+            seed: 904,
+        });
+        let m = p.a.shape().0;
+        let mut rhs = DenseMatrix::zeros(2, m);
+        rhs.row_mut(0).copy_from_slice(&p.b);
+        rhs.row_mut(1).copy_from_slice(&p.b);
+        let mut ws = SolveWorkspace::new();
+        let out = StableSolver::default().solve_block(&p.a, &rhs, &mut ws, None).unwrap();
+        assert_eq!(out.stage_of.len(), 2);
+        assert!(out.stage_of.iter().all(|&s| s <= Stage::DenseQr));
+        assert_eq!(out.x.rows(), 2);
+    }
+}

@@ -5,7 +5,115 @@
 //! `SNSOLVE_PROP_SEED`), and each case derives its seed from the case
 //! index, so failures reproduce exactly.
 
+use std::sync::Mutex;
+
 use crate::rng::{GaussianSource, RngCore, Xoshiro256pp};
+
+// ----------------------------------------------------------------------
+// Fault injection
+// ----------------------------------------------------------------------
+
+/// What an injected fault does to the stage it targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The stage reports failure without producing an iterate (the ladder
+    /// escalates every still-active column past it).
+    Fail,
+    /// The stage completes but its iterate is deterministically corrupted
+    /// (large finite garbage) — the escalation *evidence* must catch it.
+    Poison,
+    /// The stage panics outright — exercises the worker's `catch_unwind`
+    /// containment.
+    Panic,
+}
+
+/// A seeded, deterministic fault-injection plan: a list of
+/// `(stage, action)` pairs consulted by the solver ladder
+/// ([`crate::solvers::ladder`]) and the coordinator worker.
+///
+/// Stage names: `"sas"`, `"lsqr"`, `"refine"`, `"dense"` (the four ladder
+/// stages) and `"worker"` (checked at batch entry in
+/// `WorkerContext::execute_batch`). The escalation path is thereby
+/// exercisable deterministically in tests — not just on matrices that
+/// happen to be nasty.
+///
+/// Plans reach production code two ways: passed explicitly (ladder unit
+/// tests), or installed process-globally via [`install_faults`] (worker /
+/// service end-to-end tests; serialize those with a mutex — the plan is
+/// process-wide).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    entries: Vec<(&'static str, FaultAction)>,
+    /// Seed for the deterministic poison pattern.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self { entries: Vec::new(), seed: 0x5EED_FA17 }
+    }
+
+    pub fn fail(mut self, stage: &'static str) -> Self {
+        self.entries.push((stage, FaultAction::Fail));
+        self
+    }
+
+    pub fn poison(mut self, stage: &'static str) -> Self {
+        self.entries.push((stage, FaultAction::Poison));
+        self
+    }
+
+    pub fn panic_in(mut self, stage: &'static str) -> Self {
+        self.entries.push((stage, FaultAction::Panic));
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The action planned for `stage`, if any (first match wins).
+    pub fn action(&self, stage: &str) -> Option<FaultAction> {
+        self.entries.iter().find(|(s, _)| *s == stage).map(|(_, a)| *a)
+    }
+}
+
+/// The process-global fault plan (test-only in practice; `None` — the
+/// overwhelmingly common case — costs one uncontended lock per batch).
+static FAULTS: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Install a process-global fault plan (replaces any previous plan).
+pub fn install_faults(plan: FaultPlan) {
+    *FAULTS.lock().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+}
+
+/// Remove the process-global fault plan.
+pub fn clear_faults() {
+    *FAULTS.lock().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// Snapshot the process-global fault plan.
+pub fn active_faults() -> Option<FaultPlan> {
+    FAULTS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Clears the global fault plan on drop, so a panicking test (or an early
+/// `?` return) cannot leak its plan into later tests.
+pub struct FaultGuard;
+
+impl FaultGuard {
+    pub fn install(plan: FaultPlan) -> Self {
+        install_faults(plan);
+        FaultGuard
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear_faults();
+    }
+}
 
 /// Per-case RNG handed to generators and properties.
 pub struct PropRng {

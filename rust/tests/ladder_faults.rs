@@ -1,0 +1,179 @@
+//! Deterministic fault-injection drills for the escalation ladder and the
+//! serving tier: force each ladder stage to fail (or hand back poisoned
+//! iterates), and assert the escalation order, final accuracy, and counter
+//! movement — the fallback path must be exercisable on demand, not only on
+//! matrices that happen to be nasty. Also drills the worker's
+//! `catch_unwind` panic containment end to end.
+
+use std::sync::{Arc, Mutex};
+
+use snsolve::coordinator::{
+    Service, ServiceConfig, ServiceError, SolveRequest, SolverChoice,
+};
+use snsolve::coordinator::metrics::Metrics;
+use snsolve::linalg::DenseMatrix;
+use snsolve::problems::{generate_dense, DenseProblemSpec, Problem};
+use snsolve::solvers::ladder::Stage;
+use snsolve::solvers::lsqr::SolveWorkspace;
+use snsolve::solvers::{SolverError, StableSolver};
+use snsolve::testing::{FaultGuard, FaultPlan};
+
+/// Serializes the tests that install the process-global fault plan (the
+/// plan is process-wide; unserialised they would fault each other's
+/// workers). `into_inner` recovers from a panicked holder.
+static GLOBAL_FAULTS: Mutex<()> = Mutex::new(());
+
+fn instance(kappa: f64) -> Problem {
+    generate_dense(&DenseProblemSpec { m: 400, n: 16, cond: kappa, resid_norm: 1e-10, seed: 42 })
+}
+
+/// Run the ladder on one RHS with an explicit fault plan; returns
+/// (final stage, escalations, forward error).
+fn run_with(p: &Problem, plan: FaultPlan) -> Result<(Stage, u64, f64), SolverError> {
+    let m = p.a.shape().0;
+    let mut rhs = DenseMatrix::zeros(1, m);
+    rhs.row_mut(0).copy_from_slice(&p.b);
+    let mut ws = SolveWorkspace::new();
+    let out = StableSolver::default().solve_block(&p.a, &rhs, &mut ws, Some(&plan))?;
+    Ok((out.stage_of[0], out.escalations, p.relative_error(&out.x.row(0).to_vec())))
+}
+
+#[test]
+fn stage_failures_escalate_in_order_and_stay_accurate() {
+    let p = instance(1e4);
+    // Clean run: lands on one of the two iterative sketch stages.
+    let (clean_stage, _, clean_err) = run_with(&p, FaultPlan::new()).unwrap();
+    assert!(clean_stage <= Stage::PrecondLsqr, "clean run landed on {clean_stage:?}");
+    assert!(clean_err < 1e-8, "clean err {clean_err:.3e}");
+
+    // Each failed stage pushes the answer one rung down — never up — and
+    // the final answer stays at tolerance regardless of which rung it is.
+    let cases: &[(FaultPlan, Stage)] = &[
+        (FaultPlan::new().fail("sas"), Stage::PrecondLsqr),
+        (FaultPlan::new().fail("sas").fail("lsqr"), Stage::Refine),
+        (FaultPlan::new().fail("sas").fail("lsqr").fail("refine"), Stage::DenseQr),
+    ];
+    for (plan, min_stage) in cases {
+        let (stage, escalations, err) = run_with(&p, plan.clone()).unwrap();
+        assert!(stage >= *min_stage, "expected ≥ {min_stage:?}, got {stage:?}");
+        assert!(err < 1e-8, "{min_stage:?}: err {err:.3e}");
+        assert!(
+            escalations >= (*min_stage as u64),
+            "{min_stage:?}: escalations {escalations} is vacuous"
+        );
+    }
+}
+
+#[test]
+fn poisoned_iterates_are_caught_by_the_evidence() {
+    let p = instance(1e4);
+    // A poisoned stage completes with large finite garbage: only the
+    // forward-error evidence can reject it. The ladder must never *accept*
+    // a poisoned iterate.
+    for (plan, label) in [
+        (FaultPlan::new().poison("sas"), "poison sas"),
+        (FaultPlan::new().poison("lsqr"), "poison lsqr"),
+        (FaultPlan::new().fail("sas").fail("lsqr").poison("refine"), "poison refine"),
+    ] {
+        let (stage, escalations, err) = run_with(&p, plan).unwrap();
+        assert!(err < 1e-8, "{label}: accepted a bad iterate (err {err:.3e}, {stage:?})");
+        assert!(escalations >= 1, "{label}: escalations {escalations} is vacuous");
+    }
+}
+
+#[test]
+fn every_stage_failing_still_answers_via_dense_qr() {
+    // The acceptance gate: all three sketch-based stages sabotaged, the
+    // terminal dense stage still produces a certified answer.
+    let p = instance(1e4);
+    let plan = FaultPlan::new().fail("sas").fail("lsqr").fail("refine");
+    let (stage, escalations, err) = run_with(&p, plan).unwrap();
+    assert_eq!(stage, Stage::DenseQr);
+    assert!(escalations >= 3);
+    assert!(err < 1e-8, "dense terminal err {err:.3e}");
+}
+
+#[test]
+fn dense_stage_failure_is_a_typed_error() {
+    let p = instance(1e4);
+    let plan = FaultPlan::new().fail("sas").fail("lsqr").fail("refine").fail("dense");
+    match run_with(&p, plan) {
+        Err(SolverError::NoConvergence(_)) => {}
+        other => panic!("expected NoConvergence, got {other:?}"),
+    }
+}
+
+#[test]
+fn poisoned_dense_stage_is_rejected_not_returned() {
+    // The terminal stage has no rung below it, so a poisoned dense iterate
+    // must become a typed error — never a silently-wrong answer.
+    let p = instance(1e4);
+    let plan = FaultPlan::new().fail("sas").fail("lsqr").fail("refine").poison("dense");
+    match run_with(&p, plan) {
+        Err(SolverError::NoConvergence(_)) => {}
+        other => panic!("expected NoConvergence, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serving tier: global plan through the worker path
+// ---------------------------------------------------------------------
+
+fn test_service() -> (Arc<Service>, snsolve::coordinator::MatrixId, Vec<f64>, Vec<f64>) {
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let p = instance(1e10);
+    let (x_true, b) = (p.x_true.clone(), p.b.clone());
+    let id = svc.register_matrix(p.a);
+    (svc, id, x_true, b)
+}
+
+fn req(id: snsolve::coordinator::MatrixId, b: &[f64]) -> SolveRequest {
+    SolveRequest {
+        matrix: id,
+        rhs: b.to_vec(),
+        solver: SolverChoice::Stable,
+        tol: 1e-10,
+        deadline_us: 0,
+    }
+}
+
+#[test]
+fn injected_worker_panic_is_contained_and_service_keeps_serving() {
+    let _serial = GLOBAL_FAULTS.lock().unwrap_or_else(|e| e.into_inner());
+    let (svc, id, _x_true, b) = test_service();
+    {
+        let _guard = FaultGuard::install(FaultPlan::new().panic_in("worker"));
+        let resp = svc.solve_blocking(req(id, &b)).unwrap();
+        match resp.result {
+            Err(ServiceError::Solver(msg)) => assert!(msg.contains("panic"), "msg: {msg}"),
+            other => panic!("expected a contained panic error, got {other:?}"),
+        }
+        assert_eq!(Metrics::get(&svc.metrics().worker_panics), 1);
+    }
+    // Plan cleared: the same worker thread must still be alive and solving.
+    let resp = svc.solve_blocking(req(id, &b)).unwrap();
+    assert!(resp.result.is_ok(), "service stopped serving after a contained panic");
+    assert_eq!(Metrics::get(&svc.metrics().worker_panics), 1);
+}
+
+#[test]
+fn ladder_escalation_counters_move_through_the_worker_path() {
+    let _serial = GLOBAL_FAULTS.lock().unwrap_or_else(|e| e.into_inner());
+    let (svc, id, x_true, b) = test_service();
+    let resp = svc.solve_blocking(req(id, &b)).unwrap();
+    let sol = resp.result.unwrap();
+    let err = snsolve::linalg::norms::nrm2_diff(&sol.x, &x_true)
+        / snsolve::linalg::norms::nrm2(&x_true);
+    assert!(err < 1e-4, "κ=1e10 served err {err:.3e}");
+    let m = svc.metrics();
+    let answered = Metrics::get(&m.ladder_sas)
+        + Metrics::get(&m.ladder_lsqr)
+        + Metrics::get(&m.ladder_refine)
+        + Metrics::get(&m.ladder_dense);
+    assert_eq!(answered, 1, "every served RHS lands on exactly one rung");
+    // κ = 1e10 defeats the one-shot stage, so at least one escalation
+    // happened — the counter is non-vacuous.
+    assert!(Metrics::get(&m.ladder_escalations) >= 1);
+    // And the escalation shows up in the protocol-visible report.
+    assert!(m.report().contains("ladder: "));
+}

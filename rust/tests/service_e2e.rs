@@ -16,6 +16,7 @@ use snsolve::coordinator::{
 };
 use snsolve::linalg::norms::{nrm2, nrm2_diff};
 use snsolve::linalg::{DenseMatrix, Matrix};
+use snsolve::problems::{generate_dense, DenseProblemSpec};
 use snsolve::rng::{GaussianSource, Xoshiro256pp};
 
 fn planted(m: usize, n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
@@ -631,6 +632,83 @@ fn client_deadline_is_transmitted_and_enforced() {
         Err(e) => panic!("wrong error kind over v2: {e}"),
         Ok(_) => panic!("expected a deadline error over v2"),
     }
+    server.stop();
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Robust-solving tier: wire-level input validation and the stable solver
+// ---------------------------------------------------------------------------
+
+#[test]
+fn non_finite_inputs_are_rejected_at_the_wire() {
+    // A NaN smuggled into a registration would corrupt the cached
+    // factorization for every later solve against that matrix; a NaN rhs
+    // would propagate into the answer. Both must die at the decode boundary
+    // with a typed error frame — and the connection must stay usable.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let (a, x_true, b) = planted(200, 8, 45);
+    let mut client = Client::connect(addr).expect("connect");
+
+    let mut poisoned = a.clone();
+    poisoned.data_mut()[3] = f64::NAN;
+    match client.register_dense(&poisoned) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("non-finite"), "{msg}"),
+        Err(e) => panic!("wrong error kind: {e}"),
+        Ok(_) => panic!("poisoned register must be rejected"),
+    }
+
+    let id = client.register_dense(&a).expect("register clean");
+    let mut bad_rhs = b.clone();
+    bad_rhs[0] = f64::INFINITY;
+    match client.solve(id, &bad_rhs, SolverChoice::Saa, 1e-10) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("non-finite"), "{msg}"),
+        Err(e) => panic!("wrong error kind: {e}"),
+        Ok(_) => panic!("non-finite rhs must be rejected"),
+    }
+    match client.solve(id, &b, SolverChoice::Saa, f64::NAN) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("tolerance"), "{msg}"),
+        Err(e) => panic!("wrong error kind: {e}"),
+        Ok(_) => panic!("NaN tolerance must be rejected"),
+    }
+
+    // The connection survived all three rejections.
+    let sol = client.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve after errors");
+    assert!(nrm2_diff(&sol.x, &x_true) / nrm2(&x_true) < 1e-8);
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn stable_solver_round_trips_over_tcp() {
+    // `--solver stable` through the whole stack: protocol solver code 3,
+    // worker ladder path, per-stage counters visible in the wire metrics.
+    let svc = Service::start(ServiceConfig { workers: 1, ..Default::default() });
+    let server = TcpServer::serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.addr();
+
+    let p = generate_dense(&DenseProblemSpec {
+        m: 400,
+        n: 16,
+        cond: 1e10,
+        resid_norm: 1e-10,
+        seed: 47,
+    });
+    let ad = p.a.to_dense();
+    let mut c = PipelinedClient::connect(addr).expect("connect v2");
+    let id = c.register_dense(&ad).expect("register");
+    let sol = c.solve(id, &p.b, SolverChoice::Stable, 1e-10).expect("stable solve");
+    let err = nrm2_diff(&sol.x, &p.x_true) / nrm2(&p.x_true);
+    assert!(err < 1e-4, "κ=1e10 stable-over-TCP err {err:.3e}");
+
+    // κ = 1e10 defeats the one-shot stage, so the escalation counters moved
+    // — and they are wire-visible through OP_METRICS.
+    let wire = c.metrics().expect("metrics");
+    assert!(wire.contains("ladder: "), "{wire}");
+    assert!(Metrics::get(&svc.metrics().ladder_escalations) >= 1);
     server.stop();
     svc.shutdown();
 }

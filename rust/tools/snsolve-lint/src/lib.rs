@@ -377,6 +377,20 @@ pub const KNOBS: &[Knob] = &[
         key: "readers",
         field: "readers",
     },
+    Knob {
+        env: "SNSOLVE_SOLVER",
+        flag: "solver",
+        section: "solver",
+        key: "solver",
+        field: "solver",
+    },
+    Knob {
+        env: "SNSOLVE_REFINE_ITERS",
+        flag: "refine-iters",
+        section: "solver",
+        key: "refine_iters",
+        field: "refine_iters",
+    },
 ];
 
 /// `SNSOLVE_*` vars that are deliberately not user-facing solve/service
