@@ -110,6 +110,14 @@ for client in legacy pipelined; do
   SNSOLVE_CLIENT=$client cargo test -q --test service_e2e
 done
 
+# Cluster tier: three real serve processes behind the sharded failover
+# router — kill-one mid-traffic, replica failover, restart + rebalance,
+# seeded network-fault drill — under both worker-pool schedulers.
+for sched in steal static; do
+  echo "== cluster failover (SNSOLVE_SCHEDULE=$sched) =="
+  SNSOLVE_SCHEDULE=$sched cargo test -q --test cluster_failover
+done
+
 # Robust-solving tier: the accuracy pins for the forward-stable ladder and
 # the deterministic fault-injection drills (every ladder rung forced to
 # fail, worker panic containment), under both worker-pool schedulers — the

@@ -45,6 +45,7 @@ fn run_block_config(
         solver: SolverChoice::Saa,
         tol: 1e-10,
         deadline_us: 0,
+        refine_iters: 0,
     })
     .expect("warmup")
     .result
@@ -59,6 +60,7 @@ fn run_block_config(
                 solver: SolverChoice::Saa,
                 tol: 1e-10,
                 deadline_us: 0,
+                refine_iters: 0,
             })
             .expect("submit")
         })
@@ -279,6 +281,7 @@ fn main() {
                     solver: SolverChoice::Saa,
                     tol: 1e-10,
                     deadline_us: 0,
+                    refine_iters: 0,
                 })
                 .expect("submit")
             })

@@ -223,6 +223,63 @@ impl Config {
         }
         cfg
     }
+
+    /// Build a [`ClusterConfig`] from the `[cluster]` section. Absent keys
+    /// resolve to the empty/zero defaults (single-process serving, ambient
+    /// replication); `cmd_serve` additionally hard-errors on
+    /// present-but-invalid keys and layers `SNSOLVE_SHARDS` /
+    /// `SNSOLVE_REPLICATION` / `--shards` / `--replication` on top.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            shards: self
+                .get_str("cluster", "shards")
+                .map(parse_shard_list)
+                .unwrap_or_default(),
+            replication: self
+                .get("cluster", "replication")
+                .and_then(Value::as_i64)
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(0),
+        }
+    }
+}
+
+/// Sharded-serving topology (`[cluster]` section). The TOML subset has no
+/// arrays, so `shards` is written as one comma-separated string of
+/// `host:port` coordinator addresses.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Shard addresses; empty means single-process serving (no router).
+    pub shards: Vec<String>,
+    /// Replicas per matrix; 0 resolves to the router default of 2 (and is
+    /// clamped to the cluster size by the shard map either way).
+    pub replication: usize,
+}
+
+/// Split a comma-separated shard list into trimmed, non-empty addresses.
+/// Shared by the `[cluster] shards` key, `SNSOLVE_SHARDS` and `--shards`.
+pub fn parse_shard_list(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|a| !a.is_empty()).map(str::to_string).collect()
+}
+
+/// Ambient shard-list resolution: `SNSOLVE_SHARDS`, a comma-separated
+/// address list. `None` when unset or empty after trimming; the `--shards`
+/// flag overrides, the `[cluster] shards` key fills in underneath.
+pub fn env_shards() -> Option<Vec<String>> {
+    std::env::var("SNSOLVE_SHARDS")
+        .ok()
+        .map(|s| parse_shard_list(&s))
+        .filter(|v| !v.is_empty())
+}
+
+/// Ambient replication-factor resolution: `SNSOLVE_REPLICATION`. `None`
+/// when unset, non-numeric or zero; the `--replication` flag overrides,
+/// the `[cluster] replication` key fills in underneath.
+pub fn env_replication() -> Option<usize> {
+    std::env::var("SNSOLVE_REPLICATION")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&r| r > 0)
 }
 
 /// Process-wide solve/kernel execution settings: the thread budget the
@@ -394,6 +451,10 @@ sketch_invert = false
 [solver]
 solver = "stable"
 refine_iters = 12
+
+[cluster]
+shards = "127.0.0.1:7101, 127.0.0.1:7102,127.0.0.1:7103"
+replication = 2
 "#;
 
     #[test]
@@ -485,6 +546,27 @@ refine_iters = 12
         assert_eq!(bads.schedule, None);
         let steal = Config::parse("[parallel]\nschedule = \"steal\"").unwrap().solve_config();
         assert_eq!(steal.schedule, Some(crate::parallel::Schedule::Steal));
+    }
+
+    #[test]
+    fn cluster_config_built() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cc = c.cluster_config();
+        assert_eq!(
+            cc.shards,
+            vec!["127.0.0.1:7101", "127.0.0.1:7102", "127.0.0.1:7103"]
+        );
+        assert_eq!(cc.replication, 2);
+        // Absent section: single-process defaults; a negative replication
+        // clamps to 0/auto instead of wrapping through the usize cast.
+        let empty = Config::parse("").unwrap().cluster_config();
+        assert!(empty.shards.is_empty());
+        assert_eq!(empty.replication, 0);
+        let neg = Config::parse("[cluster]\nreplication = -2").unwrap().cluster_config();
+        assert_eq!(neg.replication, 0);
+        // Stray commas and whitespace in the shard list are dropped.
+        assert_eq!(parse_shard_list(" a:1, ,b:2 ,"), vec!["a:1", "b:2"]);
+        assert!(parse_shard_list("").is_empty());
     }
 
     #[test]

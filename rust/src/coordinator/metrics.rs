@@ -127,6 +127,15 @@ pub struct Metrics {
     /// Worker batches whose solve panicked and was contained by
     /// `catch_unwind` (each turned into per-request error responses).
     pub worker_panics: AtomicU64,
+    /// Shard router: per-shard attempts beyond the first for one request
+    /// (same-shard resends after a transient failure).
+    pub router_retries: AtomicU64,
+    /// Shard router: requests that switched to a replica after exhausting
+    /// the owning shard.
+    pub router_failovers: AtomicU64,
+    /// Shard router: matrices re-registered onto new owners during
+    /// rebalance/handoff (membership-change repair traffic).
+    pub router_rebalanced: AtomicU64,
     pub queue_latency: LatencyHistogram,
     pub solve_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
@@ -237,6 +246,70 @@ impl Metrics {
     }
 }
 
+/// Aggregate several per-shard [`Metrics::report`] strings into one
+/// cluster-wide view (the router's `OP_METRICS` response body).
+///
+/// Token-aligned combination: every `key=<u64>` token is **summed** across
+/// reports, except on the latency lines (`queue_us:`/`solve_us:`/`e2e_us:`)
+/// where the **max** is taken — summing percentiles across shards would
+/// fabricate latencies nobody observed, while the worst shard's tail is a
+/// meaningful cluster number. Non-integer tokens (means, rates, schedule
+/// names) are taken from the first report verbatim. Reports whose line
+/// shape diverges (e.g. mixed server versions) fall back to verbatim
+/// concatenation rather than misaligned sums.
+pub fn aggregate_reports(reports: &[String]) -> String {
+    let Some(first) = reports.first() else {
+        return String::new();
+    };
+    if reports.len() == 1 {
+        return first.clone();
+    }
+    let lines: Vec<Vec<&str>> = reports.iter().map(|r| r.lines().collect()).collect();
+    if lines.iter().any(|l| l.len() != lines[0].len()) {
+        return reports.join("\n---\n");
+    }
+    let mut out = Vec::with_capacity(lines[0].len());
+    for li in 0..lines[0].len() {
+        let toks: Vec<Vec<&str>> =
+            lines.iter().map(|l| l[li].split_whitespace().collect()).collect();
+        if toks.iter().any(|t| t.len() != toks[0].len()) {
+            out.push(lines[0][li].to_string());
+            continue;
+        }
+        let take_max = matches!(toks[0].first(), Some(&"queue_us:" | &"solve_us:" | &"e2e_us:"));
+        let mut line = Vec::with_capacity(toks[0].len());
+        for tj in 0..toks[0].len() {
+            line.push(combine_token(&toks, tj, take_max));
+        }
+        out.push(line.join(" "));
+    }
+    out.join("\n")
+}
+
+/// Combine token `tj` across every report's tokenized line: summed (or
+/// maxed) when every report has `key=<u64>` with the same key, otherwise
+/// the first report's token verbatim.
+fn combine_token(toks: &[Vec<&str>], tj: usize, take_max: bool) -> String {
+    let template = toks[0][tj];
+    let Some((key, _)) = template.split_once('=') else {
+        return template.to_string();
+    };
+    let mut acc: u64 = 0;
+    for t in toks {
+        let Some((k, v)) = t[tj].split_once('=') else {
+            return template.to_string();
+        };
+        let Ok(v) = v.parse::<u64>() else {
+            return template.to_string();
+        };
+        if k != key {
+            return template.to_string();
+        }
+        acc = if take_max { acc.max(v) } else { acc + v };
+    }
+    format!("{key}={acc}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +362,51 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("ladder: sas=0 lsqr=0 refine=1 dense=0 escalations=2"));
         assert!(rep.contains("worker_panics=1"));
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_maxes_latencies() {
+        let a = Metrics::new();
+        Metrics::add(&a.submitted, 3);
+        Metrics::add(&a.completed, 3);
+        a.queue_latency.record(100);
+        let b = Metrics::new();
+        Metrics::add(&b.submitted, 4);
+        Metrics::add(&b.completed, 2);
+        b.queue_latency.record(4000);
+        let agg = aggregate_reports(&[a.report(), b.report()]);
+        // Counters sum across shards.
+        assert!(agg.contains("submitted=7"), "bad aggregate:\n{agg}");
+        assert!(agg.contains("completed=5"));
+        // Latency tokens take the worst shard, not the sum: both shards
+        // recorded one sample, so n=1 must survive (a sum would say 2).
+        let qline = agg.lines().find(|l| l.starts_with("queue_us:")).unwrap();
+        assert!(qline.contains("n=1"), "latency n must be maxed: {qline}");
+        // Max latency comes from shard b's 4000us sample.
+        assert!(qline.contains("max=4000"), "{qline}");
+        // Non-integer tokens survive from the first report.
+        assert!(agg.contains("pool: schedule="));
+        // Degenerate shapes: empty and singleton. (Snapshot the report
+        // once — the pool counters inside are process-global and move as
+        // other tests run.)
+        assert_eq!(aggregate_reports(&[]), "");
+        let ra = a.report();
+        assert_eq!(aggregate_reports(&[ra.clone()]), ra);
+        // Shape mismatch falls back to concatenation, never misaligned sums.
+        let odd = aggregate_reports(&[ra, "just one line".to_string()]);
+        assert!(odd.contains("---"));
+        assert!(odd.contains("just one line"));
+    }
+
+    #[test]
+    fn router_counters_present() {
+        let m = Metrics::new();
+        Metrics::inc(&m.router_retries);
+        Metrics::inc(&m.router_failovers);
+        Metrics::add(&m.router_rebalanced, 3);
+        assert_eq!(Metrics::get(&m.router_retries), 1);
+        assert_eq!(Metrics::get(&m.router_failovers), 1);
+        assert_eq!(Metrics::get(&m.router_rebalanced), 3);
     }
 
     #[test]

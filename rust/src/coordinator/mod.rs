@@ -34,12 +34,14 @@ pub mod queue;
 pub mod registry;
 pub mod router;
 pub mod service;
+pub mod shard;
 pub mod tcp;
 pub mod worker;
 
 pub use registry::{MatrixId, MatrixRegistry};
-pub use router::{Route, Router};
+pub use router::{Route, Router, ShardRouter, ShardRouterConfig};
 pub use service::{Service, ServiceConfig};
+pub use shard::ShardMap;
 
 use crate::solvers::Solution;
 
@@ -125,6 +127,9 @@ pub struct SolveRequest {
     pub tol: f64,
     /// Wall-clock deadline from submit, microseconds (0 = none).
     pub deadline_us: u64,
+    /// Per-request refinement-sweep cap for the stable ladder
+    /// (0 = defer to the server-side `--refine-iters` knob).
+    pub refine_iters: usize,
 }
 
 /// Execution route actually taken (reported for observability).

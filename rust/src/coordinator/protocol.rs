@@ -19,11 +19,18 @@
 //! request opcodes (body grammar identical in v1 and v2):
 //!   1 REGISTER_DENSE  := u32 m, u32 n, f64le[m*n] row-major
 //!   2 SOLVE           := u64 matrix_id, u8 solver, f64 tol, u64 deadline_us,
-//!                        u32 m, f64le[m] rhs
-//!                        (solver: 0 saa, 1 lsqr, 2 sketch-only, 3 stable)
+//!                        u32 m, f64le[m] rhs [, u32 refine_iters]
+//!                        (solver: 0 saa, 1 lsqr, 2 sketch-only, 3 stable;
+//!                         the trailing refine_iters field is optional — absent
+//!                         or 0 defers to the server-side knob)
 //!   3 METRICS         := (empty)
 //!   4 EVICT           := u64 matrix_id
 //!   5 HELLO           := u8 version            (v1-format; version 2 = pipelined)
+//!   6 REGISTER_AT     := u64 matrix_id, u32 m, u32 n, f64le[m*n] row-major
+//!                        (router→shard replication: insert at a caller-chosen
+//!                         id; idempotent — re-registering an id overwrites)
+//!   7 FETCH_MATRIX    := u64 matrix_id        (router→shard handoff read-back)
+//!   8 PING            := u64 epoch            (router heartbeat; epoch echoed)
 //! response opcodes:
 //!   128 OK_REGISTER   := u64 matrix_id
 //!   129 OK_SOLVE      := u32 n, f64le[n] x, u32 iterations, f64 resnorm,
@@ -31,7 +38,12 @@
 //!   130 OK_METRICS    := utf8 text
 //!   131 OK_EVICT      := u8 existed
 //!   132 OK_HELLO      := u8 version            (v1-format, even when upgrading)
-//!   255 ERROR         := utf8 message
+//!   133 OK_MATRIX     := u32 m, u32 n, f64le[m*n] row-major
+//!   134 OK_PING       := u64 epoch
+//!   254 ERR_RETRYABLE := utf8 message          (transient: resend the same
+//!                        request after a backoff — shard mid-rebalance, stale
+//!                        epoch, or all replicas briefly unreachable)
+//!   255 ERROR         := utf8 message          (permanent for this request)
 //! ```
 //!
 //! v2 error scoping: a malformed frame whose opcode + request id still
@@ -51,11 +63,17 @@ pub const OP_SOLVE: u8 = 2;
 pub const OP_METRICS: u8 = 3;
 pub const OP_EVICT: u8 = 4;
 pub const OP_HELLO: u8 = 5;
+pub const OP_REGISTER_AT: u8 = 6;
+pub const OP_FETCH_MATRIX: u8 = 7;
+pub const OP_PING: u8 = 8;
 pub const OP_OK_REGISTER: u8 = 128;
 pub const OP_OK_SOLVE: u8 = 129;
 pub const OP_OK_METRICS: u8 = 130;
 pub const OP_OK_EVICT: u8 = 131;
 pub const OP_OK_HELLO: u8 = 132;
+pub const OP_OK_MATRIX: u8 = 133;
+pub const OP_OK_PING: u8 = 134;
+pub const OP_ERR_RETRYABLE: u8 = 254;
 pub const OP_ERROR: u8 = 255;
 
 /// The pipelined protocol version negotiated by `HELLO`.

@@ -30,6 +30,16 @@ impl MatrixRegistry {
         id
     }
 
+    /// Insert a matrix at a caller-chosen id (router replication/handoff:
+    /// the router allocates ids so replicas agree on them). Overwrites any
+    /// existing entry — re-registration during rebalance is idempotent —
+    /// and bumps the allocator past `id` so locally-registered matrices
+    /// never collide with router-assigned ones.
+    pub fn register_at(&self, id: MatrixId, m: Matrix) {
+        self.next.fetch_max(id.0.saturating_add(1), Ordering::Relaxed);
+        self.map.write().unwrap().insert(id, Arc::new(m));
+    }
+
     pub fn get(&self, id: MatrixId) -> Option<Arc<Matrix>> {
         self.map.read().unwrap().get(&id).cloned()
     }
@@ -77,6 +87,19 @@ mod tests {
         assert!(!r.evict(id));
         assert!(r.get(id).is_none());
         assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn register_at_is_idempotent_and_bumps_allocator() {
+        let r = MatrixRegistry::new();
+        r.register_at(MatrixId(7), Matrix::Dense(DenseMatrix::eye(3)));
+        // Overwrite is allowed (rebalance re-registration).
+        r.register_at(MatrixId(7), Matrix::Dense(DenseMatrix::zeros(2, 2)));
+        assert_eq!(r.get(MatrixId(7)).unwrap().shape(), (2, 2));
+        assert_eq!(r.len(), 1);
+        // Local allocation must skip past the pinned id.
+        let id = r.register(Matrix::Dense(DenseMatrix::eye(2)));
+        assert!(id.0 > 7, "allocator must jump past pinned ids, got {}", id.0);
     }
 
     #[test]

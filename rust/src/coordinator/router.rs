@@ -1,11 +1,61 @@
-//! Shape-bucket router: decides, per request, whether to dispatch to an
-//! AOT PJRT artifact (exact shape match, dense matrix, SAA/LSQR entries)
-//! or to the native f64 solver path (everything else).
+//! Routing, two tiers.
+//!
+//! **Shape-bucket router** ([`Router`]): decides, per request, whether to
+//! dispatch to an AOT PJRT artifact (exact shape match, dense matrix,
+//! SAA/LSQR entries) or to the native f64 solver path (everything else).
+//!
+//! **Shard router** ([`ShardRouter`]): a multi-node front-end tier.
+//! Clients speak the ordinary v1/v2 wire protocol to the router, which
+//! owns a consistent-hash [`ShardMap`] over a fixed list of coordinator
+//! processes and forwards each request to the shards that own its matrix:
+//!
+//! * `OP_REGISTER_DENSE` allocates a cluster-wide id and replicates the
+//!   matrix to all `R` owners (`OP_REGISTER_AT`, so every replica agrees
+//!   on the id).
+//! * `OP_SOLVE` forwards to the primary owner with exponential backoff
+//!   and a deadline-aware per-attempt timeout; transient failures retry
+//!   the same shard, a dead or stale shard fails over to the next
+//!   replica, and an exhausted candidate list answers with the typed
+//!   `OP_ERR_RETRYABLE` frame — an accepted request id is **never**
+//!   silently dropped.
+//! * `OP_METRICS` aggregates every alive shard's report
+//!   ([`aggregate_reports`]) and appends the router's own counter line.
+//!
+//! A heartbeat thread pings each shard every `heartbeat_ms`; aliveness
+//! transitions bump the map epoch. A shard coming back (typically a
+//! restarted, empty process) triggers a **rebalance**: the router streams
+//! each affected matrix from a surviving replica (`OP_FETCH_MATRIX`) and
+//! re-registers it on the shards the map wants it on.
+//!
+//! Outbound shard links are [`PipelinedClient`]s labeled with the shard
+//! address, so a seeded [`crate::testing::FaultPlan`] network fault plan
+//! (drop / delay / sever per opcode and frame window) applies to the
+//! router's wire path deterministically in tests.
 
-use crate::linalg::Matrix;
+use std::collections::{BTreeMap, HashMap};
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::linalg::{DenseMatrix, Matrix};
 use crate::runtime::Manifest;
 
-use super::SolverChoice;
+use super::metrics::{aggregate_reports, Metrics};
+use super::protocol::*;
+use super::registry::MatrixId;
+use super::shard::ShardMap;
+use super::tcp::{
+    accept_retry_backoff, decode_register, decode_solve, error_frame, read_frame, retag_v2,
+    retryable_frame, write_frame, ClientError, PipelinedClient, WireSolution,
+};
+use super::{SolveRequest, SolverChoice};
+
+// ----------------------------------------------------------------------
+// Shape-bucket router (single-process dispatch)
+// ----------------------------------------------------------------------
 
 /// An execution route.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -63,6 +113,9 @@ impl Router {
             SolverChoice::Saa => "saa_solve",
             SolverChoice::Lsqr => "lsqr_baseline",
             SolverChoice::SketchOnly => "sketch_and_solve_only",
+            // The condition-driven fallback ladder is native-only: its
+            // escalation evidence needs the f64 path.
+            SolverChoice::Stable => return Route::Native,
         };
         Route::Artifact(format!("{entry}_{m}x{n}"))
     }
@@ -73,11 +126,725 @@ impl Router {
     }
 }
 
+// ----------------------------------------------------------------------
+// Shard router: retry/backoff policy (pure, unit-tested)
+// ----------------------------------------------------------------------
+
+/// Same-shard retries per request before giving up on that shard and
+/// failing over to the next replica.
+pub const MAX_ATTEMPTS_PER_SHARD: u32 = 3;
+
+/// Socket error kinds worth retrying **on the same shard**: transient
+/// mid-connection failures where the process is probably still there.
+/// `ConnectionRefused` is deliberately absent — nothing is listening, so
+/// the right move is failover, not hammering a dead address.
+pub fn retryable_io(kind: io::ErrorKind) -> bool {
+    use io::ErrorKind::*;
+    matches!(
+        kind,
+        ConnectionReset
+            | ConnectionAborted
+            | BrokenPipe
+            | TimedOut
+            | UnexpectedEof
+            | Interrupted
+            | NotConnected
+            | WouldBlock
+    )
+}
+
+/// What the forwarding loop should do with a failed attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Transient: resend to the same shard after a backoff.
+    RetrySameShard,
+    /// This shard can't serve the request (down, or doesn't hold the
+    /// matrix yet): move to the next replica.
+    Failover,
+    /// A real server-side failure — surface it to the client unchanged;
+    /// retrying elsewhere would just repeat it.
+    Fatal,
+}
+
+/// Classify one failed forwarding attempt.
+pub fn classify(e: &ClientError) -> Disposition {
+    match e {
+        ClientError::Retryable(_) => Disposition::RetrySameShard,
+        ClientError::Io(e) if retryable_io(e.kind()) => Disposition::RetrySameShard,
+        ClientError::Io(_) => Disposition::Failover,
+        // A replica that predates the handoff doesn't know the matrix yet.
+        ClientError::Server(m) if m.contains("unknown matrix") => Disposition::Failover,
+        ClientError::Server(_) | ClientError::Decode(_) | ClientError::UnexpectedOpcode(_) => {
+            Disposition::Fatal
+        }
+    }
+}
+
+/// Exponential backoff before same-shard retry number `retry` (0-based):
+/// `base · 2^retry`, saturating, capped. Pure and deterministic — the
+/// actual sleep additionally clamps to the remaining deadline budget.
+pub fn backoff_ms(base_ms: u64, retry: u32, cap_ms: u64) -> u64 {
+    base_ms.saturating_mul(1u64 << retry.min(16)).min(cap_ms)
+}
+
+/// How long one attempt may wait for its shard response: the per-attempt
+/// timeout, clamped to the remaining deadline budget so retries can never
+/// overrun the request's end-to-end budget.
+pub fn attempt_wait(remaining: Duration, attempt_timeout_ms: u64) -> Duration {
+    remaining.min(Duration::from_millis(attempt_timeout_ms))
+}
+
+// ----------------------------------------------------------------------
+// Shard router: configuration and state
+// ----------------------------------------------------------------------
+
+/// Shard-router tier configuration.
+#[derive(Debug, Clone)]
+pub struct ShardRouterConfig {
+    /// Shard addresses (`host:port` of `snsolve serve` processes). Shard
+    /// identity is the index into this list.
+    pub shards: Vec<String>,
+    /// Replication factor `R`: every registered matrix lives on the first
+    /// `R` distinct alive shards clockwise on the ring (clamped to the
+    /// cluster size).
+    pub replication: usize,
+    /// Heartbeat period (and per-ping timeout floor), milliseconds.
+    pub heartbeat_ms: u64,
+    /// Base of the exponential same-shard retry backoff, milliseconds.
+    pub retry_base_ms: u64,
+    /// Backoff cap, milliseconds.
+    pub retry_cap_ms: u64,
+    /// Per-attempt shard response timeout, milliseconds (clamped to the
+    /// remaining deadline budget).
+    pub attempt_timeout_ms: u64,
+    /// Router-side end-to-end budget for solves that arrive without a
+    /// deadline (`deadline_us == 0`), microseconds.
+    pub default_deadline_us: u64,
+}
+
+impl ShardRouterConfig {
+    pub fn new(shards: Vec<String>, replication: usize) -> Self {
+        Self {
+            shards,
+            replication,
+            heartbeat_ms: 200,
+            retry_base_ms: 10,
+            retry_cap_ms: 250,
+            attempt_timeout_ms: 500,
+            default_deadline_us: 2_000_000,
+        }
+    }
+}
+
+struct CatalogEntry {
+    /// Shards confirmed to hold this matrix (registration acks plus
+    /// rebalance repairs, minus death-time prunes).
+    holders: Vec<usize>,
+}
+
+struct Inner {
+    cfg: ShardRouterConfig,
+    map: Mutex<ShardMap>,
+    /// One lazily-connected pipelined link per shard. Lock order: never
+    /// hold `map`/`catalog` while taking a conn lock.
+    conns: Vec<Mutex<Option<PipelinedClient>>>,
+    /// Cluster-wide matrix catalog (ids the router allocated).
+    catalog: Mutex<BTreeMap<u64, CatalogEntry>>,
+    next_id: AtomicU64,
+    metrics: Metrics,
+    stop: AtomicBool,
+}
+
+/// A running shard-router front-end.
+pub struct ShardRouter {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+    client_conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ShardRouter {
+    /// Bind the router front-end on `addr` (port 0 for ephemeral) and
+    /// start its accept and heartbeat threads. Shard links are dialed
+    /// lazily — shards may come up after the router.
+    pub fn serve(addr: impl ToSocketAddrs, cfg: ShardRouterConfig) -> io::Result<ShardRouter> {
+        if cfg.shards.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "shard router needs at least one shard address",
+            ));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let map = ShardMap::new(cfg.shards.clone(), cfg.replication);
+        let n = cfg.shards.len();
+        let inner = Arc::new(Inner {
+            map: Mutex::new(map),
+            conns: (0..n).map(|_| Mutex::new(None)).collect(),
+            catalog: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            metrics: Metrics::new(),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+        let client_conns: Arc<Mutex<HashMap<u64, TcpStream>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let inner2 = inner.clone();
+        let cc = client_conns.clone();
+        let ct = conn_threads.clone();
+        let accept = std::thread::Builder::new()
+            .name("sns-router-accept".into())
+            .spawn(move || accept_loop(&listener, &inner2, &cc, &ct))?;
+
+        let inner2 = inner.clone();
+        let heartbeat = std::thread::Builder::new()
+            .name("sns-router-heartbeat".into())
+            .spawn(move || heartbeat_loop(&inner2))?;
+
+        Ok(ShardRouter {
+            addr: local,
+            inner,
+            accept: Some(accept),
+            heartbeat: Some(heartbeat),
+            client_conns,
+            conn_threads,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, sever every client connection, and join all router
+    /// threads (shard links drop with the router, joining their readers).
+    pub fn stop(mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        for (_, s) in self.client_conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.heartbeat.take() {
+            let _ = t.join();
+        }
+        for h in self.conn_threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        for c in self.inner.conns.iter() {
+            c.lock().unwrap().take();
+        }
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        // A router dropped without stop() still winds its threads down:
+        // they all watch this flag with bounded waits.
+        self.inner.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Front-end: accept + per-connection loops
+// ----------------------------------------------------------------------
+
+fn accept_loop(
+    listener: &TcpListener,
+    inner: &Arc<Inner>,
+    client_conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next: u64 = 1;
+    while !inner.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let id = next;
+                next += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    client_conns.lock().unwrap().insert(id, clone);
+                }
+                let inner2 = inner.clone();
+                let cc = client_conns.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("sns-router-conn".into())
+                    .spawn(move || conn_loop(&inner2, stream, id, &cc));
+                match spawned {
+                    Ok(h) => conn_threads.lock().unwrap().push(h),
+                    Err(e) => {
+                        eprintln!("router: connection thread spawn failed: {e}");
+                        client_conns.lock().unwrap().remove(&id);
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => match accept_retry_backoff(&e) {
+                Some(backoff) => std::thread::sleep(backoff),
+                None => {
+                    eprintln!("router: fatal accept error: {e}");
+                    break;
+                }
+            },
+        }
+    }
+}
+
+/// One client connection: v1 requests are served synchronously (the legacy
+/// in-order contract for free); after a HELLO upgrade, solves run on their
+/// own forwarding threads and complete out of order, serialized onto the
+/// socket through a shared write lock.
+fn conn_loop(
+    inner: &Arc<Inner>,
+    stream: TcpStream,
+    conn_id: u64,
+    client_conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_nonblocking(false);
+    let mut rstream = stream;
+    if let Ok(w) = rstream.try_clone() {
+        let wstream = Arc::new(Mutex::new(w));
+        let mut proto = 1u8;
+        let mut solvers: Vec<JoinHandle<()>> = Vec::new();
+        while let Ok(Some(payload)) = read_frame(&mut rstream) {
+            let ok = if proto == PROTO_V2 {
+                handle_conn_v2(inner, &payload, &wstream, &mut solvers)
+            } else {
+                handle_conn_v1(inner, &payload, &wstream, &mut proto)
+            };
+            if !ok {
+                break;
+            }
+        }
+        for h in solvers {
+            let _ = h.join();
+        }
+    }
+    client_conns.lock().unwrap().remove(&conn_id);
+}
+
+/// Serve one v1 frame synchronously. Returns false when the connection is
+/// done (write failure).
+fn handle_conn_v1(
+    inner: &Arc<Inner>,
+    payload: &[u8],
+    wstream: &Arc<Mutex<TcpStream>>,
+    proto: &mut u8,
+) -> bool {
+    let mut r = Reader::new(payload);
+    let resp = match r.u8() {
+        Ok(OP_HELLO) => match r.u8() {
+            Ok(v) if v >= PROTO_V2 => {
+                *proto = PROTO_V2;
+                Writer::new(OP_OK_HELLO).u8(PROTO_V2).frame()
+            }
+            Ok(_) => Writer::new(OP_OK_HELLO).u8(1).frame(),
+            Err(e) => error_frame(&e.to_string()),
+        },
+        Ok(OP_SOLVE) => match decode_solve(&mut r) {
+            Ok(req) => forward_solve(inner, &req),
+            Err(e) => error_frame(&e.to_string()),
+        },
+        Ok(op) => router_inline(inner, op, &mut r),
+        Err(e) => error_frame(&e.to_string()),
+    };
+    write_frame(&mut wstream.lock().unwrap(), &resp).is_ok()
+}
+
+/// Serve one v2 frame. Solves are spawned; everything else answers inline.
+/// Returns false when the connection is done (write failure).
+fn handle_conn_v2(
+    inner: &Arc<Inner>,
+    payload: &[u8],
+    wstream: &Arc<Mutex<TcpStream>>,
+    solvers: &mut Vec<JoinHandle<()>>,
+) -> bool {
+    let mut r = Reader::new(payload);
+    let Ok(op) = r.u8() else {
+        return true; // unreachable: frames have at least one byte
+    };
+    let id = match r.u64() {
+        Ok(id) => id,
+        Err(e) => {
+            // Too short to carry a request id: ERROR tagged with id 0.
+            let f = retag_v2(error_frame(&e.to_string()), 0);
+            return write_frame(&mut wstream.lock().unwrap(), &f).is_ok();
+        }
+    };
+    if op == OP_SOLVE {
+        match decode_solve(&mut r) {
+            Ok(req) => {
+                let inner2 = inner.clone();
+                let ws = wstream.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("sns-router-solve".into())
+                    .spawn(move || {
+                        let resp = forward_solve(&inner2, &req);
+                        let _ = write_frame(&mut ws.lock().unwrap(), &retag_v2(resp, id));
+                    });
+                match spawned {
+                    Ok(h) => {
+                        solvers.push(h);
+                        return true;
+                    }
+                    Err(e) => {
+                        let f = retag_v2(error_frame(&format!("router spawn failed: {e}")), id);
+                        return write_frame(&mut wstream.lock().unwrap(), &f).is_ok();
+                    }
+                }
+            }
+            Err(e) => {
+                let f = retag_v2(error_frame(&e.to_string()), id);
+                return write_frame(&mut wstream.lock().unwrap(), &f).is_ok();
+            }
+        }
+    }
+    let resp = if op == OP_HELLO {
+        Writer::new(OP_OK_HELLO).u8(PROTO_V2).frame()
+    } else {
+        router_inline(inner, op, &mut r)
+    };
+    write_frame(&mut wstream.lock().unwrap(), &retag_v2(resp, id)).is_ok()
+}
+
+/// Non-solve requests answered on the connection thread. Returns a v1
+/// response frame; v2 connections retag it with the request id.
+fn router_inline(inner: &Inner, op: u8, r: &mut Reader) -> Vec<u8> {
+    match op {
+        OP_REGISTER_DENSE => match decode_register(r) {
+            Ok(Matrix::Dense(d)) => register_cluster(inner, &d),
+            Ok(Matrix::Csr(_)) => error_frame("router registration supports dense matrices only"),
+            Err(e) => error_frame(&e.to_string()),
+        },
+        OP_METRICS => cluster_metrics(inner),
+        OP_EVICT => match r.u64() {
+            Ok(id) => evict_cluster(inner, id),
+            Err(e) => error_frame(&e.to_string()),
+        },
+        OP_PING => match r.u64() {
+            Ok(epoch) => Writer::new(OP_OK_PING).u64(epoch).frame(),
+            Err(e) => error_frame(&e.to_string()),
+        },
+        other => error_frame(&format!("unknown opcode {other} at router")),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Shard links
+// ----------------------------------------------------------------------
+
+/// Run `f` against the shard's pipelined link, dialing it first if needed.
+/// An `Io` failure poisons the link (the next call redials); the fault
+/// target label makes seeded network faults address this shard by name.
+fn with_conn<T>(
+    inner: &Inner,
+    shard: usize,
+    f: impl FnOnce(&mut PipelinedClient) -> Result<T, ClientError>,
+) -> Result<T, ClientError> {
+    let addr = { inner.map.lock().unwrap().addr(shard).to_string() };
+    let mut guard = inner.conns[shard].lock().unwrap();
+    if guard.is_none() {
+        let mut c = PipelinedClient::connect(addr.as_str())?;
+        c.set_fault_target(addr.as_str());
+        *guard = Some(c);
+    }
+    let out = f(guard.as_mut().expect("connected above"));
+    if matches!(out, Err(ClientError::Io(_))) {
+        *guard = None;
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Forwarding
+// ----------------------------------------------------------------------
+
+fn ok_solve_frame(s: &WireSolution) -> Vec<u8> {
+    Writer::new(OP_OK_SOLVE)
+        .u32(s.x.len() as u32)
+        .f64_slice(&s.x)
+        .u32(s.iterations as u32)
+        .f64(s.resnorm)
+        .u8(s.converged as u8)
+        .u64(s.queue_us)
+        .u64(s.solve_us)
+        .frame()
+}
+
+/// Forward one solve to the cluster. Candidate shards are the map's
+/// current owners plus any alive catalog holders (covers requests racing
+/// a membership change). The loop retries transient failures on the same
+/// shard with exponential backoff, fails over on dead/stale shards, and
+/// every wait is clamped to the request's deadline budget. Exhausting the
+/// budget or the candidates yields the typed retryable frame — never a
+/// silent drop.
+fn forward_solve(inner: &Inner, req: &SolveRequest) -> Vec<u8> {
+    let budget =
+        if req.deadline_us > 0 { req.deadline_us } else { inner.cfg.default_deadline_us };
+    let deadline = Instant::now() + Duration::from_micros(budget);
+    let mut candidates = { inner.map.lock().unwrap().owners(req.matrix) };
+    let holders: Vec<usize> = {
+        inner
+            .catalog
+            .lock()
+            .unwrap()
+            .get(&req.matrix.0)
+            .map(|e| e.holders.clone())
+            .unwrap_or_default()
+    };
+    {
+        let map = inner.map.lock().unwrap();
+        for s in holders {
+            if map.is_alive(s) && !candidates.contains(&s) {
+                candidates.push(s);
+            }
+        }
+    }
+    if candidates.is_empty() {
+        return retryable_frame("no alive shard owns this matrix; resend after backoff");
+    }
+    let mut fatal: Option<String> = None;
+    'candidates: for (ci, &shard) in candidates.iter().enumerate() {
+        if ci > 0 {
+            Metrics::inc(&inner.metrics.router_failovers);
+        }
+        let mut retry: u32 = 0;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return retryable_frame(
+                    "deadline budget exhausted while retrying; resend after backoff",
+                );
+            }
+            if retry > 0 {
+                Metrics::inc(&inner.metrics.router_retries);
+            }
+            let submitted = with_conn(inner, shard, |c| {
+                c.submit_solve_opts(
+                    req.matrix.0,
+                    &req.rhs,
+                    req.solver,
+                    req.tol,
+                    req.deadline_us,
+                    req.refine_iters,
+                )
+            });
+            let failure: Option<ClientError> = match submitted {
+                Ok(mut ticket) => {
+                    // Wait outside the conn lock so other requests keep
+                    // pipelining onto this shard.
+                    match ticket.wait_timeout(attempt_wait(
+                        remaining,
+                        inner.cfg.attempt_timeout_ms,
+                    )) {
+                        Some(Ok(sol)) => return ok_solve_frame(&sol),
+                        Some(Err(e)) => {
+                            if matches!(e, ClientError::Io(_)) {
+                                inner.conns[shard].lock().unwrap().take();
+                            }
+                            Some(e)
+                        }
+                        // Attempt timed out (response may be dropped by a
+                        // fault plan, or the shard is wedged): resend.
+                        None => None,
+                    }
+                }
+                Err(e) => Some(e),
+            };
+            let disp = match &failure {
+                None => Disposition::RetrySameShard,
+                Some(e) => classify(e),
+            };
+            match disp {
+                Disposition::RetrySameShard => {
+                    retry += 1;
+                    if retry >= MAX_ATTEMPTS_PER_SHARD {
+                        continue 'candidates;
+                    }
+                    let base = inner.cfg.retry_base_ms;
+                    let ms = backoff_ms(base, retry - 1, inner.cfg.retry_cap_ms);
+                    let rem = deadline.saturating_duration_since(Instant::now());
+                    std::thread::sleep(Duration::from_millis(ms).min(rem));
+                }
+                Disposition::Failover => continue 'candidates,
+                Disposition::Fatal => {
+                    fatal = failure.map(|e| e.to_string());
+                    break 'candidates;
+                }
+            }
+        }
+    }
+    match fatal {
+        Some(m) => error_frame(&m),
+        None => retryable_frame(
+            "every replica unavailable (membership change in progress); resend after backoff",
+        ),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Cluster operations (register / metrics / evict)
+// ----------------------------------------------------------------------
+
+/// Allocate a cluster-wide id and replicate the matrix to all `R` owners.
+/// One confirmed replica is enough to answer OK — the rebalance path heals
+/// under-replication as soon as the missing owners are reachable again.
+fn register_cluster(inner: &Inner, a: &DenseMatrix) -> Vec<u8> {
+    let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+    let owners = { inner.map.lock().unwrap().owners(MatrixId(id)) };
+    if owners.is_empty() {
+        return retryable_frame("no shard alive to accept registration; resend after backoff");
+    }
+    let (m, n) = (a.rows() as u32, a.cols() as u32);
+    let mut holders = Vec::with_capacity(owners.len());
+    for &shard in &owners {
+        if with_conn(inner, shard, |c| c.register_at(id, m, n, a.data())).is_ok() {
+            holders.push(shard);
+        }
+    }
+    if holders.is_empty() {
+        return retryable_frame("registration failed on every owner; resend after backoff");
+    }
+    inner.catalog.lock().unwrap().insert(id, CatalogEntry { holders });
+    Writer::new(OP_OK_REGISTER).u64(id).frame()
+}
+
+/// Aggregate every alive shard's metrics report and append the router's
+/// own counter line (`retries`/`failovers`/`rebalance_matrices` plus the
+/// membership epoch), so one `OP_METRICS` shows the whole cluster.
+fn cluster_metrics(inner: &Inner) -> Vec<u8> {
+    let (total, alive_shards, epoch) = {
+        let m = inner.map.lock().unwrap();
+        let alive: Vec<usize> = (0..m.len()).filter(|&s| m.is_alive(s)).collect();
+        (m.len(), alive, m.epoch())
+    };
+    let mut reports = Vec::new();
+    for &shard in &alive_shards {
+        if let Ok(rep) = with_conn(inner, shard, |c| c.metrics()) {
+            reports.push(rep);
+        }
+    }
+    let mut body = aggregate_reports(&reports);
+    let line = format!(
+        "router: shards={total} alive={} epoch={epoch} retries={} failovers={} \
+         rebalance_matrices={}",
+        alive_shards.len(),
+        Metrics::get(&inner.metrics.router_retries),
+        Metrics::get(&inner.metrics.router_failovers),
+        Metrics::get(&inner.metrics.router_rebalanced),
+    );
+    if !body.is_empty() {
+        body.push('\n');
+    }
+    body.push_str(&line);
+    Writer::new(OP_OK_METRICS).utf8(&body).frame()
+}
+
+/// Evict from every holder (or every shard when the id is unknown to the
+/// catalog — it may have been registered directly against a shard).
+fn evict_cluster(inner: &Inner, id: u64) -> Vec<u8> {
+    let holders = inner
+        .catalog
+        .lock()
+        .unwrap()
+        .remove(&id)
+        .map(|e| e.holders)
+        .unwrap_or_else(|| (0..inner.conns.len()).collect());
+    let mut existed = false;
+    for shard in holders {
+        if let Ok(b) = with_conn(inner, shard, |c| c.evict(id)) {
+            existed |= b;
+        }
+    }
+    Writer::new(OP_OK_EVICT).u8(existed as u8).frame()
+}
+
+// ----------------------------------------------------------------------
+// Heartbeat + rebalance
+// ----------------------------------------------------------------------
+
+fn heartbeat_loop(inner: &Arc<Inner>) {
+    while !inner.stop.load(Ordering::Relaxed) {
+        for shard in 0..inner.conns.len() {
+            if inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let epoch = { inner.map.lock().unwrap().epoch() };
+            let timeout = Duration::from_millis(inner.cfg.heartbeat_ms.max(50));
+            let up = with_conn(inner, shard, |c| c.ping_timeout(epoch, timeout)).is_ok();
+            let transition = { inner.map.lock().unwrap().set_alive(shard, up) };
+            if !transition {
+                continue;
+            }
+            if up {
+                // A shard coming back is typically a restarted process
+                // with an empty registry: re-seed it from the survivors.
+                rebalance(inner);
+            } else {
+                // Poison the link and forget the dead shard's holdings;
+                // the map already routes its keys to the live replicas.
+                inner.conns[shard].lock().unwrap().take();
+                let mut cat = inner.catalog.lock().unwrap();
+                for e in cat.values_mut() {
+                    e.holders.retain(|&s| s != shard);
+                }
+            }
+        }
+        let mut waited = 0u64;
+        while waited < inner.cfg.heartbeat_ms && !inner.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(20));
+            waited += 20;
+        }
+    }
+}
+
+/// Repair placement after a membership change: for every cataloged matrix,
+/// stream it from a surviving holder onto each alive shard the map wants
+/// it on that doesn't hold it yet.
+fn rebalance(inner: &Inner) {
+    let ids: Vec<u64> = { inner.catalog.lock().unwrap().keys().copied().collect() };
+    for id in ids {
+        let desired = { inner.map.lock().unwrap().owners(MatrixId(id)) };
+        let holders: Vec<usize> = {
+            match inner.catalog.lock().unwrap().get(&id) {
+                Some(e) => e.holders.clone(),
+                None => continue, // evicted meanwhile
+            }
+        };
+        for &target in desired.iter().filter(|t| !holders.contains(t)) {
+            let mut fetched = None;
+            for &h in &holders {
+                if let Ok(t) = with_conn(inner, h, |c| c.fetch_matrix(id)) {
+                    fetched = Some(t);
+                    break;
+                }
+            }
+            let Some((m, n, data)) = fetched else {
+                continue; // no reachable holder; retry on the next transition
+            };
+            if with_conn(inner, target, |c| c.register_at(id, m, n, &data)).is_ok() {
+                if let Some(e) = inner.catalog.lock().unwrap().get_mut(&id) {
+                    if !e.holders.contains(&target) {
+                        e.holders.push(target);
+                    }
+                }
+                Metrics::inc(&inner.metrics.router_rebalanced);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::sparse::CooBuilder;
-    use crate::linalg::DenseMatrix;
     use std::path::Path;
 
     fn manifest() -> Manifest {
@@ -103,6 +870,8 @@ mod tests {
             r.route(&a, SolverChoice::Lsqr, 1e-2),
             Route::Artifact("lsqr_baseline_64x8".into())
         );
+        // The stable ladder needs the native f64 path even on a bucket hit.
+        assert_eq!(r.route(&a, SolverChoice::Stable, 1e-2), Route::Native);
     }
 
     #[test]
@@ -133,5 +902,90 @@ mod tests {
         assert_eq!(r.route(&a, SolverChoice::Saa, 1e-2), Route::Native);
         let r2 = Router::new(None, RouterConfig::default());
         assert_eq!(r2.route(&a, SolverChoice::Saa, 1e-2), Route::Native);
+    }
+
+    #[test]
+    fn retry_classification_table() {
+        use io::ErrorKind::*;
+        // Transient mid-connection failures: resend to the same shard.
+        for k in [
+            ConnectionReset,
+            ConnectionAborted,
+            BrokenPipe,
+            TimedOut,
+            UnexpectedEof,
+            Interrupted,
+            NotConnected,
+            WouldBlock,
+        ] {
+            assert!(retryable_io(k), "{k:?} must be same-shard retryable");
+            assert_eq!(
+                classify(&ClientError::Io(io::Error::new(k, "x"))),
+                Disposition::RetrySameShard
+            );
+        }
+        // Nothing listening: fail over instead of hammering a dead address.
+        assert!(!retryable_io(ConnectionRefused));
+        assert_eq!(
+            classify(&ClientError::Io(io::Error::new(ConnectionRefused, "x"))),
+            Disposition::Failover
+        );
+        // Typed retryable from a shard caught mid-rebalance.
+        assert_eq!(
+            classify(&ClientError::Retryable("rebalancing".into())),
+            Disposition::RetrySameShard
+        );
+        // A replica that predates the handoff doesn't know the matrix yet.
+        assert_eq!(
+            classify(&ClientError::Server("unknown matrix id 7".into())),
+            Disposition::Failover
+        );
+        // Real server-side failures surface to the client unchanged.
+        assert_eq!(classify(&ClientError::Server("solver blew up".into())), Disposition::Fatal);
+        assert_eq!(classify(&ClientError::UnexpectedOpcode(9)), Disposition::Fatal);
+    }
+
+    #[test]
+    fn backoff_schedule_deterministic_and_capped() {
+        let s: Vec<u64> = (0..8).map(|a| backoff_ms(10, a, 250)).collect();
+        assert_eq!(s, vec![10, 20, 40, 80, 160, 250, 250, 250]);
+        // Determinism: same inputs, same schedule.
+        assert_eq!(s, (0..8).map(|a| backoff_ms(10, a, 250)).collect::<Vec<_>>());
+        // Huge retry counts neither overflow nor exceed the cap.
+        assert_eq!(backoff_ms(10, 63, 250), 250);
+        assert_eq!(backoff_ms(u64::MAX, 3, 250), 250);
+        assert_eq!(backoff_ms(0, 5, 250), 0);
+    }
+
+    #[test]
+    fn retry_budget_never_exceeded() {
+        // The forward path's arithmetic: attempt waits and backoff sleeps
+        // are always clamped to the remaining budget, so their total can
+        // never exceed it no matter how many retries run.
+        let budget = Duration::from_millis(100);
+        let mut spent = Duration::ZERO;
+        let mut retry = 0u32;
+        loop {
+            let remaining = budget.saturating_sub(spent);
+            if remaining.is_zero() {
+                break;
+            }
+            let wait = attempt_wait(remaining, 40);
+            assert!(wait <= remaining, "attempt wait exceeds remaining budget");
+            spent += wait;
+            let sleep = Duration::from_millis(backoff_ms(10, retry, 250))
+                .min(budget.saturating_sub(spent));
+            spent += sleep;
+            retry += 1;
+            assert!(spent <= budget, "retry {retry} overran the budget: {spent:?}");
+        }
+        assert!(retry >= 2, "schedule should have allowed multiple attempts");
+    }
+
+    #[test]
+    fn router_serve_rejects_empty_shard_list() {
+        let cfg = ShardRouterConfig::new(vec![], 2);
+        let err = ShardRouter::serve("127.0.0.1:0", cfg).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
     }
 }

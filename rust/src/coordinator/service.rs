@@ -385,6 +385,7 @@ fn worker_loop(
                 .map(|&i| BatchItem {
                     rhs: std::mem::take(&mut live[i].0.req.rhs),
                     tol: live[i].0.req.tol,
+                    refine_iters: live[i].0.req.refine_iters,
                 })
                 .collect();
             let t0 = Instant::now();
@@ -484,6 +485,7 @@ mod tests {
             solver: SolverChoice::Saa,
             tol: 1e-10,
             deadline_us: 0,
+            refine_iters: 0,
         }
     }
 
@@ -571,6 +573,7 @@ mod tests {
                 solver: SolverChoice::Lsqr,
                 tol: 0.0,
                 deadline_us: 2_000,
+                refine_iters: 0,
             })
             .unwrap();
         assert!(

@@ -1,0 +1,247 @@
+//! Consistent-hash shard map for the multi-node coordinator tier.
+//!
+//! Matrices are sharded across coordinator processes by hashing
+//! [`MatrixId`] onto a ring of virtual nodes (64 per shard, so keyspace
+//! ownership stays balanced even with 2–3 shards). Each id is owned by
+//! the first `R` **distinct, alive** shards clockwise from its hash
+//! point — `R` is the replication factor, so a single shard loss never
+//! loses a registered matrix.
+//!
+//! Two properties the router tier leans on:
+//!
+//! * **Stability** — shard identity is the index into the address list
+//!   and dead shards stay on the ring (they are skipped, not removed),
+//!   so ownership of unaffected ids never moves when membership flaps.
+//!   A dead shard's ids fail over to the *next* ring successor — exactly
+//!   the replica that already holds them when `R ≥ 2`.
+//! * **Determinism** — the ring is a pure function of `(shard count,
+//!   vnodes, splitmix64)`: no `RandomState`, no iteration-order hazards,
+//!   same ownership in every process that shares the member list.
+//!
+//! Membership is **epoch-versioned**: every aliveness transition bumps a
+//! monotone epoch. The router stamps heartbeats with its epoch and serves
+//! requests caught mid-rebalance with a typed retryable error, so clients
+//! can distinguish "resend after backoff" from real failures.
+
+use super::registry::MatrixId;
+
+/// Virtual nodes per shard. 64 keeps max/min keyspace share within ~2x
+/// for small clusters while the ring stays tiny (192 entries at 3 shards).
+pub const VNODES_PER_SHARD: usize = 64;
+
+/// splitmix64 finalizer: a full-avalanche 64-bit mixer (public domain
+/// constants from Vigna's splitmix64). Used for both vnode placement and
+/// key hashing so the ring is reproducible across processes.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Epoch-versioned consistent-hash ring over a fixed shard list.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    addrs: Vec<String>,
+    alive: Vec<bool>,
+    replication: usize,
+    epoch: u64,
+    /// `(hash, shard index)` sorted by hash — the ring.
+    ring: Vec<(u64, usize)>,
+}
+
+impl ShardMap {
+    /// Build the ring. `replication` is clamped to `[1, addrs.len()]`.
+    pub fn new(addrs: Vec<String>, replication: usize) -> Self {
+        assert!(!addrs.is_empty(), "shard map needs at least one shard");
+        let replication = replication.clamp(1, addrs.len());
+        let mut ring = Vec::with_capacity(addrs.len() * VNODES_PER_SHARD);
+        for shard in 0..addrs.len() {
+            for vnode in 0..VNODES_PER_SHARD {
+                let h = mix64(((shard as u64) << 32) ^ vnode as u64);
+                ring.push((h, shard));
+            }
+        }
+        // Sort by hash; break (astronomically unlikely) hash ties by shard
+        // index so the ring order is total and deterministic.
+        ring.sort_unstable();
+        let alive = vec![true; addrs.len()];
+        Self { addrs, alive, replication, epoch: 0, ring }
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn addr(&self, shard: usize) -> &str {
+        &self.addrs[shard]
+    }
+
+    pub fn is_alive(&self, shard: usize) -> bool {
+        self.alive[shard]
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Record a liveness transition. Returns `true` (and bumps the epoch)
+    /// only when the state actually changed — heartbeat confirmations of
+    /// the status quo must not churn the epoch.
+    pub fn set_alive(&mut self, shard: usize, alive: bool) -> bool {
+        if self.alive[shard] == alive {
+            return false;
+        }
+        self.alive[shard] = alive;
+        self.epoch += 1;
+        true
+    }
+
+    /// The first `R` distinct alive shards clockwise from the id's hash
+    /// point. Fewer than `R` entries are returned only when fewer than `R`
+    /// shards are alive; empty means a total outage.
+    pub fn owners(&self, id: MatrixId) -> Vec<usize> {
+        self.owners_where(id, |s| self.alive[s])
+    }
+
+    /// Ownership ignoring liveness — what the placement *will be* once
+    /// every shard is back. Used to diff rebalance targets.
+    pub fn owners_any(&self, id: MatrixId) -> Vec<usize> {
+        self.owners_where(id, |_| true)
+    }
+
+    fn owners_where(&self, id: MatrixId, keep: impl Fn(usize) -> bool) -> Vec<usize> {
+        let h = mix64(id.0);
+        let start = self.ring.partition_point(|&(rh, _)| rh < h);
+        let mut out = Vec::with_capacity(self.replication);
+        for i in 0..self.ring.len() {
+            let (_, shard) = self.ring[(start + i) % self.ring.len()];
+            if keep(shard) && !out.contains(&shard) {
+                out.push(shard);
+                if out.len() == self.replication {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Primary owner (first alive successor), if any shard is alive.
+    pub fn primary(&self, id: MatrixId) -> Option<usize> {
+        self.owners(id).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(n: usize, r: usize) -> ShardMap {
+        ShardMap::new((0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect(), r)
+    }
+
+    #[test]
+    fn owners_deterministic_and_distinct() {
+        let a = map(3, 2);
+        let b = map(3, 2);
+        for k in 0..500u64 {
+            let o = a.owners(MatrixId(k));
+            assert_eq!(o, b.owners(MatrixId(k)), "ring must be reproducible");
+            assert_eq!(o.len(), 2);
+            assert_ne!(o[0], o[1], "replicas must land on distinct shards");
+        }
+    }
+
+    #[test]
+    fn replication_clamped_to_cluster_size() {
+        let m = map(2, 5);
+        assert_eq!(m.replication(), 2);
+        assert_eq!(map(3, 0).replication(), 1);
+    }
+
+    #[test]
+    fn keyspace_is_spread() {
+        let m = map(3, 1);
+        let mut counts = [0usize; 3];
+        for k in 0..3000u64 {
+            counts[m.primary(MatrixId(k)).unwrap()] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 300, "shard {s} owns only {c}/3000 keys — ring is skewed");
+        }
+    }
+
+    #[test]
+    fn dead_shard_fails_over_to_existing_replica() {
+        let mut m = map(3, 2);
+        for k in 0..300u64 {
+            let before = m.owners(MatrixId(k));
+            let dead = before[0];
+            assert!(m.set_alive(dead, false));
+            let after = m.owners(MatrixId(k));
+            // The surviving replica is promoted to primary: every key the
+            // dead shard fronted is still served by a shard that already
+            // holds it.
+            assert_eq!(after[0], before[1]);
+            assert!(!after.contains(&dead));
+            assert!(m.set_alive(dead, true));
+        }
+    }
+
+    #[test]
+    fn unaffected_keys_do_not_move() {
+        let mut m = map(3, 1);
+        let before: Vec<_> = (0..1000u64).map(|k| m.primary(MatrixId(k)).unwrap()).collect();
+        m.set_alive(2, false);
+        for (k, &b) in before.iter().enumerate() {
+            if b != 2 {
+                assert_eq!(m.primary(MatrixId(k as u64)).unwrap(), b, "stable keys must not move");
+            } else {
+                assert_ne!(m.primary(MatrixId(k as u64)).unwrap(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_bumps_only_on_transitions() {
+        let mut m = map(3, 2);
+        assert_eq!(m.epoch(), 0);
+        assert!(m.set_alive(1, false));
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.set_alive(1, false), "no-op transition must not bump");
+        assert_eq!(m.epoch(), 1);
+        assert!(m.set_alive(1, true));
+        assert_eq!(m.epoch(), 2);
+    }
+
+    #[test]
+    fn owners_any_ignores_liveness() {
+        let mut m = map(3, 2);
+        let id = MatrixId(42);
+        let placed = m.owners_any(id);
+        m.set_alive(placed[0], false);
+        assert_eq!(m.owners_any(id), placed, "planned placement ignores liveness");
+        assert_ne!(m.owners(id), placed);
+    }
+
+    #[test]
+    fn total_outage_yields_no_owners() {
+        let mut m = map(2, 2);
+        m.set_alive(0, false);
+        m.set_alive(1, false);
+        assert!(m.owners(MatrixId(5)).is_empty());
+        assert!(m.primary(MatrixId(5)).is_none());
+    }
+}

@@ -110,7 +110,7 @@ mod sys {
 // ----------------------------------------------------------------------
 
 /// Read one frame (payload including opcode) from a blocking stream.
-fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+pub(crate) fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     match stream.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -129,19 +129,25 @@ fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
     Ok(Some(payload))
 }
 
-fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> io::Result<()> {
+pub(crate) fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> io::Result<()> {
     stream.write_all(frame)?;
     stream.flush()
 }
 
-fn error_frame(msg: &str) -> Vec<u8> {
+pub(crate) fn error_frame(msg: &str) -> Vec<u8> {
     Writer::new(OP_ERROR).utf8(msg).frame()
+}
+
+/// Typed *retryable* error frame: the client should resend the same
+/// request after a backoff (shard mid-rebalance, replicas briefly down).
+pub(crate) fn retryable_frame(msg: &str) -> Vec<u8> {
+    Writer::new(OP_ERR_RETRYABLE).utf8(msg).frame()
 }
 
 /// Rewrite a v1 response frame (`len, opcode, body`) into its v2 form
 /// (`len, opcode, request_id, body`) so every v1 encoder is reused verbatim
 /// on pipelined connections.
-fn retag_v2(frame: Vec<u8>, id: u64) -> Vec<u8> {
+pub(crate) fn retag_v2(frame: Vec<u8>, id: u64) -> Vec<u8> {
     debug_assert!(frame.len() >= 5);
     let mut out = Vec::with_capacity(frame.len() + 8);
     out.extend_from_slice(&((frame.len() - 4 + 8) as u32).to_le_bytes());
@@ -151,7 +157,7 @@ fn retag_v2(frame: Vec<u8>, id: u64) -> Vec<u8> {
     out
 }
 
-fn encode_solve_response(resp: &SolveResponse) -> Vec<u8> {
+pub(crate) fn encode_solve_response(resp: &SolveResponse) -> Vec<u8> {
     match &resp.result {
         Ok(sol) => Writer::new(OP_OK_SOLVE)
             .u32(sol.x.len() as u32)
@@ -776,11 +782,46 @@ fn handle_inline(op: u8, r: &mut Reader, service: &Arc<Service>) -> Vec<u8> {
             }
             Err(e) => error_frame(&e.to_string()),
         },
+        // Router→shard replication/handoff: insert at a caller-chosen id.
+        OP_REGISTER_AT => {
+            let parsed = r.u64().and_then(|id| decode_register(r).map(|matrix| (id, matrix)));
+            match parsed {
+                Ok((id, matrix)) => {
+                    service.registry().register_at(MatrixId(id), matrix);
+                    Writer::new(OP_OK_REGISTER).u64(id).frame()
+                }
+                Err(e) => error_frame(&e.to_string()),
+            }
+        }
+        // Router handoff read-back: stream a registered matrix out so a
+        // surviving replica can seed a new owner.
+        OP_FETCH_MATRIX => match r.u64() {
+            Ok(id) => match service.registry().get(MatrixId(id)) {
+                Some(m) => match m.as_ref() {
+                    Matrix::Dense(d) => Writer::new(OP_OK_MATRIX)
+                        .u32(d.rows() as u32)
+                        .u32(d.cols() as u32)
+                        .f64_slice(d.data())
+                        .frame(),
+                    Matrix::Csr(_) => {
+                        error_frame("fetch of sparse matrices is not supported")
+                    }
+                },
+                None => error_frame(&format!("unknown matrix id {id}")),
+            },
+            Err(e) => error_frame(&e.to_string()),
+        },
+        // Router heartbeat: echo the epoch so the router can detect a
+        // process that restarted (and therefore lost its registry).
+        OP_PING => match r.u64() {
+            Ok(epoch) => Writer::new(OP_OK_PING).u64(epoch).frame(),
+            Err(e) => error_frame(&e.to_string()),
+        },
         other => error_frame(&format!("unknown opcode {other}")),
     }
 }
 
-fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
+pub(crate) fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
     let m = r.u32()? as usize;
     let n = r.u32()? as usize;
     if m == 0 || n == 0 || m.checked_mul(n).is_none() {
@@ -798,7 +839,7 @@ fn decode_register(r: &mut Reader) -> Result<Matrix, DecodeError> {
     Ok(Matrix::Dense(dm))
 }
 
-fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
+pub(crate) fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
     let matrix = MatrixId(r.u64()?);
     let solver = solver_from_u8(r.u8()?)?;
     let tol = r.f64()?;
@@ -813,7 +854,11 @@ fn decode_solve(r: &mut Reader) -> Result<SolveRequest, DecodeError> {
             "rhs contains non-finite (NaN/Inf) values".to_string(),
         ));
     }
-    Ok(SolveRequest { matrix, rhs, solver, tol, deadline_us })
+    // Optional trailing field (backward compatible both directions): a
+    // per-request refinement-sweep cap for the stable ladder. Absent or 0
+    // defers to the server-side `--refine-iters` knob.
+    let refine_iters = if r.finished() { 0 } else { r.u32()? as usize };
+    Ok(SolveRequest { matrix, rhs, solver, tol, deadline_us, refine_iters })
 }
 
 // ----------------------------------------------------------------------
@@ -830,6 +875,10 @@ pub enum ClientError {
     Io(io::Error),
     Decode(DecodeError),
     Server(String),
+    /// Typed retryable failure (`OP_ERR_RETRYABLE`): the request hit a
+    /// transient cluster condition (shard mid-rebalance, replicas briefly
+    /// unreachable) — resend the same request after a backoff.
+    Retryable(String),
     UnexpectedOpcode(u8),
 }
 
@@ -839,6 +888,7 @@ impl std::fmt::Display for ClientError {
             ClientError::Io(e) => write!(f, "io: {e}"),
             ClientError::Decode(e) => write!(f, "decode: {e}"),
             ClientError::Server(m) => write!(f, "server error: {m}"),
+            ClientError::Retryable(m) => write!(f, "retryable: {m}"),
             ClientError::UnexpectedOpcode(op) => write!(f, "unexpected opcode {op}"),
         }
     }
@@ -914,6 +964,9 @@ impl Client {
         if op == OP_ERROR {
             return Err(ClientError::Server(r.rest_utf8()?));
         }
+        if op == OP_ERR_RETRYABLE {
+            return Err(ClientError::Retryable(r.rest_utf8()?));
+        }
         if op != opcode {
             return Err(ClientError::UnexpectedOpcode(op));
         }
@@ -953,15 +1006,34 @@ impl Client {
         tol: f64,
         deadline_us: u64,
     ) -> Result<WireSolution, ClientError> {
-        let frame = Writer::new(OP_SOLVE)
+        self.solve_with_opts(matrix_id, rhs, solver, tol, deadline_us, 0)
+    }
+
+    /// Solve with every per-request knob: deadline plus a refinement-sweep
+    /// cap for the stable ladder (0 = the server-side `--refine-iters`
+    /// default). The cap rides as the optional trailing `SOLVE` field, so
+    /// old servers that don't know it reject nothing — they never see it
+    /// when it is 0 and newer servers ignore 0.
+    pub fn solve_with_opts(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        deadline_us: u64,
+        refine_iters: usize,
+    ) -> Result<WireSolution, ClientError> {
+        let mut w = Writer::new(OP_SOLVE)
             .u64(matrix_id)
             .u8(solver_to_u8(solver))
             .f64(tol)
             .u64(deadline_us)
             .u32(rhs.len() as u32)
-            .f64_slice(rhs)
-            .frame();
-        let body = self.expect(frame, OP_OK_SOLVE)?;
+            .f64_slice(rhs);
+        if refine_iters > 0 {
+            w = w.u32(refine_iters as u32);
+        }
+        let body = self.expect(w.frame(), OP_OK_SOLVE)?;
         decode_wire_solution(&body)
     }
 
@@ -1016,6 +1088,9 @@ impl SolveTicket {
         if op == OP_ERROR {
             return Err(ClientError::Server(r.rest_utf8()?));
         }
+        if op == OP_ERR_RETRYABLE {
+            return Err(ClientError::Retryable(r.rest_utf8()?));
+        }
         if op != OP_OK_SOLVE {
             return Err(ClientError::UnexpectedOpcode(op));
         }
@@ -1063,6 +1138,14 @@ pub struct PipelinedClient {
     next_id: u64,
     pending: PendingMap,
     reader: Option<JoinHandle<()>>,
+    /// Fault-injection label (the shard router sets this to the peer
+    /// address): when set, every outbound frame consults the installed
+    /// [`crate::testing::FaultPlan`]'s network entries. `None` (the
+    /// default) skips the lookup entirely.
+    fault_target: Option<String>,
+    /// Outbound frame index since connect (HELLO excluded) — the pure
+    /// matching coordinate for seeded network faults.
+    frames_sent: u64,
 }
 
 impl PipelinedClient {
@@ -1108,7 +1191,20 @@ impl PipelinedClient {
                 }
             })
             .map_err(ClientError::Io)?;
-        Ok(PipelinedClient { stream, next_id: 1, pending, reader: Some(reader) })
+        Ok(PipelinedClient {
+            stream,
+            next_id: 1,
+            pending,
+            reader: Some(reader),
+            fault_target: None,
+            frames_sent: 0,
+        })
+    }
+
+    /// Label this connection for seeded network fault injection (used by
+    /// the shard router, which labels each shard link with its address).
+    pub fn set_fault_target(&mut self, target: impl Into<String>) {
+        self.fault_target = Some(target.into());
     }
 
     fn submit(
@@ -1120,11 +1216,43 @@ impl PipelinedClient {
         let (tx, rx) = mpsc::channel();
         self.pending.lock().unwrap().insert(id, tx);
         let frame = build(id);
+        if let Some(action) = self.net_fault_for(&frame) {
+            match action {
+                crate::testing::NetFaultAction::Drop => {
+                    // Never written: the caller's deadline-aware wait times
+                    // out and the retry path runs. The pending entry stays
+                    // until connection teardown — ids are never reused, so
+                    // it can only leak, not misroute.
+                    return Ok((id, rx));
+                }
+                crate::testing::NetFaultAction::DelayMs(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                crate::testing::NetFaultAction::Sever => {
+                    let _ = self.stream.shutdown(Shutdown::Both);
+                }
+            }
+        }
         if let Err(e) = write_frame(&mut self.stream, &frame) {
             self.pending.lock().unwrap().remove(&id);
             return Err(e.into());
         }
         Ok((id, rx))
+    }
+
+    /// Consult the installed fault plan for this outbound frame. Bumps the
+    /// frame index whenever a target label is set, so the index is a stable
+    /// coordinate whether or not a plan is currently installed.
+    fn net_fault_for(&mut self, frame: &[u8]) -> Option<crate::testing::NetFaultAction> {
+        let target = self.fault_target.as_deref()?;
+        let idx = self.frames_sent;
+        self.frames_sent += 1;
+        let plan = crate::testing::active_faults()?;
+        if !plan.has_net_faults() {
+            return None;
+        }
+        // frame = u32 len, u8 opcode, ...
+        plan.net_action(target, frame[4], idx)
     }
 
     fn call(
@@ -1139,6 +1267,9 @@ impl PipelinedClient {
         let _ = r.u64()?;
         if op == OP_ERROR {
             return Err(ClientError::Server(r.rest_utf8()?));
+        }
+        if op == OP_ERR_RETRYABLE {
+            return Err(ClientError::Retryable(r.rest_utf8()?));
         }
         if op != expect_op {
             return Err(ClientError::UnexpectedOpcode(op));
@@ -1156,16 +1287,33 @@ impl PipelinedClient {
         tol: f64,
         deadline_us: u64,
     ) -> Result<SolveTicket, ClientError> {
+        self.submit_solve_opts(matrix_id, rhs, solver, tol, deadline_us, 0)
+    }
+
+    /// [`PipelinedClient::submit_solve`] with the optional per-request
+    /// refinement-sweep cap (0 = server-side default, field omitted).
+    pub fn submit_solve_opts(
+        &mut self,
+        matrix_id: u64,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        deadline_us: u64,
+        refine_iters: usize,
+    ) -> Result<SolveTicket, ClientError> {
         let (id, rx) = self.submit(|id| {
-            Writer::new(OP_SOLVE)
+            let mut w = Writer::new(OP_SOLVE)
                 .u64(id)
                 .u64(matrix_id)
                 .u8(solver_to_u8(solver))
                 .f64(tol)
                 .u64(deadline_us)
                 .u32(rhs.len() as u32)
-                .f64_slice(rhs)
-                .frame()
+                .f64_slice(rhs);
+            if refine_iters > 0 {
+                w = w.u32(refine_iters as u32);
+            }
+            w.frame()
         })?;
         Ok(SolveTicket { id, rx })
     }
@@ -1222,6 +1370,68 @@ impl PipelinedClient {
             OP_OK_EVICT,
         )?;
         Ok(Reader::new(&body).u8()? != 0)
+    }
+
+    /// Register a dense matrix at a caller-chosen id (router replication:
+    /// the router allocates ids so all replicas agree on them).
+    pub fn register_at(
+        &mut self,
+        matrix_id: u64,
+        m: u32,
+        n: u32,
+        data: &[f64],
+    ) -> Result<(), ClientError> {
+        self.call(
+            |id| {
+                Writer::new(OP_REGISTER_AT)
+                    .u64(id)
+                    .u64(matrix_id)
+                    .u32(m)
+                    .u32(n)
+                    .f64_slice(data)
+                    .frame()
+            },
+            OP_OK_REGISTER,
+        )?;
+        Ok(())
+    }
+
+    /// Fetch a registered dense matrix back (router handoff: a surviving
+    /// replica streams the data toward a new owner).
+    pub fn fetch_matrix(&mut self, matrix_id: u64) -> Result<(u32, u32, Vec<f64>), ClientError> {
+        let body = self.call(
+            |id| Writer::new(OP_FETCH_MATRIX).u64(id).u64(matrix_id).frame(),
+            OP_OK_MATRIX,
+        )?;
+        let mut r = Reader::new(&body);
+        let m = r.u32()?;
+        let n = r.u32()?;
+        let data = r.f64_vec((m as usize) * (n as usize))?;
+        Ok((m, n, data))
+    }
+
+    /// Heartbeat: send the router's epoch, get it echoed back. An answered
+    /// ping means the shard process is alive and draining its reader pool.
+    pub fn ping(&mut self, epoch: u64) -> Result<u64, ClientError> {
+        let body =
+            self.call(|id| Writer::new(OP_PING).u64(id).u64(epoch).frame(), OP_OK_PING)?;
+        Ok(Reader::new(&body).u64()?)
+    }
+
+    /// [`PipelinedClient::ping`] with a bounded wait, so a hung (not just
+    /// dead) shard cannot stall the router's heartbeat loop.
+    pub fn ping_timeout(&mut self, epoch: u64, d: Duration) -> Result<u64, ClientError> {
+        let (_id, rx) = self.submit(|id| Writer::new(OP_PING).u64(id).u64(epoch).frame())?;
+        let rep = rx.recv_timeout(d).map_err(|_| {
+            ClientError::Io(io::Error::new(io::ErrorKind::TimedOut, "ping timed out"))
+        })?;
+        let mut r = Reader::new(&rep.payload);
+        let op = r.u8()?;
+        let _ = r.u64()?;
+        if op != OP_OK_PING {
+            return Err(ClientError::UnexpectedOpcode(op));
+        }
+        Ok(r.u64()?)
     }
 }
 

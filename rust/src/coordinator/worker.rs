@@ -88,6 +88,10 @@ impl Default for WorkerConfig {
 pub struct BatchItem {
     pub rhs: Vec<f64>,
     pub tol: f64,
+    /// Per-request refinement-sweep cap for the stable ladder (0 = defer
+    /// to the server-side `--refine-iters` knob). Negotiated over the wire
+    /// as the optional trailing `OP_SOLVE` field.
+    pub refine_iters: usize,
 }
 
 /// A worker execution context. `!Send` by design (owns the PJRT engine);
@@ -155,6 +159,20 @@ impl WorkerContext {
         solver: SolverChoice,
         tol: f64,
     ) -> (Result<Solution, ServiceError>, ExecutedOn) {
+        self.execute_one(route, matrix_id, rhs, solver, tol, 0)
+    }
+
+    /// [`WorkerContext::execute`] with an explicit per-request refinement
+    /// cap (0 defers to the server-side knob).
+    fn execute_one(
+        &mut self,
+        route: &Route,
+        matrix_id: MatrixId,
+        rhs: &[f64],
+        solver: SolverChoice,
+        tol: f64,
+        refine_iters: usize,
+    ) -> (Result<Solution, ServiceError>, ExecutedOn) {
         let a = match self.registry.get(matrix_id) {
             Some(a) => a,
             None => {
@@ -188,14 +206,15 @@ impl WorkerContext {
                     }
                     Err(e) => {
                         eprintln!("worker: pjrt path failed ({e}); falling back to native");
-                        let out = self.execute_native(matrix_id, &a, rhs, solver, tol);
+                        let out =
+                            self.execute_native(matrix_id, &a, rhs, solver, tol, refine_iters);
                         Metrics::inc(&self.metrics.native_dispatches);
                         (out, ExecutedOn::Native)
                     }
                 }
             }
             _ => {
-                let out = self.execute_native(matrix_id, &a, rhs, solver, tol);
+                let out = self.execute_native(matrix_id, &a, rhs, solver, tol, refine_iters);
                 Metrics::inc(&self.metrics.native_dispatches);
                 (out, ExecutedOn::Native)
             }
@@ -240,7 +259,9 @@ impl WorkerContext {
         if !use_block {
             return items
                 .iter()
-                .map(|it| self.execute(route, matrix_id, &it.rhs, solver, it.tol))
+                .map(|it| {
+                    self.execute_one(route, matrix_id, &it.rhs, solver, it.tol, it.refine_iters)
+                })
                 .collect();
         }
         let a = match self.registry.get(matrix_id) {
@@ -276,21 +297,24 @@ impl WorkerContext {
                 }
             })
             .collect();
-        // Sub-group the valid items by tolerance bits, FIFO within a group.
-        let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+        // Sub-group the valid items by (tolerance bits, refinement cap),
+        // FIFO within a group — items that negotiated a different
+        // per-request refine cap must not share a ladder run.
+        let mut groups: Vec<((u64, usize), Vec<usize>)> = Vec::new();
         for (i, slot) in out.iter().enumerate() {
             if slot.is_some() {
                 continue;
             }
-            let bits = items[i].tol.to_bits();
-            match groups.iter_mut().find(|(b, _)| *b == bits) {
+            let key = (items[i].tol.to_bits(), items[i].refine_iters);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, idxs)) => idxs.push(i),
-                None => groups.push((bits, vec![i])),
+                None => groups.push((key, vec![i])),
             }
         }
-        for (bits, idxs) in groups {
+        for ((bits, refine_iters), idxs) in groups {
             let tol = f64::from_bits(bits);
-            let solved = self.solve_block_native(matrix_id, &a, items, &idxs, solver, tol);
+            let solved =
+                self.solve_block_native(matrix_id, &a, items, &idxs, solver, tol, refine_iters);
             Metrics::add(&self.metrics.native_dispatches, idxs.len() as u64);
             Metrics::inc(&self.metrics.blocked_batches);
             Metrics::add(&self.metrics.blocked_rhs, idxs.len() as u64);
@@ -345,6 +369,7 @@ impl WorkerContext {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_native(
         &mut self,
         id: MatrixId,
@@ -352,13 +377,14 @@ impl WorkerContext {
         rhs: &[f64],
         solver: SolverChoice,
         tol: f64,
+        refine_iters: usize,
     ) -> Result<Solution, ServiceError> {
         // A single request is the k = 1 column of the blocked path — the
         // blocked kernels are bitwise-per-column equivalents of the vector
         // kernels (pinned by tests/block_solve_properties.rs), so there is
         // exactly one native solve implementation to keep correct.
-        let items = [BatchItem { rhs: rhs.to_vec(), tol }];
-        self.solve_block_native(id, a, &items, &[0], solver, tol)
+        let items = [BatchItem { rhs: rhs.to_vec(), tol, refine_iters }];
+        self.solve_block_native(id, a, &items, &[0], solver, tol, refine_iters)
             .pop()
             .expect("one item in, one result out")
     }
@@ -368,6 +394,7 @@ impl WorkerContext {
     /// with k = 1 (via [`WorkerContext::execute_native`]), so the per-RHS
     /// equivalence of batched and solo solves is structural, not maintained
     /// by hand.
+    #[allow(clippy::too_many_arguments)]
     fn solve_block_native(
         &mut self,
         id: MatrixId,
@@ -376,6 +403,7 @@ impl WorkerContext {
         idxs: &[usize],
         solver: SolverChoice,
         tol: f64,
+        refine_iters: usize,
     ) -> Vec<Result<Solution, ServiceError>> {
         let k = idxs.len();
         let (m, n) = a.shape();
@@ -412,7 +440,13 @@ impl WorkerContext {
                 let cfg = LadderConfig {
                     tol,
                     lsqr: LsqrConfig { atol: tol, btol: tol, ..self.config.lsqr.clone() },
-                    refine_iters: crate::solvers::stable::refine_iters(),
+                    // Per-request negotiated cap wins; 0 defers to the
+                    // server-side knob.
+                    refine_iters: if refine_iters != 0 {
+                        refine_iters
+                    } else {
+                        crate::solvers::stable::refine_iters()
+                    },
                     ..Default::default()
                 };
                 let out = run_ladder(
@@ -726,8 +760,8 @@ mod tests {
         let mut inf_rhs = b.clone();
         inf_rhs[0] = f64::INFINITY;
         let items = vec![
-            BatchItem { rhs: b.clone(), tol: 1e-10 },
-            BatchItem { rhs: inf_rhs, tol: 1e-10 },
+            BatchItem { rhs: b.clone(), tol: 1e-10, refine_iters: 0 },
+            BatchItem { rhs: inf_rhs, tol: 1e-10, refine_iters: 0 },
         ];
         let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
         assert!(out[0].0.is_ok());
@@ -752,9 +786,9 @@ mod tests {
             *bi += 0.1 * g.next_gaussian();
         }
         let items = vec![
-            BatchItem { rhs: b.clone(), tol: 1e-10 },
-            BatchItem { rhs: noisy.clone(), tol: 1e-10 },
-            BatchItem { rhs: b.clone(), tol: 1e-8 }, // second tol group
+            BatchItem { rhs: b.clone(), tol: 1e-10, refine_iters: 0 },
+            BatchItem { rhs: noisy.clone(), tol: 1e-10, refine_iters: 0 },
+            BatchItem { rhs: b.clone(), tol: 1e-8, refine_iters: 0 }, // second tol group
         ];
         let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
         assert_eq!(out.len(), 3);
@@ -778,9 +812,9 @@ mod tests {
         // per-item BadRequest without poisoning its batch-mates.
         let (mut ctx, _reg, _m, id, x_true, b) = setup(4);
         let items = vec![
-            BatchItem { rhs: b.clone(), tol: 1e-10 },
-            BatchItem { rhs: vec![1.0, 2.0], tol: 1e-10 }, // wrong length
-            BatchItem { rhs: b.clone(), tol: 1e-10 },
+            BatchItem { rhs: b.clone(), tol: 1e-10, refine_iters: 0 },
+            BatchItem { rhs: vec![1.0, 2.0], tol: 1e-10, refine_iters: 0 }, // wrong length
+            BatchItem { rhs: b.clone(), tol: 1e-10, refine_iters: 0 },
         ];
         let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
         assert!(matches!(out[1].0, Err(ServiceError::BadRequest(_))));
@@ -805,8 +839,10 @@ mod tests {
             registry,
             metrics.clone(),
         );
-        let items =
-            vec![BatchItem { rhs: b.clone(), tol: 1e-10 }, BatchItem { rhs: b, tol: 1e-10 }];
+        let items = vec![
+            BatchItem { rhs: b.clone(), tol: 1e-10, refine_iters: 0 },
+            BatchItem { rhs: b, tol: 1e-10, refine_iters: 0 },
+        ];
         let out = ctx.execute_batch(&Route::Native, id, SolverChoice::Saa, &items);
         assert_eq!(Metrics::get(&metrics.blocked_rhs), 0);
         for (res, _) in &out {
@@ -819,7 +855,7 @@ mod tests {
     #[test]
     fn execute_batch_unknown_matrix_errors_every_item() {
         let (mut ctx, _reg, _m, _id, _xt, b) = setup(4);
-        let items = vec![BatchItem { rhs: b.clone(), tol: 1e-8 }];
+        let items = vec![BatchItem { rhs: b.clone(), tol: 1e-8, refine_iters: 0 }];
         let out = ctx.execute_batch(&Route::Native, MatrixId(4242), SolverChoice::Saa, &items);
         assert!(matches!(out[0].0, Err(ServiceError::UnknownMatrix(4242))));
     }

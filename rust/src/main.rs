@@ -9,7 +9,7 @@ use snsolve::bench_harness::figures::{
 };
 use snsolve::cli::{parse, usage, FlagSpec};
 use snsolve::coordinator::tcp::TcpServer;
-use snsolve::coordinator::{Service, ServiceConfig, SolverChoice};
+use snsolve::coordinator::{Service, ServiceConfig, ShardRouter, ShardRouterConfig, SolverChoice};
 use snsolve::problems::{generate_dense, generate_sparse, DenseProblemSpec, SparseProblemSpec};
 use snsolve::runtime::Engine;
 use snsolve::sketch::SketchKind;
@@ -52,6 +52,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "sketch-invert", takes_value: true, help: "inverted-hash CountSketch scatter: true|false (default true; false = direct-scatter baseline)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifact dir (default artifacts)" },
         FlagSpec { name: "config", takes_value: true, help: "serve: TOML config file" },
+        FlagSpec { name: "shards", takes_value: true, help: "serve: comma-separated shard addresses; runs the router front-end instead of a local service (or SNSOLVE_SHARDS)" },
+        FlagSpec { name: "replication", takes_value: true, help: "serve: replicas per matrix in router mode (default 2, or SNSOLVE_REPLICATION)" },
         FlagSpec { name: "demo", takes_value: false, help: "serve: run a self-test client then exit" },
     ]
 }
@@ -254,7 +256,7 @@ fn cmd_solve(args: &snsolve::cli::Args) -> i32 {
 }
 
 fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
-    let (mut cfg, mut fcfg) = if let Some(path) = args.flag("config") {
+    let (mut cfg, mut fcfg, ccfg) = if let Some(path) = args.flag("config") {
         match snsolve::config::Config::load(std::path::Path::new(path)) {
             Ok(c) => {
                 // A present-but-unparseable simd key is a config error,
@@ -346,6 +348,26 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                         }
                     }
                 }
+                if let Some(v) = c.get("cluster", "shards") {
+                    if v.as_str().is_none() {
+                        eprintln!(
+                            "config error: [cluster] shards must be a quoted \
+                             comma-separated address list"
+                        );
+                        return 2;
+                    }
+                }
+                if let Some(v) = c.get("cluster", "replication") {
+                    match v.as_i64() {
+                        Some(r) if r >= 1 => {}
+                        _ => {
+                            eprintln!(
+                                "config error: [cluster] replication must be a positive integer"
+                            );
+                            return 2;
+                        }
+                    }
+                }
                 // `[parallel]` kernel keys apply unless the matching CLI
                 // flag (already installed in main, higher precedence) was
                 // given; absent keys leave the env vars / defaults alone.
@@ -374,7 +396,7 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
                 if args.flag("refine-iters").is_none() && sc.refine_iters != 0 {
                     snsolve::solvers::stable::set_refine_iters(sc.refine_iters);
                 }
-                (c.service_config(), c.frontend_config())
+                (c.service_config(), c.frontend_config(), c.cluster_config())
             }
             Err(e) => {
                 eprintln!("config error: {e}");
@@ -383,7 +405,7 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
         }
     } else {
         let fcfg = snsolve::coordinator::tcp::FrontendConfig::default();
-        (ServiceConfig::default(), fcfg)
+        (ServiceConfig::default(), fcfg, snsolve::config::ClusterConfig::default())
     };
     if let Some(w) = args.flag_usize("workers").unwrap() {
         cfg.workers = w.max(1);
@@ -401,6 +423,43 @@ fn cmd_serve(args: &snsolve::cli::Args) -> i32 {
         eprintln!("note: no artifacts manifest found; native-only service");
     }
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7447").to_string();
+
+    // Router mode: a non-empty shard list (--shards > SNSOLVE_SHARDS >
+    // [cluster] shards) turns this process into the failover front-end for
+    // a cluster of ordinary `snsolve serve` shards instead of a local
+    // service.
+    let shards = match args.flag("shards") {
+        Some(s) => snsolve::config::parse_shard_list(s),
+        None => snsolve::config::env_shards().unwrap_or(ccfg.shards),
+    };
+    if !shards.is_empty() {
+        let replication = match args.flag_usize("replication").unwrap() {
+            Some(r) => r.max(1),
+            None => snsolve::config::env_replication()
+                .or(if ccfg.replication > 0 { Some(ccfg.replication) } else { None })
+                .unwrap_or(2),
+        };
+        let nshards = shards.len();
+        let rcfg = ShardRouterConfig::new(shards, replication);
+        let router = match ShardRouter::serve(addr.as_str(), rcfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("bind {addr}: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "snsolve router listening on {} ({} shards, replication {})",
+            router.addr(),
+            nshards,
+            replication.min(nshards)
+        );
+        // Run until killed.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
     let service = Service::start(cfg);
     let server = match TcpServer::serve_with(service.clone(), addr.as_str(), fcfg) {
         Ok(s) => s,

@@ -27,9 +27,42 @@ pub enum FaultAction {
     Panic,
 }
 
+/// What an injected **network** fault does to the outbound frame it
+/// matches (consulted by the shard router's wire path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFaultAction {
+    /// The frame is silently dropped — never written to the socket. The
+    /// sender's deadline-aware wait times out and the retry path runs.
+    Drop,
+    /// The frame is delayed by the given milliseconds before sending
+    /// (exercises deadline budgets without killing the connection).
+    DelayMs(u64),
+    /// The connection is severed instead of sending — the demux reader
+    /// sees EOF and every in-flight request on it fails retryably.
+    Sever,
+}
+
+/// A network fault entry. Matching is a **pure function** of
+/// `(target, opcode, per-connection outbound frame index)` — no interior
+/// counters — because [`active_faults`] clones the plan on every read.
+#[derive(Debug, Clone)]
+pub struct NetFault {
+    /// Target label — the shard address the router connection points at
+    /// (e.g. `"127.0.0.1:9101"`), or `"*"` for any target.
+    pub target: String,
+    /// Opcode filter (`None` = any opcode).
+    pub opcode: Option<u8>,
+    /// Half-open outbound frame-index window `[from, to)` on the matched
+    /// connection (index 0 = first frame after the HELLO upgrade).
+    pub from: u64,
+    pub to: u64,
+    pub action: NetFaultAction,
+}
+
 /// A seeded, deterministic fault-injection plan: a list of
 /// `(stage, action)` pairs consulted by the solver ladder
-/// ([`crate::solvers::ladder`]) and the coordinator worker.
+/// ([`crate::solvers::ladder`]) and the coordinator worker, plus a list
+/// of [`NetFault`] entries consulted by the shard router's wire path.
 ///
 /// Stage names: `"sas"`, `"lsqr"`, `"refine"`, `"dense"` (the four ladder
 /// stages) and `"worker"` (checked at batch entry in
@@ -44,13 +77,14 @@ pub enum FaultAction {
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     entries: Vec<(&'static str, FaultAction)>,
+    net: Vec<NetFault>,
     /// Seed for the deterministic poison pattern.
     pub seed: u64,
 }
 
 impl FaultPlan {
     pub fn new() -> Self {
-        Self { entries: Vec::new(), seed: 0x5EED_FA17 }
+        Self { entries: Vec::new(), net: Vec::new(), seed: 0x5EED_FA17 }
     }
 
     pub fn fail(mut self, stage: &'static str) -> Self {
@@ -76,6 +110,40 @@ impl FaultPlan {
     /// The action planned for `stage`, if any (first match wins).
     pub fn action(&self, stage: &str) -> Option<FaultAction> {
         self.entries.iter().find(|(s, _)| *s == stage).map(|(_, a)| *a)
+    }
+
+    /// Add a network fault: apply `action` to outbound frames toward
+    /// `target` (`"*"` = any) whose opcode matches (`None` = any) within
+    /// the per-connection frame-index window `[from, to)`.
+    pub fn net_fault(
+        mut self,
+        target: &str,
+        opcode: Option<u8>,
+        from: u64,
+        to: u64,
+        action: NetFaultAction,
+    ) -> Self {
+        self.net.push(NetFault { target: target.to_string(), opcode, from, to, action });
+        self
+    }
+
+    /// The network action planned for this `(target, opcode, frame_idx)`
+    /// triple, if any (first match wins). Pure — safe under clone-on-read.
+    pub fn net_action(&self, target: &str, opcode: u8, frame_idx: u64) -> Option<NetFaultAction> {
+        self.net
+            .iter()
+            .find(|f| {
+                (f.target == "*" || f.target == target)
+                    && f.opcode.is_none_or(|op| op == opcode)
+                    && (f.from..f.to).contains(&frame_idx)
+            })
+            .map(|f| f.action)
+    }
+
+    /// Whether any network faults are planned (fast path for the router's
+    /// per-frame check).
+    pub fn has_net_faults(&self) -> bool {
+        !self.net.is_empty()
     }
 }
 
@@ -221,6 +289,31 @@ pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn net_fault_matching_is_pure_and_windowed() {
+        let plan = FaultPlan::new()
+            .net_fault("127.0.0.1:9101", Some(2), 3, 5, NetFaultAction::Drop)
+            .net_fault("*", None, 10, 11, NetFaultAction::Sever);
+        // Window [3, 5) on the exact target + opcode.
+        assert_eq!(plan.net_action("127.0.0.1:9101", 2, 2), None);
+        assert_eq!(plan.net_action("127.0.0.1:9101", 2, 3), Some(NetFaultAction::Drop));
+        assert_eq!(plan.net_action("127.0.0.1:9101", 2, 4), Some(NetFaultAction::Drop));
+        assert_eq!(plan.net_action("127.0.0.1:9101", 2, 5), None);
+        // Opcode / target filters.
+        assert_eq!(plan.net_action("127.0.0.1:9101", 1, 4), None);
+        assert_eq!(plan.net_action("127.0.0.1:9999", 2, 4), None);
+        // Wildcard entry matches any target/opcode in its window.
+        assert_eq!(plan.net_action("anything", 77, 10), Some(NetFaultAction::Sever));
+        // Matching is pure: same inputs, same answer, across clones.
+        let clone = plan.clone();
+        assert_eq!(
+            clone.net_action("127.0.0.1:9101", 2, 3),
+            plan.net_action("127.0.0.1:9101", 2, 3)
+        );
+        assert!(plan.has_net_faults());
+        assert!(!FaultPlan::new().has_net_faults());
+    }
 
     #[test]
     fn forall_passes_trivial_property() {

@@ -1,0 +1,257 @@
+//! Multi-process cluster drill: three real `snsolve serve` shard
+//! processes behind an in-process [`ShardRouter`] with replication 2.
+//!
+//! The drill checks the tentpole robustness claims end to end:
+//! (a) no in-flight solve is ever lost — every pipelined request gets a
+//!     real response (a solution or the typed retryable error) even when
+//!     a shard is killed under it;
+//! (b) matrices whose shard died keep solving through replica failover;
+//! (c) a restarted shard is re-seeded by the rebalance path and serves
+//!     its matrices again, with the membership epoch and the router
+//!     counters visible over `OP_METRICS`;
+//! plus a deterministic seeded network-fault drill (every `OP_SOLVE`
+//! frame to the known primary dropped) driving the retry → failover
+//! ladder without any process dying.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use snsolve::coordinator::protocol::OP_SOLVE;
+use snsolve::coordinator::tcp::{Client, ClientError, PipelinedClient, WireSolution};
+use snsolve::coordinator::{MatrixId, ShardMap, ShardRouter, ShardRouterConfig, SolverChoice};
+use snsolve::linalg::norms::{nrm2, nrm2_diff};
+use snsolve::linalg::DenseMatrix;
+use snsolve::rng::{GaussianSource, Xoshiro256pp};
+use snsolve::testing::{FaultGuard, FaultPlan, NetFaultAction};
+
+fn planted(m: usize, n: usize, seed: u64) -> (DenseMatrix, Vec<f64>, Vec<f64>) {
+    let mut g = GaussianSource::new(Xoshiro256pp::seed_from_u64(seed));
+    let a = DenseMatrix::gaussian(m, n, &mut g);
+    let x = g.gaussian_vec(n);
+    let b = a.matvec(&x);
+    (a, x, b)
+}
+
+fn check(x: &[f64], x_true: &[f64]) {
+    let err = nrm2_diff(x, x_true) / nrm2(x_true);
+    assert!(err < 1e-6, "relative error {err}");
+}
+
+/// One shard: a real `snsolve serve` child process. Spawned on an
+/// ephemeral port (`127.0.0.1:0`), the actual address is parsed from the
+/// startup announcement; restarts reuse the recorded address verbatim.
+struct ShardProc {
+    child: Child,
+    addr: String,
+}
+
+impl ShardProc {
+    fn spawn(addr: &str) -> ShardProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_snsolve"))
+            .args(["serve", "--addr", addr, "--workers", "2", "--threads", "1"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn shard process");
+        let stdout = child.stdout.take().expect("stdout piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let line = loop {
+            match lines.next() {
+                Some(Ok(l)) if l.contains("listening on") => break l,
+                Some(Ok(_)) => continue,
+                other => panic!("shard never announced its address: {other:?}"),
+            }
+        };
+        let addr = line.rsplit(' ').next().expect("address token").to_string();
+        ShardProc { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Solve through the router, retrying the typed retryable error (the
+/// honest "resend later" answer during failure windows). Anything else —
+/// a fatal error or a lost (never-answered) request — fails the test.
+fn solve_until_ok(c: &mut PipelinedClient, id: u64, b: &[f64]) -> WireSolution {
+    let t0 = Instant::now();
+    loop {
+        let mut t = c.submit_solve(id, b, SolverChoice::Saa, 1e-10, 2_000_000).expect("submit");
+        match t.wait_timeout(Duration::from_secs(10)) {
+            Some(Ok(sol)) => return sol,
+            Some(Err(ClientError::Retryable(_))) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(30),
+                    "solve {id} still retryable after 30s"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Some(Err(e)) => panic!("solve {id} failed fatally: {e}"),
+            None => panic!("in-flight solve {id} lost: no response within 10s"),
+        }
+    }
+}
+
+/// First integer right after `key` in the router's metrics report.
+fn counter(report: &str, key: &str) -> u64 {
+    let at = report.find(key).unwrap_or_else(|| panic!("{key:?} missing in:\n{report}"));
+    report[at + key.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or(0)
+}
+
+/// Poll the router's aggregated metrics until `pred` holds.
+fn wait_for_metrics(c: &mut PipelinedClient, what: &str, pred: impl Fn(&str) -> bool) -> String {
+    let t0 = Instant::now();
+    loop {
+        let m = c.metrics().expect("metrics");
+        if pred(&m) {
+            return m;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "timeout waiting for {what}; last report:\n{m}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn router_serves_legacy_v1_client() {
+    let shard = ShardProc::spawn("127.0.0.1:0");
+    let mut rcfg = ShardRouterConfig::new(vec![shard.addr.clone()], 2);
+    rcfg.heartbeat_ms = 100;
+    let router = ShardRouter::serve("127.0.0.1:0", rcfg).expect("router bind");
+
+    let (a, x_true, b) = planted(150, 6, 99);
+    let mut c = Client::connect(router.addr()).expect("connect v1");
+    let id = c.register_dense(&a).expect("register");
+    let sol = c.solve(id, &b, SolverChoice::Saa, 1e-10).expect("solve");
+    assert!(sol.converged);
+    check(&sol.x, &x_true);
+    let m = c.metrics().expect("metrics");
+    assert!(m.contains("router: shards=1 alive=1"), "{m}");
+    assert!(c.evict(id).expect("evict"));
+    router.stop();
+}
+
+#[test]
+fn cluster_kill_one_shard_failover_and_rebalance() {
+    let mut shards: Vec<ShardProc> = (0..3).map(|_| ShardProc::spawn("127.0.0.1:0")).collect();
+    let addrs: Vec<String> = shards.iter().map(|s| s.addr.clone()).collect();
+
+    let mut rcfg = ShardRouterConfig::new(addrs.clone(), 2);
+    rcfg.heartbeat_ms = 100;
+    rcfg.attempt_timeout_ms = 150;
+    let router = ShardRouter::serve("127.0.0.1:0", rcfg).expect("router bind");
+    let mut client = PipelinedClient::connect(router.addr()).expect("connect router");
+
+    // Register a fleet of planted problems; the router allocates the ids
+    // and replicates each matrix to both of its ring owners.
+    let mut problems: Vec<(u64, Vec<f64>, Vec<f64>)> = Vec::new();
+    for seed in 0..8u64 {
+        let (a, x, b) = planted(200, 8, seed);
+        let id = client.register_dense(&a).expect("register");
+        problems.push((id, x, b));
+    }
+    for (id, x, b) in &problems {
+        check(&solve_until_ok(&mut client, *id, b).x, x);
+    }
+
+    // The router's placement is a pure function of (addresses,
+    // replication), so an identical local ShardMap tells the test which
+    // shard is the primary for problem 0 — no API peeking needed.
+    let map = ShardMap::new(addrs.clone(), 2);
+    let (id0, x0, b0) = {
+        let p = &problems[0];
+        (p.0, p.1.clone(), p.2.clone())
+    };
+    let primary = map.primary(MatrixId(id0)).expect("primary owner");
+
+    // Seeded network-fault drill: drop every OP_SOLVE frame the router
+    // sends to the primary. The attempt timeout fires, same-shard retries
+    // burn down, the request fails over to the replica and still
+    // succeeds — all deterministic under the installed plan.
+    {
+        let _g = FaultGuard::install(FaultPlan::new().net_fault(
+            &addrs[primary],
+            Some(OP_SOLVE),
+            0,
+            u64::MAX,
+            NetFaultAction::Drop,
+        ));
+        check(&solve_until_ok(&mut client, id0, &b0).x, &x0);
+    }
+    let m = client.metrics().expect("metrics");
+    assert!(m.contains("router: shards=3 alive=3"), "{m}");
+    assert!(counter(&m, "retries=") >= 1, "no same-shard retries recorded:\n{m}");
+    assert!(counter(&m, "failovers=") >= 1, "no failover recorded:\n{m}");
+
+    // Kill the primary mid-traffic: a pipelined burst is in flight when
+    // the process dies. Every single request must still get a response —
+    // a solution or the typed retryable error — never silence.
+    let mut tickets = Vec::new();
+    for _round in 0..4 {
+        for (id, _x, b) in &problems {
+            let t = client
+                .submit_solve(*id, b, SolverChoice::Saa, 1e-10, 5_000_000)
+                .expect("submit burst");
+            tickets.push((*id, t));
+        }
+    }
+    shards[primary].kill();
+    let mut answered_ok = 0usize;
+    let mut answered_retryable = 0usize;
+    for (id, mut t) in tickets {
+        match t.wait_timeout(Duration::from_secs(15)) {
+            Some(Ok(sol)) => {
+                let (_, x, _) = problems.iter().find(|p| p.0 == id).expect("known id");
+                check(&sol.x, x);
+                answered_ok += 1;
+            }
+            Some(Err(ClientError::Retryable(_))) => answered_retryable += 1,
+            Some(Err(e)) => panic!("in-flight solve {id} failed fatally: {e}"),
+            None => panic!("in-flight solve {id} lost during shard death"),
+        }
+    }
+    assert_eq!(answered_ok + answered_retryable, 4 * problems.len());
+    assert!(answered_ok >= 1, "burst produced no successful solves");
+
+    // (b) Dead-primary matrices keep solving via their surviving replica.
+    for (id, x, b) in &problems {
+        check(&solve_until_ok(&mut client, *id, b).x, x);
+    }
+    let m = wait_for_metrics(&mut client, "death detection", |m| m.contains("alive=2"));
+    assert!(counter(&m, "epoch=") >= 1, "death must bump the epoch:\n{m}");
+
+    // (c) Restart the shard on its old address: the heartbeat marks it
+    // alive, the rebalance path streams its matrices back from the
+    // surviving replicas, and the whole fleet serves again.
+    shards[primary] = ShardProc::spawn(&addrs[primary]);
+    let m = wait_for_metrics(&mut client, "revival + rebalance", |m| {
+        m.contains("alive=3") && counter(m, "rebalance_matrices=") >= 1
+    });
+    assert!(counter(&m, "epoch=") >= 2, "revival must bump the epoch again:\n{m}");
+    for (id, x, b) in &problems {
+        check(&solve_until_ok(&mut client, *id, b).x, x);
+    }
+
+    // Registration still works against the healed cluster.
+    let (a, x, b) = planted(200, 8, 77);
+    let id = client.register_dense(&a).expect("register after heal");
+    check(&solve_until_ok(&mut client, id, &b).x, &x);
+
+    router.stop();
+}

@@ -134,6 +134,7 @@ fn req(id: snsolve::coordinator::MatrixId, b: &[f64]) -> SolveRequest {
         solver: SolverChoice::Stable,
         tol: 1e-10,
         deadline_us: 0,
+        refine_iters: 0,
     }
 }
 

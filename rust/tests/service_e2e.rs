@@ -102,6 +102,7 @@ fn backpressure_rejects_when_overloaded() {
         solver: SolverChoice::Lsqr,
         tol: 1e-14,
         deadline_us: 0,
+        refine_iters: 0,
     };
     let mut rejected = 0;
     let mut handles = Vec::new();
@@ -139,6 +140,7 @@ fn batching_coalesces_same_matrix_bursts() {
                 solver: SolverChoice::Saa,
                 tol: 1e-10,
                 deadline_us: 0,
+                refine_iters: 0,
             })
             .unwrap()
         })
@@ -175,6 +177,7 @@ fn malformed_rhs_inside_batch_fails_alone() {
         solver: SolverChoice::Saa,
         tol: 1e-10,
         deadline_us: 0,
+        refine_iters: 0,
     };
     let handles = vec![
         svc.submit(mk(b.clone())).unwrap(),
@@ -233,6 +236,7 @@ fn blocked_batches_match_per_item_loop_results() {
                     solver: SolverChoice::Saa,
                     tol: 1e-10,
                     deadline_us: 0,
+                    refine_iters: 0,
                 })
                 .unwrap()
             })
@@ -276,6 +280,7 @@ fn pjrt_bucket_routing_when_artifacts_present() {
             solver: SolverChoice::Saa,
             tol: 1e-2, // loose → PJRT-eligible
             deadline_us: 0,
+            refine_iters: 0,
         })
         .unwrap();
     let sol = resp.result.unwrap();
@@ -296,6 +301,7 @@ fn pjrt_bucket_routing_when_artifacts_present() {
             solver: SolverChoice::Saa,
             tol: 1e-12,
             deadline_us: 0,
+            refine_iters: 0,
         })
         .unwrap();
     assert_eq!(resp2.executed_on, snsolve::coordinator::ExecutedOn::Native);
@@ -315,6 +321,7 @@ fn graceful_shutdown_drains() {
                 solver: SolverChoice::Saa,
                 tol: 1e-8,
                 deadline_us: 0,
+                refine_iters: 0,
             })
             .unwrap()
         })

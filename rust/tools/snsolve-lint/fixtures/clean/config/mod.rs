@@ -10,13 +10,20 @@ pub struct SolveConfig {
     pub fwht_radix: usize,
     pub schedule: u8,
     pub sketch_invert: bool,
+    pub solver: u8,
+    pub refine_iters: usize,
 }
 
 pub struct FrontendConfig {
     pub readers: usize,
 }
 
-pub fn keys() -> [(&'static str, &'static str); 8] {
+pub struct ClusterConfig {
+    pub shards: Vec<String>,
+    pub replication: usize,
+}
+
+pub fn keys() -> [(&'static str, &'static str); 12] {
     [
         ("parallel", "threads"),
         ("parallel", "simd"),
@@ -26,6 +33,10 @@ pub fn keys() -> [(&'static str, &'static str); 8] {
         ("parallel", "schedule"),
         ("parallel", "sketch_invert"),
         ("service", "readers"),
+        ("solver", "solver"),
+        ("solver", "refine_iters"),
+        ("cluster", "shards"),
+        ("cluster", "replication"),
     ]
 }
 
@@ -39,6 +50,10 @@ pub fn env_overrides() -> Vec<String> {
         "SNSOLVE_SCHEDULE",
         "SNSOLVE_SKETCH_INVERT",
         "SNSOLVE_READERS",
+        "SNSOLVE_SOLVER",
+        "SNSOLVE_REFINE_ITERS",
+        "SNSOLVE_SHARDS",
+        "SNSOLVE_REPLICATION",
     ]
     .iter()
     .filter_map(|k| std::env::var(k).ok())

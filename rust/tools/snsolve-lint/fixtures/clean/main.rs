@@ -9,6 +9,10 @@ const FLAGS: &[&str] = &[
     "schedule",
     "sketch-invert",
     "readers",
+    "solver",
+    "refine-iters",
+    "shards",
+    "replication",
 ];
 
 fn main() {

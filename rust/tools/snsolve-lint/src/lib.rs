@@ -391,6 +391,20 @@ pub const KNOBS: &[Knob] = &[
         key: "refine_iters",
         field: "refine_iters",
     },
+    Knob {
+        env: "SNSOLVE_SHARDS",
+        flag: "shards",
+        section: "cluster",
+        key: "shards",
+        field: "shards",
+    },
+    Knob {
+        env: "SNSOLVE_REPLICATION",
+        flag: "replication",
+        section: "cluster",
+        key: "replication",
+        field: "replication",
+    },
 ];
 
 /// `SNSOLVE_*` vars that are deliberately not user-facing solve/service
